@@ -1,0 +1,37 @@
+"""Shared helpers for the benchmark suite (one module per paper figure)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import (LLAMA2_70B, OPT_30B, WORKLOADS, ModelProfile,
+                        ScheduleResult, schedule)
+from repro.core.cluster import PAPER_SETTINGS, ClusterSpec
+from repro.serving import offline_workload, online_workload, simulate
+
+N_OFFLINE = 60
+N_ONLINE = 60
+
+_sched_cache: Dict[Tuple[str, str, str], ScheduleResult] = {}
+
+
+def cached_schedule(cluster: ClusterSpec, profile: ModelProfile,
+                    wl_name: str, **kw) -> ScheduleResult:
+    key = (cluster.name, profile.name, wl_name)
+    if key not in _sched_cache:
+        _sched_cache[key] = schedule(cluster, profile, WORKLOADS[wl_name],
+                                     max_refine_iters=8, **kw)
+    return _sched_cache[key]
+
+
+def hexgen2_throughput(cluster: ClusterSpec, profile: ModelProfile,
+                       wl_name: str, seed: int = 0) -> float:
+    res = cached_schedule(cluster, profile, wl_name)
+    sim = simulate(cluster, profile, res.placement,
+                   offline_workload(wl_name, N_OFFLINE, seed=seed))
+    return sim.decode_throughput
+
+
+def emit(rows: List[Tuple[str, float, str]]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,54 @@
+"""Paper Figures 6 & 7: offline serving throughput (tokens/s).
+
+LLaMA-2-70B (Fig 6) and OPT-30B (Fig 7) across the heterogeneous
+settings × four workloads; baselines: HexGen (colocated, same cluster)
+and DistServe (disaggregated, homogeneous 8×H100).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from benchmarks.common import (N_OFFLINE, cached_schedule, emit,
+                               hexgen2_throughput)
+from repro.core import LLAMA2_70B, OPT_30B, distserve_schedule, WORKLOADS
+from repro.core.cluster import PAPER_SETTINGS
+from repro.serving import offline_workload, simulate, simulate_colocated
+
+SETTINGS = ["hetero1", "hetero2", "hetero3", "hetero4"]
+WLS = ["HPLD", "HPHD", "LPHD", "LPLD"]
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    homog = PAPER_SETTINGS["homogeneous"]()
+    for profile in (LLAMA2_70B, OPT_30B):
+        # DistServe on the homogeneous budget-equivalent cluster
+        for wl in WLS:
+            t0 = time.perf_counter()
+            ds = distserve_schedule(homog, profile, WORKLOADS[wl])
+            sim = simulate(homog, profile, ds.placement,
+                           offline_workload(wl, N_OFFLINE, seed=0))
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"fig6.distserve.{profile.name}.homog.{wl}",
+                         us, f"{sim.decode_throughput:.0f} tok/s"))
+        for setting in SETTINGS:
+            cl = PAPER_SETTINGS[setting]()
+            for wl in WLS:
+                t0 = time.perf_counter()
+                thr = hexgen2_throughput(cl, profile, wl)
+                res = cached_schedule(cl, profile, wl)
+                col = simulate_colocated(
+                    cl, profile, res.placement.replicas,
+                    offline_workload(wl, N_OFFLINE, seed=0))
+                us = (time.perf_counter() - t0) * 1e6
+                ratio = thr / max(col.decode_throughput, 1e-9)
+                rows.append((
+                    f"fig6.hexgen2.{profile.name}.{setting}.{wl}", us,
+                    f"{thr:.0f} tok/s ({ratio:.2f}x vs colocated "
+                    f"{col.decode_throughput:.0f})"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,72 @@
+"""Paper Figure 8: online latency / SLO attainment.
+
+Online Poisson trace at ~75% of estimated peak; reports average latency
+and SLO attainment at several SLO scales for HexGen-2 vs the colocated
+baseline on heterogeneous setting 1, and DistServe on homogeneous.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from benchmarks.common import N_ONLINE, cached_schedule, emit
+from repro.core import LLAMA2_70B, WORKLOADS, distserve_schedule
+from repro.core.cluster import PAPER_SETTINGS
+from repro.serving import (online_workload, simulate, simulate_colocated,
+                           slo_baselines)
+
+SLO_SCALES = (2.0, 5.0, 10.0)
+
+
+def _online_rate(cluster, profile, placement) -> float:
+    from repro.serving import offline_workload
+    sim = simulate(cluster, profile, placement,
+                   offline_workload("HPHD", 30, seed=9))
+    peak_rps = len(sim.requests) / sim.makespan
+    return 0.75 * peak_rps
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    cl = PAPER_SETTINGS["hetero1"]()
+    res = cached_schedule(cl, LLAMA2_70B, "HPHD")
+    rate = _online_rate(cl, LLAMA2_70B, res.placement)
+
+    t0 = time.perf_counter()
+    reqs = online_workload(N_ONLINE, rate, seed=0)
+    sim = simulate(cl, LLAMA2_70B, res.placement, reqs)
+    slo = slo_baselines(cl, LLAMA2_70B, res.placement, reqs)
+    us = (time.perf_counter() - t0) * 1e6
+    att = " ".join(f"slo{int(s)}x={sim.slo_attainment(slo, s):.2f}"
+                   for s in SLO_SCALES)
+    rows.append(("fig8.hexgen2.hetero1.online", us,
+                 f"avg_lat={sim.avg_latency:.1f}s {att}"))
+
+    t0 = time.perf_counter()
+    reqs2 = online_workload(N_ONLINE, rate, seed=0)
+    col = simulate_colocated(cl, LLAMA2_70B, res.placement.replicas, reqs2)
+    slo2 = slo_baselines(cl, LLAMA2_70B, res.placement, reqs2)
+    us = (time.perf_counter() - t0) * 1e6
+    att2 = " ".join(f"slo{int(s)}x={col.slo_attainment(slo2, s):.2f}"
+                    for s in SLO_SCALES)
+    ratio = col.avg_latency / max(sim.avg_latency, 1e-9)
+    rows.append(("fig8.hexgen_coloc.hetero1.online", us,
+                 f"avg_lat={col.avg_latency:.1f}s {att2} "
+                 f"(hexgen2 {ratio:.2f}x lower)"))
+
+    homog = PAPER_SETTINGS["homogeneous"]()
+    ds = distserve_schedule(homog, LLAMA2_70B, WORKLOADS["HPHD"])
+    t0 = time.perf_counter()
+    reqs3 = online_workload(N_ONLINE, rate, seed=0)
+    dsim = simulate(homog, LLAMA2_70B, ds.placement, reqs3)
+    slo3 = slo_baselines(homog, LLAMA2_70B, ds.placement, reqs3)
+    us = (time.perf_counter() - t0) * 1e6
+    att3 = " ".join(f"slo{int(s)}x={dsim.slo_attainment(slo3, s):.2f}"
+                    for s in SLO_SCALES)
+    rows.append(("fig8.distserve.homog.online", us,
+                 f"avg_lat={dsim.avg_latency:.1f}s {att3}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

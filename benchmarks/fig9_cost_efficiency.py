@@ -1,0 +1,76 @@
+"""Paper Figure 9: cost efficiency — HexGen-2 on the 70%-budget
+heterogeneous setting 5 vs DistServe on the full-budget homogeneous
+cluster."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from benchmarks.common import N_OFFLINE, cached_schedule, emit
+from repro.core import LLAMA2_70B, WORKLOADS, distserve_schedule
+from repro.core.cluster import PAPER_SETTINGS
+from repro.serving import offline_workload, simulate
+
+WLS = ["HPLD", "HPHD", "LPHD", "LPLD"]
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    cheap = PAPER_SETTINGS["hetero5"]()
+    homog = PAPER_SETTINGS["homogeneous"]()
+    for wl in WLS:
+        t0 = time.perf_counter()
+        h2 = cached_schedule(cheap, LLAMA2_70B, wl)
+        s_h2 = simulate(cheap, LLAMA2_70B, h2.placement,
+                        offline_workload(wl, N_OFFLINE, seed=0))
+        ds = distserve_schedule(homog, LLAMA2_70B, WORKLOADS[wl])
+        s_ds = simulate(homog, LLAMA2_70B, ds.placement,
+                        offline_workload(wl, N_OFFLINE, seed=0))
+        us = (time.perf_counter() - t0) * 1e6
+        ratio = s_h2.decode_throughput / max(s_ds.decode_throughput, 1e-9)
+        rows.append((
+            f"fig9.70pct_budget.{wl}", us,
+            f"hexgen2@70%=${cheap.price_per_hour:.1f}/h "
+            f"{s_h2.decode_throughput:.0f} tok/s vs "
+            f"distserve@100%=${homog.price_per_hour:.1f}/h "
+            f"{s_ds.decode_throughput:.0f} tok/s ({ratio:.2f}x)"))
+
+    # Calibrated variant: derate H100 to the serving utilization implied
+    # by the paper's own measured DistServe numbers (368 tok/s on HPHD vs
+    # 871 first-principles → ×0.42). Under this calibration the paper's
+    # "comparable at 70% budget" claim reproduces on the light workloads
+    # (see EXPERIMENTS.md §Paper-validation / calibration note).
+    import repro.core.cluster as cc
+    derate = 0.42
+    orig = cc.GPU_TYPES["H100"]
+    h100c = cc.GPUType("H100", orig.flops * derate,
+                       orig.hbm_bandwidth * derate, orig.memory,
+                       orig.price_per_hour)
+    try:
+        cc.GPU_TYPES["H100"] = h100c
+        homog_c = cc.build_cluster([("H100", 8)], name="homog-calibrated")
+        for wl in WLS:
+            t0 = time.perf_counter()
+            ds = distserve_schedule(homog_c, LLAMA2_70B, WORKLOADS[wl])
+            s_ds = simulate(homog_c, LLAMA2_70B, ds.placement,
+                            offline_workload(wl, N_OFFLINE, seed=0))
+            cc.GPU_TYPES["H100"] = orig
+            h2 = cached_schedule(cheap, LLAMA2_70B, wl)
+            s_h2 = simulate(cheap, LLAMA2_70B, h2.placement,
+                            offline_workload(wl, N_OFFLINE, seed=0))
+            cc.GPU_TYPES["H100"] = h100c
+            us = (time.perf_counter() - t0) * 1e6
+            ratio = s_h2.decode_throughput / max(s_ds.decode_throughput,
+                                                 1e-9)
+            rows.append((
+                f"fig9.calibrated_h100.{wl}", us,
+                f"hexgen2@70% {s_h2.decode_throughput:.0f} vs "
+                f"distserve(cal)@100% {s_ds.decode_throughput:.0f} tok/s "
+                f"({ratio:.2f}x)"))
+    finally:
+        cc.GPU_TYPES["H100"] = orig
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

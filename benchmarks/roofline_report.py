@@ -1,0 +1,78 @@
+"""Roofline table from the dry-run report (§Roofline deliverable).
+
+Reads reports/dryrun_report.json (produced by repro.launch.dryrun) and
+prints the three-term roofline per (arch × shape × mesh) with the
+dominant bottleneck and the MODEL_FLOPS/HLO_FLOPs useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+REPORT = os.environ.get("REPRO_DRYRUN_REPORT",
+                        os.path.join(os.path.dirname(__file__), "..",
+                                     "reports", "dryrun_report.json"))
+
+
+def load():
+    with open(REPORT) as f:
+        return json.load(f)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    try:
+        records = load()
+    except FileNotFoundError:
+        return [("roofline.missing", 0.0,
+                 "run `python -m repro.launch.dryrun` first")]
+    ok = [r for r in records if r.get("status") == "ok"]
+    fails = [r for r in records if r.get("status") != "ok"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        name = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        us = r.get("t_compile_s", 0.0) * 1e6
+        rows.append((name, us,
+                     f"comp={r['t_compute_s']:.3e}s "
+                     f"mem={r['t_memory_s']:.3e}s "
+                     f"coll={r['t_collective_s']:.3e}s "
+                     f"bottleneck={r['bottleneck']} "
+                     f"useful={r['useful_flops_ratio']:.1%}"))
+    rows.append(("roofline.summary", 0.0,
+                 f"{len(ok)} ok / {len(fails)} failed"))
+
+    # optimized-flags sweep (before/after, §Perf levers applied globally)
+    opt_path = REPORT.replace("dryrun_report", "dryrun_optimized")
+    if os.path.exists(opt_path):
+        with open(opt_path) as f:
+            opt = {(r["arch"], r["shape"], r["mesh"]): r
+                   for r in json.load(f) if r.get("status") == "ok"}
+        base = {(r["arch"], r["shape"], r["mesh"]): r for r in ok}
+        gains = []
+        for key, o in sorted(opt.items()):
+            b = base.get(key)
+            if b is None:
+                continue
+            bdom = max(b["t_compute_s"], b["t_memory_s"],
+                       b["t_collective_s"])
+            odom = max(o["t_compute_s"], o["t_memory_s"],
+                       o["t_collective_s"])
+            gain = bdom / odom if odom > 0 else 1.0
+            gains.append(gain)
+            rows.append((f"roofline_opt.{key[0]}.{key[1]}", 0.0,
+                         f"dominant {bdom:.3e}s -> {odom:.3e}s "
+                         f"({gain:.2f}x) useful "
+                         f"{b['useful_flops_ratio']:.1%}->"
+                         f"{o['useful_flops_ratio']:.1%}"))
+        if gains:
+            import numpy as np
+            rows.append(("roofline_opt.summary", 0.0,
+                         f"median dominant-term gain "
+                         f"{float(np.median(gains)):.2f}x over "
+                         f"{len(gains)} pairs"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

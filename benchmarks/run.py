@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``us_per_call`` is the
+wall-clock of producing that row (scheduling + simulation); ``derived``
+is the headline metric (throughput, latency, SLO attainment, scheduler
+time, roofline terms).
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [module ...]
+        modules default to all; names: fig6, fig8, fig9, fig10,
+        table3, table4, table5, roofline
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = {
+    "fig6": "benchmarks.fig6_fig7_throughput",
+    "fig8": "benchmarks.fig8_latency",
+    "fig9": "benchmarks.fig9_cost_efficiency",
+    "fig10": "benchmarks.fig10_convergence",
+    "table3": "benchmarks.table3_frameworks",
+    "table4": "benchmarks.table4_homogeneous",
+    "table5": "benchmarks.table5_scalability",
+    "roofline": "benchmarks.roofline_report",
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(MODULES)
+    t0 = time.perf_counter()
+    failures = 0
+    for name in names:
+        modname = MODULES.get(name, name)
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            emit(mod.run())
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"{name}.ERROR,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(limit=4, file=sys.stderr)
+    print(f"benchmarks.total,{(time.perf_counter() - t0) * 1e6:.0f},"
+          f"{len(names)} modules {failures} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Table 3 (Appendix F): framework comparison on LLaMA-2-70B.
+
+HexGen-2 (hetero-1) vs HexGen (colocated, hetero-1) vs DistServe
+(homogeneous) vs a vLLM-like baseline (colocated continuous batching on
+the homogeneous cluster with a single uniform parallel plan).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from benchmarks.common import N_OFFLINE, cached_schedule, emit
+from repro.core import (LLAMA2_70B, WORKLOADS, distserve_schedule)
+from repro.core.cost_model import make_plan
+from repro.core.placement import ReplicaPlacement
+from repro.core.cluster import PAPER_SETTINGS
+from repro.serving import offline_workload, simulate, simulate_colocated
+
+WLS = ["HPLD", "HPHD", "LPHD", "LPLD"]
+
+
+def _vllm_like(cluster, profile):
+    """One colocated replica per TP-8 slice (vLLM default-ish plan)."""
+    n = cluster.num_devices
+    reps = []
+    for i, start in enumerate(range(0, n, 8)):
+        devs = list(range(start, min(start + 8, n)))
+        plan = make_plan([devs], profile.num_layers, cluster)
+        reps.append(ReplicaPlacement(i, devs, False, plan, 0.0))
+    return reps
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    hetero = PAPER_SETTINGS["hetero1"]()
+    homog = PAPER_SETTINGS["homogeneous"]()
+    for wl in WLS:
+        reqs = lambda: offline_workload(wl, N_OFFLINE, seed=0)  # noqa: E731
+        t0 = time.perf_counter()
+        h2 = cached_schedule(hetero, LLAMA2_70B, wl)
+        s_h2 = simulate(hetero, LLAMA2_70B, h2.placement, reqs())
+        s_hx = simulate_colocated(hetero, LLAMA2_70B, h2.placement.replicas,
+                                  reqs())
+        ds = distserve_schedule(homog, LLAMA2_70B, WORKLOADS[wl])
+        s_ds = simulate(homog, LLAMA2_70B, ds.placement, reqs())
+        s_vl = simulate_colocated(homog, LLAMA2_70B,
+                                  _vllm_like(homog, LLAMA2_70B), reqs())
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"table3.{wl}", us,
+            f"hexgen2={s_h2.decode_throughput:.0f} "
+            f"hexgen={s_hx.decode_throughput:.0f} "
+            f"distserve={s_ds.decode_throughput:.0f} "
+            f"vllm_like={s_vl.decode_throughput:.0f} tok/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,39 @@
+"""Paper Table 4 (Appendix G): homogeneous 4×H100, OPT-30B — HexGen-2
+vs DistServe vs colocated HexGen on the same hardware."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from benchmarks.common import N_OFFLINE, emit
+from repro.core import OPT_30B, WORKLOADS, distserve_schedule, schedule
+from repro.core.cluster import build_cluster
+from repro.serving import offline_workload, simulate, simulate_colocated
+
+WLS = ["HPLD", "HPHD", "LPHD", "LPLD"]
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    cl = build_cluster([("H100", 4)], name="homog-4xH100")
+    for wl in WLS:
+        t0 = time.perf_counter()
+        ours = schedule(cl, OPT_30B, WORKLOADS[wl], max_refine_iters=8)
+        s_h2 = simulate(cl, OPT_30B, ours.placement,
+                        offline_workload(wl, N_OFFLINE, seed=0))
+        ds = distserve_schedule(cl, OPT_30B, WORKLOADS[wl])
+        s_ds = simulate(cl, OPT_30B, ds.placement,
+                        offline_workload(wl, N_OFFLINE, seed=0))
+        s_hx = simulate_colocated(cl, OPT_30B, ours.placement.replicas,
+                                  offline_workload(wl, N_OFFLINE, seed=0))
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"table4.{wl}", us,
+            f"hexgen2={s_h2.decode_throughput:.0f} "
+            f"distserve={s_ds.decode_throughput:.0f} "
+            f"hexgen={s_hx.decode_throughput:.0f} tok/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

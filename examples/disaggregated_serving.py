@@ -1,0 +1,73 @@
+"""End-to-end driver: REAL disaggregated serving with JAX engines.
+
+A prefill engine turns prompts into (first token, KV cache); the cache
+is resharded/transferred to decode engines running continuous batching
+over fixed slots; dispatch is flow-proportional. Output is verified
+token-identical to a monolithic generate loop.
+
+Run:  PYTHONPATH=src python examples/disaggregated_serving.py \
+          [--arch qwen3-1.7b] [--requests 6]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import decode_step, init_params, prefill
+from repro.serving import Coordinator, ServeRequest
+
+
+def monolithic(cfg, params, prompt, n_new, capacity):
+    logits, cache = prefill(params, cfg, jnp.asarray(prompt)[None],
+                            cache_capacity=capacity)
+    toks = [int(jnp.argmax(logits, -1)[0])]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        lg, cache = decode_step(params, cfg, cache,
+                                jnp.array([[toks[-1]]], jnp.int32),
+                                jnp.array([[pos]], jnp.int32))
+        toks.append(int(jnp.argmax(lg, -1)[0]))
+        pos += 1
+    return toks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=ASSIGNED)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32)
+               for _ in range(args.requests)]
+    capacity = 8 + args.max_new + 4
+
+    coord = Coordinator(cfg, params, num_decode_engines=2,
+                        slots_per_engine=2, capacity=capacity,
+                        route_weights=[2.0, 1.0])  # flow-proportional
+    t0 = time.perf_counter()
+    outs = coord.serve([ServeRequest(i, prompts[i], args.max_new)
+                        for i in range(args.requests)])
+    dt = time.perf_counter() - t0
+
+    ok = 0
+    for i, out in enumerate(outs):
+        ref = monolithic(cfg, params, list(prompts[i]), args.max_new,
+                         capacity)
+        match = out.tokens == ref
+        ok += match
+        print(f"req {i}: disagg={out.tokens} "
+              f"{'== monolithic' if match else f'!= {ref}'}")
+    print(f"\n{ok}/{len(outs)} token-identical; served in {dt:.1f}s "
+          f"(incl. jit) across 1 prefill + 2 decode engines")
+    assert ok == len(outs)
+
+
+if __name__ == "__main__":
+    main()

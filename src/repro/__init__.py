@@ -1,0 +1,4 @@
+"""repro - HexGen-2 (ICLR 2025) reproduction: disaggregated LLM inference
+with heterogeneity-aware scheduling, built as a JAX/TPU framework."""
+
+__version__ = "0.1.0"

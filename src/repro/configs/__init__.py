@@ -1,0 +1,47 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``ARCHS``.
+
+One module per assigned architecture; each config cites its source in
+``source=``. The paper's own evaluation models (OPT-30B, LLaMA-2-70B)
+are included for the reproduction benchmarks.
+"""
+from repro.configs.base import (ArchConfig, BlockSpec, InputShape,
+                                INPUT_SHAPES, TRAIN_4K, PREFILL_32K,
+                                DECODE_32K, LONG_500K, input_specs)
+
+from repro.configs.xlstm_125m import CONFIG as XLSTM_125M
+from repro.configs.yi_34b import CONFIG as YI_34B
+from repro.configs.whisper_large_v3 import CONFIG as WHISPER_LARGE_V3
+from repro.configs.llama_3_2_vision_90b import CONFIG as LLAMA_3_2_VISION_90B
+from repro.configs.qwen3_1_7b import CONFIG as QWEN3_1_7B
+from repro.configs.jamba_v0_1_52b import CONFIG as JAMBA_V0_1_52B
+from repro.configs.nemotron_4_15b import CONFIG as NEMOTRON_4_15B
+from repro.configs.qwen2_5_32b import CONFIG as QWEN2_5_32B
+from repro.configs.llama4_maverick_400b import CONFIG as LLAMA4_MAVERICK_400B
+from repro.configs.qwen3_moe_30b import CONFIG as QWEN3_MOE_30B
+from repro.configs.opt_30b import CONFIG as OPT_30B_ARCH
+from repro.configs.llama2_70b import CONFIG as LLAMA2_70B_ARCH
+
+ARCHS = {
+    c.name: c for c in (
+        XLSTM_125M, YI_34B, WHISPER_LARGE_V3, LLAMA_3_2_VISION_90B,
+        QWEN3_1_7B, JAMBA_V0_1_52B, NEMOTRON_4_15B, QWEN2_5_32B,
+        LLAMA4_MAVERICK_400B, QWEN3_MOE_30B, OPT_30B_ARCH, LLAMA2_70B_ARCH,
+    )
+}
+
+ASSIGNED = [
+    "xlstm-125m", "yi-34b", "whisper-large-v3", "llama-3.2-vision-90b",
+    "qwen3-1.7b", "jamba-v0.1-52b", "nemotron-4-15b", "qwen2.5-32b",
+    "llama4-maverick-400b-a17b", "qwen3-moe-30b-a3b",
+]
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+__all__ = ["ArchConfig", "BlockSpec", "InputShape", "INPUT_SHAPES",
+           "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+           "input_specs", "ARCHS", "ASSIGNED", "get_config"]

@@ -1,0 +1,211 @@
+"""Architecture configuration system.
+
+Every assigned architecture is an ``ArchConfig`` built from a repeating
+*period* of ``BlockSpec``s — the uniform representation that lets the
+model builder scan over periods (compile-time O(period), not O(layers))
+while still expressing hybrid interleaves (Jamba's 1-attention-in-8,
+Llama-3.2-Vision's cross-attention every 5th layer, xLSTM's sLSTM/mLSTM
+mix).
+
+``reduced()`` produces the smoke-test variant (≤2 periods, d_model≤512,
+≤4 experts) of the same family; ``input_specs()`` produces
+ShapeDtypeStruct stand-ins for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Block / arch specs
+# ---------------------------------------------------------------------------
+
+MIXERS = ("attn", "swa", "cross_attn", "mamba", "mlstm", "slstm")
+FFNS = ("mlp", "moe", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One layer: a sequence mixer + a feed-forward."""
+    mixer: str
+    ffn: str = "mlp"
+
+    def __post_init__(self):
+        assert self.mixer in MIXERS, self.mixer
+        assert self.ffn in FFNS, self.ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    d_model: int
+    num_heads: int
+    kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    period: Tuple[BlockSpec, ...]    # repeating layer pattern
+    num_periods: int
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    shared_expert: bool = False      # Llama-4 style shared expert
+    moe_capacity_factor: float = 1.25
+    # §Perf: grouped dispatch (one token group per data shard keeps the
+    # dispatch scatter shard-local; the E reshard becomes an all-to-all)
+    moe_groups: int = 1
+    moe_shard_constraints: bool = False  # needs a mesh ctx at trace time
+    # §Perf: constrain q/k/v to batch-only sharding inside attention.
+    # With kv_heads < model-axis size GSPMD otherwise splits the
+    # contracting head_dim and ALL-REDUCES partial scores every chunk
+    # (the 33 TB/device pathology on llama4 prefill). Gathering heads
+    # once per layer is orders of magnitude cheaper.
+    attn_data_local: bool = False        # needs a mesh ctx at trace time
+    # attention flavour
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    sliding_window: int = 0          # >0 => swa mixers use this window
+    rope_theta: float = 1e6
+    activation: str = "swiglu"       # swiglu | relu2 | gelu
+    # ssm (mamba)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # xlstm
+    xlstm_heads: int = 4
+    # encoder-decoder (audio): encoder layers + #input frames
+    encoder_periods: int = 0
+    encoder_frames: int = 0
+    # vlm: number of image-embedding tokens supplied by the (stubbed) vision
+    # encoder + projector
+    num_image_tokens: int = 0
+    # KV-cache memory layout: "bshd" ([B,S,kv,hd], baseline) or "kmajor"
+    # ([B,kv,S,hd] — dot-friendly, §Perf iteration: removes the per-step
+    # transpose/copy churn in decode)
+    kv_layout: str = "bshd"
+    # citation for the config source
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def num_layers(self) -> int:
+        return len(self.period) * self.num_periods
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_periods > 0
+
+    @property
+    def attn_layer_count(self) -> int:
+        per = sum(1 for b in self.period if b.mixer in ("attn", "swa", "cross_attn"))
+        return per * self.num_periods
+
+    def with_sliding_window(self, window: int = 8192) -> "ArchConfig":
+        """Variant where full-attention mixers become sliding-window — the
+        sub-quadratic path required for long_500k on dense archs."""
+        period = tuple(
+            dataclasses.replace(b, mixer="swa") if b.mixer == "attn" else b
+            for b in self.period)
+        return dataclasses.replace(self, period=period, sliding_window=window,
+                                   name=self.name + "+swa")
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test config: same family/period structure, tiny dims."""
+        d_model = min(self.d_model, 256)
+        head_dim = 32
+        heads = max(2, min(4, self.num_heads))
+        kv = max(1, min(2, self.kv_heads))
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            d_model=d_model,
+            num_heads=heads,
+            kv_heads=kv,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+            num_periods=max(1, min(2, self.num_periods)),
+            num_experts=min(self.num_experts, 4),
+            top_k=min(self.top_k, 2),
+            moe_d_ff=min(self.moe_d_ff, 128) if self.moe_d_ff else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            encoder_periods=min(self.encoder_periods, 2),
+            encoder_frames=min(self.encoder_frames, 16) if self.encoder_frames else 0,
+            num_image_tokens=min(self.num_image_tokens, 16) if self.num_image_tokens else 0,
+            xlstm_heads=2,
+        )
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init_params; used for
+        MODEL_FLOPS = 6·N·D in the roofline)."""
+        from repro.models.transformer import count_params
+        return count_params(self)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524288, 1, "decode")
+
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                dtype=jnp.int32) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a step.
+
+    train   → tokens + labels [B, S]
+    prefill → tokens [B, S]   (+ modality embeddings for audio/vlm)
+    decode  → token [B, 1] + write position (cache specs come from the
+              model builder, since they depend on the arch's cache type)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), dtype)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), dtype)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), dtype)
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), dtype)
+    if cfg.is_encdec and shape.kind != "train":
+        # stubbed conv/mel frontend output: precomputed frame embeddings
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec and shape.kind == "train":
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.num_image_tokens and shape.kind in ("train", "prefill"):
+        # stubbed ViT+projector output: patch embeddings
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    return specs

@@ -1,0 +1,39 @@
+"""Jamba-v0.1-52B [arXiv:2403.19887] — hybrid Mamba + attention (1:7
+interleave) with MoE (16 experts, top-2) on every other layer.
+
+Period of 8 = the Jamba block: attention at index 4, Mamba elsewhere,
+MoE FFN on odd indices. Only 4 of 32 layers carry a KV cache, so the
+KV-transfer volume the scheduler sees is 1/8 of a dense model — and
+long_500k runs natively (full KV kept for the 4 attention layers).
+"""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    d_model=4096,
+    num_heads=32,
+    kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=65536,
+    period=(
+        BlockSpec("mamba", "mlp"),
+        BlockSpec("mamba", "moe"),
+        BlockSpec("mamba", "mlp"),
+        BlockSpec("mamba", "moe"),
+        BlockSpec("attn", "mlp"),
+        BlockSpec("mamba", "moe"),
+        BlockSpec("mamba", "mlp"),
+        BlockSpec("mamba", "moe"),
+    ),
+    num_periods=4,
+    num_experts=16,
+    top_k=2,
+    moe_d_ff=14336,
+    activation="swiglu",
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    source="arXiv:2403.19887 (Jamba)",
+)

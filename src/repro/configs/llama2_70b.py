@@ -1,0 +1,19 @@
+"""LLaMA-2-70B [arXiv:2307.09288] — the paper's larger evaluation model.
+GQA kv=8, SwiGLU, 80 layers."""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="llama2-70b",
+    family="dense",
+    d_model=8192,
+    num_heads=64,
+    kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab=32000,
+    period=(BlockSpec("attn", "mlp"),),
+    num_periods=80,
+    activation="swiglu",
+    rope_theta=1e4,
+    source="arXiv:2307.09288 (LLaMA-2); HexGen-2 evaluation model",
+)

@@ -1,0 +1,29 @@
+"""Llama-4-Maverick-400B-A17B [hf:meta-llama/Llama-4-Scout-17B-16E
+family] — MoE with 128 routed experts (top-1) + a Llama-4-style shared
+expert. "Early fusion" multimodality means image tokens enter the same
+token stream; the text backbone built here is what serves them, and the
+vision tower is out of scope (dense-token inputs).
+"""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    d_model=5120,
+    num_heads=40,
+    kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=202048,
+    # Maverick interleaves dense and MoE FFNs 1:1 (hf config
+    # interleave_moe_layer_step=2): 24 dense + 24 MoE layers = 48.
+    period=(BlockSpec("attn", "mlp"), BlockSpec("attn", "moe")),
+    num_periods=24,
+    num_experts=128,
+    top_k=1,
+    moe_d_ff=8192,
+    shared_expert=True,
+    activation="swiglu",
+    rope_theta=5e5,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E (family card)",
+)

@@ -1,0 +1,19 @@
+"""Nemotron-4-15B [arXiv:2402.16819] — dense GQA with squared-ReLU
+2-matrix FFN."""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    d_model=6144,
+    num_heads=48,
+    kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab=256000,
+    period=(BlockSpec("attn", "mlp"),),
+    num_periods=32,
+    activation="relu2",
+    rope_theta=1e4,
+    source="arXiv:2402.16819 (Nemotron-4)",
+)

@@ -1,0 +1,20 @@
+"""OPT-30B [arXiv:2205.01068] — the paper's smaller evaluation model.
+MHA, GELU FFN (4×), 48 layers, d_model 7168."""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="opt-30b",
+    family="dense",
+    d_model=7168,
+    num_heads=56,
+    kv_heads=56,
+    head_dim=128,
+    d_ff=28672,
+    vocab=50272,
+    period=(BlockSpec("attn", "mlp"),),
+    num_periods=48,
+    activation="gelu",
+    qkv_bias=True,
+    rope_theta=1e4,
+    source="arXiv:2205.01068 (OPT); HexGen-2 evaluation model",
+)

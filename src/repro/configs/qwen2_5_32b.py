@@ -1,0 +1,20 @@
+"""Qwen2.5-32B [hf:Qwen/Qwen2.5-0.5B family card] — dense GQA with QKV
+bias."""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    d_model=5120,
+    num_heads=40,
+    kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab=152064,
+    period=(BlockSpec("attn", "mlp"),),
+    num_periods=64,
+    activation="swiglu",
+    qkv_bias=True,
+    rope_theta=1e6,
+    source="hf:Qwen/Qwen2.5-0.5B (family card)",
+)

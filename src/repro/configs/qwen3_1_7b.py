@@ -1,0 +1,20 @@
+"""Qwen3-1.7B [hf:Qwen/Qwen3-8B family] — dense GQA with per-head
+QK-RMSNorm (qk_norm) and no QKV bias."""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    d_model=2048,
+    num_heads=16,
+    kv_heads=8,
+    head_dim=128,
+    d_ff=6144,
+    vocab=151936,
+    period=(BlockSpec("attn", "mlp"),),
+    num_periods=28,
+    activation="swiglu",
+    qk_norm=True,
+    rope_theta=1e6,
+    source="hf:Qwen/Qwen3-8B (family card)",
+)

@@ -1,0 +1,23 @@
+"""Qwen3-30B-A3B [hf:Qwen/Qwen3-30B-A3B] — fine-grained MoE: 128 experts,
+top-8, small expert d_ff=768, GQA kv=4, qk_norm."""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    d_model=2048,
+    num_heads=32,
+    kv_heads=4,
+    head_dim=64,
+    d_ff=768,
+    vocab=151936,
+    period=(BlockSpec("attn", "moe"),),
+    num_periods=48,
+    num_experts=128,
+    top_k=8,
+    moe_d_ff=768,
+    activation="swiglu",
+    qk_norm=True,
+    rope_theta=1e6,
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

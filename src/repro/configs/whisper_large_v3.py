@@ -1,0 +1,29 @@
+"""Whisper-large-v3 [arXiv:2212.04356] — encoder-decoder audio backbone.
+
+The mel-spectrogram + conv feature extractor is a STUB per the
+assignment: ``input_specs()`` provides 1500 precomputed frame embeddings
+of width d_model. Decoder layers are (self-attn, no-ffn) + (cross-attn,
+mlp) BlockSpec pairs; the encoder is a 32-layer non-causal stack.
+MHA (kv_heads == num_heads == 20), GELU 2-matrix FFN.
+"""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3",
+    family="audio",
+    d_model=1280,
+    num_heads=20,
+    kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab=51866,
+    period=(
+        BlockSpec("attn", "none"),        # decoder self-attention
+        BlockSpec("cross_attn", "mlp"),   # decoder cross-attention + FFN
+    ),
+    num_periods=32,
+    activation="gelu",
+    encoder_periods=32,
+    encoder_frames=1500,
+    source="arXiv:2212.04356 (Whisper); conv frontend stubbed per assignment",
+)

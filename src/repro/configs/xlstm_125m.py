@@ -1,0 +1,27 @@
+"""xLSTM-125M [arXiv:2405.04517] — sLSTM + mLSTM blocks, no FFN (d_ff=0).
+
+Period of 4 (3 mLSTM : 1 sLSTM ≈ the paper's mostly-mLSTM mixes);
+12 layers total. The recurrent state is the "KV cache": O(1) in
+sequence length, so long_500k runs natively.
+"""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    d_model=768,
+    num_heads=4,
+    kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab=50304,
+    period=(
+        BlockSpec("mlstm", "none"),
+        BlockSpec("mlstm", "none"),
+        BlockSpec("mlstm", "none"),
+        BlockSpec("slstm", "none"),
+    ),
+    num_periods=3,
+    xlstm_heads=4,
+    source="arXiv:2405.04517 (xLSTM)",
+)

@@ -1,0 +1,18 @@
+"""Yi-34B [arXiv:2403.04652] — llama-architecture dense GQA."""
+from repro.configs.base import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="yi-34b",
+    family="dense",
+    d_model=7168,
+    num_heads=56,
+    kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab=64000,
+    period=(BlockSpec("attn", "mlp"),),
+    num_periods=60,
+    activation="swiglu",
+    rope_theta=5e6,
+    source="arXiv:2403.04652 (Yi)",
+)

@@ -1,0 +1,42 @@
+"""HexGen-2 core: heterogeneity-aware scheduling for disaggregated inference.
+
+Public API:
+    ClusterSpec / build_cluster / PAPER_SETTINGS   — device pools
+    ModelProfile / Workload / WORKLOADS            — cost-model inputs
+    schedule()                                     — the paper's algorithm
+    genetic_schedule / random_swap_schedule / distserve_schedule — baselines
+    Placement                                      — scheduler output
+"""
+from repro.core.cluster import (ClusterSpec, Device, GPUType, GPU_TYPES,
+                                PAPER_SETTINGS, build_cluster)
+from repro.core.cost_model import (B_TYPE, HPHD, HPLD, LLAMA2_70B, LPHD, LPLD,
+                                   OPT_30B, ModelProfile, ParallelPlan,
+                                   Workload, WORKLOADS, decode_capacity,
+                                   decode_latency, kv_transfer_time,
+                                   make_plan, max_decode_batch,
+                                   plan_fits_memory, prefill_capacity,
+                                   prefill_latency)
+from repro.core.flowgraph import DEFAULT_PERIOD, solve_flow
+from repro.core.maxflow import FlowNetwork, FlowResult
+from repro.core.partition import (GroupPartition, initial_partition,
+                                  kernighan_lin, num_groups,
+                                  spectral_partition)
+from repro.core.placement import Placement, ReplicaPlacement
+from repro.core.refine import RefineTrace, iterative_refinement
+from repro.core.scheduler import ScheduleResult, schedule
+from repro.core.baselines import (colocated_throughput, distserve_schedule,
+                                  genetic_schedule, random_swap_schedule)
+
+__all__ = [
+    "ClusterSpec", "Device", "GPUType", "GPU_TYPES", "PAPER_SETTINGS",
+    "build_cluster", "B_TYPE", "ModelProfile", "ParallelPlan", "Workload",
+    "WORKLOADS", "HPLD", "HPHD", "LPHD", "LPLD", "OPT_30B", "LLAMA2_70B",
+    "decode_capacity", "decode_latency", "kv_transfer_time", "make_plan",
+    "max_decode_batch", "plan_fits_memory", "prefill_capacity",
+    "prefill_latency", "DEFAULT_PERIOD", "solve_flow", "FlowNetwork",
+    "FlowResult", "GroupPartition", "initial_partition", "kernighan_lin",
+    "num_groups", "spectral_partition", "Placement", "ReplicaPlacement",
+    "RefineTrace", "iterative_refinement", "ScheduleResult", "schedule",
+    "colocated_throughput", "distserve_schedule", "genetic_schedule",
+    "random_swap_schedule",
+]

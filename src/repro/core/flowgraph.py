@@ -1,0 +1,105 @@
+"""Phase 2 — max-flow over the disaggregated serving graph (paper §3.3).
+
+Builds the directed flow network:
+
+    source → φᵢ.in                      (dispatch link capacity)
+    φᵢ.in → φᵢ.out                      (prefill replica capacity)
+    φᵢ.out → δⱼ.in                      (KV-cache link capacity)
+    δⱼ.in → δⱼ.out                      (decode replica capacity)
+    δⱼ.out → sink                       (completion link capacity)
+
+and solves it with preflow-push. The flow assignment on φ→δ edges is the
+KV-cache communication plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cluster import ClusterSpec
+from repro.core.cost_model import (ModelProfile, Workload, kv_transfer_time,
+                                   B_TYPE)
+from repro.core.maxflow import FlowNetwork, FlowResult
+from repro.core.parallel_search import best_decode_plan, best_prefill_plan
+from repro.core.partition import GroupPartition
+from repro.core.placement import Placement, ReplicaPlacement
+
+DEFAULT_PERIOD = 600.0  # T = 10 minutes (paper §3.3)
+
+
+@dataclasses.dataclass
+class FlowGraphResult:
+    placement: Placement
+    # per-edge (capacity, flow) for refinement diagnostics
+    edge_caps: Dict[Tuple[str, str], float]
+    edge_flows: Dict[Tuple[str, str], float]
+
+
+def _dispatch_capacity(cluster: ClusterSpec, devices: List[int],
+                       wl: Workload, period: float) -> float:
+    """source→φ / δ→sink capacity: request/response bytes over the best
+    host link (Appendix A, connection types 1 & 2). Requests are token
+    ids (4 B/token) — tiny; this edge is rarely binding."""
+    req_bytes = 4.0 * wl.s_in
+    best_bw = max(max(cluster.bandwidth[d]) for d in devices)
+    return period * best_bw / max(req_bytes, 1.0)
+
+
+def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
+               part: GroupPartition, wl: Workload,
+               period: float = DEFAULT_PERIOD) -> FlowGraphResult:
+    """Pick per-replica optimal plans, build the flow network, run
+    preflow-push, and assemble a Placement."""
+    replicas: List[ReplicaPlacement] = []
+    for gid, (group, is_pref) in enumerate(zip(part.groups, part.is_prefill)):
+        if is_pref:
+            plan, cap = best_prefill_plan(cluster, profile, group, wl, period)
+        else:
+            plan, cap = best_decode_plan(cluster, profile, group, wl, period)
+        replicas.append(ReplicaPlacement(gid, list(group), is_pref, plan, cap))
+
+    net = FlowNetwork()
+    caps: Dict[Tuple[str, str], float] = {}
+
+    def add(u: str, v: str, c: float) -> None:
+        if c <= 0.0:
+            return
+        net.add_edge(u, v, c)
+        caps[(u, v)] = caps.get((u, v), 0.0) + c
+
+    for r in replicas:
+        if r.plan is None or r.capacity <= 0.0:
+            continue
+        gin, gout = f"g{r.group_id}.in", f"g{r.group_id}.out"
+        add(gin, gout, r.capacity)
+        if r.is_prefill:
+            add("source", gin, _dispatch_capacity(cluster, r.devices, wl, period))
+        else:
+            add(gout, "sink", _dispatch_capacity(cluster, r.devices, wl, period))
+
+    # φ.out → δ.in: KV-cache links (connection type 3)
+    for p in replicas:
+        if not p.is_prefill or p.plan is None or p.capacity <= 0.0:
+            continue
+        for d in replicas:
+            if d.is_prefill or d.plan is None or d.capacity <= 0.0:
+                continue
+            t_kv = kv_transfer_time(cluster, profile, p.plan, d.plan,
+                                    batch=1, s_in=wl.s_in)
+            cap = period / t_kv if t_kv > 0 else float(period * 1e6)
+            add(f"g{p.group_id}.out", f"g{d.group_id}.in", cap)
+
+    result: FlowResult = net.preflow_push("source", "sink")
+
+    kv_routes: Dict[Tuple[int, int], float] = {}
+    for (u, v), f in result.flow.items():
+        if isinstance(u, str) and u.endswith(".out") and \
+           isinstance(v, str) and v.endswith(".in") and f > 1e-9:
+            pid = int(u[1:].split(".")[0])
+            did = int(v[1:].split(".")[0])
+            kv_routes[(pid, did)] = f
+
+    placement = Placement(replicas=replicas, kv_routes=kv_routes,
+                          max_flow=result.max_flow, period=period)
+    flows = {e: f for e, f in result.flow.items() if e in caps}
+    return FlowGraphResult(placement, caps, flows)

@@ -1,0 +1,92 @@
+"""Per-replica parallel-strategy search (paper §3.3, step 1 of phase 2).
+
+Enumerates asymmetric TP×PP plans for a heterogeneous device group and
+selects the latency-optimal plan for prefill replicas and the
+throughput-optimal plan for decode replicas.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.cluster import ClusterSpec
+from repro.core.cost_model import (ModelProfile, ParallelPlan, Workload,
+                                   decode_capacity, make_plan,
+                                   plan_fits_memory, prefill_capacity,
+                                   prefill_latency)
+
+
+def _ordered(cluster: ClusterSpec, group: Sequence[int]) -> List[int]:
+    """Order devices by (node, gpu tier) so contiguous PP stages are
+    node-local and TP stays on fast intra-node links."""
+    return sorted(group, key=lambda d: (cluster.devices[d].node,
+                                        -cluster.devices[d].gpu.flops, d))
+
+
+def _stage_splits(devs: List[int], cluster: ClusterSpec,
+                  max_pp: int) -> Iterable[List[List[int]]]:
+    """Candidate stage splits: (a) uniform TP×PP factorizations over the
+    ordered device list; (b) the by-node split (asymmetric TP)."""
+    n = len(devs)
+    seen = set()
+    for pp in range(1, min(n, max_pp) + 1):
+        if n % pp == 0:
+            tp = n // pp
+            split = [devs[i * tp:(i + 1) * tp] for i in range(pp)]
+            key = tuple(tuple(s) for s in split)
+            if key not in seen:
+                seen.add(key)
+                yield split
+    # by-node asymmetric split
+    by_node: List[List[int]] = []
+    for d in devs:
+        if by_node and cluster.devices[by_node[-1][-1]].node == cluster.devices[d].node:
+            by_node[-1].append(d)
+        else:
+            by_node.append([d])
+    if 1 < len(by_node) <= max_pp:
+        key = tuple(tuple(s) for s in by_node)
+        if key not in seen:
+            seen.add(key)
+            yield by_node
+
+
+def candidate_plans(cluster: ClusterSpec, profile: ModelProfile,
+                    group: Sequence[int],
+                    max_pp: Optional[int] = None) -> List[ParallelPlan]:
+    devs = _ordered(cluster, group)
+    max_pp = max_pp or min(len(devs), profile.num_layers, 8)
+    plans = []
+    for split in _stage_splits(devs, cluster, max_pp):
+        if len(split) > profile.num_layers:
+            continue
+        plans.append(make_plan(split, profile.num_layers, cluster))
+    return plans
+
+
+def best_prefill_plan(cluster: ClusterSpec, profile: ModelProfile,
+                      group: Sequence[int], wl: Workload,
+                      period: float) -> Tuple[Optional[ParallelPlan], float]:
+    """Latency-optimal plan; returns (plan, capacity req/period)."""
+    best, best_lat = None, float("inf")
+    for plan in candidate_plans(cluster, profile, group):
+        if not plan_fits_memory(cluster, profile, plan, wl.prefill_batch, wl.s_in):
+            continue
+        lat = prefill_latency(cluster, profile, plan, wl.prefill_batch, wl.s_in)
+        if lat < best_lat:
+            best, best_lat = plan, lat
+    if best is None:
+        return None, 0.0
+    return best, prefill_capacity(cluster, profile, best, wl, period)
+
+
+def best_decode_plan(cluster: ClusterSpec, profile: ModelProfile,
+                     group: Sequence[int], wl: Workload,
+                     period: float) -> Tuple[Optional[ParallelPlan], float]:
+    """Throughput-optimal plan; returns (plan, capacity req/period)."""
+    best, best_cap = None, 0.0
+    for plan in candidate_plans(cluster, profile, group):
+        cap = decode_capacity(cluster, profile, plan, wl, period)
+        if cap > best_cap:
+            best, best_cap = plan, cap
+    return best, best_cap

@@ -1,0 +1,245 @@
+"""Phase 1 — graph partition (paper §3.2).
+
+Step (i)   spectral partition of the device graph into K groups,
+           refined by Kernighan–Lin (minimize inter-group bandwidth cut,
+           balance per-group memory).
+Step (ii)  coarsen groups to super-nodes; secondary partition of the
+           coarsened graph into {prefill, decode} sets — this time
+           MAXIMIZING the inter-type cut (KV cache crosses it).
+Step (iii) projection back to device sets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+from repro.core.cost_model import ModelProfile, B_TYPE
+
+
+# ---------------------------------------------------------------------------
+# Spectral partition
+# ---------------------------------------------------------------------------
+
+
+def _laplacian(weights: np.ndarray) -> np.ndarray:
+    deg = np.diag(weights.sum(axis=1))
+    return deg - weights
+
+
+def spectral_partition(weights: np.ndarray, k: int,
+                       node_weights: Optional[np.ndarray] = None,
+                       rng: Optional[np.random.Generator] = None) -> List[int]:
+    """Partition a weighted graph into k groups via Laplacian eigenvectors.
+
+    Uses the k smallest non-trivial eigenvectors as node embeddings and a
+    balanced greedy assignment (k-means-free, deterministic): sort nodes by
+    their Fiedler coordinate and cut into k memory-balanced chunks, then
+    snap within the spectral embedding. (Alpert & Yao 1995: "the more
+    eigenvectors, the better".)
+    """
+    n = weights.shape[0]
+    k = max(1, min(k, n))
+    if k == 1:
+        return [0] * n
+    if node_weights is None:
+        node_weights = np.ones(n)
+    lap = _laplacian(weights / (weights.max() + 1e-30))
+    vals, vecs = np.linalg.eigh(lap)
+    embed = vecs[:, 1:min(k + 1, n)]  # skip the trivial constant eigenvector
+    order = np.argsort(embed[:, 0], kind="stable")
+    # memory-balanced contiguous cut along the Fiedler ordering
+    target = node_weights.sum() / k
+    labels = [0] * n
+    g, acc = 0, 0.0
+    for idx in order:
+        if acc >= target and g < k - 1:
+            g, acc = g + 1, 0.0
+        labels[idx] = g
+        acc += node_weights[idx]
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# Kernighan–Lin refinement
+# ---------------------------------------------------------------------------
+
+
+def _cut_delta(weights: np.ndarray, labels: Sequence[int], a: int, b: int) -> float:
+    """Change in total inter-group cut if nodes a and b swap groups."""
+    la, lb = labels[a], labels[b]
+    delta = 0.0
+    for v in range(weights.shape[0]):
+        if v in (a, b):
+            continue
+        lv = labels[v]
+        # after the swap, a joins lb and b joins la: an edge (a,v) with
+        # lv==lb stops being cut (+w towards improvement), one with
+        # lv==la becomes cut (-w); symmetrically for b.
+        delta += weights[a, v] * ((1 if lv == lb else 0) - (1 if lv == la else 0))
+        delta += weights[b, v] * ((1 if lv == la else 0) - (1 if lv == lb else 0))
+    # the a-b edge itself stays cut either way (different groups)
+    return delta  # positive == total cut DECREASES by delta
+
+
+def kernighan_lin(weights: np.ndarray, labels: List[int],
+                  node_weights: np.ndarray,
+                  balance_tol: float = 0.25,
+                  maximize: bool = False,
+                  max_passes: int = 8) -> List[int]:
+    """Pairwise-swap refinement of a multiway partition.
+
+    Greedily swaps node pairs across groups while the inter-group cut
+    improves (decreases, or increases when ``maximize``) and per-group
+    node-weight (memory) balance stays within ``balance_tol`` of even.
+    """
+    labels = list(labels)
+    n = weights.shape[0]
+    k = max(labels) + 1
+    if k <= 1:
+        return labels
+    target = node_weights.sum() / k
+
+    def group_w(lbls):
+        w = np.zeros(k)
+        for i, l in enumerate(lbls):
+            w[l] += node_weights[i]
+        return w
+
+    sign = -1.0 if maximize else 1.0
+    for _ in range(max_passes):
+        improved = False
+        gw = group_w(labels)
+        for a in range(n):
+            for b in range(a + 1, n):
+                if labels[a] == labels[b]:
+                    continue
+                delta = _cut_delta(weights, labels, a, b)  # >0 => cut shrinks
+                if sign * delta <= 1e-12:
+                    continue
+                la, lb = labels[a], labels[b]
+                dw = node_weights[a] - node_weights[b]
+                new_a, new_b = gw[la] - dw, gw[lb] + dw
+                if (abs(new_a - target) > balance_tol * target + 1e-9 or
+                        abs(new_b - target) > balance_tol * target + 1e-9):
+                    # allow the swap only if it doesn't worsen balance
+                    if abs(new_a - target) + abs(new_b - target) > \
+                       abs(gw[la] - target) + abs(gw[lb] - target) + 1e-9:
+                        continue
+                labels[a], labels[b] = lb, la
+                gw[la], gw[lb] = new_a, new_b
+                improved = True
+        if not improved:
+            break
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# Group count, coarsening, secondary partition
+# ---------------------------------------------------------------------------
+
+
+def replica_memory_estimate(profile: ModelProfile, batch: int = 32,
+                            s_total: int = 1024) -> float:
+    """Appendix A: params + 32 concurrent requests' KV cache."""
+    return profile.total_param_bytes + batch * profile.kv_bytes_per_request(s_total)
+
+
+def num_groups(cluster: ClusterSpec, profile: ModelProfile,
+               batch: int = 32, s_total: int = 1024) -> int:
+    need = replica_memory_estimate(profile, batch, s_total)
+    k = int(cluster.total_memory * 0.9 // need)
+    return max(2, min(k, cluster.num_devices))  # ≥1 prefill + ≥1 decode
+
+
+@dataclasses.dataclass
+class GroupPartition:
+    """Output of phase 1: device groups + type per group."""
+    groups: List[List[int]]           # device indices per group
+    is_prefill: List[bool]            # type per group
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.groups)
+
+    def prefill_groups(self) -> List[int]:
+        return [i for i, p in enumerate(self.is_prefill) if p]
+
+    def decode_groups(self) -> List[int]:
+        return [i for i, p in enumerate(self.is_prefill) if not p]
+
+    def validate(self, n_devices: int) -> None:
+        seen = sorted(d for g in self.groups for d in g)
+        assert seen == list(range(n_devices)), "partition must cover all devices"
+        assert len(self.groups) == len(self.is_prefill)
+        assert any(self.is_prefill) and not all(self.is_prefill), \
+            "need at least one prefill and one decode group"
+
+
+def coarsen(weights: np.ndarray, groups: List[List[int]]) -> np.ndarray:
+    """Merge device nodes into super-nodes; edge = summed cross-group weight."""
+    k = len(groups)
+    coarse = np.zeros((k, k))
+    for i in range(k):
+        for j in range(i + 1, k):
+            w = float(weights[np.ix_(groups[i], groups[j])].sum())
+            coarse[i, j] = coarse[j, i] = w
+    return coarse
+
+
+def secondary_partition(coarse_weights: np.ndarray,
+                        group_capacity: np.ndarray,
+                        prefill_share: float = 0.5) -> List[bool]:
+    """Split super-nodes into prefill/decode, MAXIMIZING the inter-type cut.
+
+    Greedy + KL(maximize): start from a capacity-balanced split (the
+    ``prefill_share`` fraction of total capacity goes to prefill), then
+    pairwise-swap while the inter-type edge weight grows.
+    """
+    k = coarse_weights.shape[0]
+    order = np.argsort(-group_capacity, kind="stable")
+    total = group_capacity.sum()
+    is_prefill = [False] * k
+    acc = 0.0
+    for idx in order:
+        if acc < prefill_share * total:
+            is_prefill[idx] = True
+            acc += group_capacity[idx]
+    if all(is_prefill):
+        is_prefill[int(order[-1])] = False
+    if not any(is_prefill):
+        is_prefill[int(order[0])] = True
+    labels = [0 if p else 1 for p in is_prefill]
+    labels = kernighan_lin(coarse_weights, labels, group_capacity,
+                           balance_tol=0.6, maximize=True)
+    out = [l == 0 for l in labels]
+    if all(out) or not any(out):
+        out[int(np.argmax(group_capacity))] = not out[int(np.argmax(group_capacity))]
+    return out
+
+
+def initial_partition(cluster: ClusterSpec, profile: ModelProfile,
+                      k: Optional[int] = None,
+                      prefill_share: float = 0.5) -> GroupPartition:
+    """Full phase 1: spectral + KL + coarsen + secondary partition + project."""
+    node_mem = np.array([d.gpu.memory for d in cluster.devices])
+    if k is None:
+        k = num_groups(cluster, profile)
+    labels = spectral_partition(cluster.bandwidth, k, node_mem)
+    labels = kernighan_lin(cluster.bandwidth / cluster.bandwidth.max(),
+                           labels, node_mem)
+    k = max(labels) + 1
+    groups: List[List[int]] = [[] for _ in range(k)]
+    for i, l in enumerate(labels):
+        groups[l].append(i)
+    groups = [g for g in groups if g]
+    # step ii: coarsen + secondary partition on aggregate FLOPS as capacity
+    coarse = coarsen(cluster.bandwidth, groups)
+    cap = np.array([sum(cluster.devices[d].gpu.flops for d in g) for g in groups])
+    is_prefill = secondary_partition(coarse, cap, prefill_share)
+    # step iii: projection is implicit — groups already hold device indices
+    part = GroupPartition(groups, list(is_prefill))
+    part.validate(cluster.num_devices)
+    return part

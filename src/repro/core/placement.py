@@ -1,0 +1,69 @@
+"""Model placement strategy — the scheduler's output (paper §3.1)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cost_model import ParallelPlan
+
+
+@dataclasses.dataclass
+class ReplicaPlacement:
+    """One model replica: its devices, type, parallel plan, capacity."""
+    group_id: int
+    devices: List[int]
+    is_prefill: bool
+    plan: Optional[ParallelPlan]
+    capacity: float  # requests per scheduling period T
+
+    @property
+    def kind(self) -> str:
+        return "prefill" if self.is_prefill else "decode"
+
+    def describe(self, cluster=None) -> str:
+        plan = self.plan.describe() if self.plan else "-"
+        if cluster is not None:
+            names: Dict[str, int] = {}
+            for d in self.devices:
+                n = cluster.devices[d].gpu.name
+                names[n] = names.get(n, 0) + 1
+            devs = "+".join(f"{v}x{k}" for k, v in sorted(names.items()))
+        else:
+            devs = str(self.devices)
+        return (f"[{self.kind} g{self.group_id}] {devs} {plan} "
+                f"cap={self.capacity:.1f}")
+
+
+@dataclasses.dataclass
+class Placement:
+    """Complete placement: replicas + KV-cache flow routing + value."""
+    replicas: List[ReplicaPlacement]
+    # (prefill_group_id, decode_group_id) -> requests per period routed
+    kv_routes: Dict[Tuple[int, int], float]
+    max_flow: float          # end-to-end requests per period
+    period: float            # scheduling period T (seconds)
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.max_flow / self.period
+
+    def prefill_replicas(self) -> List[ReplicaPlacement]:
+        return [r for r in self.replicas if r.is_prefill]
+
+    def decode_replicas(self) -> List[ReplicaPlacement]:
+        return [r for r in self.replicas if not r.is_prefill]
+
+    def replica_by_group(self, gid: int) -> ReplicaPlacement:
+        for r in self.replicas:
+            if r.group_id == gid:
+                return r
+        raise KeyError(gid)
+
+    def describe(self, cluster=None) -> str:
+        lines = [f"max_flow={self.max_flow:.1f} req/T (T={self.period:.0f}s, "
+                 f"{self.throughput_rps:.3f} req/s)"]
+        for r in self.replicas:
+            lines.append("  " + r.describe(cluster))
+        for (p, d), f in sorted(self.kv_routes.items()):
+            lines.append(f"  kv-route g{p}->g{d}: {f:.1f} req/T")
+        return "\n".join(lines)

@@ -1,0 +1,183 @@
+"""Phase 3 — max-flow-guided iterative refinement (paper §3.4).
+
+Reads the flow assignment from phase 2, classifies replica edges as
+*bottleneck* (flow ≈ capacity) or *underutilized* (flow < capacity), and
+proposes device moves/swaps between groups that rebalance capacity:
+
+  * move a device from the slackest group into the tightest group of the
+    other type (reallocates resources between phases — the LPHD example
+    in Appendix E);
+  * swap a device pair between a bottleneck and an underutilized group
+    (upgrades the bottleneck group's compute while preserving sizes);
+  * flip the type of a chronically underutilized group.
+
+Each candidate is re-scored by re-running phase 2 (and the per-replica
+plan search); the best improving candidate is applied and the loop
+repeats until convergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+from repro.core.cost_model import ModelProfile, Workload
+from repro.core.flowgraph import (DEFAULT_PERIOD, FlowGraphResult, solve_flow)
+from repro.core.partition import GroupPartition
+
+TIGHT = 0.98  # flow/capacity above this ⇒ bottleneck edge
+
+
+@dataclasses.dataclass
+class RefineTrace:
+    """One refinement step for the convergence benchmark (Fig. 10)."""
+    step: int
+    max_flow: float
+    action: str
+
+
+def _utilization(res: FlowGraphResult) -> dict:
+    """group_id -> flow/capacity through its replica edge."""
+    util = {}
+    for (u, v), cap in res.edge_caps.items():
+        if u.endswith(".in") and v.endswith(".out"):
+            gid = int(u[1:].split(".")[0])
+            util[gid] = res.edge_flows.get((u, v), 0.0) / cap if cap > 0 else 0.0
+    return util
+
+
+def _candidate_partitions(cluster: ClusterSpec, part: GroupPartition,
+                          res: FlowGraphResult,
+                          rng: np.random.Generator,
+                          max_candidates: int = 12,
+                          guided: bool = True) -> List[Tuple[str, GroupPartition]]:
+    """Generate candidate partitions. ``guided=False`` gives the paper's
+    truncated variant: random swaps instead of flow-guided ones."""
+    util = _utilization(res)
+    gids = list(range(part.num_groups))
+    cands: List[Tuple[str, GroupPartition]] = []
+
+    def clone() -> GroupPartition:
+        return GroupPartition([list(g) for g in part.groups],
+                              list(part.is_prefill))
+
+    if guided and util:
+        order_tight = sorted(gids, key=lambda g: -util.get(g, 0.0))
+        order_slack = sorted(gids, key=lambda g: util.get(g, 1.0))
+        tight = [g for g in order_tight if util.get(g, 0) >= TIGHT]
+        slack = [g for g in order_slack if util.get(g, 1.0) < TIGHT]
+        pairs = [(s, t) for s in slack[:3] for t in tight[:3] if s != t]
+    else:
+        pairs = [(int(rng.integers(part.num_groups)),
+                  int(rng.integers(part.num_groups))) for _ in range(6)]
+        pairs = [(s, t) for s, t in pairs if s != t]
+
+    for s, t in pairs:
+        sg, tg = part.groups[s], part.groups[t]
+        if len(sg) > 1:
+            # move: give the tight group the slack group's best device
+            d = max(sg, key=lambda i: cluster.devices[i].gpu.flops)
+            c = clone()
+            c.groups[s] = [x for x in sg if x != d]
+            c.groups[t] = tg + [d]
+            cands.append((f"move d{d}: g{s}->g{t}", c))
+        # swap: strongest slack device <-> weakest tight device
+        d1 = max(sg, key=lambda i: cluster.devices[i].gpu.flops)
+        d2 = min(tg, key=lambda i: cluster.devices[i].gpu.flops)
+        if cluster.devices[d1].gpu.flops > cluster.devices[d2].gpu.flops:
+            c = clone()
+            c.groups[s] = [x for x in sg if x != d1] + [d2]
+            c.groups[t] = [x for x in tg if x != d2] + [d1]
+            cands.append((f"swap d{d1}<->d{d2}: g{s}<->g{t}", c))
+
+    # type flips of the slackest groups (resource reallocation between phases)
+    flip_order = sorted(gids, key=lambda g: util.get(g, 1.0))
+    for g in flip_order[:2]:
+        same_type = [i for i in gids if part.is_prefill[i] == part.is_prefill[g]]
+        if len(same_type) > 1:
+            c = clone()
+            c.is_prefill[g] = not c.is_prefill[g]
+            cands.append((f"flip g{g} -> "
+                          f"{'prefill' if c.is_prefill[g] else 'decode'}", c))
+
+    # dedupe, keep valid, cap count
+    out, seen = [], set()
+    for name, c in cands:
+        key = (tuple(tuple(sorted(g)) for g in c.groups), tuple(c.is_prefill))
+        if key in seen:
+            continue
+        seen.add(key)
+        try:
+            c.validate(cluster.num_devices)
+        except AssertionError:
+            continue
+        if any(len(g) == 0 for g in c.groups):
+            continue
+        out.append((name, c))
+        if len(out) >= max_candidates:
+            break
+    return out
+
+
+def iterative_refinement(
+    cluster: ClusterSpec, profile: ModelProfile, part: GroupPartition,
+    wl: Workload, period: float = DEFAULT_PERIOD,
+    max_iters: int = 30, guided: bool = True,
+    seed: int = 0,
+    anneal: float = 0.0,
+    on_step: Optional[Callable[[RefineTrace], None]] = None,
+) -> Tuple[GroupPartition, FlowGraphResult, List[RefineTrace]]:
+    """Max-flow-guided edge-swap loop. Returns the refined partition, its
+    flow result, and the improvement trace.
+
+    ``anneal`` > 0 enables simulated-annealing acceptance (beyond-paper
+    extension): a worsening candidate is accepted with probability
+    exp(Δ/(T·flow)), T = anneal·(1 − step/max_iters), which lets the
+    walk escape the local optima the paper's greedy loop stops at. The
+    best-seen partition is still returned.
+    """
+    rng = np.random.default_rng(seed)
+    cur_part = part
+    cur_res = solve_flow(cluster, profile, part, wl, period)
+    best_part, best_res = cur_part, cur_res
+    trace = [RefineTrace(0, best_res.placement.max_flow, "initial")]
+    if on_step:
+        on_step(trace[0])
+    stall = 0
+    for step in range(1, max_iters + 1):
+        cands = _candidate_partitions(cluster, cur_part, cur_res, rng,
+                                      guided=guided)
+        moved = False
+        cur_flow = cur_res.placement.max_flow
+        scored = [(name, cand, solve_flow(cluster, profile, cand, wl,
+                                          period)) for name, cand in cands]
+        scored.sort(key=lambda t: -t[2].placement.max_flow)
+        pick = None
+        if scored and scored[0][2].placement.max_flow > cur_flow * (1 + 1e-6):
+            pick = scored[0]          # greedy: best improving candidate
+        elif scored and anneal > 0 and cur_flow > 0:
+            name, cand, res = scored[0]   # least-bad downhill move
+            delta = res.placement.max_flow - cur_flow
+            temp = anneal * max(1.0 - step / max_iters, 0.05)
+            if rng.random() < float(np.exp(delta / (temp * cur_flow))):
+                pick = (f"{name} (anneal)", cand, res)
+        if pick is not None:
+            name, cand, res = pick
+            cur_part, cur_res = cand, res
+            tr = RefineTrace(step, res.placement.max_flow, name)
+            trace.append(tr)
+            if on_step:
+                on_step(tr)
+            if res.placement.max_flow > best_res.placement.max_flow:
+                best_part, best_res = cand, res
+            moved = True
+        if not moved:
+            stall += 1
+            if stall >= (2 if anneal > 0 else 1):
+                break
+        else:
+            stall = 0
+    return best_part, best_res, trace

@@ -1,0 +1,68 @@
+"""HexGen-2 scheduler entry point: two-phase search + iterative refinement.
+
+``schedule()`` runs the full paper algorithm:
+  phase 1  spectral + KL graph partition, coarsen/secondary partition
+  phase 2  per-replica TP×PP search + preflow-push max-flow
+  phase 3  max-flow-guided edge-swap refinement
+
+A small outer sweep over the number of groups K and the initial
+prefill-capacity share seeds refinement from several starts (cheap —
+each start converges in a handful of solve_flow calls).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.core.cluster import ClusterSpec
+from repro.core.cost_model import ModelProfile, Workload
+from repro.core.flowgraph import DEFAULT_PERIOD, FlowGraphResult, solve_flow
+from repro.core.partition import GroupPartition, initial_partition, num_groups
+from repro.core.placement import Placement
+from repro.core.refine import RefineTrace, iterative_refinement
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    placement: Placement
+    partition: GroupPartition
+    flow: FlowGraphResult
+    trace: List[RefineTrace]
+    elapsed_s: float
+
+
+def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
+             period: float = DEFAULT_PERIOD,
+             k: Optional[int] = None,
+             prefill_shares: Tuple[float, ...] = (0.35, 0.5, 0.65),
+             max_refine_iters: int = 30,
+             guided: bool = True,
+             seed: int = 0,
+             on_step: Optional[Callable[[RefineTrace], None]] = None,
+             ) -> ScheduleResult:
+    t0 = time.perf_counter()
+    k0 = k if k is not None else num_groups(cluster, profile)
+    best: Optional[ScheduleResult] = None
+    for kk in sorted({max(2, k0 - 1), k0, k0 + 1} if k is None else {k0}):
+        if kk > cluster.num_devices:
+            continue
+        for share in prefill_shares:
+            try:
+                part = initial_partition(cluster, profile, k=kk,
+                                         prefill_share=share)
+            except AssertionError:
+                continue
+            rpart, res, trace = iterative_refinement(
+                cluster, profile, part, wl, period,
+                max_iters=max_refine_iters, guided=guided, seed=seed,
+                on_step=on_step)
+            cand = ScheduleResult(res.placement, rpart, res, trace,
+                                  time.perf_counter() - t0)
+            if best is None or cand.placement.max_flow > best.placement.max_flow:
+                best = cand
+    if best is None:
+        raise RuntimeError("scheduler found no feasible placement "
+                           f"for {profile.name} on {cluster.name}")
+    best = dataclasses.replace(best, elapsed_s=time.perf_counter() - t0)
+    return best

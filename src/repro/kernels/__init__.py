@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+flash_attention   — prefill (causal, GQA, optional sliding window)
+decode_attention  — one-token GQA decode over a long KV cache
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the
+jit'd layout-adapting wrappers the model layer calls.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import gqa_decode_bhsd
+from repro.kernels.flash_attention import flash_attention_bhsd
+
+__all__ = ["ops", "ref", "gqa_decode_bhsd", "flash_attention_bhsd"]

@@ -1,0 +1,110 @@
+"""Pallas TPU GQA decode attention (the disaggregated decode hot spot).
+
+One new query token per sequence attends over a long KV cache. This is
+the TPU analogue of a paged decode kernel: the cache is a dense
+per-sequence slab (static shapes — TPU has no pointer indirection, see
+DESIGN.md §3) blocked over the sequence dimension; validity is a
+per-sequence length mask.
+
+Grid: (batch, kv_heads, num_s_blocks) — the s-block dimension iterates
+fastest; online-softmax stats for the whole GQA group tile
+[group, head_dim] persist in VMEM scratch.
+
+The GQA group is the MXU tile's row dimension: q for one kv head is
+[group, hd], each k block is [bk, hd] → scores [group, bk]. For small
+groups the MXU is underutilized — that is exactly why decode is
+HBM-bound, which the roofline analysis (§Roofline) makes explicit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   block_s: int, num_s_blocks: int, sm_scale: float):
+    isb = pl.program_id(2)
+
+    @pl.when(isb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [group, hd]
+    k = k_ref[0, 0].astype(jnp.float32)               # [bs, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    valid_len = len_ref[pl.program_id(0)]
+    kpos = isb * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < valid_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(isb == num_s_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def gqa_decode_bhsd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                    valid_len: jax.Array,
+                    block_s: int = DEFAULT_BLOCK_S,
+                    interpret: bool = False) -> jax.Array:
+    """q [B,Hq,hd] (one token); caches [B,Hkv,S,hd]; valid_len [B] int32
+    → out [B,Hq,hd]."""
+    b, hq, hd = q.shape
+    _, hkv, s, _ = k_cache.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    assert s % block_s == 0, (s, block_s)
+    ns = s // block_s
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    # view q as [B, Hkv, group, hd] so one grid step covers a GQA group
+    qg = q.reshape(b, hkv, group, hd)
+    valid_len = valid_len.astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, block_s=block_s,
+                               num_s_blocks=ns, sm_scale=sm_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, ns),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # valid_len, whole array
+            pl.BlockSpec((1, 1, group, hd), lambda ib, ih, isb: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd),
+                         lambda ib, ih, isb: (ib, ih, isb, 0)),
+            pl.BlockSpec((1, 1, block_s, hd),
+                         lambda ib, ih, isb: (ib, ih, isb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda ib, ih, isb: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid_len, qg, k_cache, v_cache)
+    return out.reshape(b, hq, hd)

@@ -1,0 +1,119 @@
+"""Pallas TPU flash attention (prefill hot spot).
+
+TPU-native tiling (DESIGN.md §3): MXU-aligned (block_q × block_k) tiles
+streamed HBM→VMEM via BlockSpec; online-softmax statistics (m, l) and
+the output accumulator live in fp32 VMEM scratch that persists across
+the innermost (k-block) grid dimension. GQA is handled by indexing the
+shared KV head from the query-head grid coordinate — no KV replication
+in HBM.
+
+Grid: (batch, q_heads, num_q_blocks, num_k_blocks) — the last dimension
+iterates fastest, so scratch accumulates over k blocks for a fixed
+(b, h, iq) and the output tile is written on the final k block.
+
+Causal and sliding-window masking are applied per-tile; fully-masked
+tiles still execute (Pallas grids are static) but contribute zero.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, num_k_blocks: int,
+                  causal: bool, window: int, sm_scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)               # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)               # [bk, hd]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                            # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                   # [bq, 1]
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool = True, window: int = 0,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = False) -> jax.Array:
+    """q [B,Hq,S,hd]; k,v [B,Hkv,S,hd] → out [B,Hq,S,hd]."""
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, num_k_blocks=nk,
+        causal=causal, window=window, sm_scale=sm_scale)
+
+    grid = (b, hq, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, hd), q.dtype),
+        scratch_shapes=[
+            # fp32 accumulators persisted across the innermost grid dim
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

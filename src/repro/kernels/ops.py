@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Model code calls these through ``repro.models.attention`` when the
+backend is TPU (or when ``REPRO_FORCE_PALLAS=interpret`` forces the
+interpret-mode path for validation). Layout adapters translate between
+the model's [B,S,H,hd] and the kernels' [B,H,S,hd].
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import gqa_decode_bhsd
+from repro.kernels.flash_attention import flash_attention_bhsd
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "interpret":
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def flash_supported(q: jax.Array, k: jax.Array, v: jax.Array,
+                    block: int = 128) -> bool:
+    """[B,S,H,hd] layout check: seq divisible by the tile size."""
+    s = q.shape[1]
+    return s % block == 0 and q.shape[2] % k.shape[2] == 0
+
+
+def decode_supported(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     block: int = 512) -> bool:
+    return k_cache.shape[1] % block == 0 and q.shape[1] == 1
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0) -> jax.Array:
+    """Model layout: q [B,S,Hq,hd], k/v [B,S,Hkv,hd] → [B,S,Hq,hd]."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               interpret=_interpret())
+    return jnp.swapaxes(out, 1, 2)
+
+
+@jax.jit
+def gqa_decode_attention(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array,
+                         valid_len: jax.Array) -> jax.Array:
+    """Model layout: q [B,1,Hq,hd], cache [B,S,Hkv,hd], valid_len [] or [B]
+    → [B,1,Hq,hd]."""
+    b = q.shape[0]
+    vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    qt = q[:, 0]                                       # [B,Hq,hd]
+    kt = jnp.swapaxes(k_cache, 1, 2)                   # [B,Hkv,S,hd]
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    out = gqa_decode_bhsd(qt, kt, vt, vl, interpret=_interpret())
+    return out[:, None]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q [B,Hq,S,hd]; k,v [B,Hkv,S,hd] → [B,Hq,S,hd]. fp32 math."""
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) / jnp.sqrt(float(hd))
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, vf)
+    return out.reshape(b, hq, s, hd).astype(q.dtype)
+
+
+def gqa_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                   valid_len: jax.Array) -> jax.Array:
+    """q [B,Hq,hd]; caches [B,Hkv,S,hd]; valid_len [B] → [B,Hq,hd]."""
+    b, hq, hd = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, hd)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qf,
+                        k_cache.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    mask = jnp.arange(s)[None] < valid_len[:, None]       # [B,S]
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, hd).astype(q.dtype)

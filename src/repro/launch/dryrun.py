@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × input-shape) pair.
+
+MUST be the process entry point (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS line above runs before any other import so jax sees 512
+placeholder host devices for the production meshes. Do NOT import this
+module from code that already initialized jax with one device.
+
+Per case it records compile success, memory_analysis, cost_analysis and
+the roofline terms (compute / memory / collective) into a JSON report
+consumed by benchmarks/roofline_report.py and EXPERIMENTS.md.
+"""
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+
+import jax            # noqa: E402
+
+from repro.configs import ARCHS, ASSIGNED, INPUT_SHAPES   # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.launch.steps import build_case                  # noqa: E402
+from repro.models import transformer                        # noqa: E402
+from repro.roofline import analyze                          # noqa: E402
+
+DEFAULT_REPORT = "dryrun_report.json"
+
+
+def model_flops_estimate(case, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D_active-tokens
+    for inference (decode processes one token per sequence)."""
+    n_active = transformer.count_active_params(case.cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n_active * tokens
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            want_text: bool = True, optimized: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "ok"}
+    t0 = time.perf_counter()
+    try:
+        case = build_case(arch, shape_name, mesh, optimized=optimized)
+        rec["profile"] = case.profile
+        rec["note"] = case.note
+        with mesh:
+            jitted = jax.jit(case.step_fn, in_shardings=case.in_shardings)
+            lowered = jitted.lower(*case.arg_specs)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+        memdesc = compiled.memory_analysis()
+        rep = analyze(arch, shape_name, mesh_name, chips, compiled,
+                      None, model_flops_estimate(case, shape))
+        rec.update({
+            "t_lower_s": round(t_lower, 2),
+            "t_compile_s": round(t_compile, 2),
+            "hlo_flops": rep.hlo_flops,
+            "hlo_bytes": rep.hlo_bytes,
+            "collective_bytes": rep.coll_bytes,
+            "collective_breakdown": rep.coll_breakdown,
+            "model_flops": rep.model_flops,
+            "t_compute_s": rep.t_compute,
+            "t_memory_s": rep.t_memory,
+            "t_collective_s": rep.t_collective,
+            "bottleneck": rep.bottleneck,
+            "useful_flops_ratio": rep.useful_flops_ratio,
+            "memory_analysis": str(memdesc),
+            "peak_bytes_per_chip": rep.peak_bytes_per_chip,
+        })
+        print(f"[ok]   {rep.row()}  (lower {t_lower:.0f}s "
+              f"compile {t_compile:.0f}s)", flush=True)
+    except Exception as e:  # noqa: BLE001 — report and continue
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=10)
+        print(f"[FAIL] {arch} {shape_name} {mesh_name}: {rec['error']}",
+              flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="HexGen-2 repro multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (assigned pool)")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--report", default=DEFAULT_REPORT)
+    ap.add_argument("--append", action="store_true",
+                    help="merge into an existing report file")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the Perf-validated config levers")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records = []
+    if args.append and os.path.exists(args.report):
+        with open(args.report) as f:
+            records = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in records
+            if r.get("status") == "ok"}
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                if (arch, shape, mesh_name) in done:
+                    continue
+                rec = run_one(arch, shape, multi, optimized=args.optimized)
+                records = [r for r in records
+                           if not (r["arch"] == arch and r["shape"] == shape
+                                   and r["mesh"] == mesh_name)]
+                records.append(rec)
+                failures += rec["status"] != "ok"
+                with open(args.report, "w") as f:
+                    json.dump(records, f, indent=1)
+    print(f"dry-run complete: {len(records)} records, {failures} failures "
+          f"-> {args.report}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e: 16×16 (256 chips) per pod; 2 pods for multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1×1 mesh over the real local device (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Batch-sharding axes for this mesh ((pod,data) when multi-pod)."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""§Perf hillclimbing driver (process entry point, like dryrun).
+
+Lowers the three selected (arch × shape) pairs under named optimization
+variants, re-derives the roofline terms, and appends the results to
+reports/perf_iterations.json. Each variant is a hypothesis from
+EXPERIMENTS.md §Perf; the baseline rows come from the dry-run report.
+
+Usage: PYTHONPATH=src python -m repro.launch.perf [pair ...]
+       pairs: yi_decode qwen3moe_decode llama4_prefill (default: all)
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config       # noqa: E402
+from repro.launch.dryrun import model_flops_estimate      # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.launch import steps as steps_mod                # noqa: E402
+from repro.roofline import analyze                         # noqa: E402
+
+REPORT = "reports/perf_iterations.json"
+
+
+def _variants():
+    """pair -> [(variant_name, arch, shape, cfg_overrides)]"""
+    return {
+        "yi_decode": [
+            ("kmajor_cache", "yi-34b", "decode_32k",
+             {"kv_layout": "kmajor"}),
+        ],
+        "qwen3moe_decode": [
+            ("kmajor_cache", "qwen3-moe-30b-a3b", "decode_32k",
+             {"kv_layout": "kmajor"}),
+            ("kmajor+grouped_moe", "qwen3-moe-30b-a3b", "decode_32k",
+             {"kv_layout": "kmajor", "moe_groups": 16,
+              "moe_shard_constraints": True}),
+        ],
+        "llama4_prefill": [
+            ("grouped_moe_dispatch", "llama4-maverick-400b-a17b",
+             "prefill_32k",
+             {"moe_groups": 16, "moe_shard_constraints": True}),
+            ("grouped_moe+cap1.0", "llama4-maverick-400b-a17b",
+             "prefill_32k",
+             {"moe_groups": 16, "moe_shard_constraints": True,
+              "moe_capacity_factor": 1.0}),
+            ("attn_data_local", "llama4-maverick-400b-a17b",
+             "prefill_32k",
+             {"attn_data_local": True}),
+            ("attn_local+grouped_moe", "llama4-maverick-400b-a17b",
+             "prefill_32k",
+             {"attn_data_local": True, "moe_groups": 16,
+              "moe_shard_constraints": True}),
+        ],
+        "yi_decode_extra": [
+            ("attn_data_local", "yi-34b", "decode_32k",
+             {"attn_data_local": True}),
+            ("attn_local+kmajor", "yi-34b", "decode_32k",
+             {"attn_data_local": True, "kv_layout": "kmajor"}),
+        ],
+        "qwen3moe_decode_extra": [
+            ("attn_data_local", "qwen3-moe-30b-a3b", "decode_32k",
+             {"attn_data_local": True}),
+            ("attn_local+grouped_moe", "qwen3-moe-30b-a3b", "decode_32k",
+             {"attn_data_local": True, "moe_groups": 16,
+              "moe_shard_constraints": True}),
+        ],
+        # beyond-the-three: HBM-over-budget + collective-bound train pairs
+        "vision_prefill": [
+            ("attn_data_local", "llama-3.2-vision-90b", "prefill_32k",
+             {"attn_data_local": True}),
+        ],
+        "yi_train": [
+            ("attn_data_local", "yi-34b", "train_4k",
+             {"attn_data_local": True}),
+        ],
+        "llama4_train": [
+            ("attn_local+grouped_moe", "llama4-maverick-400b-a17b",
+             "train_4k",
+             {"attn_data_local": True, "moe_groups": 16,
+              "moe_shard_constraints": True}),
+            ("attn_local+moe+bf16_moments", "llama4-maverick-400b-a17b",
+             "train_4k",
+             {"attn_data_local": True, "moe_groups": 16,
+              "moe_shard_constraints": True,
+              "opt.moments_dtype": "bfloat16"}),
+        ],
+    }
+
+
+def run_variant(name, arch, shape_name, overrides, multi_pod=False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"variant": name, "arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "overrides": {k: str(v) for k, v in overrides.items()},
+           "status": "ok"}
+    t0 = time.perf_counter()
+    try:
+        opt_overrides = {k[4:]: v for k, v in overrides.items()
+                         if k.startswith("opt.")}
+        cfg_overrides = {k: v for k, v in overrides.items()
+                         if not k.startswith("opt.")}
+        case = steps_mod.build_case(arch, shape_name, mesh)
+        cfg = dataclasses.replace(case.cfg, **cfg_overrides)
+        # rebuild the case pieces that depend on cfg
+        case = dataclasses.replace(case, cfg=cfg)
+        import functools
+        from repro.launch import sharding as sr
+        from repro.models import transformer
+        from repro.configs import input_specs
+        pshape = jax.eval_shape(functools.partial(
+            transformer.init_params, cfg=cfg), jax.random.PRNGKey(0))
+        psh = sr.param_shardings(cfg, pshape, mesh, case.profile)
+        ins = input_specs(cfg, shape)
+        insh = sr.batch_shardings(shape.kind, mesh, shape.global_batch, ins)
+        if shape.kind == "decode":
+            import jax.numpy as jnp
+            cshape = transformer.cache_specs(cfg, shape.global_batch,
+                                             shape.seq_len)
+            csh = sr.cache_shardings(cfg, cshape, mesh, shape.global_batch)
+            tok = ins["tokens"]
+            pos = jax.ShapeDtypeStruct(tok.shape, jnp.int32)
+
+            def step(params, cache, tokens, positions):
+                return transformer.decode_step(params, cfg, cache, tokens,
+                                               positions)
+
+            args = (pshape, cshape, tok, pos)
+            shardings = (psh, csh, insh["tokens"], insh["tokens"])
+        elif shape.kind == "train":
+            from repro.training import optimizer as opt_lib
+            from repro.training.train_loop import make_train_step
+            import jax.numpy as jnp
+            opt_cfg = opt_lib.AdamWConfig(**opt_overrides)
+            mdt = jnp.dtype(opt_cfg.moments_dtype)
+            oshape = jax.eval_shape(
+                lambda p: opt_lib.init(p, moments_dtype=mdt), pshape)
+            osh = sr.opt_shardings(psh, mesh, oshape)
+            inner = make_train_step(cfg, opt_cfg)
+
+            def step(params, opt_state, batch):
+                return inner(params, opt_state, batch)
+
+            args = (pshape, oshape, dict(ins))
+            shardings = (psh, osh, insh)
+        elif shape.kind == "prefill":
+            def step(params, inputs):
+                tokens = inputs.pop("tokens")
+                return transformer.prefill(params, cfg, tokens, **inputs)
+
+            args = (pshape, dict(ins))
+            shardings = (psh, insh)
+        else:
+            raise ValueError(shape.kind)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=shardings)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        rep = analyze(arch, shape_name, rec["mesh"],
+                      512 if multi_pod else 256, compiled, None,
+                      model_flops_estimate(case, shape))
+        rec.update({
+            "t_compute_s": rep.t_compute, "t_memory_s": rep.t_memory,
+            "t_collective_s": rep.t_collective,
+            "bottleneck": rep.bottleneck,
+            "useful_flops_ratio": rep.useful_flops_ratio,
+            "hlo_flops": rep.hlo_flops, "hlo_bytes": rep.hlo_bytes,
+            "collective_bytes": rep.coll_bytes,
+            "collective_breakdown": rep.coll_breakdown,
+            "peak_bytes_per_chip": rep.peak_bytes_per_chip,
+            "elapsed_s": round(time.perf_counter() - t0, 1),
+        })
+        print(f"[ok]   {name:24s} {rep.row()}", flush=True)
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=8)
+        print(f"[FAIL] {name} {arch} {shape_name}: {rec['error']}",
+              flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("pairs", nargs="*", default=[])
+    ap.add_argument("--report", default=REPORT)
+    args = ap.parse_args()
+    table = _variants()
+    pairs = args.pairs or list(table)
+    records = []
+    if os.path.exists(args.report):
+        with open(args.report) as f:
+            records = json.load(f)
+    rc = 0
+    for pair in pairs:
+        for name, arch, shape, ov in table[pair]:
+            rec = run_variant(name, arch, shape, ov)
+            records = [r for r in records if not (
+                r.get("variant") == name and r["arch"] == arch
+                and r["shape"] == shape)]
+            records.append(rec)
+            rc |= rec["status"] != "ok"
+            with open(args.report, "w") as f:
+                json.dump(records, f, indent=1)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,182 @@
+"""Sharding rules: param / optimizer / cache / input PartitionSpecs.
+
+Two parameter profiles (DESIGN.md §6):
+
+  * ``tp``      — weights sharded over ``model`` only (replicated over
+                  data). Inference default for models whose per-chip
+                  footprint fits HBM.
+  * ``fsdp_tp`` — weights additionally sharded over ``data`` on their
+                  first logical dim (ZeRO/FSDP style). Used for training
+                  and for the ≥90B inference configs (v5e has 16 GB).
+
+Block parameters are stacked over periods, so every block-param spec is
+prefixed with one None (the period dim).
+
+Caches: batch dim over the data axes when divisible; long_500k
+(batch=1) shards the attention cache's *sequence* dim over ``data``
+instead (context-parallel decode — softmax over the sharded axis
+resolves to an all-reduce under GSPMD).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+def _axis_size(mesh, names: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def param_spec(path: Tuple, leaf, *, fsdp: Optional[Any], mesh) -> P:
+    """PartitionSpec for one parameter leaf, by pytree path."""
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = keys[-1]
+    in_blocks = "blocks" in keys
+    model = "model"
+    msize = mesh.shape["model"]
+
+    def blockify(*spec):
+        return P(None, *spec) if in_blocks else P(*spec)
+
+    # vocab-adjacent
+    if name == "embed":
+        return P(None, model)
+    if name == "lm_head":
+        return P(None, model)
+    # norms / scalars / small vectors
+    if leaf.ndim <= 1 and name not in ("bq", "bk", "bv", "conv_b", "d_skip",
+                                       "dt_bias"):
+        return blockify() if in_blocks else P()
+    if "mlstm" in keys or "slstm" in keys or name == "r":
+        # xLSTM blocks are tiny (125M total): replicate within the block
+        return blockify(*([None] * (leaf.ndim - (1 if in_blocks else 0))))
+    if "moe" in keys and name in ("w_gate", "w_up", "w_down") \
+            and "shared" not in keys:
+        # [E, D, F] / [E, F, D]: expert parallelism over model
+        return blockify(model, fsdp, None)
+    if name == "router":
+        return blockify(None, None)
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "z_proj",
+                "w"):
+        return blockify(fsdp, model)
+    if name in ("wo", "w_down", "out_proj", "dt_proj"):
+        return blockify(model, fsdp) if name != "dt_proj" \
+            else blockify(None, model)
+    if name in ("bq", "bk", "bv"):
+        return blockify(model)
+    if name in ("conv_w",):
+        return blockify(None, model)
+    if name in ("conv_b", "d_skip", "dt_bias"):
+        return blockify(model)
+    if name in ("x_proj", "a_log"):
+        return blockify(model, None)
+    if name == "qkv":
+        return blockify(None, model)
+    # default: replicate
+    nd = leaf.ndim - (1 if in_blocks else 0)
+    return blockify(*([None] * nd))
+
+
+def param_shardings(cfg: ArchConfig, params_shape: Any, mesh,
+                    profile: str = "tp") -> Any:
+    fsdp = "data" if profile == "fsdp_tp" else None
+
+    def rule(path, leaf):
+        spec = param_spec(path, leaf, fsdp=fsdp, mesh=mesh)
+        # drop sharding on non-divisible dims (GSPMD would pad; we prefer
+        # clean layouts and replicate instead)
+        fixed = []
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                fixed.append(None)
+            else:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                fixed.append(ax if _div(dim, _axis_size(mesh, axes)) else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_shardings(param_sh: Any, mesh, opt_state_shape: Any) -> Any:
+    """Adam moments shard like their parameters; step is replicated."""
+    rep = NamedSharding(mesh, P())
+    return type(opt_state_shape)(
+        step=rep,
+        mu=jax.tree.map(lambda _, s: s, opt_state_shape.mu, param_sh),
+        nu=jax.tree.map(lambda _, s: s, opt_state_shape.nu, param_sh),
+    )
+
+
+def batch_shardings(shape_kind: str, mesh, batch: int,
+                    specs: Dict[str, jax.ShapeDtypeStruct]) -> Dict[str, Any]:
+    from repro.launch.mesh import data_axes
+    da = data_axes(mesh)
+    dsz = _axis_size(mesh, da)
+    baxis = da if _div(batch, dsz) else (
+        ("data",) if _div(batch, mesh.shape["data"]) else None)
+
+    out = {}
+    for k, v in specs.items():
+        spec = [baxis if isinstance(baxis, tuple) else baxis] \
+            + [None] * (v.ndim - 1)
+        if k in ("encoder_frames", "image_embeds") and v.ndim == 3:
+            pass  # [B, T, D] — batch only
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def cache_shardings(cfg: ArchConfig, cache_shape: Any, mesh,
+                    batch: int) -> Any:
+    """Decode-cache layout:
+
+    * batch over the data axes (when divisible);
+    * attention K/V sequence dim over every axis NOT used for batch —
+      sequence-parallel ("flash-decode") layout: with GQA kv_heads <
+      mesh model size, head sharding is impossible, and the softmax
+      over the sharded seq axis resolves to an all-reduce under GSPMD;
+    * SSM channel dims over ``model`` (matching the in_proj TP layout).
+    """
+    from repro.launch.mesh import data_axes
+    da = data_axes(mesh)
+    dsz = _axis_size(mesh, da)
+    batch_ax: Optional[Tuple[str, ...]] = None
+    if _div(batch, dsz):
+        batch_ax = da
+    elif _div(batch, mesh.shape["data"]):
+        batch_ax = ("data",)
+    used = set(batch_ax or ())
+    seq_axes = tuple(a for a in ("model",) + tuple(da) if a not in used)
+
+    def seq_spec(dim: int):
+        axes = seq_axes
+        while axes and not _div(dim, _axis_size(mesh, axes)):
+            axes = axes[:-1]
+        return axes or None
+
+    def rule(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        spec = [None] * leaf.ndim
+        spec[1] = batch_ax  # [P, B, ...]
+        if name in ("k", "v") and leaf.ndim == 5:
+            ax = 3 if cfg.kv_layout == "kmajor" else 2
+            spec[ax] = seq_spec(leaf.shape[ax])
+        if name == "pos" and leaf.ndim == 3:
+            spec[2] = seq_spec(leaf.shape[2])
+        if name in ("conv", "ssm") and leaf.ndim >= 4:
+            # mamba: channel dim (conv: axis 3, ssm: axis 2) over model
+            ax = 3 if name == "conv" else 2
+            if _div(leaf.shape[ax], mesh.shape["model"]):
+                spec[ax] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)

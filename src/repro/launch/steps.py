@@ -1,0 +1,151 @@
+"""Step-function factory for the dry-run and launchers.
+
+``build_case(arch, shape, mesh)`` returns everything needed to lower one
+(architecture × input-shape) combination: the step callable, the
+ShapeDtypeStruct argument tree, and the matching in_shardings tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, input_specs
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import sharding as shard_rules
+from repro.models import transformer
+from repro.training import optimizer as opt_lib
+from repro.training.train_loop import make_train_step
+
+# v5e has 16 GB HBM; above this per-chip TP-only footprint we go fsdp_tp.
+FSDP_THRESHOLD_BYTES = 6e9
+SLIDING_WINDOW = 8192
+
+
+@dataclasses.dataclass
+class Case:
+    arch: str
+    shape: InputShape
+    cfg: ArchConfig                 # possibly the +swa variant
+    kind: str                       # train | prefill | decode
+    step_fn: Callable
+    arg_specs: Tuple                # ShapeDtypeStructs (positional)
+    in_shardings: Tuple
+    profile: str                    # tp | fsdp_tp
+    note: str = ""
+
+
+def pick_config(arch: str, shape: InputShape) -> Tuple[ArchConfig, str]:
+    """Resolve the config variant for a shape (long_500k → sub-quadratic)."""
+    cfg = get_config(arch)
+    if shape.name != "long_500k":
+        return cfg, ""
+    full_attn = any(b.mixer == "attn" for b in cfg.period)
+    native = cfg.family in ("ssm", "hybrid")
+    if native and cfg.family == "ssm":
+        return cfg, "native O(1)-state long context"
+    if native:  # hybrid: keep full KV on the few attention layers
+        return cfg, "hybrid: full KV on 1-in-8 attention layers"
+    if full_attn:
+        return cfg.with_sliding_window(SLIDING_WINDOW), \
+            f"sliding-window({SLIDING_WINDOW}) variant for 500k decode"
+    return cfg, ""
+
+
+def pick_profile(cfg: ArchConfig, kind: str, mesh) -> str:
+    if kind == "train":
+        return "fsdp_tp"
+    param_bytes = 2.0 * transformer.count_params(cfg)
+    if param_bytes / mesh.shape["model"] > FSDP_THRESHOLD_BYTES:
+        return "fsdp_tp"
+    return "tp"
+
+
+def _params_specs_and_shardings(cfg: ArchConfig, mesh, profile: str):
+    pshape = jax.eval_shape(
+        functools.partial(transformer.init_params, cfg=cfg),
+        jax.random.PRNGKey(0))
+    psh = shard_rules.param_shardings(cfg, pshape, mesh, profile)
+    return pshape, psh
+
+
+def optimize_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Apply the §Perf-validated beyond-paper levers where legal:
+    batch-local attention for GQA (kv_heads < 16) and grouped MoE
+    dispatch (token count divisible by the data width)."""
+    over = {}
+    has_attn = any(b.mixer in ("attn", "swa") for b in cfg.period)
+    if has_attn and cfg.kv_heads < 16 and shape.global_batch >= 16:
+        over["attn_data_local"] = True
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill")
+                                   else 1)
+    if cfg.num_experts and tokens % 16 == 0:
+        over["moe_groups"] = 16
+        over["moe_shard_constraints"] = True
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def build_case(arch: str, shape_name: str, mesh,
+               optimized: bool = False) -> Case:
+    shape = INPUT_SHAPES[shape_name]
+    cfg, note = pick_config(arch, shape)
+    if optimized:
+        cfg = optimize_config(cfg, shape)
+        note = (note + "; " if note else "") + "optimized flags"
+    kind = shape.kind
+    profile = pick_profile(cfg, kind, mesh)
+    pshape, psh = _params_specs_and_shardings(cfg, mesh, profile)
+    ins = input_specs(cfg, shape)
+    insh = shard_rules.batch_shardings(kind, mesh, shape.global_batch, ins)
+
+    if kind == "train":
+        opt_cfg = opt_lib.AdamWConfig()
+        oshape = jax.eval_shape(opt_lib.init, pshape)
+        osh = shard_rules.opt_shardings(psh, mesh, oshape)
+        step = make_train_step(cfg, opt_cfg)
+
+        def train_step(params, opt_state, batch):
+            return step(params, opt_state, batch)
+
+        batch_specs = dict(ins)
+        return Case(arch, shape, cfg, kind, train_step,
+                    (pshape, oshape, batch_specs),
+                    (psh, osh, insh), profile, note)
+
+    if kind == "prefill":
+        def prefill_step(params, **inputs):
+            tokens = inputs.pop("tokens")
+            return transformer.prefill(params, cfg, tokens, **inputs)
+
+        def prefill_pos(params, inputs):
+            return prefill_step(params, **inputs)
+
+        return Case(arch, shape, cfg, kind, prefill_pos,
+                    (pshape, dict(ins)), (psh, insh), profile, note)
+
+    # decode: one token against a full cache
+    cshape = transformer.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    csh = shard_rules.cache_shardings(cfg, cshape, mesh, shape.global_batch)
+    tok = ins["tokens"]
+    pos = jax.ShapeDtypeStruct(tok.shape, jnp.int32)
+    tok_sh = insh["tokens"]
+    pos_sh = insh["tokens"]
+
+    def serve_step(params, cache, tokens, positions):
+        return transformer.decode_step(params, cfg, cache, tokens, positions)
+
+    return Case(arch, shape, cfg, kind, serve_step,
+                (pshape, cshape, tok, pos),
+                (psh, csh, tok_sh, pos_sh), profile, note)
+
+
+def lower_case(case: Case, mesh, donate: bool = False):
+    """jit + lower; returns the Lowered object."""
+    jitted = jax.jit(case.step_fn, in_shardings=case.in_shardings)
+    with mesh:
+        return jitted.lower(*case.arg_specs)

@@ -1,0 +1,46 @@
+"""Training launcher: train a selectable architecture on the synthetic
+token pipeline (the train_4k assigned shape uses this step function via
+the dry-run; on CPU run the reduced variant at small batch/seq).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
+        --steps 200 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ASSIGNED, get_config
+from repro.training import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m", choices=ASSIGNED)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (TPU-scale; default reduced)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    print(f"[train] arch={cfg.name} layers={cfg.num_layers} "
+          f"d_model={cfg.d_model} backend={jax.default_backend()}")
+    res = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                seed=args.seed, ckpt_dir=args.ckpt_dir,
+                ckpt_every=args.ckpt_every, verbose=True)
+    print(f"[train] {res.steps} steps, {res.tokens_seen} tokens, "
+          f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"in {res.elapsed_s:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

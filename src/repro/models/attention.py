@@ -1,0 +1,168 @@
+"""Attention mixers: GQA self-attention (full / sliding-window / chunked),
+single-step decode attention over a KV cache, and cross-attention.
+
+Pure-jnp implementations double as (a) the dry-run lowering path, (b) the
+oracle for the Pallas kernels. On TPU the prefill path dispatches to the
+flash kernel in ``repro.kernels`` (see ``use_flash``).
+
+Layouts:  q [B,S,H,hd]; k,v [B,S,KV,hd]; GQA groups G = H // KV.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+Q_CHUNK = 512  # prefill query-chunk size for the memory-bounded path
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q [B,Sq,H,hd], k [B,Sk,KV,hd] -> scores [B,KV,G,Sq,Sk] (fp32)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                      preferred_element_type=jnp.float32) / jnp.sqrt(float(hd))
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array, dtype) -> jax.Array:
+    """probs [B,KV,G,Sq,Sk], v [B,Sk,KV,hd] -> out [B,Sq,H,hd]."""
+    b, kv, g, sq, sk = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, kv * g, v.shape[-1]).astype(dtype)
+
+
+def _masked_softmax(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(jnp.maximum(m, NEG_INF / 2)))
+    return e / (jnp.sum(e, axis=-1, keepdims=True) + 1e-30)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool = True, window: int = 0,
+                   q_offset: int = 0) -> jax.Array:
+    """Reference attention; materializes [Sq,Sk] scores. Used for short
+    sequences and as the kernel oracle."""
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = _gqa_scores(q, k)                        # [B,KV,G,Sq,Sk]
+    probs = _masked_softmax(scores, mask[None, None, None])
+    return _gqa_out(probs, v, q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, window: int = 0,
+                      q_chunk: int = Q_CHUNK) -> jax.Array:
+    """Query-chunked attention: O(q_chunk · Sk) live scores. The XLA-level
+    flash-attention analogue used for long-prefill lowering on any backend."""
+    b, s, h, hd = q.shape
+    if s <= q_chunk:
+        return full_attention(q, k, v, causal=causal, window=window)
+    assert s % q_chunk == 0, (s, q_chunk)
+    n = s // q_chunk
+
+    def body(i):
+        qc = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        return full_attention(qc, k, v, causal=causal, window=window,
+                              q_offset=i * q_chunk)
+
+    out = jax.lax.map(body, jnp.arange(n))            # [n,B,qc,H,hd]
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, window: int = 0,
+                      use_flash: Optional[bool] = None) -> jax.Array:
+    """Dispatch: Pallas flash kernel on TPU, chunked jnp elsewhere."""
+    if use_flash is None:
+        use_flash = jax.default_backend() == "tpu"
+    if use_flash:
+        from repro.kernels import ops as kops
+        if kops.flash_supported(q, k, v):
+            return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if q.shape[1] > Q_CHUNK and q.shape[1] % Q_CHUNK == 0:
+        return chunked_attention(q, k, v, causal=causal, window=window)
+    return full_attention(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one new token against a KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid_len: jax.Array, window: int = 0,
+                     positions: Optional[jax.Array] = None,
+                     use_kernel: Optional[bool] = None,
+                     kv_layout: str = "bshd") -> jax.Array:
+    """q [B,1,H,hd]; cache [B,S,KV,hd] ("bshd") or [B,KV,S,hd]
+    ("kmajor"); valid_len [] or [B] — entries with index < valid_len
+    participate. The new token's own (k,v) must already be written into
+    the cache.
+
+    ``window``/``positions``: for ring-buffer sliding-window caches the
+    slot order is rotated; masking is by stored absolute position instead
+    of slot index (positions [B,S])."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel and kv_layout == "bshd":
+        from repro.kernels import ops as kops
+        if kops.decode_supported(q, k_cache, v_cache):
+            return kops.gqa_decode_attention(q, k_cache, v_cache, valid_len)
+    if kv_layout == "kmajor":
+        b, _, h, hd = q.shape
+        kv = k_cache.shape[1]
+        s = k_cache.shape[2]
+        g = h // kv
+        qg = q.reshape(b, 1, kv, g, hd)
+        scores = jnp.einsum("bqkgd,bksd->bkgqs", qg, k_cache,
+                            preferred_element_type=jnp.float32) \
+            / jnp.sqrt(float(hd))
+        if positions is not None:
+            cur = jnp.max(positions, axis=-1, keepdims=True)
+            mask = positions <= cur
+            if window > 0:
+                mask &= positions > cur - window
+            mask = mask[:, None, None, None, :]
+        else:
+            idx = jnp.arange(s)
+            vl = jnp.asarray(valid_len)
+            vl = vl[:, None] if vl.ndim == 1 else vl[None, None]
+            mask = (idx[None] < vl)[:, None, None, None, :]
+        probs = _masked_softmax(scores, mask)
+        out = jnp.einsum("bkgqs,bksd->bqkgd", probs.astype(v_cache.dtype),
+                         v_cache)
+        return out.reshape(b, 1, h, hd).astype(q.dtype)
+    s = k_cache.shape[1]
+    if positions is not None:
+        cur = jnp.max(positions, axis=-1, keepdims=True)        # [B,1]
+        mask = positions <= cur
+        if window > 0:
+            mask &= positions > cur - window
+        mask = mask[:, None, None, None, :]                     # [B,1,1,1,S]
+    else:
+        idx = jnp.arange(s)
+        vl = jnp.asarray(valid_len)
+        vl = vl[:, None] if vl.ndim == 1 else vl[None, None]
+        mask = (idx[None] < vl)[:, None, None, None, :]
+    scores = _gqa_scores(q, k_cache)                  # [B,KV,G,1,S]
+    probs = _masked_softmax(scores, mask)             # mask [B,1,1,1,S]
+    return _gqa_out(probs, v_cache, q.dtype)
+
+
+def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Non-causal attention over a fixed memory (image tokens / enc output)."""
+    scores = _gqa_scores(q, k)
+    probs = _masked_softmax(scores, jnp.ones(scores.shape[-2:], bool)[None, None, None])
+    return _gqa_out(probs, v, q.dtype)

@@ -1,0 +1,128 @@
+"""Mamba (S6) selective-state-space mixer — Jamba's recurrent layer.
+
+Prefill runs the selective scan with ``jax.lax.scan`` (time-major);
+decode is a single recurrence step against the carried
+(conv_state, ssm_state). The recurrent state is the SSM analogue of the
+KV cache and is what the disaggregated runtime ships from prefill to
+decode replicas — constant-size in sequence length (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def d_inner(d_model: int, expand: int) -> int:
+    return expand * d_model
+
+
+def dt_rank(d_model: int) -> int:
+    return max(1, -(-d_model // 16))  # ceil(D/16)
+
+
+def init_mamba(key: jax.Array, d_model: int, state: int, conv: int,
+               expand: int, dtype=common.DEFAULT_DTYPE) -> Dict:
+    di = d_inner(d_model, expand)
+    dr = dt_rank(d_model)
+    ks = common.split_keys(key, 7)
+    a = jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": common.dense_init(ks[0], (d_model, 2 * di), dtype),
+        "conv_w": common.dense_init(ks[1], (conv, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": common.dense_init(ks[2], (di, dr + 2 * state), dtype),
+        "dt_proj": common.dense_init(ks[3], (dr, di), dtype),
+        "dt_bias": (jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       minval=-4.6, maxval=-2.3)),  # softplus⁻¹ of ~1e-2..1e-1
+        "a_log": jnp.log(a),                       # [di, state] fp32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": common.dense_init(ks[5], (di, d_model), dtype),
+    }
+
+
+def _ssm_inputs(params: Dict, x: jax.Array, state: int
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [..., di] -> dt [..., di], b [..., state], c [..., state] (fp32)."""
+    dr = params["dt_proj"].shape[0]
+    proj = (x @ params["x_proj"]).astype(jnp.float32)
+    dt, b, c = jnp.split(proj, [dr, dr + state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"])
+    return dt, b, c
+
+
+def mamba_prefill(params: Dict, x: jax.Array, state: int, conv: int
+                  ) -> Tuple[jax.Array, Dict]:
+    """x [B,S,D] -> (y [B,S,D], final_state {conv, ssm})."""
+    bsz, s, _ = x.shape
+    di = params["out_proj"].shape[0]
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                 # [B,S,di]
+
+    # causal depthwise conv over time
+    pad = jnp.zeros((bsz, conv - 1, di), xi.dtype)
+    xpad = jnp.concatenate([pad, xi], axis=1)
+    conv_out = sum(
+        xpad[:, i:i + s] * params["conv_w"][i] for i in range(conv))
+    conv_out = jax.nn.silu((conv_out + params["conv_b"]).astype(jnp.float32))
+
+    dt, b, c = _ssm_inputs(params, conv_out.astype(x.dtype), state)
+    a = -jnp.exp(params["a_log"])                     # [di, N]
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp                     # [B,di],[B,di],[B,N],[B,N]
+        da = jnp.exp(dt_t[..., None] * a)             # [B,di,N]
+        db = dt_t[..., None] * b_t[:, None, :]        # [B,di,N]
+        h = da * h + db * u_t[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((bsz, di, state), jnp.float32)
+    xs = (jnp.moveaxis(conv_out, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                        # [B,S,di] fp32
+    y = y + conv_out * params["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    # conv cache = last (conv-1) raw inner inputs (pre-activation)
+    if conv > 1:
+        # xpad has (conv-1) zeros prepended, so the last (conv-1) inner
+        # inputs live at xpad[:, s : s+conv-1] (zero-padded when s < conv-1)
+        conv_cache = xpad[:, s:s + conv - 1].astype(x.dtype)
+    else:
+        conv_cache = jnp.zeros((bsz, 0, di), x.dtype)
+    return out, {"conv": conv_cache, "ssm": h_final}
+
+
+def mamba_decode(params: Dict, x: jax.Array, cache: Dict, state: int,
+                 conv: int) -> Tuple[jax.Array, Dict]:
+    """x [B,1,D]; cache {conv [B,conv-1,di], ssm [B,di,N]}."""
+    bsz = x.shape[0]
+    xz = x[:, 0] @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                 # [B,di]
+
+    hist = jnp.concatenate([cache["conv"], xi[:, None]], axis=1)  # [B,conv,di]
+    conv_out = jnp.einsum("bcd,cd->bd", hist, params["conv_w"])
+    conv_out = jax.nn.silu((conv_out + params["conv_b"]).astype(jnp.float32))
+
+    dt, b, c = _ssm_inputs(params, conv_out.astype(x.dtype), state)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt[..., None] * a)
+    db = dt[..., None] * b[:, None, :]
+    h = da * cache["ssm"] + db * conv_out[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, c) + conv_out * params["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ params["out_proj"])[:, None]
+    return out, {"conv": hist[:, 1:], "ssm": h}
+
+
+def init_state(bsz: int, d_model: int, state: int, conv: int, expand: int,
+               dtype=common.DEFAULT_DTYPE) -> Dict:
+    di = d_inner(d_model, expand)
+    return {"conv": jnp.zeros((bsz, conv - 1, di), dtype),
+            "ssm": jnp.zeros((bsz, di, state), jnp.float32)}

@@ -1,0 +1,36 @@
+"""Dense feed-forward blocks: SwiGLU (llama/qwen/yi), squared-ReLU
+(Nemotron-4), GELU (whisper)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int,
+             activation: str, dtype=common.DEFAULT_DTYPE) -> Dict:
+    ks = common.split_keys(key, 3)
+    if activation == "swiglu":
+        return {
+            "w_gate": common.dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": common.dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": common.dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    # 2-matrix FFN (relu2 / gelu)
+    return {
+        "w_up": common.dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": common.dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def apply_mlp(params: Dict, x: jax.Array, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        gate = x @ params["w_gate"]
+        up = x @ params["w_up"]
+        return common.swiglu(gate, up) @ params["w_down"]
+    h = x @ params["w_up"]
+    h = common.relu2(h) if activation == "relu2" else common.gelu(h)
+    return h @ params["w_down"]

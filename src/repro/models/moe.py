@@ -1,0 +1,216 @@
+"""Mixture-of-Experts FFN with capacity-bounded sort/scatter dispatch.
+
+TPU-native design notes (hardware adaptation, see DESIGN.md §3):
+
+* Expert weights are stacked ``[E, ...]`` and sharded over the ``model``
+  mesh axis (expert parallelism). Under GSPMD the scatter into the
+  expert-major buffer lowers to all-to-all-class collectives.
+* Dispatch is GATHER/SCATTER-based (argsort by expert id + capacity
+  clipping), not the GShard one-hot-einsum — the one-hot matmul would
+  inflate HLO_FLOPs with fake compute and poison the roofline's
+  MODEL_FLOPS/HLO_FLOPs ratio.
+* Capacity factor bounds the per-expert token count so every shape is
+  static. Overflowing tokens are dropped (standard GShard semantics);
+  the router's aux loss (load-balance, Switch-style) discourages
+  overflow during training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init_moe(key: jax.Array, d_model: int, d_ff: int, num_experts: int,
+             activation: str, shared_expert: bool,
+             dtype=common.DEFAULT_DTYPE) -> Dict:
+    ks = common.split_keys(key, 8)
+    p = {
+        "router": common.dense_init(ks[0], (d_model, num_experts), jnp.float32),
+        "w_gate": common.dense_init(ks[1], (num_experts, d_model, d_ff), dtype),
+        "w_up": common.dense_init(ks[2], (num_experts, d_model, d_ff), dtype),
+        "w_down": common.dense_init(ks[3], (num_experts, d_ff, d_model), dtype),
+    }
+    if shared_expert:
+        p["shared"] = {
+            "w_gate": common.dense_init(ks[4], (d_model, d_ff), dtype),
+            "w_up": common.dense_init(ks[5], (d_model, d_ff), dtype),
+            "w_down": common.dense_init(ks[6], (d_ff, d_model), dtype),
+        }
+    return p
+
+
+def _capacity(num_tokens: int, num_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    cap = int(num_tokens * top_k * capacity_factor / num_experts)
+    return max(4, ((cap + 3) // 4) * 4)  # multiple of 4, ≥4
+
+
+def apply_moe(params: Dict, x: jax.Array, top_k: int,
+              capacity_factor: float = 1.25
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,D] -> (y [B,S,D], aux_loss []).
+
+    Sort-based dispatch:
+      1. router top-k per token  → (expert_id, gate) pairs, T·k entries
+      2. argsort by expert id    → expert-contiguous order
+      3. rank within expert      → capacity slot (clipped)
+      4. scatter tokens into     [E, C, D] expert buffers
+      5. batched expert FFN      einsum over stacked expert weights
+      6. gather back + weighted combine
+    """
+    b, s, d = x.shape
+    e = params["router"].shape[-1]
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])        # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)         # [T,k]
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=0)                                # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    cap = _capacity(t, e, top_k, capacity_factor)
+
+    flat_expert = expert_ids.reshape(-1)                        # [T*k]
+    flat_gate = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+
+    order = jnp.argsort(flat_expert, stable=True)               # expert-major
+    sorted_expert = flat_expert[order]
+    sorted_tok = flat_tok[order]
+    sorted_gate = flat_gate[order]
+
+    # rank of each entry within its expert segment
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(e), side="left")
+    rank = jnp.arange(t * top_k) - seg_start[sorted_expert]
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap - 1)
+
+    # scatter tokens into expert buffers [E, C, D]
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    src = jnp.where(keep[:, None], xt[sorted_tok], 0).astype(x.dtype)
+    buf = buf.at[sorted_expert, slot].add(src, mode="drop")
+
+    # expert FFN over stacked weights (expert-parallel under GSPMD)
+    if "w_gate" in params and params.get("w_gate") is not None:
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+        h = common.swiglu(g, u)
+    else:  # pragma: no cover — all assigned MoE archs are gated
+        h = common.gelu(jnp.einsum("ecd,edf->ecf", buf, params["w_up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])   # [E,C,D]
+
+    # gather back and combine with gates
+    picked = out_buf[sorted_expert, slot]                       # [T*k, D]
+    picked = jnp.where(keep[:, None], picked, 0)
+    contrib = picked * sorted_gate[:, None].astype(picked.dtype)
+    yt = jnp.zeros((t, d), x.dtype).at[sorted_tok].add(
+        contrib.astype(x.dtype), mode="drop")
+
+    if "shared" in params:
+        sh = params["shared"]
+        yt = yt + (common.swiglu(xt @ sh["w_gate"], xt @ sh["w_up"])
+                   @ sh["w_down"])
+    return yt.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Grouped (data-shard-local) dispatch — §Perf iteration for MoE archs.
+#
+# Plain apply_moe builds ONE [E, C, D] buffer from globally-sharded
+# tokens; under GSPMD the scatter contributions are partial per data
+# shard and XLA ALL-REDUCES the full buffer across the data axis (the
+# 33 TB/device pathology measured on llama4-maverick prefill_32k — see
+# EXPERIMENTS.md §Perf). Adding a leading group dim g (= data shards)
+# keeps the scatter local (buf[g] is built only from group g's tokens);
+# the only cross-device movement left is the E-axis resharding before
+# the expert einsum, which lowers to the canonical expert-parallel
+# all-to-all.
+# ---------------------------------------------------------------------------
+
+
+def apply_moe_grouped(params: Dict, x: jax.Array, top_k: int,
+                      capacity_factor: float = 1.25,
+                      groups: int = 8,
+                      constrain: bool = False
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,D] -> (y [B,S,D], aux). Token groups dispatch independently
+    (capacity is per group). ``constrain`` adds GSPMD sharding
+    constraints (g over 'data', E over 'model') — requires a mesh
+    context at trace time."""
+    b, s, d = x.shape
+    e = params["router"].shape[-1]
+    t = b * s
+    assert t % groups == 0, (t, groups)
+    tl = t // groups
+    xg = x.reshape(groups, tl, d)
+
+    logits = (xg.astype(jnp.float32) @ params["router"])     # [g,tl,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)      # [g,tl,k]
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    me = jnp.mean(probs.reshape(t, e), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0].reshape(t), e,
+                                 dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    cap = _capacity(tl, e, top_k, capacity_factor)
+
+    def dispatch(xt, eids, gates):
+        flat_expert = eids.reshape(-1)
+        flat_gate = gates.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(tl), top_k)
+        order = jnp.argsort(flat_expert, stable=True)
+        se, stok = flat_expert[order], flat_tok[order]
+        sgate = flat_gate[order]
+        seg_start = jnp.searchsorted(se, jnp.arange(e), side="left")
+        rank = jnp.arange(tl * top_k) - seg_start[se]
+        keep = rank < cap
+        slot = jnp.where(keep, rank, cap - 1)
+        buf = jnp.zeros((e, cap, d), xt.dtype)
+        src = jnp.where(keep[:, None], xt[stok], 0).astype(xt.dtype)
+        buf = buf.at[se, slot].add(src, mode="drop")
+        return buf, (se, stok, sgate, keep, slot)
+
+    buf, meta = jax.vmap(dispatch)(xg, expert_ids, gate_vals)  # [g,E,C,D]
+
+    if constrain:
+        from jax.sharding import PartitionSpec as P
+        buf = jax.lax.with_sharding_constraint(
+            buf, P("data", "model", None, None))
+
+    g_ = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])
+    u_ = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    h = common.swiglu(g_, u_)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    if constrain:
+        from jax.sharding import PartitionSpec as P
+        out_buf = jax.lax.with_sharding_constraint(
+            out_buf, P("data", "model", None, None))
+
+    def combine(ob, xt, meta_g):
+        se, stok, sgate, keep, slot = meta_g
+        picked = ob[se, slot]
+        picked = jnp.where(keep[:, None], picked, 0)
+        contrib = picked * sgate[:, None].astype(picked.dtype)
+        return jnp.zeros((tl, d), xt.dtype).at[stok].add(
+            contrib.astype(xt.dtype), mode="drop")
+
+    yt = jax.vmap(combine)(out_buf, xg, meta)                # [g,tl,D]
+    yt = yt.reshape(b, s, d)
+    if "shared" in params:
+        sh = params["shared"]
+        xt = x.reshape(t, d)
+        yt = yt + (common.swiglu(xt @ sh["w_gate"], xt @ sh["w_up"])
+                   @ sh["w_down"]).reshape(b, s, d)
+    return yt, aux

@@ -1,0 +1,531 @@
+"""Composable model builder for every assigned architecture.
+
+A model is a stack of ``num_periods`` repetitions of the config's
+``period`` (a tuple of BlockSpecs). Parameters for each block position
+are *stacked* over periods (leading dim P) and the stack is executed
+with ``jax.lax.scan`` — compile time scales with the period length, not
+the layer count (Jamba: 8 bodies for 32 layers; Vision-90B: 5 for 100).
+
+Three entry points, matching the assigned input shapes:
+    train_forward  — full-sequence logits + loss          (train_4k)
+    prefill        — prompt → (last-token logits, cache)  (prefill_32k)
+    decode_step    — one token against a cache            (decode_32k/long_500k)
+
+Caches are plain dict pytrees stacked the same way as params, so
+prefill's ys slot directly into decode's xs. The disaggregated serving
+runtime ships exactly this pytree from prefill to decode replicas.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec
+from repro.models import attention, common, mamba, mlp, moe, xlstm
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+class Ctx(NamedTuple):
+    """Per-call context threaded through block functions."""
+    positions: jax.Array                 # [B,S] absolute positions
+    cross_embeds: Optional[jax.Array]    # [B,T,D] image / encoder memory
+    causal: bool                         # False inside the audio encoder
+    cache_capacity: int                  # attention cache slots to allocate
+    want_cache: bool = True              # False for train/encoder (no ys)
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: ArchConfig, cross: bool) -> Params:
+    ks = common.split_keys(key, 6)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p: Params = {
+        "wq": common.dense_init(ks[0], (d, qd)),
+        "wk": common.dense_init(ks[1], (d, kvd)),
+        "wv": common.dense_init(ks[2], (d, kvd)),
+        "wo": common.dense_init(ks[3], (qd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), common.DEFAULT_DTYPE)
+        p["bk"] = jnp.zeros((kvd,), common.DEFAULT_DTYPE)
+        p["bv"] = jnp.zeros((kvd,), common.DEFAULT_DTYPE)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+    if cross and cfg.num_image_tokens:
+        p["gate"] = jnp.zeros((), jnp.float32)  # llama-3.2-vision gated x-attn
+    return p
+
+
+def init_block(key, cfg: ArchConfig, spec: BlockSpec) -> Params:
+    ks = common.split_keys(key, 3)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if spec.mixer in ("attn", "swa", "cross_attn"):
+        p["attn"] = _init_attn(ks[0], cfg, spec.mixer == "cross_attn")
+    elif spec.mixer == "mamba":
+        p["mamba"] = mamba.init_mamba(ks[0], cfg.d_model, cfg.ssm_state,
+                                      cfg.ssm_conv, cfg.ssm_expand)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = xlstm.init_mlstm(ks[0], cfg.d_model, cfg.xlstm_heads)
+    elif spec.mixer == "slstm":
+        p["slstm"] = xlstm.init_slstm(ks[0], cfg.d_model, cfg.xlstm_heads)
+    else:  # pragma: no cover
+        raise ValueError(spec.mixer)
+    if spec.ffn == "mlp":
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["mlp"] = mlp.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation)
+    elif spec.ffn == "moe":
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["moe"] = moe.init_moe(ks[1], cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                                cfg.num_experts, cfg.activation,
+                                cfg.shared_expert)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    ks = common.split_keys(key, 6)
+    P = cfg.num_periods
+
+    def stacked(key, init_fn):
+        return jax.vmap(init_fn)(jax.random.split(key, P))
+
+    blocks = []
+    for bi, spec in enumerate(cfg.period):
+        blocks.append(stacked(jax.random.fold_in(ks[0], bi),
+                              lambda k, s=spec: init_block(k, cfg, s)))
+    params: Params = {
+        "embed": common.embed_init(ks[1], (cfg.vocab, cfg.d_model)),
+        "blocks": tuple(blocks),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": common.dense_init(ks[2], (cfg.d_model, cfg.vocab)),
+    }
+    if cfg.is_encdec:
+        enc_spec = BlockSpec("attn", "mlp")
+        enc = stacked(ks[3], lambda k: init_block(k, cfg, enc_spec))
+        params["encoder"] = {
+            "blocks": (enc,),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+def count_params(cfg: ArchConfig) -> int:
+    shapes = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return int(sum(x.size for x in jax.tree.leaves(shapes)))
+
+
+def count_active_params(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE experts scaled to top_k/E)."""
+    total = 0
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+    def visit(path, leaf):
+        nonlocal total
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        in_moe = any(k == "moe" for k in keys)
+        is_expert = in_moe and any(k in ("w_gate", "w_up", "w_down")
+                                   for k in keys) and not any(
+                                       k == "shared" for k in keys)
+        n = leaf.size
+        if is_expert and cfg.num_experts:
+            n = n * cfg.top_k // cfg.num_experts
+        total += n
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Attention block forward
+# ---------------------------------------------------------------------------
+
+
+def _qkv(p: Params, cfg: ArchConfig, x: jax.Array,
+         positions: Optional[jax.Array], rope: bool
+         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"])
+        k = common.rms_norm(k, p["k_norm"])
+    if rope and positions is not None:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_prefill(spec: BlockSpec, cfg: ArchConfig, p: Params, x: jax.Array,
+                  ctx: Ctx) -> Tuple[jax.Array, Cache]:
+    b, s, _ = x.shape
+    h = common.rms_norm(x, p["norm1"])
+    ap = p["attn"]
+    if spec.mixer == "cross_attn":
+        mem = ctx.cross_embeds
+        assert mem is not None, "cross_attn block needs cross_embeds"
+        q, _, _ = _qkv(ap, cfg, h, None, rope=False)
+        tm = mem.shape[1]
+        k = (mem @ ap["wk"]).reshape(b, tm, cfg.kv_heads, cfg.head_dim)
+        v = (mem @ ap["wv"]).reshape(b, tm, cfg.kv_heads, cfg.head_dim)
+        out = attention.cross_attention(q, k, v)
+        out = out.reshape(b, s, cfg.q_dim) @ ap["wo"]
+        if "gate" in ap:
+            out = jnp.tanh(ap["gate"]).astype(x.dtype) * out
+        x = x + out
+        cache = {"k": k, "v": v} if ctx.want_cache else {}
+        return x, cache
+    use_rope = not cfg.is_encdec  # whisper uses absolute positions
+    q, k, v = _qkv(ap, cfg, h, ctx.positions if use_rope else None, use_rope)
+    if cfg.attn_data_local:
+        from jax.sharding import PartitionSpec as P
+        wsc = jax.lax.with_sharding_constraint
+        q = wsc(q, P("data", None, None, None))
+        k = wsc(k, P("data", None, None, None))
+        v = wsc(v, P("data", None, None, None))
+    window = cfg.sliding_window if spec.mixer == "swa" else 0
+    out = attention.prefill_attention(q, k, v, causal=ctx.causal,
+                                      window=window)
+    x = x + out.reshape(b, s, cfg.q_dim) @ ap["wo"]
+    if not ctx.causal or not ctx.want_cache:
+        return x, {}  # encoder / train: no cache
+    cap = window if window else ctx.cache_capacity
+    if window:
+        # ring buffer holding the last `window` tokens + their positions
+        take = min(s, window)
+        kc = jnp.zeros((b, window, cfg.kv_heads, cfg.head_dim), k.dtype)
+        vc = jnp.zeros_like(kc)
+        pc = jnp.full((b, window), -1, jnp.int32)
+        slots = (ctx.positions[:, s - take:]) % window      # [B,take]
+        bidx = jnp.arange(b)[:, None]
+        kc = kc.at[bidx, slots].set(k[:, s - take:])
+        vc = vc.at[bidx, slots].set(v[:, s - take:])
+        pc = pc.at[bidx, slots].set(ctx.positions[:, s - take:])
+        if cfg.kv_layout == "kmajor":
+            kc, vc = kc.swapaxes(1, 2), vc.swapaxes(1, 2)
+        return x, {"k": kc, "v": vc, "pos": pc}
+    if cap > s:
+        pad = [(0, 0), (0, cap - s), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    if cfg.kv_layout == "kmajor":
+        k, v = k.swapaxes(1, 2), v.swapaxes(1, 2)   # [B,kv,cap,hd]
+    return x, {"k": k, "v": v}
+
+
+def _attn_decode(spec: BlockSpec, cfg: ArchConfig, p: Params, x: jax.Array,
+                 cache: Cache, ctx: Ctx) -> Tuple[jax.Array, Cache]:
+    b = x.shape[0]
+    h = common.rms_norm(x, p["norm1"])
+    ap = p["attn"]
+    if spec.mixer == "cross_attn":
+        q, _, _ = _qkv(ap, cfg, h, None, rope=False)
+        out = attention.cross_attention(q, cache["k"], cache["v"])
+        out = out.reshape(b, 1, cfg.q_dim) @ ap["wo"]
+        if "gate" in ap:
+            out = jnp.tanh(ap["gate"]).astype(x.dtype) * out
+        return x + out, cache
+
+    use_rope = not cfg.is_encdec
+    pos = ctx.positions                                  # [B,1]
+    q, k, v = _qkv(ap, cfg, h, pos if use_rope else None, use_rope)
+    if cfg.attn_data_local:
+        from jax.sharding import PartitionSpec as P
+        wsc = jax.lax.with_sharding_constraint
+        q = wsc(q, P("data", None, None, None))
+        k = wsc(k, P("data", None, None, None))
+        v = wsc(v, P("data", None, None, None))
+    window = cfg.sliding_window if spec.mixer == "swa" else 0
+    bidx = jnp.arange(b)
+    layout = cfg.kv_layout
+
+    def write(c, slot, new):                             # new [B,kv,hd]
+        if layout == "kmajor":                           # c [B,kv,S,hd]
+            return jax.vmap(lambda ci, si, ui:
+                            ci.at[:, si].set(ui))(c, slot, new)
+        return c.at[bidx, slot].set(new)                 # c [B,S,kv,hd]
+
+    if window:
+        slot = pos[:, 0] % window
+        kc = write(cache["k"], slot, k[:, 0])
+        vc = write(cache["v"], slot, v[:, 0])
+        pc = cache["pos"].at[bidx, slot].set(pos[:, 0])
+        out = attention.decode_attention(q, kc, vc, valid_len=None,
+                                         window=window, positions=pc,
+                                         kv_layout=layout)
+        new_cache = {"k": kc, "v": vc, "pos": pc}
+    else:
+        slot = pos[:, 0]
+        kc = write(cache["k"], slot, k[:, 0])
+        vc = write(cache["v"], slot, v[:, 0])
+        out = attention.decode_attention(q, kc, vc, valid_len=pos[:, 0] + 1,
+                                         kv_layout=layout)
+        new_cache = {"k": kc, "v": vc}
+    x = x + out.reshape(b, 1, cfg.q_dim) @ ap["wo"]
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Generic block forward (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def block_prefill(spec: BlockSpec, cfg: ArchConfig, p: Params, x: jax.Array,
+                  ctx: Ctx) -> Tuple[jax.Array, Cache, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mixer in ("attn", "swa", "cross_attn"):
+        x, cache = _attn_prefill(spec, cfg, p, x, ctx)
+    elif spec.mixer == "mamba":
+        h = common.rms_norm(x, p["norm1"])
+        out, cache = mamba.mamba_prefill(p["mamba"], h, cfg.ssm_state,
+                                         cfg.ssm_conv)
+        x = x + out
+    elif spec.mixer == "mlstm":
+        h = common.rms_norm(x, p["norm1"])
+        out, cache = xlstm.mlstm_prefill(p["mlstm"], h, cfg.xlstm_heads)
+        x = x + out
+    elif spec.mixer == "slstm":
+        h = common.rms_norm(x, p["norm1"])
+        out, cache = xlstm.slstm_prefill(p["slstm"], h, cfg.xlstm_heads)
+        x = x + out
+    else:  # pragma: no cover
+        raise ValueError(spec.mixer)
+    if spec.ffn == "mlp":
+        h = common.rms_norm(x, p["norm2"])
+        x = x + mlp.apply_mlp(p["mlp"], h, cfg.activation)
+    elif spec.ffn == "moe":
+        h = common.rms_norm(x, p["norm2"])
+        if cfg.moe_groups > 1:
+            out, aux = moe.apply_moe_grouped(
+                p["moe"], h, cfg.top_k, cfg.moe_capacity_factor,
+                groups=cfg.moe_groups, constrain=cfg.moe_shard_constraints)
+        else:
+            out, aux = moe.apply_moe(p["moe"], h, cfg.top_k,
+                                     cfg.moe_capacity_factor)
+        x = x + out
+    return x, cache, aux
+
+
+def block_decode(spec: BlockSpec, cfg: ArchConfig, p: Params, x: jax.Array,
+                 cache: Cache, ctx: Ctx) -> Tuple[jax.Array, Cache]:
+    if spec.mixer in ("attn", "swa", "cross_attn"):
+        x, cache = _attn_decode(spec, cfg, p, x, cache, ctx)
+    elif spec.mixer == "mamba":
+        h = common.rms_norm(x, p["norm1"])
+        out, cache = mamba.mamba_decode(p["mamba"], h, cache, cfg.ssm_state,
+                                        cfg.ssm_conv)
+        x = x + out
+    elif spec.mixer == "mlstm":
+        h = common.rms_norm(x, p["norm1"])
+        out, cache = xlstm.mlstm_decode(p["mlstm"], h, cache, cfg.xlstm_heads)
+        x = x + out
+    elif spec.mixer == "slstm":
+        h = common.rms_norm(x, p["norm1"])
+        out, cache = xlstm.slstm_decode(p["slstm"], h, cache, cfg.xlstm_heads)
+        x = x + out
+    if spec.ffn == "mlp":
+        h = common.rms_norm(x, p["norm2"])
+        x = x + mlp.apply_mlp(p["mlp"], h, cfg.activation)
+    elif spec.ffn == "moe":
+        h = common.rms_norm(x, p["norm2"])
+        if cfg.moe_groups > 1:
+            out, _ = moe.apply_moe_grouped(
+                p["moe"], h, cfg.top_k, cfg.moe_capacity_factor,
+                groups=cfg.moe_groups, constrain=cfg.moe_shard_constraints)
+        else:
+            out, _ = moe.apply_moe(p["moe"], h, cfg.top_k,
+                                   cfg.moe_capacity_factor)
+        x = x + out
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack execution (scan over periods)
+# ---------------------------------------------------------------------------
+
+
+def _stack_prefill(blocks: Tuple, cfg: ArchConfig, x: jax.Array, ctx: Ctx,
+                   remat: bool = False) -> Tuple[jax.Array, Tuple, jax.Array]:
+    """Run all periods; returns (x, caches stacked per block pos, aux sum)."""
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        caches = []
+        for bi, spec in enumerate(cfg.period):
+            x, cache, a = block_prefill(spec, cfg, period_params[bi], x, ctx)
+            caches.append(cache)
+            aux = aux + a
+        return (x, aux), tuple(caches)
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    blocks)
+    return x, caches, aux
+
+
+def _stack_decode(blocks: Tuple, cfg: ArchConfig, x: jax.Array,
+                  caches: Tuple, ctx: Ctx) -> Tuple[jax.Array, Tuple]:
+    def period_body(x, scan_in):
+        period_params, period_caches = scan_in
+        new_caches = []
+        for bi, spec in enumerate(cfg.period):
+            x, c = block_decode(spec, cfg, period_params[bi], x,
+                                period_caches[bi], ctx)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(period_body, x, (blocks, caches))
+    return x, new_caches
+
+
+def _embed(params: Params, cfg: ArchConfig, tokens: jax.Array,
+           positions: jax.Array) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.is_encdec:  # whisper: absolute positions, no rope
+        x = x + common.sinusoidal_positions(positions, cfg.d_model
+                                            ).astype(x.dtype)
+    return x
+
+
+def _run_encoder(params: Params, cfg: ArchConfig,
+                 frames: jax.Array) -> jax.Array:
+    """Audio encoder over (stubbed) conv-frontend frame embeddings."""
+    b, f, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(f), (b, f))
+    x = frames + common.sinusoidal_positions(pos, cfg.d_model
+                                             ).astype(frames.dtype)
+    ctx = Ctx(positions=pos, cross_embeds=None, causal=False,
+              cache_capacity=f, want_cache=False)
+    enc = params["encoder"]
+    x, _, _ = _stack_prefill(enc["blocks"], dataclasses.replace(
+        cfg, period=(BlockSpec("attn", "mlp"),),
+        num_periods=cfg.encoder_periods), x, ctx)
+    return common.rms_norm(x, enc["final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def _cross_memory(params: Params, cfg: ArchConfig,
+                  extra: Dict[str, jax.Array]) -> Optional[jax.Array]:
+    if cfg.is_encdec:
+        return _run_encoder(params, cfg, extra["encoder_frames"])
+    if cfg.num_image_tokens:
+        return extra["image_embeds"]
+    return None
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array,
+            cache_capacity: Optional[int] = None,
+            **extra: jax.Array) -> Tuple[jax.Array, Tuple]:
+    """tokens [B,S] → (last-token logits [B,V], cache pytree)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = _embed(params, cfg, tokens, positions)
+    ctx = Ctx(positions=positions,
+              cross_embeds=_cross_memory(params, cfg, extra),
+              causal=True, cache_capacity=cache_capacity or s)
+    x, caches, _ = _stack_prefill(params["blocks"], cfg, x, ctx)
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, caches
+
+
+def decode_step(params: Params, cfg: ArchConfig, caches: Tuple,
+                tokens: jax.Array, positions: jax.Array
+                ) -> Tuple[jax.Array, Tuple]:
+    """tokens [B,1], positions [B,1] → (logits [B,V], new caches)."""
+    x = _embed(params, cfg, tokens, positions)
+    ctx = Ctx(positions=positions, cross_embeds=None, causal=True,
+              cache_capacity=0)
+    x, new_caches = _stack_decode(params["blocks"], cfg, x, caches, ctx)
+    x = common.rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, new_caches
+
+
+def train_forward(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                  labels: jax.Array, **extra: jax.Array) -> jax.Array:
+    """Next-token cross-entropy loss (labels already shifted)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = _embed(params, cfg, tokens, positions)
+    ctx = Ctx(positions=positions,
+              cross_embeds=_cross_memory(params, cfg, extra),
+              causal=True, cache_capacity=s, want_cache=False)
+    x, _, aux = _stack_prefill(params["blocks"], cfg, x, ctx, remat=True)
+    x = common.rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    return loss + 0.01 * aux / max(cfg.num_periods, 1)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction for decode-only entry (dry-run / serving slots)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, capacity: int,
+               dtype=common.DEFAULT_DTYPE) -> Tuple:
+    """Zero-filled cache pytree with given attention capacity (stacked
+    over periods, mirroring _stack_prefill's ys)."""
+    P = cfg.num_periods
+    caches = []
+    for spec in cfg.period:
+        if spec.mixer == "attn":
+            shp = ((P, batch, cfg.kv_heads, capacity, cfg.head_dim)
+                   if cfg.kv_layout == "kmajor"
+                   else (P, batch, capacity, cfg.kv_heads, cfg.head_dim))
+            c = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        elif spec.mixer == "swa":
+            w = cfg.sliding_window
+            shp = ((P, batch, cfg.kv_heads, w, cfg.head_dim)
+                   if cfg.kv_layout == "kmajor"
+                   else (P, batch, w, cfg.kv_heads, cfg.head_dim))
+            c = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+                 "pos": jnp.full((P, batch, w), -1, jnp.int32)}
+        elif spec.mixer == "cross_attn":
+            t = cfg.num_image_tokens or cfg.encoder_frames
+            c = {"k": jnp.zeros((P, batch, t, cfg.kv_heads, cfg.head_dim),
+                                dtype),
+                 "v": jnp.zeros((P, batch, t, cfg.kv_heads, cfg.head_dim),
+                                dtype)}
+        elif spec.mixer == "mamba":
+            di = mamba.d_inner(cfg.d_model, cfg.ssm_expand)
+            c = {"conv": jnp.zeros((P, batch, cfg.ssm_conv - 1, di), dtype),
+                 "ssm": jnp.zeros((P, batch, di, cfg.ssm_state), jnp.float32)}
+        elif spec.mixer == "mlstm":
+            m = 2 * cfg.d_model
+            dh = m // cfg.xlstm_heads
+            c = {"C": jnp.zeros((P, batch, cfg.xlstm_heads, dh, dh),
+                                jnp.float32),
+                 "n": jnp.zeros((P, batch, cfg.xlstm_heads, dh), jnp.float32),
+                 "m": jnp.zeros((P, batch, cfg.xlstm_heads), jnp.float32)}
+        elif spec.mixer == "slstm":
+            z = jnp.zeros((P, batch, cfg.d_model), jnp.float32)
+            c = {"c": z, "n": z, "h": z, "m": z}
+        else:  # pragma: no cover
+            raise ValueError(spec.mixer)
+        caches.append(c)
+    return tuple(caches)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, capacity: int) -> Tuple:
+    """ShapeDtypeStruct version of init_cache (no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, capacity))

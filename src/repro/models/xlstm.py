@@ -1,0 +1,185 @@
+"""xLSTM mixers: mLSTM (matrix-memory, parallelizable) and sLSTM
+(scalar-memory with block-diagonal recurrence) — arXiv:2405.04517.
+
+The recurrent states (mLSTM's per-head matrix memory C and sLSTM's
+scalar cells) play the role of the KV cache in the disaggregated
+runtime: constant-size in sequence length, shipped once from prefill to
+decode replicas.
+
+Both prefill paths use ``jax.lax.scan`` over time with exponential-gate
+log-space stabilization (the ``m`` carry).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+# ---------------------------------------------------------------------------
+# mLSTM — matrix memory per head, no hidden-to-hidden recurrence in q/k/v
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key: jax.Array, d_model: int, heads: int,
+               dtype=common.DEFAULT_DTYPE) -> Dict:
+    m = 2 * d_model  # proj_factor 2 inner width
+    ks = common.split_keys(key, 5)
+    return {
+        "in_proj": common.dense_init(ks[0], (d_model, m), dtype),
+        "z_proj": common.dense_init(ks[1], (d_model, m), dtype),
+        "qkv": common.dense_init(ks[2], (m, 3 * m), dtype),
+        "gates": common.dense_init(ks[3], (m, 2 * heads), jnp.float32),
+        "out_norm": jnp.ones((m,), jnp.float32),
+        "out_proj": common.dense_init(ks[4], (m, d_model), dtype),
+    }
+
+
+def _mlstm_qkvg(params: Dict, x: jax.Array, heads: int):
+    """x [B,S,D] -> q,k,v [B,S,h,dh], igate/fgate preacts [B,S,h], z [B,S,m]."""
+    m = params["in_proj"].shape[1]
+    dh = m // heads
+    xi = x @ params["in_proj"]                        # [B,S,m]
+    z = x @ params["z_proj"]
+    qkv = xi @ params["qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shp = x.shape[:-1] + (heads, dh)
+    q, k, v = (t.reshape(shp) for t in (q, k, v))
+    k = k / jnp.sqrt(float(dh))
+    gates = (xi.astype(jnp.float32) @ params["gates"])
+    ig, fg = jnp.split(gates, 2, axis=-1)             # [B,S,h]
+    return q, k, v, ig, fg, z
+
+
+def _mlstm_step(carry, inp):
+    """carry: (C [B,h,dh,dh], n [B,h,dh], m [B,h]); inp per-t tensors."""
+    c_mat, n_vec, m_run = carry
+    q, k, v, ig, fg = inp                             # [B,h,dh]×3, [B,h]×2
+    logf = jax.nn.log_sigmoid(fg)                     # [B,h]
+    m_new = jnp.maximum(logf + m_run, ig)
+    i_p = jnp.exp(ig - m_new)[..., None]              # [B,h,1]
+    f_p = jnp.exp(logf + m_run - m_new)[..., None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    c_mat = f_p[..., None] * c_mat + i_p[..., None] * (
+        vf[..., :, None] * kf[..., None, :])          # [B,h,dh,dh]
+    n_vec = f_p * n_vec + i_p * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhij,bhj->bhi", c_mat, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_vec, qf)), 1.0)
+    h = num / den[..., None]                          # [B,h,dh]
+    return (c_mat, n_vec, m_new), h
+
+
+def mlstm_prefill(params: Dict, x: jax.Array, heads: int
+                  ) -> Tuple[jax.Array, Dict]:
+    bsz, s, d = x.shape
+    m_width = params["in_proj"].shape[1]
+    dh = m_width // heads
+    q, k, v, ig, fg, z = _mlstm_qkvg(params, x, heads)
+    carry = (jnp.zeros((bsz, heads, dh, dh), jnp.float32),
+             jnp.zeros((bsz, heads, dh), jnp.float32),
+             jnp.zeros((bsz, heads), jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, ig, fg))
+    carry, hs = jax.lax.scan(_mlstm_step, carry, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, m_width)  # fp32
+    h = common.rms_norm(h.astype(x.dtype), params["out_norm"])
+    out = (h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)) \
+        @ params["out_proj"]
+    cache = {"C": carry[0], "n": carry[1], "m": carry[2]}
+    return out, cache
+
+
+def mlstm_decode(params: Dict, x: jax.Array, cache: Dict, heads: int
+                 ) -> Tuple[jax.Array, Dict]:
+    bsz = x.shape[0]
+    m_width = params["in_proj"].shape[1]
+    q, k, v, ig, fg, z = _mlstm_qkvg(params, x, heads)  # seq dim = 1
+    carry = (cache["C"], cache["n"], cache["m"])
+    inp = tuple(t[:, 0] for t in (q, k, v, ig, fg))
+    carry, h = _mlstm_step(carry, inp)
+    h = h.reshape(bsz, 1, m_width)
+    h = common.rms_norm(h.astype(x.dtype), params["out_norm"])
+    out = (h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)) \
+        @ params["out_proj"]
+    return out, {"C": carry[0], "n": carry[1], "m": carry[2]}
+
+
+def mlstm_init_state(bsz: int, d_model: int, heads: int) -> Dict:
+    m = 2 * d_model
+    dh = m // heads
+    return {"C": jnp.zeros((bsz, heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((bsz, heads, dh), jnp.float32),
+            "m": jnp.zeros((bsz, heads), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, block-diagonal hidden recurrence per head
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key: jax.Array, d_model: int, heads: int,
+               dtype=common.DEFAULT_DTYPE) -> Dict:
+    dh = d_model // heads
+    ks = common.split_keys(key, 3)
+    return {
+        "w": common.dense_init(ks[0], (d_model, 4 * d_model), dtype),
+        "r": common.dense_init(ks[1], (4, heads, dh, dh), jnp.float32),
+        "out_norm": jnp.ones((d_model,), jnp.float32),
+        "out_proj": common.dense_init(ks[2], (d_model, d_model), dtype),
+    }
+
+
+def _slstm_step(params, carry, wx_t):
+    """carry: (c,n,h,m) each [B,D]; wx_t [B,4D] input preactivations."""
+    c, n, h, m_run = carry
+    bsz, d = c.shape
+    heads, dh = params["r"].shape[1], params["r"].shape[2]
+    hh = h.reshape(bsz, heads, dh)
+    rec = jnp.einsum("ghij,bhj->gbhi", params["r"], hh)  # [4,B,heads,dh]
+    rec = rec.reshape(4, bsz, d)
+    zt, it, ft, ot = [wx_t[..., i * d:(i + 1) * d].astype(jnp.float32) + rec[i]
+                      for i in range(4)]
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m_run, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m_run - m_new)
+    c = f_p * c + i_p * jnp.tanh(zt)
+    n = f_p * n + i_p
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new)
+
+
+def slstm_prefill(params: Dict, x: jax.Array, heads: int
+                  ) -> Tuple[jax.Array, Dict]:
+    bsz, s, d = x.shape
+    wx = x @ params["w"]                              # [B,S,4D]
+    carry = tuple(jnp.zeros((bsz, d), jnp.float32) for _ in range(4))
+
+    def step(carry, wx_t):
+        new = _slstm_step(params, carry, wx_t)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                        # [B,S,D] fp32
+    h = common.rms_norm(h.astype(x.dtype), params["out_norm"])
+    out = h @ params["out_proj"]
+    c, n, hh, m = carry
+    return out, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_decode(params: Dict, x: jax.Array, cache: Dict, heads: int
+                 ) -> Tuple[jax.Array, Dict]:
+    wx = (x[:, 0] @ params["w"])
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_step(params, carry, wx)
+    out = common.rms_norm(h[:, None].astype(x.dtype), params["out_norm"]) \
+        @ params["out_proj"]
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_init_state(bsz: int, d_model: int) -> Dict:
+    z = jnp.zeros((bsz, d_model), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}

@@ -1,0 +1,6 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline import hw
+from repro.roofline.analysis import (RooflineReport, analyze,
+                                     collective_bytes)
+
+__all__ = ["hw", "RooflineReport", "analyze", "collective_bytes"]

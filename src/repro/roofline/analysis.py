@@ -1,0 +1,152 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds. NOTE (verified
+empirically): after SPMD partitioning ``compiled.cost_analysis()``
+reports the PER-DEVICE module, so HLO_FLOPs/HLO_bytes are already
+per-chip — the global figures divided by the chip count:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``. Collective
+bytes are NOT in cost_analysis: we parse the post-SPMD HLO text and sum
+the result-shape bytes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute op (per-device shapes after
+partitioning, so the sum is per-device wire traffic to first order).
+
+MODEL_FLOPS = 6·N·D (training) or 2·N·D (inference fwd) with N =
+active params; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat /
+redundant compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%op = TYPE[d0,d1]{layout} collective-name(` — also matches tuple results
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}\s/#*]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module.
+
+    ``-start`` ops are counted; their ``-done`` twins are skipped to
+    avoid double counting.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    peak_bytes_per_chip: float = 0.0
+    raw_flops: float = 0.0     # uncorrected cost_analysis (scan body once)
+    raw_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        # hlo_flops is per-chip (post-SPMD module)
+        return self.hlo_flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / hw.HBM_BANDWIDTH
+
+    @property
+    def t_collective(self) -> float:
+        # coll_bytes is per-device wire traffic (post-SPMD shapes)
+        return self.coll_bytes / hw.ICI_LINK_BANDWIDTH
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS (global) vs compiled FLOPs (per-chip × chips)."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> str:
+        return (f"{self.arch:26s} {self.shape:12s} {self.mesh:9s} "
+                f"comp={self.t_compute:9.3e}s mem={self.t_memory:9.3e}s "
+                f"coll={self.t_collective:9.3e}s -> {self.bottleneck:10s} "
+                f"useful={self.useful_flops_ratio:6.2%}")
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, chips: int,
+            compiled, lowered_text: Optional[str],
+            model_flops: float) -> RooflineReport:
+    """Primary costs come from the while-expanding HLO-text analyzer
+    (repro.roofline.hlo_cost) — raw cost_analysis() counts scan bodies
+    once and would undercount our period/time-scanned models. The raw
+    numbers are kept in raw_* fields as a cross-check."""
+    from repro.roofline.hlo_cost import analyze_text
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    text = lowered_text if lowered_text is not None else compiled.as_text()
+    parsed = analyze_text(text)
+    mem = compiled.memory_analysis()
+    peak = getattr(mem, "peak_memory_in_bytes",
+                   getattr(mem, "temp_size_in_bytes", 0) or 0)
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=max(parsed.flops, raw_flops),
+        hlo_bytes=max(parsed.bytes, raw_bytes),
+        coll_bytes=parsed.coll_bytes,
+        coll_breakdown={k: int(v) for k, v in parsed.coll.items()},
+        model_flops=model_flops, peak_bytes_per_chip=float(peak or 0),
+        raw_flops=raw_flops, raw_bytes=raw_bytes)

@@ -1,0 +1,362 @@
+"""HLO-text cost analyzer with while-loop trip expansion.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE (verified in
+EXPERIMENTS.md §Dry-run): our models scan over layer periods and (for
+SSM mixers) over time, so raw cost_analysis undercounts by the trip
+count. This analyzer parses the post-SPMD optimized HLO text and:
+
+  * counts dot FLOPs exactly (2 · prod(result_dims) · K) per dot,
+  * models HBM traffic as Σ over top-level instructions of
+    (operand + result bytes) — post-fusion, each top-level instruction
+    materializes its buffers, so this is the first-order traffic model,
+  * sums collective result bytes per kind,
+  * recursively multiplies ``while`` bodies by their trip counts
+    (read from the loop-condition comparison constant).
+
+All numbers are PER DEVICE (the post-SPMD module is per-partition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+# instruction: `%name = <shapes> opcode(...)` (names may lack % in new dumps)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?.*?\)?)\s*"
+    r"([a-z][a-z0-9\-]*)\(")
+_CALLED_RE = re.compile(r"(?:calls|branch_computations)=\{?%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'known_trip_count\D+(\d+)')
+
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "reshape", "after-all", "partition-id", "replica-id",
+    "iota",
+}
+
+
+def _shape_info(shape_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Total bytes + list of (dtype, dims) for a (possibly tuple) shape."""
+    total = 0
+    shapes = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",")] if dims else []
+        n = 1
+        for d in dl:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+        shapes.append((dtype, dl))
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def __iadd__(self, other: "Cost") -> "Cost":
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k in self.coll:
+            self.coll[k] += other.coll[k]
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m,
+                    {k: v * m for k, v in self.coll.items()})
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape_str: str
+    opcode: str
+    line: str
+    result_bytes: int
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[_Instr]] = {}
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+        self.entry = self._find_entry(text)
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            # computation header: `%name (args) -> shape {` or `ENTRY %name ...{`
+            if stripped.endswith("{") and ("->" in stripped
+                                           or stripped.startswith("ENTRY")):
+                m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                continue
+            if stripped == "}" or stripped.startswith("} "):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name, shape_str, opcode = im.groups()
+            rb, _ = _shape_info(shape_str)
+            self.computations[cur].append(
+                _Instr(name, shape_str, opcode, line, rb))
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        if m and m.group(1) in self.computations:
+            return m.group(1)
+        # fallback: the largest computation
+        return max(self.computations, key=lambda k: len(self.computations[k]))
+
+    # ------------------------------------------------------------------
+    def _operand_list(self, comp: str, instr: _Instr) -> List[int]:
+        """Ordered operand byte sizes (resolved within the computation)."""
+        inside = instr.line.split("(", 1)[1]
+        inside = inside.split(")", 1)[0]
+        shapes = {i.name: i.result_bytes for i in self.computations[comp]}
+        return [shapes[tok] for tok in _OPERAND_RE.findall(inside)
+                if tok in shapes]
+
+    def _traffic_bytes(self, comp: str, instr: _Instr) -> float:
+        """HBM traffic model per instruction — results-only plus dot
+        operand reads.
+
+        Rationale: every materializing instruction writes its result once
+        (and that buffer is read by consumers, which we charge at the
+        consumer only for dots — the heavy readers of weights/caches that
+        arrive as loop-carried parameters and would otherwise be
+        uncounted). Counting operands of arbitrary fusions double-charges
+        whole loop-carried buffers that the fusion only slices.
+
+          dot                   → result + Σ operands (weights/cache reads)
+          dynamic-slice         → 2 × result (read + write the slice)
+          dynamic-update-slice  → 2 × update operand (in-place)
+          gather                → 2 × result + indices
+          scatter               → 2 × updates + indices (in-place)
+          copy                  → 2 × result
+          fusion w/ DUS root    → 2 × inner update bytes
+          everything else       → result bytes
+        """
+        op = instr.opcode
+        ops = self._operand_list(comp, instr)
+        if op == "dot":
+            return float(instr.result_bytes + sum(ops))
+        if op == "dynamic-slice":
+            return 2.0 * instr.result_bytes
+        if op == "dynamic-update-slice":
+            upd = ops[1] if len(ops) > 1 else instr.result_bytes
+            return 2.0 * upd
+        if op == "gather":
+            idx = ops[1] if len(ops) > 1 else 0
+            return 2.0 * instr.result_bytes + idx
+        if op == "scatter":
+            idx = ops[1] if len(ops) > 1 else 0
+            upd = ops[2] if len(ops) > 2 else instr.result_bytes
+            return 2.0 * upd + idx
+        if op == "copy":
+            return 2.0 * instr.result_bytes
+        if op == "fusion":
+            dus = self._fusion_dus_update_bytes(instr)
+            if dus is not None:
+                return 2.0 * dus
+            sc = self._fusion_scatter_update_bytes(instr)
+            if sc is not None:
+                return 2.0 * sc
+        return float(instr.result_bytes)
+
+    def _fusion_dus_update_bytes(self, instr: _Instr) -> Optional[int]:
+        """If the fused computation is a (possibly convert-wrapped)
+        dynamic-update-slice of the fusion's full result, the fusion is
+        in-place: traffic is the inner update operand size. (CPU bf16
+        emulation wraps the DUS in converts; a real TPU lowering updates
+        the slice in place.)"""
+        _, res_shapes = _shape_info(instr.shape_str)
+        res_elems = 0
+        if res_shapes:
+            res_elems = 1
+            for d in res_shapes[0][1]:
+                res_elems *= d
+        for called in _CALLED_RE.findall(instr.line):
+            instrs = self.computations.get(called, [])
+            names = {i.name: i for i in instrs}
+            for inner in instrs:
+                if inner.opcode != "dynamic-update-slice":
+                    continue
+                _, inner_shapes = _shape_info(inner.shape_str)
+                elems = 1
+                for d in (inner_shapes[0][1] if inner_shapes else []):
+                    elems *= d
+                if res_elems and elems != res_elems:
+                    continue
+                inside = inner.line.split("(", 1)[1].split(")", 1)[0]
+                toks = [t for t in _OPERAND_RE.findall(inside)
+                        if t in names]
+                if len(toks) > 1:
+                    return names[toks[1]].result_bytes
+        return None
+
+    def _fusion_scatter_update_bytes(self, instr: _Instr) -> Optional[int]:
+        """Scatter-rooted fusions writing a same-size buffer are in-place:
+        traffic ≈ updates + indices, not the whole buffer."""
+        _, res_shapes = _shape_info(instr.shape_str)
+        res_elems = 0
+        if res_shapes:
+            res_elems = 1
+            for d in res_shapes[0][1]:
+                res_elems *= d
+        for called in _CALLED_RE.findall(instr.line):
+            instrs = self.computations.get(called, [])
+            names = {i.name: i for i in instrs}
+            for inner in instrs:
+                if inner.opcode != "scatter":
+                    continue
+                _, inner_shapes = _shape_info(inner.shape_str)
+                elems = 1
+                for d in (inner_shapes[0][1] if inner_shapes else []):
+                    elems *= d
+                if res_elems and elems != res_elems:
+                    continue
+                inside = inner.line.split("(", 1)[1].split(")", 1)[0]
+                toks = [t for t in _OPERAND_RE.findall(inside)
+                        if t in names]
+                if len(toks) > 2:
+                    return (names[toks[2]].result_bytes
+                            + names[toks[1]].result_bytes)
+        return None
+
+    def _dot_flops(self, instr: _Instr) -> float:
+        """2 · prod(result) · K from lhs shape + contracting dims."""
+        _, res_shapes = _shape_info(instr.shape_str)
+        if not res_shapes:
+            return 0.0
+        res_elems = 1
+        for d in res_shapes[0][1]:
+            res_elems *= d
+        # lhs shape: first shape inside the parens
+        inside = instr.line.split("(", 1)[1]
+        m = _SHAPE_RE.search(inside)
+        lhs_dims: Optional[List[int]] = None
+        if m and m.group(2):
+            lhs_dims = [int(d) for d in m.group(2).split(",")]
+        else:
+            # operands referenced by name: resolve lhs via first operand
+            comp = self._comp_of(instr)
+            if comp is not None:
+                names = {i.name: i for i in self.computations[comp]}
+                toks = _OPERAND_RE.findall(inside)
+                for tok in toks:
+                    if tok in names:
+                        _, shp = _shape_info(names[tok].shape_str)
+                        if shp:
+                            lhs_dims = shp[0][1]
+                        break
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+        if lhs_dims is None or cm is None:
+            return 0.0
+        k = 1
+        if cm.group(1):
+            for idx in cm.group(1).split(","):
+                k *= lhs_dims[int(idx)]
+        return 2.0 * res_elems * k
+
+    def _comp_of(self, instr: _Instr) -> Optional[str]:
+        for cname, instrs in self.computations.items():
+            if instr in instrs:
+                return cname
+        return None  # pragma: no cover
+
+    def _trip_count(self, cond_comp: str) -> int:
+        """Largest integer constant in the loop condition ≈ trip count."""
+        best = 1
+        for i in self.computations.get(cond_comp, []):
+            for c in _CONST_RE.findall(i.line):
+                best = max(best, int(c))
+        return best
+
+    # ------------------------------------------------------------------
+    def computation_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        self._memo[comp] = total  # guard against cycles
+        for instr in self.computations.get(comp, []):
+            op = instr.opcode
+            if op == "while":
+                bm = _BODY_RE.search(instr.line)
+                if bm:
+                    tm = _TRIP_RE.search(instr.line)
+                    if tm:
+                        trips = int(tm.group(1))
+                    else:
+                        cm = _COND_RE.search(instr.line)
+                        trips = self._trip_count(cm.group(1)) if cm else 1
+                    total += self.computation_cost(bm.group(1)).scaled(trips)
+                    continue
+            if op in ("call", "conditional"):
+                for called in _CALLED_RE.findall(instr.line):
+                    if called in self.computations:
+                        total += self.computation_cost(called)
+            if op == "fusion":
+                # dots occasionally live inside fusions: count their FLOPs
+                # (traffic is already modeled by the fusion's own buffers)
+                for called in _CALLED_RE.findall(instr.line):
+                    total.flops += self._flops_only(called)
+            if op == "dot":
+                total.flops += self._dot_flops(instr)
+            base = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+            if base and not op.endswith("-done"):
+                total.coll[base] += instr.result_bytes
+            if op in _NO_TRAFFIC_OPS or op.endswith("-done"):
+                continue
+            total.bytes += self._traffic_bytes(comp, instr)
+        self._memo[comp] = total
+        return total
+
+    def _flops_only(self, comp: str) -> float:
+        flops = 0.0
+        for instr in self.computations.get(comp, []):
+            if instr.opcode == "dot":
+                flops += self._dot_flops(instr)
+            elif instr.opcode == "fusion":
+                for called in _CALLED_RE.findall(instr.line):
+                    if called != comp:
+                        flops += self._flops_only(called)
+        return flops
+
+    def entry_cost(self) -> Cost:
+        return self.computation_cost(self.entry)
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).entry_cost()

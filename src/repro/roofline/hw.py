@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BANDWIDTH = 819e9           # bytes/s per chip
+ICI_LINK_BANDWIDTH = 50e9       # bytes/s per link (per direction, approx.)
+HBM_BYTES = 16 * 2**30          # per chip
+
+CHIPS_PER_POD = 256

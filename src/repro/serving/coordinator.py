@@ -1,0 +1,103 @@
+"""Task coordinator: drives disaggregated serving end to end.
+
+The in-process replacement for HexGen-2's libp2p coordinator
+(DESIGN.md §3): it owns one PrefillEngine and one-or-more DecodeEngines,
+dispatches incoming requests, performs the KV handoff, and runs decode
+continuous batching. Dispatch across decode engines follows the
+scheduler's flow assignment proportions when given one.
+
+This is the runtime-domain path (real JAX execution); the
+scheduling-domain evaluation lives in ``simulator.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.serving import kv_transfer
+from repro.serving.engine import DecodeEngine, PrefillEngine
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    rid: int
+    tokens: List[int]             # generated tokens (incl. first)
+
+
+class Coordinator:
+    def __init__(self, cfg: ArchConfig, params: Any,
+                 num_decode_engines: int = 1, slots_per_engine: int = 4,
+                 capacity: int = 128,
+                 route_weights: Optional[Sequence[float]] = None):
+        self.cfg = cfg
+        self.capacity = capacity
+        self.prefill_engine = PrefillEngine(cfg, params, capacity)
+        self.decode_engines = [DecodeEngine(cfg, params, slots_per_engine,
+                                            capacity)
+                               for _ in range(num_decode_engines)]
+        w = list(route_weights or [1.0] * num_decode_engines)
+        assert len(w) == num_decode_engines
+        self._weights = np.asarray(w, float) / sum(w)
+        self._routed = np.zeros(num_decode_engines)
+
+    def _pick_engine(self) -> int:
+        # flow-proportional, load-corrected (same rule as the simulator)
+        load = (self._routed + 1) / np.maximum(self._weights, 1e-9)
+        return int(np.argmin(load))
+
+    def serve(self, requests: List[ServeRequest]) -> List[ServeResult]:
+        results = {r.rid: ServeResult(r.rid, []) for r in requests}
+        queue = list(requests)
+        inflight = {r.rid: r for r in requests}
+
+        while queue or any(s.active for e in self.decode_engines
+                           for s in e.slots):
+            # admit as many queued requests as free slots allow
+            progressed = False
+            while queue:
+                eng_idx = self._pick_engine()
+                eng = self.decode_engines[eng_idx]
+                if not eng.free_slots():
+                    # try any engine with space
+                    free = [i for i, e in enumerate(self.decode_engines)
+                            if e.free_slots()]
+                    if not free:
+                        break
+                    eng_idx = free[0]
+                    eng = self.decode_engines[eng_idx]
+                req = queue.pop(0)
+                self._routed[eng_idx] += 1
+                first, cache = self._prefill_one(req)
+                results[req.rid].tokens.append(first)
+                if req.max_new_tokens <= 1:
+                    continue
+                cache = kv_transfer.pad_capacity(cache, self.capacity)
+                cache = kv_transfer.transfer(cache)
+                eng.admit(req.rid, first, len(req.prompt),
+                          req.max_new_tokens, cache)
+                progressed = True
+            # one decode step across engines
+            for eng in self.decode_engines:
+                for rid, tok, finished in eng.step():
+                    results[rid].tokens.append(tok)
+                    progressed = True
+            if not progressed and queue:
+                raise RuntimeError("coordinator stalled: no free slots and "
+                                   "no active decode")
+        return [results[r.rid] for r in requests]
+
+    def _prefill_one(self, req: ServeRequest) -> Tuple[int, Any]:
+        tokens = np.asarray(req.prompt, np.int32)[None]
+        next_tok, cache = self.prefill_engine.prefill(tokens, **req.extra)
+        return int(next_tok[0]), cache

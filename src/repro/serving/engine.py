@@ -1,0 +1,135 @@
+"""Real-JAX disaggregated serving engines.
+
+The runtime-domain counterpart of the simulator: a PrefillEngine turns a
+prompt batch into (first token, KV cache pytree); a DecodeEngine holds
+fixed-capacity slot state (TPU static shapes — the continuous-batching
+adaptation in DESIGN.md §3) and advances all active slots one token per
+step. The KV handoff between them is ``kv_transfer.transfer`` — a
+resharding device_put, the TPU analogue of HexGen-2's NCCL KV routing.
+
+All steps are jit'd once per (batch, seq) bucket; buckets are powers of
+two so a handful of compilations serves any trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class PrefillEngine:
+    """Serves the prefill phase: prompt → (first token, cache)."""
+
+    def __init__(self, cfg: ArchConfig, params: Any,
+                 cache_capacity: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.cache_capacity = cache_capacity
+        self._fn = jax.jit(
+            functools.partial(transformer.prefill, cfg=cfg,
+                              cache_capacity=cache_capacity),
+            static_argnames=())
+
+    def prefill(self, tokens: np.ndarray, **extra) -> Tuple[np.ndarray, Any]:
+        """tokens [B,S] (already bucketed/padded) → (next_token [B], cache)."""
+        logits, cache = self._fn(self.params, tokens=jnp.asarray(tokens),
+                                 **extra)
+        next_tok = jnp.argmax(logits, axis=-1)
+        return np.asarray(next_tok), cache
+
+
+@dataclasses.dataclass
+class Slot:
+    rid: int = -1
+    length: int = 0          # tokens written so far (prompt + generated)
+    remaining: int = 0       # tokens still to generate
+    active: bool = False
+
+
+class DecodeEngine:
+    """Continuous-batching decode over fixed slots.
+
+    ``slots`` is the static batch capacity; per-slot KV lives stacked in
+    one cache pytree. Admission copies a transferred prefill cache into
+    a free slot (a dynamic_update on the batch dim)."""
+
+    def __init__(self, cfg: ArchConfig, params: Any, slots: int,
+                 capacity: int):
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = slots
+        self.capacity = capacity
+        self.cache = transformer.init_cache(cfg, slots, capacity)
+        self.slots = [Slot() for _ in range(slots)]
+        self.tokens = np.zeros((slots,), np.int32)
+
+        def step(params, cache, tokens, positions):
+            logits, cache = transformer.decode_step(
+                params, cfg, cache, tokens[:, None], positions[:, None])
+            return jnp.argmax(logits, axis=-1), cache
+
+        self._step = jax.jit(step, donate_argnums=(1,))
+
+    # -- slot admission -------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    def admit(self, rid: int, first_token: int, prompt_len: int,
+              s_out: int, cache_slice: Any) -> int:
+        """Install a transferred single-request cache into a free slot.
+
+        ``cache_slice`` is the request's cache pytree with batch dim 1 and
+        the SAME capacity as this engine (kv_transfer guarantees it)."""
+        idx = self.free_slots()[0]
+
+        def install(dst, src):
+            if dst.ndim < 2 or not isinstance(src, jax.Array):
+                return dst
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), idx, axis=1)
+
+        self.cache = jax.tree.map(install, self.cache, cache_slice)
+        self.slots[idx] = Slot(rid=rid, length=prompt_len + 1,
+                               remaining=s_out - 1, active=True)
+        self.tokens[idx] = first_token
+        return idx
+
+    # -- decode ----------------------------------------------------------
+    def step(self) -> List[Tuple[int, int, bool]]:
+        """Advance every active slot one token.
+
+        Returns [(rid, token, finished)] for active slots."""
+        if not any(s.active for s in self.slots):
+            return []
+        positions = np.array([max(s.length - 1, 0) for s in self.slots],
+                             np.int32)
+        toks, self.cache = self._step(self.params, self.cache,
+                                      jnp.asarray(self.tokens),
+                                      jnp.asarray(positions))
+        toks = np.asarray(toks)
+        out = []
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            s.length += 1
+            s.remaining -= 1
+            self.tokens[i] = toks[i]
+            finished = s.remaining <= 0 or s.length >= self.capacity
+            out.append((s.rid, int(toks[i]), finished))
+            if finished:
+                s.active = False
+        return out

@@ -1,0 +1,67 @@
+"""KV-cache handoff between prefill and decode replicas.
+
+On a real multi-device runtime this is a resharding ``jax.device_put``:
+the prefill replica's cache (laid out for its TP degree) is re-laid-out
+to the decode replica's sharding; XLA emits the collective-permute /
+ICI traffic. That is the TPU-idiomatic analogue of HexGen-2's
+layer-matched NCCL SendRecv routing (DESIGN.md §3).
+
+The helpers below also normalize capacity (prefill pads its cache to
+the decode engine's slot capacity) and slice out single requests from a
+prefill batch.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def slice_request(cache: Any, batch_index: int) -> Any:
+    """Extract one request's cache (batch dim kept, size 1). Batch is
+    axis 1 of every leaf (axis 0 is the period stack)."""
+
+    def pick(leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+            return leaf
+        return jax.lax.dynamic_slice_in_dim(leaf, batch_index, 1, axis=1)
+
+    return jax.tree.map(pick, cache)
+
+
+def pad_capacity(cache: Any, target: int) -> Any:
+    """Grow attention caches' sequence dim (axis 2 of k/v/pos leaves) to
+    ``target`` slots. Non-attention state (SSM/xLSTM) passes through."""
+
+    def pad(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = keys[-1] if keys else ""
+        if name in ("k", "v") and leaf.ndim == 5 and leaf.shape[2] < target:
+            cfgpad = [(0, 0)] * leaf.ndim
+            cfgpad[2] = (0, target - leaf.shape[2])
+            return jnp.pad(leaf, cfgpad)
+        if name == "pos" and leaf.ndim == 3 and leaf.shape[2] < target:
+            cfgpad = [(0, 0), (0, 0), (0, target - leaf.shape[2])]
+            return jnp.pad(leaf, cfgpad, constant_values=-1)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+def transfer(cache: Any, dst_shardings: Optional[Any] = None,
+             donate: bool = False) -> Any:
+    """Ship a cache pytree to the decode replica's layout.
+
+    ``dst_shardings``: pytree of NamedSharding (or a single device) —
+    None keeps placement (single-device test runtime)."""
+    if dst_shardings is None:
+        return cache
+    return jax.device_put(cache, dst_shardings, donate=donate)
+
+
+def transfer_bytes(cache: Any) -> int:
+    """Wire size of a cache pytree (for logging / cost cross-checks)."""
+    return int(sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(cache)
+                   if hasattr(leaf, "size")))

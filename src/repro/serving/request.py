@@ -1,0 +1,51 @@
+"""Request lifecycle for disaggregated serving."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class Phase(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    KV_TRANSFER = "kv_transfer"
+    DECODING = "decoding"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    s_in: int                     # prompt tokens
+    s_out: int                    # tokens to generate
+    arrival: float                # seconds
+    phase: Phase = Phase.QUEUED
+    # timeline (filled by simulator / coordinator)
+    prefill_start: Optional[float] = None
+    prefill_end: Optional[float] = None
+    transfer_end: Optional[float] = None
+    decode_end: Optional[float] = None
+    prefill_group: Optional[int] = None
+    decode_group: Optional[int] = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.decode_end is None:
+            return None
+        return self.decode_end - self.arrival
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (prefill completion)."""
+        if self.prefill_end is None:
+            return None
+        return self.prefill_end - self.arrival
+
+    @property
+    def is_heavy_prefill(self) -> bool:
+        return self.s_in > 512
+
+    @property
+    def is_heavy_decode(self) -> bool:
+        return self.s_out > 128

@@ -1,0 +1,337 @@
+"""Event-driven cluster simulator for disaggregated serving.
+
+Executes a scheduler ``Placement`` against a request trace using the
+Table-1 cost model for service times — this is the scheduling-domain
+evaluation harness that reproduces the paper's throughput/latency/SLO
+numbers (Figures 6–9) without renting heterogeneous GPUs.
+
+Faithful mechanics:
+  * prefill replicas serve one request at a time (compute-bound; paper
+    Appendix A), FIFO;
+  * dispatch follows the max-flow assignment — requests are routed to
+    prefill replicas (and their KV targets) proportionally to flow,
+    load-corrected;
+  * KV transfers serialize per (prefill, decode) route at the cost
+    model's transfer time;
+  * decode replicas run continuous batching in rounds of
+    ``chunk_tokens`` steps at the cost model's step latency for the
+    current batch size and mean context.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+from repro.core.cost_model import (ModelProfile, decode_step_latency,
+                                   kv_transfer_time, max_decode_batch,
+                                   prefill_latency)
+from repro.core.placement import Placement, ReplicaPlacement
+from repro.serving.request import Phase, Request
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: List[Request]
+    makespan: float
+    decode_tokens: int
+
+    @property
+    def decode_throughput(self) -> float:
+        """tokens/s — the paper's offline metric."""
+        return self.decode_tokens / self.makespan if self.makespan > 0 else 0.0
+
+    @property
+    def avg_latency(self) -> float:
+        lats = [r.latency for r in self.requests if r.latency is not None]
+        return float(np.mean(lats)) if lats else float("inf")
+
+    @property
+    def p99_latency(self) -> float:
+        lats = [r.latency for r in self.requests if r.latency is not None]
+        return float(np.percentile(lats, 99)) if lats else float("inf")
+
+    def slo_attainment(self, slo_per_request: Dict[int, float],
+                       scale: float) -> float:
+        ok = sum(1 for r in self.requests
+                 if r.latency is not None
+                 and r.latency <= scale * slo_per_request[r.rid])
+        return ok / max(len(self.requests), 1)
+
+
+class _PrefillServer:
+    def __init__(self, replica: ReplicaPlacement):
+        self.replica = replica
+        self.queue: List[Request] = []
+        self.busy = False
+
+
+class _DecodeServer:
+    def __init__(self, replica: ReplicaPlacement, max_batch: int):
+        self.replica = replica
+        self.max_batch = max(1, max_batch)
+        self.active: List[Tuple[Request, int]] = []   # (req, remaining)
+        self.pending: List[Request] = []
+        self.in_round = False
+
+
+def simulate(cluster: ClusterSpec, profile: ModelProfile,
+             placement: Placement, requests: List[Request],
+             chunk_tokens: int = 16, seed: int = 0,
+             typical_context: int = 1024) -> SimResult:
+    rng = np.random.default_rng(seed)
+    prefill = {r.group_id: _PrefillServer(r)
+               for r in placement.prefill_replicas() if r.plan is not None}
+    decode = {}
+    for r in placement.decode_replicas():
+        if r.plan is None:
+            continue
+        mb = max_decode_batch(cluster, profile, r.plan, typical_context)
+        decode[r.group_id] = _DecodeServer(r, mb)
+    if not prefill or not decode:
+        return SimResult(requests, float("inf"), 0)
+
+    # flow-proportional dispatch tables
+    pref_weight = {gid: 0.0 for gid in prefill}
+    route_weight: Dict[int, List[Tuple[int, float]]] = {g: [] for g in prefill}
+    for (p, d), f in placement.kv_routes.items():
+        if p in prefill and d in decode:
+            pref_weight[p] += f
+            route_weight[p].append((d, f))
+    # fall back to capacity weights if flow is degenerate
+    if sum(pref_weight.values()) <= 0:
+        for gid, srv in prefill.items():
+            pref_weight[gid] = max(srv.replica.capacity, 1e-9)
+            route_weight[gid] = [(d, decode[d].replica.capacity)
+                                 for d in decode]
+    for gid in prefill:
+        if not route_weight[gid]:
+            route_weight[gid] = [(d, decode[d].replica.capacity)
+                                 for d in decode]
+
+    dispatched = {gid: 0.0 for gid in prefill}
+    routed: Dict[Tuple[int, int], float] = {}
+    link_free: Dict[Tuple[int, int], float] = {}
+
+    events: List[Tuple[float, int, str, object]] = []
+    seq = 0
+
+    def push(t: float, kind: str, payload) -> None:
+        nonlocal seq
+        heapq.heappush(events, (t, seq, kind, payload))
+        seq += 1
+
+    for req in requests:
+        push(req.arrival, "arrival", req)
+
+    def pick_prefill() -> int:
+        # least normalized load among flow-weighted replicas
+        return min(prefill,
+                   key=lambda g: (dispatched[g] + 1) / max(pref_weight[g], 1e-9))
+
+    def pick_decode(p: int) -> int:
+        opts = route_weight[p]
+        return min(opts, key=lambda df: (routed.get((p, df[0]), 0.0) + 1)
+                   / max(df[1], 1e-9))[0]
+
+    def start_prefill(t: float, srv: _PrefillServer) -> None:
+        if srv.busy or not srv.queue:
+            return
+        req = srv.queue.pop(0)
+        srv.busy = True
+        req.phase = Phase.PREFILLING
+        req.prefill_start = t
+        lat = prefill_latency(cluster, profile, srv.replica.plan, 1, req.s_in)
+        push(t + lat, "prefill_done", (srv.replica.group_id, req))
+
+    def start_round(t: float, srv: _DecodeServer) -> None:
+        if srv.in_round:
+            return
+        free = srv.max_batch - len(srv.active)
+        if free > 0 and srv.pending:
+            for req in srv.pending[:free]:
+                srv.active.append((req, req.s_out))
+                req.phase = Phase.DECODING
+            srv.pending = srv.pending[free:]
+        if not srv.active:
+            return
+        srv.in_round = True
+        batch = len(srv.active)
+        ctx = int(np.mean([r.s_in + (r.s_out - rem) for r, rem in srv.active]))
+        step = decode_step_latency(cluster, profile, srv.replica.plan,
+                                   batch, max(ctx, 1))
+        push(t + chunk_tokens * step, "round_done",
+             srv.replica.group_id)
+
+    decode_tokens = 0
+    makespan = 0.0
+    while events:
+        t, _, kind, payload = heapq.heappop(events)
+        makespan = max(makespan, t)
+        if kind == "arrival":
+            req = payload
+            gid = pick_prefill()
+            dispatched[gid] += 1
+            req.prefill_group = gid
+            prefill[gid].queue.append(req)
+            start_prefill(t, prefill[gid])
+        elif kind == "prefill_done":
+            gid, req = payload
+            srv = prefill[gid]
+            srv.busy = False
+            req.prefill_end = t
+            req.phase = Phase.KV_TRANSFER
+            did = pick_decode(gid)
+            routed[(gid, did)] = routed.get((gid, did), 0.0) + 1
+            req.decode_group = did
+            tt = kv_transfer_time(cluster, profile, srv.replica.plan,
+                                  decode[did].replica.plan, 1, req.s_in)
+            begin = max(t, link_free.get((gid, did), t))
+            link_free[(gid, did)] = begin + tt
+            push(begin + tt, "transfer_done", req)
+            start_prefill(t, srv)
+        elif kind == "transfer_done":
+            req = payload
+            req.transfer_end = t
+            srv = decode[req.decode_group]
+            srv.pending.append(req)
+            start_round(t, srv)
+        elif kind == "round_done":
+            gid = payload
+            srv = decode[gid]
+            srv.in_round = False
+            still = []
+            for req, rem in srv.active:
+                produced = min(chunk_tokens, rem)
+                decode_tokens += produced
+                rem -= produced
+                if rem <= 0:
+                    req.decode_end = t
+                    req.phase = Phase.DONE
+                else:
+                    still.append((req, rem))
+            srv.active = still
+            start_round(t, srv)
+    return SimResult(requests, makespan, decode_tokens)
+
+
+def slo_baselines(cluster: ClusterSpec, profile: ModelProfile,
+                  placement: Placement,
+                  requests: List[Request]) -> Dict[int, float]:
+    """Per-request SLO base: unloaded best-replica latency (the paper's
+    'single device execution latency' scaled by SLO-scale)."""
+    best_p = min((r.plan for r in placement.prefill_replicas()
+                  if r.plan is not None),
+                 key=lambda pl: prefill_latency(cluster, profile, pl, 1, 512))
+    best_d = min((r.plan for r in placement.decode_replicas()
+                  if r.plan is not None),
+                 key=lambda pl: decode_step_latency(cluster, profile, pl,
+                                                    1, 1024))
+    out = {}
+    for req in requests:
+        p = prefill_latency(cluster, profile, best_p, 1, req.s_in)
+        d = decode_step_latency(cluster, profile, best_d, 1,
+                                req.s_in + req.s_out // 2) * req.s_out
+        out[req.rid] = p + d
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Colocated (HexGen-style, non-disaggregated) simulator — the baseline.
+# Prefill and decode share each replica; a prefill job serializes against
+# decode rounds and both pay the interference penalty (paper Fig. 1).
+# ---------------------------------------------------------------------------
+
+
+def simulate_colocated(cluster: ClusterSpec, profile: ModelProfile,
+                       replicas: List[ReplicaPlacement],
+                       requests: List[Request],
+                       interference: float = 1.35,
+                       chunk_tokens: int = 16,
+                       typical_context: int = 1024) -> SimResult:
+    class _Srv:
+        def __init__(self, rep: ReplicaPlacement):
+            self.rep = rep
+            self.prefill_q: List[Request] = []
+            self.active: List[Tuple[Request, int]] = []
+            self.busy = False
+            self.max_batch = max(1, max_decode_batch(
+                cluster, profile, rep.plan, typical_context))
+
+    servers = [_Srv(r) for r in replicas if r.plan is not None]
+    if not servers:
+        return SimResult(requests, float("inf"), 0)
+    events: List[Tuple[float, int, str, object]] = []
+    seq = 0
+
+    def push(t, kind, payload):
+        nonlocal seq
+        heapq.heappush(events, (t, seq, kind, payload))
+        seq += 1
+
+    for req in requests:
+        push(req.arrival, "arrival", req)
+
+    rr = 0
+    decode_tokens = 0
+    makespan = 0.0
+
+    def kick(t: float, si: int) -> None:
+        srv = servers[si]
+        if srv.busy:
+            return
+        # prefill first when a slot is free (continuous batching admits)
+        if srv.prefill_q and len(srv.active) < srv.max_batch:
+            req = srv.prefill_q.pop(0)
+            req.prefill_start = t
+            dur = prefill_latency(cluster, profile, srv.rep.plan, 1,
+                                  req.s_in) * interference
+            srv.busy = True
+            push(t + dur, "prefill_done", (si, req))
+            return
+        if srv.active:
+            batch = len(srv.active)
+            ctx = int(np.mean([r.s_in + (r.s_out - rem)
+                               for r, rem in srv.active]))
+            step = decode_step_latency(cluster, profile, srv.rep.plan,
+                                       batch, max(ctx, 1)) * interference
+            srv.busy = True
+            push(t + chunk_tokens * step, "round_done", si)
+
+    while events:
+        t, _, kind, payload = heapq.heappop(events)
+        makespan = max(makespan, t)
+        if kind == "arrival":
+            req = payload
+            si = rr % len(servers)
+            rr += 1
+            servers[si].prefill_q.append(req)
+            req.prefill_group = servers[si].rep.group_id
+            kick(t, si)
+        elif kind == "prefill_done":
+            si, req = payload
+            srv = servers[si]
+            srv.busy = False
+            req.prefill_end = req.transfer_end = t
+            req.decode_group = srv.rep.group_id
+            srv.active.append((req, req.s_out))
+            kick(t, si)
+        elif kind == "round_done":
+            si = payload
+            srv = servers[si]
+            srv.busy = False
+            still = []
+            for req, rem in srv.active:
+                produced = min(chunk_tokens, rem)
+                decode_tokens += produced
+                rem -= produced
+                if rem <= 0:
+                    req.decode_end = t
+                else:
+                    still.append((req, rem))
+            srv.active = still
+            kick(t, si)
+    return SimResult(requests, makespan, decode_tokens)

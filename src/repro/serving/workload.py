@@ -1,0 +1,78 @@
+"""Workload generators (paper §5.1).
+
+Four offline classes from the heavy/light prefill-decode taxonomy
+(heavy prefill > 512 prompt tokens; heavy decode > 128 output tokens),
+sampled with Azure-Conversation-like lognormal length distributions,
+plus an online trace with Poisson arrivals scaled to 75% of cluster
+peak throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class LengthDist:
+    """Lognormal token-length distribution clipped to [lo, hi]."""
+    mean_log: float
+    sigma_log: float
+    lo: int
+    hi: int
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        x = rng.lognormal(self.mean_log, self.sigma_log, size=n)
+        return np.clip(x.astype(int), self.lo, self.hi)
+
+
+# heavy prefill: >512 prompt tokens; heavy decode: >128 output tokens
+_PREFILL_HEAVY = LengthDist(np.log(1024), 0.4, 513, 4096)
+_PREFILL_LIGHT = LengthDist(np.log(256), 0.5, 16, 512)
+_DECODE_HEAVY = LengthDist(np.log(256), 0.4, 129, 1024)
+_DECODE_LIGHT = LengthDist(np.log(64), 0.5, 8, 128)
+
+WORKLOAD_DISTS = {
+    "HPLD": (_PREFILL_HEAVY, _DECODE_LIGHT),
+    "HPHD": (_PREFILL_HEAVY, _DECODE_HEAVY),
+    "LPHD": (_PREFILL_LIGHT, _DECODE_HEAVY),
+    "LPLD": (_PREFILL_LIGHT, _DECODE_LIGHT),
+}
+
+
+def offline_workload(kind: str, n: int, seed: int = 0) -> List[Request]:
+    """Offline = all requests available at t=0 (arrival rate saturates)."""
+    rng = np.random.default_rng(seed)
+    pd, dd = WORKLOAD_DISTS[kind]
+    s_in = pd.sample(rng, n)
+    s_out = dd.sample(rng, n)
+    return [Request(rid=i, s_in=int(s_in[i]), s_out=int(s_out[i]),
+                    arrival=0.0) for i in range(n)]
+
+
+def online_workload(n: int, rate_rps: float, seed: int = 0,
+                    mix: Optional[List[str]] = None) -> List[Request]:
+    """Online = Poisson arrivals at ``rate_rps``, mixed workload classes
+    (the paper's online trace mixes conversation-like lengths)."""
+    rng = np.random.default_rng(seed)
+    mix = mix or ["HPLD", "HPHD", "LPHD", "LPLD"]
+    gaps = rng.exponential(1.0 / rate_rps, size=n)
+    arrivals = np.cumsum(gaps)
+    reqs = []
+    for i in range(n):
+        kind = mix[int(rng.integers(len(mix)))]
+        pd, dd = WORKLOAD_DISTS[kind]
+        reqs.append(Request(
+            rid=i, s_in=int(pd.sample(rng, 1)[0]),
+            s_out=int(dd.sample(rng, 1)[0]), arrival=float(arrivals[i])))
+    return reqs
+
+
+def mean_lengths(kind: str) -> tuple:
+    """Representative (s_in, s_out) for the scheduler's Workload input."""
+    from repro.core.cost_model import WORKLOADS
+    wl = WORKLOADS[kind]
+    return wl.s_in, wl.s_out

@@ -1,0 +1,6 @@
+"""Training substrate: optimizer, data pipeline, checkpointing, loop."""
+from repro.training import checkpoint, data, optimizer
+from repro.training.train_loop import TrainResult, make_train_step, train
+
+__all__ = ["checkpoint", "data", "optimizer", "TrainResult",
+           "make_train_step", "train"]

@@ -1,0 +1,77 @@
+"""Checkpointing: save/restore params + optimizer state + step.
+
+Flat-key .npz per checkpoint with a small JSON manifest; atomic via
+tmp-rename. No external deps (orbax is not in the image).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":  # bf16 etc. → store as fp32
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(directory: str, step: int, params: Any,
+         opt_state: Optional[Any] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v
+                        for k, v in _flatten(opt_state).items()})
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz")
+    os.close(fd)
+    np.savez(tmp, **payload)
+    os.replace(tmp, path)
+    manifest = os.path.join(directory, "manifest.json")
+    meta = {"latest_step": step, "latest": os.path.basename(path)}
+    with open(manifest, "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    manifest = os.path.join(directory, "manifest.json")
+    if not os.path.exists(manifest):
+        return None
+    with open(manifest) as f:
+        return json.load(f)["latest_step"]
+
+
+def restore(directory: str, step: int, params_like: Any,
+            opt_like: Optional[Any] = None) -> Tuple[Any, Optional[Any]]:
+    """Restore into pytrees shaped like the given templates."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+
+    def rebuild(prefix: str, template: Any) -> Any:
+        flat = _flatten(template)
+        leaves = []
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        for kp, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in kp)
+            arr = data[f"{prefix}/{key}"]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = rebuild("params", params_like)
+    opt = rebuild("opt", opt_like) if opt_like is not None else None
+    return params, opt

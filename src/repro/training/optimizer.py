@@ -1,0 +1,96 @@
+"""AdamW with warmup-cosine schedule (no external deps).
+
+Optimizer state is a pytree shaped like params (fp32 moments), so the
+launch layer can shard it with the same rules as the parameters
+(ZeRO-style over the data axis in the fsdp_tp profile).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array           # scalar int32
+    mu: Any                   # fp32 pytree like params
+    nu: Any                   # fp32 pytree like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_clip: float = 1.0
+    # §Perf: bf16 moments halve optimizer HBM (update math stays fp32);
+    # standard practice for ≥100B models on 16 GB/chip parts.
+    moments_dtype: str = "float32"   # "float32" | "bfloat16"
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, 0.1 + 0.9 * cos)
+
+
+def init(params: Any, moments_dtype=jnp.float32) -> AdamWState:
+    dt = jnp.dtype(moments_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def _decay_mask(params: Any) -> Any:
+    """No weight decay on norms/biases/scalars (ndim < 2)."""
+    return jax.tree.map(lambda p: jnp.asarray(1.0 if p.ndim >= 2 else 0.0,
+                                              jnp.float32), params)
+
+
+def apply(cfg: AdamWConfig, params: Any, grads: Any,
+          state: AdamWState) -> Tuple[Any, AdamWState]:
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)) + 1e-12)
+    scale = jnp.minimum(1.0, cfg.grad_clip / gnorm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.beta2 ** step.astype(jnp.float32)
+    mask = _decay_mask(params)
+
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    def upd(p, g, m, v, wd):
+        gf = g.astype(jnp.float32) * scale
+        m = cfg.beta1 * m.astype(jnp.float32) + (1 - cfg.beta1) * gf
+        v = cfg.beta2 * v.astype(jnp.float32) + (1 - cfg.beta2) * gf * gf
+        mh, vh = m / b1c, v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) \
+            + cfg.weight_decay * wd * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(mdt), v.astype(mdt))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_w = jax.tree.leaves(mask)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w):
+        np_, nm, nv = upd(p, g, m, v, w)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return (jax.tree.unflatten(treedef, new_p),
+            AdamWState(step, jax.tree.unflatten(treedef, new_m),
+                       jax.tree.unflatten(treedef, new_v)))

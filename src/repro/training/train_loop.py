@@ -1,0 +1,84 @@
+"""Training loop: jit'd train_step (grad + AdamW) and a driver.
+
+``make_train_step`` returns the pure step function the launch layer
+lowers for the train_4k dry-run (with shardings) and the smoke tests run
+eagerly on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.training import checkpoint as ckpt_lib
+from repro.training import optimizer as opt_lib
+from repro.training.data import DataConfig, SyntheticTokenStream
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: opt_lib.AdamWConfig
+                    ) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            extra = {k: v for k, v in batch.items()
+                     if k not in ("tokens", "labels")}
+            return transformer.train_forward(p, cfg, batch["tokens"],
+                                             batch["labels"], **extra)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt_lib.apply(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    steps: int
+    tokens_seen: int
+    elapsed_s: float
+
+
+def train(cfg: ArchConfig, steps: int, batch: int, seq: int,
+          opt_cfg: Optional[opt_lib.AdamWConfig] = None,
+          seed: int = 0, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 0, log_every: int = 10,
+          verbose: bool = False) -> TrainResult:
+    """Single-host training driver (smoke scale on CPU)."""
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig(total_steps=steps,
+                                             warmup_steps=max(steps // 20, 5))
+    params = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt_lib.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    stream = SyntheticTokenStream(DataConfig(cfg.vocab, seq, batch, seed))
+
+    extra = {}
+    if cfg.is_encdec:
+        extra["encoder_frames"] = jnp.zeros(
+            (batch, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.num_image_tokens:
+        extra["image_embeds"] = jnp.zeros(
+            (batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(steps):
+        np_batch = stream.batch(step)
+        jb = {k: jnp.asarray(v) for k, v in np_batch.items()}
+        jb.update(extra)
+        params, opt_state, metrics = step_fn(params, opt_state, jb)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if verbose and step % log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f}")
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            ckpt_lib.save(ckpt_dir, step + 1, params, opt_state)
+    return TrainResult(losses, steps, steps * batch * seq,
+                       time.perf_counter() - t0)

@@ -1,0 +1,6 @@
+# Tests run on the single real CPU device. Do NOT set
+# xla_force_host_platform_device_count here — only the dry-run process
+# uses 512 placeholder devices.
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

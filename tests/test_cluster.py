@@ -1,0 +1,45 @@
+"""Cluster specs: construction invariants, paper settings, link tiers."""
+import numpy as np
+import pytest
+
+from repro.core.cluster import (GPU_TYPES, LINK_ETH_SLOW, PAPER_SETTINGS,
+                                build_cluster)
+
+
+def test_build_cluster_shapes_and_symmetry():
+    cl = build_cluster([("H100", 2), ("A6000", 3)])
+    assert cl.num_devices == 5
+    assert cl.bandwidth.shape == (5, 5)
+    assert np.allclose(cl.bandwidth, cl.bandwidth.T)
+    assert np.all(np.diag(cl.bandwidth) == 0)
+    assert np.all(cl.bandwidth[~np.eye(5, dtype=bool)] > 0)
+
+
+def test_intra_node_faster_than_inter_node():
+    cl = build_cluster([("A100", 2), ("A100", 2)])
+    intra = cl.bandwidth[0, 1]   # same node (NVLink)
+    inter = cl.bandwidth[0, 2]   # across nodes
+    assert intra > inter
+
+
+def test_slow_pairs_apply_cross_dc_tier():
+    cl = build_cluster([("L40", 2), ("L40", 2)], slow_pairs=[(0, 1)])
+    assert cl.bandwidth[0, 2] == pytest.approx(LINK_ETH_SLOW[0])
+
+
+@pytest.mark.parametrize("name", list(PAPER_SETTINGS))
+def test_paper_settings_construct(name):
+    cl = PAPER_SETTINGS[name]()
+    assert cl.num_devices >= 4
+    assert cl.price_per_hour > 0
+    # budgets in the rough neighbourhood of Figure 4's captions
+    if name == "homogeneous":
+        assert 25 < cl.price_per_hour < 32
+    if name == "hetero5":
+        assert cl.price_per_hour < 25  # the 70%-budget setting
+
+
+def test_gpu_type_ordering():
+    assert GPU_TYPES["H100"].flops > GPU_TYPES["A100"].flops > \
+        GPU_TYPES["L40"].flops > GPU_TYPES["A6000"].flops
+    assert GPU_TYPES["H100"].hbm_bandwidth > GPU_TYPES["A6000"].hbm_bandwidth

@@ -1,0 +1,115 @@
+"""Table-1 cost model: units, monotonicity, memory feasibility."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HPHD, HPLD, LLAMA2_70B, LPHD, OPT_30B, ModelProfile,
+                        decode_capacity, decode_latency, kv_transfer_time,
+                        make_plan, max_decode_batch, plan_fits_memory,
+                        prefill_capacity, prefill_latency)
+from repro.core.cluster import (build_cluster, heterogeneous_setting_1,
+                                homogeneous_setting)
+
+
+@pytest.fixture(scope="module")
+def homog():
+    return homogeneous_setting()
+
+
+@pytest.fixture(scope="module")
+def hetero():
+    return heterogeneous_setting_1()
+
+
+def _plan(cluster, devices, profile, pp=1):
+    n = len(devices)
+    per = n // pp
+    stages = [devices[i * per:(i + 1) * per] for i in range(pp)]
+    return make_plan(stages, profile.num_layers, cluster)
+
+
+def test_prefill_latency_scales_with_seq(homog):
+    plan = _plan(homog, list(range(4)), LLAMA2_70B)
+    l1 = prefill_latency(homog, LLAMA2_70B, plan, 1, 256)
+    l2 = prefill_latency(homog, LLAMA2_70B, plan, 1, 1024)
+    assert l2 > l1 * 3.5  # superlinear (attention) but roughly ~4x
+
+
+def test_tp_reduces_prefill_latency(homog):
+    p2 = _plan(homog, list(range(2)), LLAMA2_70B)
+    p8 = _plan(homog, list(range(8)), LLAMA2_70B)
+    assert prefill_latency(homog, LLAMA2_70B, p8, 1, 1024) < \
+        prefill_latency(homog, LLAMA2_70B, p2, 1, 1024)
+
+
+def test_decode_latency_increases_with_batch_but_sublinear(homog):
+    plan = _plan(homog, list(range(8)), LLAMA2_70B)
+    l1 = decode_latency(homog, LLAMA2_70B, plan, 1, 512, 128)
+    l32 = decode_latency(homog, LLAMA2_70B, plan, 32, 512, 128)
+    assert l32 > l1
+    assert l32 < 32 * l1  # batching amortizes the weight scan
+
+
+def test_memory_limit_enforced(homog):
+    one = _plan(homog, [0], LLAMA2_70B)  # 140GB model on one 80GB GPU
+    assert not plan_fits_memory(homog, LLAMA2_70B, one, 1, 1024)
+    eight = _plan(homog, list(range(8)), LLAMA2_70B)
+    assert plan_fits_memory(homog, LLAMA2_70B, eight, 1, 1024)
+
+
+def test_max_decode_batch_monotone_in_devices(homog):
+    p4 = _plan(homog, list(range(4)), OPT_30B)
+    p8 = _plan(homog, list(range(8)), OPT_30B)
+    assert max_decode_batch(homog, OPT_30B, p8, 1024) >= \
+        max_decode_batch(homog, OPT_30B, p4, 1024)
+
+
+def test_kv_transfer_scales_with_seq(homog):
+    src = _plan(homog, [0, 1], LLAMA2_70B)
+    dst = _plan(homog, [2, 3], LLAMA2_70B)
+    t1 = kv_transfer_time(homog, LLAMA2_70B, src, dst, 1, 256)
+    t2 = kv_transfer_time(homog, LLAMA2_70B, src, dst, 1, 2048)
+    assert t2 > t1 * 4
+
+
+def test_ssm_profile_has_constant_kv():
+    ssm = ModelProfile.ssm("ssm", 24, 2048, 50000, state_bytes_layer=1e6)
+    assert ssm.kv_bytes_per_request(100) == ssm.kv_bytes_per_request(100000)
+
+
+def test_gqa_reduces_kv_volume():
+    mha = ModelProfile.dense("mha", 32, 4096, 11008, 32, 32, 32000)
+    gqa = ModelProfile.dense("gqa", 32, 4096, 11008, 32, 8, 32000)
+    assert gqa.kv_bytes_per_request(1024) == \
+        pytest.approx(mha.kv_bytes_per_request(1024) / 4)
+
+
+def test_heterogeneous_slowest_dominates():
+    # a stage mixing H100 with A6000 (same node, PCIe) is as slow as an
+    # A6000-only stage at the same TP degree: the slowest member gates
+    cl = build_cluster([("H100", 2)], name="h")
+    cl2 = build_cluster([("A6000", 2)], name="a")
+    import numpy as np
+    from repro.core.cluster import ClusterSpec, Device, GPU_TYPES, LINK_PCIE
+    devs = [Device(0, GPU_TYPES["H100"], 0), Device(1, GPU_TYPES["A6000"], 0),
+            Device(2, GPU_TYPES["A6000"], 0), Device(3, GPU_TYPES["A6000"], 0)]
+    bw = np.full((4, 4), LINK_PCIE[0]); np.fill_diagonal(bw, 0)
+    lat = np.full((4, 4), LINK_PCIE[1]); np.fill_diagonal(lat, 0)
+    mix = ClusterSpec(devs, bw, lat, name="mixed")
+    mixed = _plan(mix, [0, 1], OPT_30B)       # H100 + A6000
+    slow = _plan(mix, [2, 3], OPT_30B)        # A6000 + A6000
+    lm = prefill_latency(mix, OPT_30B, mixed, 1, 512)
+    ls = prefill_latency(mix, OPT_30B, slow, 1, 512)
+    assert lm == pytest.approx(ls, rel=0.05)  # same links, slowest gates
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(128, 2048), st.integers(16, 256))
+def test_capacities_positive_and_finite(s_in, s_out):
+    from repro.core.cost_model import Workload
+    cl = homogeneous_setting()
+    plan = _plan(cl, list(range(8)), OPT_30B)
+    wl = Workload("w", s_in=s_in, s_out=s_out)
+    pc = prefill_capacity(cl, OPT_30B, plan, wl, 600.0)
+    dc = decode_capacity(cl, OPT_30B, plan, wl, 600.0)
+    assert 0 < pc < 1e9 and 0 <= dc < 1e9

@@ -1,0 +1,83 @@
+"""Preflow-push max-flow vs the networkx oracle (+ hypothesis graphs)."""
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.maxflow import FlowNetwork
+
+
+def _to_nx(net: FlowNetwork) -> nx.DiGraph:
+    g = nx.DiGraph()
+    for (u, v), c in net.capacity.items():
+        if c > 0:
+            g.add_edge(u, v, capacity=c)
+    return g
+
+
+def test_simple_diamond():
+    net = FlowNetwork()
+    net.add_edge("s", "a", 3.0)
+    net.add_edge("s", "b", 2.0)
+    net.add_edge("a", "t", 2.0)
+    net.add_edge("b", "t", 3.0)
+    net.add_edge("a", "b", 1.0)
+    res = net.preflow_push("s", "t")
+    assert res.max_flow == pytest.approx(5.0)
+
+
+def test_bottleneck_path():
+    net = FlowNetwork()
+    net.add_edge("s", "a", 10.0)
+    net.add_edge("a", "b", 1.5)
+    net.add_edge("b", "t", 10.0)
+    res = net.preflow_push("s", "t")
+    assert res.max_flow == pytest.approx(1.5)
+    assert res.edge_flow("a", "b") == pytest.approx(1.5)
+
+
+def test_disconnected():
+    net = FlowNetwork()
+    net.add_edge("s", "a", 1.0)
+    net.add_edge("b", "t", 1.0)
+    assert net.preflow_push("s", "t").max_flow == 0.0
+
+
+def test_flow_conservation_and_capacity():
+    rng = np.random.default_rng(0)
+    net = FlowNetwork()
+    nodes = list(range(8))
+    for _ in range(20):
+        u, v = rng.choice(nodes, 2, replace=False)
+        net.add_edge(int(u), int(v), float(rng.integers(1, 10)))
+    net.add_edge("s", 0, 15.0)
+    net.add_edge(7, "t", 15.0)
+    res = net.preflow_push("s", "t")
+    # capacity constraints
+    for (u, v), f in res.flow.items():
+        assert f <= net.capacity[(u, v)] + 1e-6
+    # conservation at internal nodes
+    for n in nodes:
+        inflow = sum(f for (u, v), f in res.flow.items() if v == n)
+        outflow = sum(f for (u, v), f in res.flow.items() if u == n)
+        assert inflow == pytest.approx(outflow, abs=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 7), st.integers(1, 20), st.integers(0, 10_000))
+def test_matches_networkx(n_nodes, n_edges, seed):
+    rng = np.random.default_rng(seed)
+    net = FlowNetwork()
+    net.add_edge("s", 0, float(rng.integers(1, 20)))
+    net.add_edge(n_nodes - 1, "t", float(rng.integers(1, 20)))
+    for _ in range(n_edges):
+        u = int(rng.integers(n_nodes))
+        v = int(rng.integers(n_nodes))
+        if u == v:
+            continue
+        net.add_edge(u, v, float(rng.integers(1, 20)))
+    ours = net.preflow_push("s", "t").max_flow
+    g = _to_nx(net)
+    theirs = nx.maximum_flow_value(g, "s", "t",
+                                   flow_func=nx.algorithms.flow.preflow_push)
+    assert ours == pytest.approx(theirs, rel=1e-9, abs=1e-9)

@@ -1,0 +1,100 @@
+"""Graph-partition phase: spectral + KL invariants (property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LLAMA2_70B, OPT_30B
+from repro.core.cluster import (PAPER_SETTINGS, heterogeneous_setting_1,
+                                homogeneous_setting)
+from repro.core.partition import (GroupPartition, coarsen, initial_partition,
+                                  kernighan_lin, num_groups,
+                                  secondary_partition, spectral_partition)
+
+
+def _cut(weights, labels):
+    n = weights.shape[0]
+    return sum(weights[i, j] for i in range(n) for j in range(i + 1, n)
+               if labels[i] != labels[j])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 12), st.integers(2, 4), st.integers(0, 10_000))
+def test_spectral_partition_covers_all(n, k, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.random((n, n))
+    w = (w + w.T) / 2
+    np.fill_diagonal(w, 0)
+    labels = spectral_partition(w, k)
+    assert len(labels) == n
+    assert set(labels) <= set(range(k))
+
+
+def test_spectral_finds_obvious_clusters():
+    # two cliques connected by a weak bridge
+    w = np.zeros((8, 8))
+    for grp in ([0, 1, 2, 3], [4, 5, 6, 7]):
+        for i in grp:
+            for j in grp:
+                if i != j:
+                    w[i, j] = 10.0
+    w[3, 4] = w[4, 3] = 0.1
+    labels = spectral_partition(w, 2, np.ones(8))
+    assert len({labels[i] for i in [0, 1, 2, 3]}) == 1
+    assert len({labels[i] for i in [4, 5, 6, 7]}) == 1
+    assert labels[0] != labels[7]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(6, 10), st.integers(0, 10_000))
+def test_kl_never_worsens_cut(n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.random((n, n))
+    w = (w + w.T) / 2
+    np.fill_diagonal(w, 0)
+    labels = [i % 2 for i in range(n)]
+    nw = np.ones(n)
+    refined = kernighan_lin(w, labels, nw)
+    assert _cut(w, refined) <= _cut(w, labels) + 1e-9
+
+
+def test_kl_maximize_raises_cut():
+    rng = np.random.default_rng(1)
+    w = rng.random((8, 8))
+    w = (w + w.T) / 2
+    np.fill_diagonal(w, 0)
+    labels = [i % 2 for i in range(8)]
+    refined = kernighan_lin(w, labels, np.ones(8), maximize=True)
+    assert _cut(w, refined) >= _cut(w, labels) - 1e-9
+
+
+def test_coarsen_sums_cross_weights():
+    w = np.arange(16, dtype=float).reshape(4, 4)
+    w = (w + w.T) / 2
+    np.fill_diagonal(w, 0)
+    groups = [[0, 1], [2, 3]]
+    c = coarsen(w, groups)
+    assert c[0, 1] == pytest.approx(w[0, 2] + w[0, 3] + w[1, 2] + w[1, 3])
+
+
+def test_secondary_partition_has_both_types():
+    cw = np.ones((4, 4)) - np.eye(4)
+    cap = np.array([4.0, 3.0, 2.0, 1.0])
+    is_prefill = secondary_partition(cw, cap)
+    assert any(is_prefill) and not all(is_prefill)
+
+
+@pytest.mark.parametrize("setting", list(PAPER_SETTINGS))
+@pytest.mark.parametrize("profile", [OPT_30B, LLAMA2_70B])
+def test_initial_partition_valid_on_paper_settings(setting, profile):
+    cluster = PAPER_SETTINGS[setting]()
+    if profile is LLAMA2_70B and cluster.total_memory < 300e9:
+        pytest.skip("cluster too small for 70B")
+    part = initial_partition(cluster, profile)
+    part.validate(cluster.num_devices)  # covers all devices, both types
+    # groups respect the memory-based count heuristic loosely
+    assert 2 <= part.num_groups <= cluster.num_devices
+
+
+def test_num_groups_shrinks_with_model_size():
+    cl = heterogeneous_setting_1()
+    assert num_groups(cl, LLAMA2_70B) <= num_groups(cl, OPT_30B)

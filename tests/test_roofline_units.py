@@ -1,0 +1,49 @@
+"""Roofline report arithmetic and dry-run report integrity."""
+import json
+import os
+
+import pytest
+
+from repro.roofline import RooflineReport, hw
+
+REPORT = os.path.join(os.path.dirname(__file__), "..", "reports",
+                      "dryrun_report.json")
+
+
+def _rep(**kw):
+    base = dict(arch="a", shape="s", mesh="16x16", chips=256,
+                hlo_flops=197e12, hlo_bytes=819e9, coll_bytes=50e9,
+                coll_breakdown={}, model_flops=197e12 * 256)
+    base.update(kw)
+    return RooflineReport(**base)
+
+
+def test_terms_unit_consistency():
+    r = _rep()
+    assert r.t_compute == pytest.approx(1.0)     # one second of peak compute
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.t_collective == pytest.approx(1.0)
+    # model_flops = hlo_flops × chips ⇒ all compiled compute is useful
+    assert r.useful_flops_ratio == pytest.approx(1.0)
+
+
+def test_bottleneck_selection():
+    assert _rep(hlo_bytes=819e9 * 10).bottleneck == "memory"
+    assert _rep(coll_bytes=50e9 * 10).bottleneck == "collective"
+    assert _rep(hlo_flops=197e12 * 10).bottleneck == "compute"
+
+
+@pytest.mark.skipif(not os.path.exists(REPORT),
+                    reason="dry-run report not generated yet")
+def test_dryrun_report_complete_and_green():
+    with open(REPORT) as f:
+        records = json.load(f)
+    ok = [r for r in records if r.get("status") == "ok"]
+    assert len(ok) == 80, f"expected 80 ok records, got {len(ok)}"
+    combos = {(r["arch"], r["shape"], r["mesh"]) for r in ok}
+    assert len(combos) == 80
+    for r in ok:
+        assert r["t_compute_s"] >= 0
+        assert r["t_memory_s"] > 0
+        assert r["bottleneck"] in ("compute", "memory", "collective")
+        assert 0 <= r["useful_flops_ratio"] <= 1.5

@@ -1,0 +1,113 @@
+"""End-to-end scheduling: two-phase + refinement + baselines."""
+import numpy as np
+import pytest
+
+from repro.core import (HPHD, HPLD, LPHD, LPLD, LLAMA2_70B, OPT_30B,
+                        colocated_throughput, distserve_schedule,
+                        genetic_schedule, schedule, solve_flow)
+from repro.core.cluster import (heterogeneous_setting_1, homogeneous_setting)
+from repro.core.partition import initial_partition
+
+
+@pytest.fixture(scope="module")
+def hetero():
+    return heterogeneous_setting_1()
+
+
+@pytest.fixture(scope="module")
+def homog():
+    return homogeneous_setting()
+
+
+@pytest.fixture(scope="module")
+def sched(hetero):
+    return schedule(hetero, LLAMA2_70B, HPHD, max_refine_iters=8)
+
+
+def test_schedule_produces_feasible_placement(sched, hetero):
+    p = sched.placement
+    assert p.max_flow > 0
+    assert p.prefill_replicas() and p.decode_replicas()
+    devices = sorted(d for r in p.replicas for d in r.devices)
+    assert devices == list(range(hetero.num_devices))
+    for r in p.replicas:
+        if r.plan is not None:
+            assert sorted(r.plan.devices) == sorted(r.devices)
+
+
+def test_flow_routes_consistent_with_capacities(sched):
+    p = sched.placement
+    for (src, dst), f in p.kv_routes.items():
+        assert f >= -1e-9
+        assert p.replica_by_group(src).is_prefill
+        assert not p.replica_by_group(dst).is_prefill
+    # total routed flow equals max flow
+    assert sum(p.kv_routes.values()) == pytest.approx(p.max_flow, rel=1e-6)
+
+
+def test_refinement_never_decreases_flow(sched):
+    flows = [t.max_flow for t in sched.trace]
+    assert all(b >= a - 1e-9 for a, b in zip(flows, flows[1:]))
+
+
+def test_flow_bounded_by_replica_capacity(hetero):
+    part = initial_partition(hetero, LLAMA2_70B)
+    res = solve_flow(hetero, LLAMA2_70B, part, HPHD)
+    p = res.placement
+    pref_cap = sum(r.capacity for r in p.prefill_replicas())
+    dec_cap = sum(r.capacity for r in p.decode_replicas())
+    assert p.max_flow <= min(pref_cap, dec_cap) + 1e-6
+
+
+def test_guided_beats_or_matches_genetic(hetero):
+    ours = schedule(hetero, LLAMA2_70B, LPHD, max_refine_iters=8, seed=0)
+    ga = genetic_schedule(hetero, LLAMA2_70B, LPHD, population=6,
+                          generations=6, seed=0)
+    assert ours.placement.max_flow >= 0.8 * ga.placement.max_flow
+
+
+def test_distserve_homogeneous(homog):
+    res = distserve_schedule(homog, OPT_30B, HPLD)
+    assert res.placement.max_flow > 0
+    # uniform shapes: every replica TP degree is a power of two
+    for r in res.placement.replicas:
+        if r.plan:
+            for tp in r.plan.tp_degrees:
+                assert tp in (1, 2, 4, 8)
+
+
+def test_disaggregated_beats_colocated_estimate(hetero):
+    ours = schedule(hetero, LLAMA2_70B, HPHD, max_refine_iters=8)
+    groups = [r.devices for r in ours.placement.replicas]
+    coloc = colocated_throughput(hetero, LLAMA2_70B, HPHD, groups)
+    assert ours.placement.max_flow > coloc * 0.9  # ≥ colocated (usually ≫)
+
+
+def test_workload_shifts_resources(hetero):
+    """LPHD should allocate at least as much decode capacity share as
+    HPLD (paper Appendix E)."""
+    hpld = schedule(hetero, LLAMA2_70B, HPLD, max_refine_iters=8)
+    lphd = schedule(hetero, LLAMA2_70B, LPHD, max_refine_iters=8)
+
+    def decode_share(res):
+        dec = sum(len(r.devices) for r in res.placement.decode_replicas())
+        return dec / hetero.num_devices
+
+    assert decode_share(lphd) >= decode_share(hpld) - 0.15
+
+
+def test_annealed_refinement_returns_best_seen(hetero):
+    """SA acceptance (beyond-paper) may walk downhill but must return the
+    best-seen partition — never worse than greedy's start, and valid."""
+    from repro.core.partition import initial_partition
+    from repro.core.refine import iterative_refinement
+    part = initial_partition(hetero, LLAMA2_70B)
+    g_part, g_res, _ = iterative_refinement(hetero, LLAMA2_70B, part, HPHD,
+                                            max_iters=8, seed=1)
+    a_part, a_res, a_trace = iterative_refinement(
+        hetero, LLAMA2_70B, part, HPHD, max_iters=8, seed=1, anneal=0.05)
+    a_part.validate(hetero.num_devices)
+    # best-seen is monotone vs the initial point
+    assert a_res.placement.max_flow >= a_trace[0].max_flow - 1e-6
+    # and within noise of (or better than) greedy
+    assert a_res.placement.max_flow >= 0.9 * g_res.placement.max_flow

@@ -1,0 +1,129 @@
+"""Serving: disaggregated coordinator == monolithic generation; simulator
+invariants; KV transfer helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import HPHD, LLAMA2_70B, schedule
+from repro.core.cluster import heterogeneous_setting_1
+from repro.models import decode_step, init_params, prefill
+from repro.serving import (Coordinator, ServeRequest, kv_transfer,
+                           offline_workload, online_workload, simulate,
+                           simulate_colocated, slo_baselines)
+
+KEY = jax.random.PRNGKey(11)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    return cfg, init_params(KEY, cfg)
+
+
+def _ref_generate(cfg, params, prompt, n_new, capacity):
+    logits, cache = prefill(params, cfg, jnp.asarray(prompt)[None],
+                            cache_capacity=capacity)
+    toks = [int(jnp.argmax(logits, -1)[0])]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        lg, cache = decode_step(params, cfg, cache,
+                                jnp.array([[toks[-1]]], jnp.int32),
+                                jnp.array([[pos]], jnp.int32))
+        toks.append(int(jnp.argmax(lg, -1)[0]))
+        pos += 1
+    return toks
+
+
+def test_disaggregated_equals_monolithic(small_model):
+    cfg, params = small_model
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+               for _ in range(4)]
+    refs = [_ref_generate(cfg, params, list(p), 4, 32) for p in prompts]
+    coord = Coordinator(cfg, params, num_decode_engines=2,
+                        slots_per_engine=2, capacity=32)
+    outs = coord.serve([ServeRequest(i, prompts[i], 4) for i in range(4)])
+    for i, o in enumerate(outs):
+        assert o.tokens == refs[i], f"req {i}"
+
+
+def test_more_requests_than_slots(small_model):
+    """Continuous batching must recycle slots across waves."""
+    cfg, params = small_model
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+               for _ in range(5)]
+    coord = Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=2, capacity=32)
+    outs = coord.serve([ServeRequest(i, prompts[i], 3) for i in range(5)])
+    assert all(len(o.tokens) == 3 for o in outs)
+    refs = [_ref_generate(cfg, params, list(p), 3, 32) for p in prompts]
+    for i, o in enumerate(outs):
+        assert o.tokens == refs[i]
+
+
+def test_kv_transfer_helpers(small_model):
+    cfg, params = small_model
+    toks = jnp.zeros((2, 4), jnp.int32)
+    _, cache = prefill(params, cfg, toks, cache_capacity=8)
+    one = kv_transfer.slice_request(cache, 1)
+    assert jax.tree.leaves(one)[0].shape[1] == 1
+    grown = kv_transfer.pad_capacity(one, 16)
+    k = grown[0]["k"]
+    assert k.shape[2] == 16
+    assert kv_transfer.transfer_bytes(grown) > 0
+
+
+# ---------------------------------------------------------------------------
+# scheduling-domain simulator
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def placed():
+    cl = heterogeneous_setting_1()
+    res = schedule(cl, LLAMA2_70B, HPHD, max_refine_iters=6)
+    return cl, res.placement
+
+
+def test_simulator_completes_all_requests(placed):
+    cl, placement = placed
+    reqs = offline_workload("HPHD", 60, seed=1)
+    sim = simulate(cl, LLAMA2_70B, placement, reqs)
+    assert all(r.decode_end is not None for r in sim.requests)
+    assert sim.decode_tokens == sum(r.s_out for r in reqs)
+    assert sim.decode_throughput > 0
+    for r in sim.requests:
+        assert r.prefill_end >= r.prefill_start >= r.arrival
+        assert r.transfer_end >= r.prefill_end
+        assert r.decode_end >= r.transfer_end
+
+
+def test_simulator_online_latency_reasonable(placed):
+    cl, placement = placed
+    reqs = online_workload(40, rate_rps=1.0, seed=2)
+    sim = simulate(cl, LLAMA2_70B, placement, reqs)
+    slo = slo_baselines(cl, LLAMA2_70B, placement, reqs)
+    att = sim.slo_attainment(slo, scale=10.0)
+    assert 0.0 <= att <= 1.0
+    assert sim.avg_latency < sim.makespan
+
+
+def test_disaggregated_beats_colocated_in_sim(placed):
+    cl, placement = placed
+    r1 = offline_workload("HPHD", 60, seed=3)
+    r2 = offline_workload("HPHD", 60, seed=3)
+    dis = simulate(cl, LLAMA2_70B, placement, r1)
+    col = simulate_colocated(cl, LLAMA2_70B, placement.replicas, r2)
+    assert dis.decode_throughput > col.decode_throughput * 0.95
+
+
+def test_workload_classes_partition_lengths():
+    for kind, (hp, hd) in {"HPLD": (True, False), "HPHD": (True, True),
+                           "LPHD": (False, True), "LPLD": (False, False)
+                           }.items():
+        reqs = offline_workload(kind, 50, seed=4)
+        assert all(r.is_heavy_prefill == hp for r in reqs), kind
+        assert all(r.is_heavy_decode == hd for r in reqs), kind

@@ -1,0 +1,101 @@
+"""Sharding rules: every spec is divisibility-safe on the production mesh
+shapes for every assigned arch (validated without touching jax devices —
+specs are computed from eval_shape + a fake mesh description)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, INPUT_SHAPES, input_specs
+from repro.launch import sharding as sr
+from repro.models import transformer
+
+
+class FakeMesh:
+    """Duck-typed mesh: shape dict + axis_names (sharding rules only read
+    these; NamedSharding construction is monkeypatched out)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+@pytest.fixture(autouse=True)
+def patch_named_sharding(monkeypatch):
+    import repro.launch.sharding as mod
+
+    def fake(mesh, spec):
+        return ("sharding", tuple(spec))
+
+    monkeypatch.setattr(mod, "NamedSharding", fake)
+    yield
+
+
+MESHES = [FakeMesh({"data": 16, "model": 16}),
+          FakeMesh({"pod": 2, "data": 16, "model": 16})]
+
+
+def _check_spec_divisible(shape, spec_tuple, mesh):
+    spec = spec_tuple[1]
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        assert dim % size == 0, (shape, spec, ax)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("mesh", MESHES, ids=["16x16", "2x16x16"])
+@pytest.mark.parametrize("profile", ["tp", "fsdp_tp"])
+def test_param_shardings_divisible(arch, mesh, profile):
+    cfg = ARCHS[arch]
+    pshape = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    sh = sr.param_shardings(cfg, pshape, mesh, profile)
+    flat_s = jax.tree.leaves(sh, is_leaf=lambda x: isinstance(x, tuple)
+                             and x and x[0] == "sharding")
+    flat_p = jax.tree.leaves(pshape)
+    assert len(flat_s) == len(flat_p)
+    for leaf, spec in zip(flat_p, flat_s):
+        _check_spec_divisible(leaf.shape, spec, mesh)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "jamba-v0.1-52b",
+                                  "xlstm-125m", "whisper-large-v3"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_shardings_divisible(arch, shape_name):
+    from repro.launch.steps import pick_config
+    mesh = MESHES[0]
+    shape = INPUT_SHAPES[shape_name]
+    cfg, _ = pick_config(arch, shape)
+    cshape = transformer.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    sh = sr.cache_shardings(cfg, cshape, mesh, shape.global_batch)
+    flat_s = jax.tree.leaves(sh, is_leaf=lambda x: isinstance(x, tuple)
+                             and x and x[0] == "sharding")
+    flat_c = jax.tree.leaves(cshape)
+    for leaf, spec in zip(flat_c, flat_s):
+        _check_spec_divisible(leaf.shape, spec, mesh)
+
+
+def test_long_500k_uses_context_parallel_cache():
+    """batch=1 decode shards the KV sequence dim instead of batch."""
+    from repro.launch.steps import pick_config
+    mesh = MESHES[0]
+    shape = INPUT_SHAPES["long_500k"]
+    cfg, note = pick_config("yi-34b", shape)
+    assert "sliding-window" in note
+    cshape = transformer.cache_specs(cfg, 1, shape.seq_len)
+    sh = sr.cache_shardings(cfg, cshape, mesh, 1)
+    k_spec = sh[0]["k"][1]
+    assert k_spec[1] is None            # batch unsharded
+    assert k_spec[2] is not None        # seq sharded
+
+
+def test_fsdp_profile_for_train_and_huge_models():
+    from repro.launch.steps import pick_profile
+    mesh = MESHES[0]
+    assert pick_profile(ARCHS["yi-34b"], "train", mesh) == "fsdp_tp"
+    assert pick_profile(ARCHS["llama4-maverick-400b-a17b"], "decode",
+                        mesh) == "fsdp_tp"
+    assert pick_profile(ARCHS["qwen3-1.7b"], "decode", mesh) == "tp"

@@ -1,0 +1,86 @@
+"""Training substrate: optimizer math, data pipeline, checkpointing,
+loss decrease."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import init_params
+from repro.training import checkpoint as ck
+from repro.training import optimizer as opt
+from repro.training import train
+from repro.training.data import DataConfig, SyntheticTokenStream, host_shard
+
+
+def test_schedule_warmup_then_decay():
+    cfg = opt.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(opt.schedule(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[5] < lrs[10]          # warmup ascending
+    assert lrs[99] < lrs[20]                  # decayed
+    assert max(lrs) <= cfg.lr + 1e-9
+
+
+def test_adamw_moves_params_against_gradient():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    grads = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    state = opt.init(params)
+    cfg = opt.AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10)
+    new, state2 = opt.apply(cfg, params, grads, state)
+    assert float(new["w"].mean()) < 1.0       # moved against +grad
+    assert int(state2.step) == 1
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    huge = {"w": jnp.full((4,), 1e9)}
+    state = opt.init(params)
+    cfg = opt.AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10,
+                          grad_clip=1.0)
+    new, _ = opt.apply(cfg, params, huge, state)
+    assert np.isfinite(np.asarray(new["w"])).all()
+
+
+def test_data_stream_deterministic_and_learnable():
+    cfg = DataConfig(vocab=64, seq_len=32, global_batch=4, seed=1)
+    s1 = SyntheticTokenStream(cfg).batch(3)
+    s2 = SyntheticTokenStream(cfg).batch(3)
+    np.testing.assert_array_equal(s1["tokens"], s2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(s1["tokens"][:, 1:], s1["labels"][:, :-1])
+    # injected structure: successor repeats more often than chance
+    toks, labs = s1["tokens"].ravel(), s1["labels"].ravel()
+    stream = SyntheticTokenStream(cfg)
+    follows = (stream._succ[toks] == labs).mean()
+    assert follows > 0.4
+
+
+def test_host_shard_slices_batch():
+    batch = {"tokens": np.arange(32).reshape(8, 4)}
+    sh = host_shard(batch, host_index=1, host_count=2)
+    np.testing.assert_array_equal(sh["tokens"], batch["tokens"][4:8])
+
+
+def test_train_loss_decreases():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    res = train(cfg, steps=25, batch=8, seq=32)
+    first = np.mean(res.losses[:3])
+    last = np.mean(res.losses[-3:])
+    assert last < first * 0.95, (first, last)
+
+
+def test_checkpoint_roundtrip_with_opt_state():
+    cfg = ARCHS["xlstm-125m"].reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = opt.init(params)
+    d = tempfile.mkdtemp()
+    ck.save(d, 7, params, state)
+    assert ck.latest_step(d) == 7
+    p2, s2 = ck.restore(d, 7, params, state)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32))
+    assert int(s2.step) == int(state.step)
