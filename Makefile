@@ -1,0 +1,23 @@
+# One-word entry points for the tier-1 workflow (see README.md).
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench bench-drift lint
+
+# Tier-1 verify: the whole test suite, stop at first failure.
+test:
+	$(PYTHON) -m pytest -x -q
+
+# All paper benchmarks (figures/tables) + the drift-rescheduling one.
+bench:
+	$(PYTHON) -m benchmarks.run
+
+# Just the online-rescheduling benchmark (static vs adaptive placement).
+bench-drift:
+	$(PYTHON) -m benchmarks.run drift
+
+# Byte-compile everything — catches syntax/indentation errors without
+# needing a linter wheel in the image.
+lint:
+	$(PYTHON) -m compileall -q src tests benchmarks examples
+	@echo "lint OK"

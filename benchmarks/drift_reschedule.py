@@ -1,0 +1,99 @@
+"""Online workload-drift rescheduling: static vs adaptive placement.
+
+Beyond-paper benchmark (DESIGN.md §7). The trace starts heavy-prefill
+(HPLD) and drifts to heavy-decode (LPHD) at a rate the HPLD-optimized
+placement cannot sustain. The static run keeps that placement for the
+whole trace; the online run watches the arrival mix with a
+WorkloadMonitor and warm-start-reschedules (phase-3 refinement from the
+current partition) when it drifts, paying the KV-drain cost at each
+placement swap.
+
+Reports decode throughput, SLO attainment (same static-placement SLO
+base for both runs), and the swap log. Online must be >= static on both
+headline metrics — the acceptance check for the rescheduling subsystem.
+
+Run:  PYTHONPATH=src python -m benchmarks.drift_reschedule
+      (or python -m benchmarks.run drift)
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import (LLAMA2_70B, WORKLOADS, WorkloadMonitor, reschedule,
+                        schedule)
+from repro.core.cluster import PAPER_SETTINGS
+from repro.serving import (TracePhase, drifting_workload, simulate,
+                           simulate_online, slo_baselines)
+
+SLO_SCALE = 5.0
+PHASE_B_RATE = 8.0   # req/s: > static HPLD placement's LPHD capacity (~5.5),
+                     # < the rescheduled placement's (~17.6)
+
+
+def _trace(rate_a: float, seed: int):
+    phases = [TracePhase(150.0, rate_a, {"HPLD": 1.0}),
+              TracePhase(450.0, PHASE_B_RATE, {"LPHD": 1.0})]
+    return drifting_workload(phases, seed=seed)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    cl = PAPER_SETTINGS["hetero1"]()
+    wl0 = WORKLOADS["HPLD"]
+    sched0 = schedule(cl, LLAMA2_70B, wl0, max_refine_iters=6)
+    rate_a = 0.6 * sched0.placement.throughput_rps
+
+    # static: the HPLD placement serves the whole drifted trace
+    t0 = time.perf_counter()
+    reqs_s = _trace(rate_a, seed=3)
+    stat = simulate(cl, LLAMA2_70B, sched0.placement, reqs_s)
+    slo_s = slo_baselines(cl, LLAMA2_70B, sched0.placement, reqs_s)
+    att_s = stat.slo_attainment(slo_s, SLO_SCALE)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("drift.static.hetero1", us,
+                 f"thpt={stat.decode_throughput:.0f}tok/s "
+                 f"slo{SLO_SCALE:.0f}x={att_s:.3f} "
+                 f"avg_lat={stat.avg_latency:.1f}s"))
+
+    # online: monitor + warm-start reschedule + mid-trace swap
+    t0 = time.perf_counter()
+    reqs_o = _trace(rate_a, seed=3)
+    monitor = WorkloadMonitor(wl0, window=64, threshold=0.3,
+                              min_observations=32)
+
+    def rescheduler(wl):
+        return reschedule(cl, LLAMA2_70B, sched0, wl,
+                          max_refine_iters=8).placement
+
+    on = simulate_online(cl, LLAMA2_70B, sched0.placement, reqs_o,
+                         monitor=monitor, rescheduler=rescheduler,
+                         min_gap_s=120.0)
+    slo_o = slo_baselines(cl, LLAMA2_70B, sched0.placement, reqs_o)
+    att_o = on.slo_attainment(slo_o, SLO_SCALE)
+    us = (time.perf_counter() - t0) * 1e6
+    swaps = " ".join(f"swap@{ev.time:.0f}s(drain={ev.drain_s:.1f}s,"
+                     f"kv={ev.migrated})" for ev in on.reschedules)
+    rows.append(("drift.online.hetero1", us,
+                 f"thpt={on.decode_throughput:.0f}tok/s "
+                 f"slo{SLO_SCALE:.0f}x={att_o:.3f} "
+                 f"avg_lat={on.avg_latency:.1f}s {swaps}"))
+
+    speedup = on.decode_throughput / max(stat.decode_throughput, 1e-9)
+    ok = (on.decode_throughput >= stat.decode_throughput
+          and att_o >= att_s)
+    rows.append(("drift.online_vs_static", 0.0,
+                 f"thpt_ratio={speedup:.2f}x "
+                 f"slo_delta={att_o - att_s:+.3f} "
+                 f"{'PASS' if ok else 'FAIL'}"))
+    if not ok:
+        raise AssertionError(
+            "online rescheduling must be >= static placement: "
+            f"thpt {on.decode_throughput:.0f} vs {stat.decode_throughput:.0f}"
+            f" tok/s, slo {att_o:.3f} vs {att_s:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -7,7 +7,7 @@ time, roofline terms).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [module ...]
         modules default to all; names: fig6, fig8, fig9, fig10,
-        table3, table4, table5, roofline
+        table3, table4, table5, roofline, drift
 """
 from __future__ import annotations
 
@@ -26,6 +26,7 @@ MODULES = {
     "table4": "benchmarks.table4_homogeneous",
     "table5": "benchmarks.table5_scalability",
     "roofline": "benchmarks.roofline_report",
+    "drift": "benchmarks.drift_reschedule",
 }
 
 

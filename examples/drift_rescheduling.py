@@ -1,0 +1,48 @@
+"""Online rescheduling walkthrough: watch a placement go stale as the
+workload drifts, then adapt with a warm-started reschedule (DESIGN.md §7).
+
+Run:  PYTHONPATH=src python examples/drift_rescheduling.py
+"""
+from repro.core import (LLAMA2_70B, WORKLOADS, WorkloadMonitor, reschedule,
+                        schedule)
+from repro.core.cluster import heterogeneous_setting_1
+from repro.serving import (TracePhase, drifting_workload, simulate,
+                          simulate_online, slo_baselines)
+
+cluster = heterogeneous_setting_1()
+profile = LLAMA2_70B
+wl0 = WORKLOADS["HPLD"]
+
+print("== offline schedule for the initial (heavy-prefill) mix")
+sched0 = schedule(cluster, profile, wl0, max_refine_iters=6)
+print(sched0.placement.describe(cluster), "\n")
+
+phases = [TracePhase(150.0, 0.6 * sched0.placement.throughput_rps,
+                     {"HPLD": 1.0}),
+          TracePhase(450.0, 8.0, {"LPHD": 1.0})]
+print("== trace drifts HPLD -> LPHD at t=150s "
+      f"({phases[0].rate_rps:.1f} -> {phases[1].rate_rps:.1f} req/s)\n")
+
+static = simulate(cluster, profile, sched0.placement,
+                  drifting_workload(phases, seed=3))
+slo = slo_baselines(cluster, profile, sched0.placement, static.requests)
+print(f"static placement : {static.decode_throughput:7.0f} tok/s, "
+      f"slo5x={static.slo_attainment(slo, 5.0):.3f}, "
+      f"avg_lat={static.avg_latency:.1f}s")
+
+monitor = WorkloadMonitor(wl0, window=64, threshold=0.3,
+                          min_observations=32)
+online = simulate_online(
+    cluster, profile, sched0.placement, drifting_workload(phases, seed=3),
+    monitor=monitor,
+    rescheduler=lambda wl: reschedule(cluster, profile, sched0, wl,
+                                      max_refine_iters=8).placement,
+    min_gap_s=120.0)
+slo = slo_baselines(cluster, profile, sched0.placement, online.requests)
+print(f"online reschedule: {online.decode_throughput:7.0f} tok/s, "
+      f"slo5x={online.slo_attainment(slo, 5.0):.3f}, "
+      f"avg_lat={online.avg_latency:.1f}s")
+for ev in online.reschedules:
+    print(f"  swap @ {ev.time:5.0f}s  drain={ev.drain_s:5.2f}s  "
+          f"kv_migrated={ev.migrated:3d}  restarted={ev.restarted:2d}  "
+          f"new_flow={ev.max_flow:.0f}/T")

@@ -23,7 +23,8 @@ from repro.core.partition import (GroupPartition, initial_partition,
                                   spectral_partition)
 from repro.core.placement import Placement, ReplicaPlacement
 from repro.core.refine import RefineTrace, iterative_refinement
-from repro.core.scheduler import ScheduleResult, schedule
+from repro.core.scheduler import (ScheduleResult, WorkloadMonitor,
+                                  reschedule, schedule)
 from repro.core.baselines import (colocated_throughput, distserve_schedule,
                                   genetic_schedule, random_swap_schedule)
 
@@ -37,6 +38,7 @@ __all__ = [
     "FlowResult", "GroupPartition", "initial_partition", "kernighan_lin",
     "num_groups", "spectral_partition", "Placement", "ReplicaPlacement",
     "RefineTrace", "iterative_refinement", "ScheduleResult", "schedule",
+    "WorkloadMonitor", "reschedule",
     "colocated_throughput", "distserve_schedule", "genetic_schedule",
     "random_swap_schedule",
 ]

@@ -391,9 +391,19 @@ def kv_transfer_time(cluster: ClusterSpec, profile: ModelProfile,
         # each of the |src| TP shards sends its KV slice; shards go in
         # parallel over their own best link → divide by min(|src|,|dst|)
         lanes = max(1, min(len(src), len(dst)))
-        best = min(
-            cluster.latency[d, e] + bytes_ / (lanes * cluster.bandwidth[d, e] * NET_EFFICIENCY)
-            for d in src for e in dst)
+        if set(src) == set(dst):
+            # identical stage (migration between overlapping plans): an
+            # HBM copy on every shard, slowest member finishes last
+            best = max(bytes_ / (lanes * cluster.devices[d].gpu.hbm_bandwidth
+                                 * MEMORY_EFFICIENCY) for d in src)
+        else:
+            # a partially-overlapping stage still ships the non-resident
+            # shards over the network, which dominates the local copies —
+            # so same-device pairs don't shortcut the edge
+            best = min(
+                cluster.latency[d, e]
+                + bytes_ / (lanes * cluster.bandwidth[d, e] * NET_EFFICIENCY)
+                for d in src for e in dst if d != e)
         worst = max(worst, best)
     return worst
 

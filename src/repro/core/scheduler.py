@@ -8,10 +8,20 @@
 A small outer sweep over the number of groups K and the initial
 prefill-capacity share seeds refinement from several starts (cheap —
 each start converges in a handful of solve_flow calls).
+
+Online rescheduling (DESIGN.md §7): ``WorkloadMonitor`` watches the
+observed prompt/output length mix against the workload the current
+placement was scheduled for; when it drifts past a threshold,
+``reschedule()`` warm-starts phase-3 refinement from the *current*
+partition under the new workload instead of re-running the full
+two-phase search — a handful of solve_flow calls rather than the K ×
+prefill-share sweep.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import time
 from typing import Callable, List, Optional, Tuple
 
@@ -66,3 +76,93 @@ def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
                            f"for {profile.name} on {cluster.name}")
     best = dataclasses.replace(best, elapsed_s=time.perf_counter() - t0)
     return best
+
+
+# ---------------------------------------------------------------------------
+# Online rescheduling (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+class WorkloadMonitor:
+    """Sliding-window observer of served request lengths.
+
+    Tracks mean prompt (s_in) and output (s_out) token counts over the
+    last ``window`` requests and compares them against the ``baseline``
+    Workload the current placement was scheduled for. Drift is the max
+    absolute log-ratio of the two means vs. the baseline — symmetric in
+    growth/shrink, so a 2x longer prompt and a 2x shorter prompt drift
+    equally. ``drifted()`` fires once ``min_observations`` requests have
+    been seen and drift exceeds ``threshold`` (0.3 ≈ a 35% shift)."""
+
+    def __init__(self, baseline: Workload, window: int = 64,
+                 threshold: float = 0.3, min_observations: int = 32):
+        assert window > 0 and min_observations > 0
+        self.baseline = baseline
+        self.threshold = threshold
+        self.min_observations = min_observations
+        self._s_in: collections.deque = collections.deque(maxlen=window)
+        self._s_out: collections.deque = collections.deque(maxlen=window)
+
+    @property
+    def n(self) -> int:
+        return len(self._s_in)
+
+    def observe(self, s_in: int, s_out: int) -> None:
+        self._s_in.append(max(int(s_in), 1))
+        self._s_out.append(max(int(s_out), 1))
+
+    def drift(self) -> float:
+        """Max |log(observed mean / baseline)| over prompt and output."""
+        if not self._s_in:
+            return 0.0
+        mean_in = sum(self._s_in) / len(self._s_in)
+        mean_out = sum(self._s_out) / len(self._s_out)
+        return max(abs(math.log(mean_in / max(self.baseline.s_in, 1))),
+                   abs(math.log(mean_out / max(self.baseline.s_out, 1))))
+
+    def drifted(self) -> bool:
+        return self.n >= self.min_observations and self.drift() > self.threshold
+
+    def snapshot(self, name: str = "observed") -> Workload:
+        """Current window as a scheduler Workload."""
+        assert self._s_in, "no observations yet"
+        mean_in = int(round(sum(self._s_in) / len(self._s_in)))
+        mean_out = int(round(sum(self._s_out) / len(self._s_out)))
+        return Workload(name, s_in=max(mean_in, 1), s_out=max(mean_out, 1),
+                        prefill_batch=self.baseline.prefill_batch)
+
+    def rebase(self, wl: Workload, clear: bool = True) -> None:
+        """Adopt ``wl`` as the new baseline after a reschedule."""
+        self.baseline = wl
+        if clear:
+            self._s_in.clear()
+            self._s_out.clear()
+
+
+def reschedule(cluster: ClusterSpec, profile: ModelProfile,
+               prev: ScheduleResult, wl: Workload,
+               period: Optional[float] = None,
+               max_refine_iters: int = 12,
+               guided: bool = True,
+               seed: int = 0,
+               on_step: Optional[Callable[[RefineTrace], None]] = None,
+               ) -> ScheduleResult:
+    """Warm-start rescheduling for a drifted workload.
+
+    Re-runs phase 2 (plan search + max-flow) and phase 3 (guided
+    refinement) under the new workload, seeded from the *current*
+    partition instead of the full two-phase K/prefill-share sweep.
+    Refinement never returns worse than its start, so the result is at
+    least the current placement re-planned for ``wl`` — and typically a
+    few device moves / type flips toward the new mix."""
+    t0 = time.perf_counter()
+    if period is None:
+        period = prev.placement.period
+    part = GroupPartition([list(g) for g in prev.partition.groups],
+                          list(prev.partition.is_prefill))
+    rpart, res, trace = iterative_refinement(
+        cluster, profile, part, wl, period,
+        max_iters=max_refine_iters, guided=guided, seed=seed,
+        on_step=on_step)
+    return ScheduleResult(res.placement, rpart, res, trace,
+                          time.perf_counter() - t0)

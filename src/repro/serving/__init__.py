@@ -1,15 +1,19 @@
 """Disaggregated serving: engines (runtime domain), simulator
 (scheduling domain), workload generators, request lifecycle."""
 from repro.serving.request import Phase, Request
-from repro.serving.workload import (offline_workload, online_workload,
-                                    WORKLOAD_DISTS)
-from repro.serving.simulator import (SimResult, simulate, simulate_colocated,
-                                     slo_baselines)
+from repro.serving.workload import (TracePhase, drifting_workload,
+                                    observed_workload, offline_workload,
+                                    online_workload, WORKLOAD_DISTS)
+from repro.serving.simulator import (OnlineSimResult, RescheduleEvent,
+                                     SimResult, simulate, simulate_colocated,
+                                     simulate_online, slo_baselines)
 from repro.serving.engine import DecodeEngine, PrefillEngine, Slot
 from repro.serving.coordinator import Coordinator, ServeRequest, ServeResult
 from repro.serving import kv_transfer
 
-__all__ = ["Phase", "Request", "offline_workload", "online_workload",
-           "WORKLOAD_DISTS", "SimResult", "simulate", "simulate_colocated",
+__all__ = ["Phase", "Request", "TracePhase", "drifting_workload",
+           "observed_workload", "offline_workload", "online_workload",
+           "WORKLOAD_DISTS", "OnlineSimResult", "RescheduleEvent",
+           "SimResult", "simulate", "simulate_colocated", "simulate_online",
            "slo_baselines", "DecodeEngine", "PrefillEngine", "Slot",
            "Coordinator", "ServeRequest", "ServeResult", "kv_transfer"]

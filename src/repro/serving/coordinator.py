@@ -4,7 +4,10 @@ The in-process replacement for HexGen-2's libp2p coordinator
 (DESIGN.md §3): it owns one PrefillEngine and one-or-more DecodeEngines,
 dispatches incoming requests, performs the KV handoff, and runs decode
 continuous batching. Dispatch across decode engines follows the
-scheduler's flow assignment proportions when given one.
+scheduler's flow assignment proportions when given one, and can be
+rebalanced mid-serve from a rescheduled Placement's flow assignment
+(``apply_flow_assignment`` — the runtime-domain half of the online
+rescheduling path, DESIGN.md §7).
 
 This is the runtime-domain path (real JAX execution); the
 scheduling-domain evaluation lives in ``simulator.py``.
@@ -55,6 +58,42 @@ class Coordinator:
         # flow-proportional, load-corrected (same rule as the simulator)
         load = (self._routed + 1) / np.maximum(self._weights, 1e-9)
         return int(np.argmin(load))
+
+    # -- online rebalance (DESIGN.md §7) --------------------------------
+    def update_route_weights(self, weights: Sequence[float],
+                             reset_counts: bool = False) -> None:
+        """Rebalance decode-engine dispatch proportions mid-serve.
+
+        ``reset_counts`` also zeroes the per-engine routed counters so
+        the new proportions take effect immediately instead of first
+        paying down the historical imbalance."""
+        w = np.asarray(list(weights), float)
+        assert len(w) == len(self.decode_engines) and w.sum() > 0
+        self._weights = w / w.sum()
+        if reset_counts:
+            self._routed[:] = 0.0
+
+    def apply_flow_assignment(self, placement: Any,
+                              reset_counts: bool = True) -> np.ndarray:
+        """Adopt a (re)scheduled Placement's flow assignment.
+
+        Sums the kv_route flow into each decode group (sorted by group
+        id) and maps groups onto this coordinator's decode engines in
+        order, folding surplus groups round-robin. Engines with no
+        mapped flow keep an epsilon weight so they stay schedulable.
+        Returns the normalized weights actually installed."""
+        per_group: Dict[int, float] = {}
+        for (_, did), f in placement.kv_routes.items():
+            per_group[did] = per_group.get(did, 0.0) + f
+        gids = sorted(r.group_id for r in placement.decode_replicas())
+        n = len(self.decode_engines)
+        w = np.full(n, 1e-9)
+        for i, gid in enumerate(gids):
+            w[i % n] += per_group.get(gid, 0.0)
+        if w.sum() <= n * 1e-9:   # degenerate flow: fall back to uniform
+            w = np.ones(n)
+        self.update_route_weights(w, reset_counts=reset_counts)
+        return self._weights
 
     def serve(self, requests: List[ServeRequest]) -> List[ServeResult]:
         results = {r.rid: ServeResult(r.rid, []) for r in requests}

@@ -16,12 +16,28 @@ Faithful mechanics:
   * decode replicas run continuous batching in rounds of
     ``chunk_tokens`` steps at the cost model's step latency for the
     current batch size and mean context.
+
+Online rescheduling (DESIGN.md §7): ``simulate_online`` additionally
+feeds every arrival to a ``WorkloadMonitor`` and, when the observed mix
+drifts, asks a rescheduler callback for a new placement and applies it
+mid-trace. The swap is not free:
+
+  * requests queued or mid-prefill restart on the new prefill replicas
+    (prefill is stateless — only queueing time is lost);
+  * requests holding decode-resident KV migrate: each re-ships its KV
+    cache old-plan → new-plan at the cost model's transfer time,
+    serialized per (old replica, new replica) route, and the receiving
+    decode replica is blocked until its last migrated cache lands
+    (the KV-drain cost);
+  * in-flight decode rounds are abandoned — their partial chunk
+    produces nothing (the migrated request keeps its pre-round
+    remaining-token count).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -62,11 +78,28 @@ class SimResult:
         return ok / max(len(self.requests), 1)
 
 
+@dataclasses.dataclass
+class RescheduleEvent:
+    """One mid-trace placement swap (for the drift benchmark's report)."""
+    time: float
+    drain_s: float            # KV-drain window: last migrated cache lands
+    migrated: int             # decode-resident requests whose KV moved
+    restarted: int            # queued / mid-prefill requests restarted
+    max_flow: float           # new placement's solved flow
+
+
+@dataclasses.dataclass
+class OnlineSimResult(SimResult):
+    reschedules: List[RescheduleEvent] = dataclasses.field(
+        default_factory=list)
+
+
 class _PrefillServer:
     def __init__(self, replica: ReplicaPlacement):
         self.replica = replica
         self.queue: List[Request] = []
         self.busy = False
+        self.current: Optional[Request] = None
 
 
 class _DecodeServer:
@@ -74,148 +107,371 @@ class _DecodeServer:
         self.replica = replica
         self.max_batch = max(1, max_batch)
         self.active: List[Tuple[Request, int]] = []   # (req, remaining)
-        self.pending: List[Request] = []
+        self.pending: List[Tuple[Request, int]] = []  # (req, remaining)
         self.in_round = False
+        self.blocked_until = 0.0   # KV-drain: no rounds before this time
 
 
-def simulate(cluster: ClusterSpec, profile: ModelProfile,
-             placement: Placement, requests: List[Request],
-             chunk_tokens: int = 16, seed: int = 0,
-             typical_context: int = 1024) -> SimResult:
-    rng = np.random.default_rng(seed)
-    prefill = {r.group_id: _PrefillServer(r)
-               for r in placement.prefill_replicas() if r.plan is not None}
-    decode = {}
-    for r in placement.decode_replicas():
-        if r.plan is None:
-            continue
-        mb = max_decode_batch(cluster, profile, r.plan, typical_context)
-        decode[r.group_id] = _DecodeServer(r, mb)
-    if not prefill or not decode:
-        return SimResult(requests, float("inf"), 0)
+class _DisaggSim:
+    """The event engine shared by ``simulate`` and ``simulate_online``.
 
-    # flow-proportional dispatch tables
-    pref_weight = {gid: 0.0 for gid in prefill}
-    route_weight: Dict[int, List[Tuple[int, float]]] = {g: [] for g in prefill}
-    for (p, d), f in placement.kv_routes.items():
-        if p in prefill and d in decode:
-            pref_weight[p] += f
-            route_weight[p].append((d, f))
-    # fall back to capacity weights if flow is degenerate
-    if sum(pref_weight.values()) <= 0:
-        for gid, srv in prefill.items():
-            pref_weight[gid] = max(srv.replica.capacity, 1e-9)
-            route_weight[gid] = [(d, decode[d].replica.capacity)
-                                 for d in decode]
-    for gid in prefill:
-        if not route_weight[gid]:
-            route_weight[gid] = [(d, decode[d].replica.capacity)
-                                 for d in decode]
+    Placement-dependent state (server objects, dispatch tables) is
+    rebuilt by ``_install``; events are epoch-tagged so a swap
+    invalidates in-flight prefill/round events without touching the
+    heap."""
 
-    dispatched = {gid: 0.0 for gid in prefill}
-    routed: Dict[Tuple[int, int], float] = {}
-    link_free: Dict[Tuple[int, int], float] = {}
+    def __init__(self, cluster: ClusterSpec, profile: ModelProfile,
+                 placement: Placement, chunk_tokens: int,
+                 typical_context: int):
+        self.cluster = cluster
+        self.profile = profile
+        self.chunk_tokens = chunk_tokens
+        self.typical_context = typical_context
+        self.epoch = 0
+        self.events: List[Tuple[float, int, str, object]] = []
+        self.seq = 0
+        self.decode_tokens = 0
+        self.makespan = 0.0
+        self.reschedules: List[RescheduleEvent] = []
+        # decode replicas per epoch, for re-shipping KV that was
+        # mid-transfer when a swap (possibly several) landed: a stale
+        # transfer resolves its source plan via its own epoch's map
+        self.decode_reps_by_epoch: Dict[int, Dict[int, ReplicaPlacement]] = {}
+        self.migrate_link: Dict[Tuple[int, int], float] = {}
+        self.feasible = self._install(placement)
+        if self.feasible:
+            self._record_epoch_reps()
 
-    events: List[Tuple[float, int, str, object]] = []
-    seq = 0
+    # -- placement installation -----------------------------------------
+    def _install(self, placement: Placement) -> bool:
+        self.placement = placement
+        self.prefill = {r.group_id: _PrefillServer(r)
+                        for r in placement.prefill_replicas()
+                        if r.plan is not None}
+        self.decode = {}
+        for r in placement.decode_replicas():
+            if r.plan is None:
+                continue
+            mb = max_decode_batch(self.cluster, self.profile, r.plan,
+                                  self.typical_context)
+            self.decode[r.group_id] = _DecodeServer(r, mb)
+        if not self.prefill or not self.decode:
+            return False
 
-    def push(t: float, kind: str, payload) -> None:
-        nonlocal seq
-        heapq.heappush(events, (t, seq, kind, payload))
-        seq += 1
+        # flow-proportional dispatch tables
+        self.pref_weight = {gid: 0.0 for gid in self.prefill}
+        self.route_weight: Dict[int, List[Tuple[int, float]]] = {
+            g: [] for g in self.prefill}
+        for (p, d), f in placement.kv_routes.items():
+            if p in self.prefill and d in self.decode:
+                self.pref_weight[p] += f
+                self.route_weight[p].append((d, f))
+        # fall back to capacity weights if flow is degenerate
+        if sum(self.pref_weight.values()) <= 0:
+            for gid, srv in self.prefill.items():
+                self.pref_weight[gid] = max(srv.replica.capacity, 1e-9)
+                self.route_weight[gid] = [(d, self.decode[d].replica.capacity)
+                                          for d in self.decode]
+        for gid in self.prefill:
+            if not self.route_weight[gid]:
+                self.route_weight[gid] = [(d, self.decode[d].replica.capacity)
+                                          for d in self.decode]
+        self.dispatched = {gid: 0.0 for gid in self.prefill}
+        self.routed: Dict[Tuple[int, int], float] = {}
+        self.link_free: Dict[Tuple[int, int], float] = {}
+        return True
 
-    for req in requests:
-        push(req.arrival, "arrival", req)
+    def _record_epoch_reps(self) -> None:
+        self.decode_reps_by_epoch[self.epoch] = {
+            gid: srv.replica for gid, srv in self.decode.items()}
 
-    def pick_prefill() -> int:
+    # -- event plumbing ---------------------------------------------------
+    def push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self.events, (t, self.seq, kind, payload))
+        self.seq += 1
+
+    # -- dispatch rules ---------------------------------------------------
+    def pick_prefill(self) -> int:
         # least normalized load among flow-weighted replicas
-        return min(prefill,
-                   key=lambda g: (dispatched[g] + 1) / max(pref_weight[g], 1e-9))
+        return min(self.prefill,
+                   key=lambda g: (self.dispatched[g] + 1)
+                   / max(self.pref_weight[g], 1e-9))
 
-    def pick_decode(p: int) -> int:
-        opts = route_weight[p]
-        return min(opts, key=lambda df: (routed.get((p, df[0]), 0.0) + 1)
+    def pick_decode(self, p: int) -> int:
+        opts = self.route_weight[p]
+        return min(opts, key=lambda df: (self.routed.get((p, df[0]), 0.0) + 1)
                    / max(df[1], 1e-9))[0]
 
-    def start_prefill(t: float, srv: _PrefillServer) -> None:
+    def any_decode(self) -> int:
+        """Least-loaded decode server (fallback for stale transfers)."""
+        return min(self.decode,
+                   key=lambda g: (len(self.decode[g].active)
+                                  + len(self.decode[g].pending) + 1)
+                   / max(self.decode[g].replica.capacity, 1e-9))
+
+    # -- server actions ---------------------------------------------------
+    def start_prefill(self, t: float, srv: _PrefillServer) -> None:
         if srv.busy or not srv.queue:
             return
         req = srv.queue.pop(0)
         srv.busy = True
+        srv.current = req
         req.phase = Phase.PREFILLING
         req.prefill_start = t
-        lat = prefill_latency(cluster, profile, srv.replica.plan, 1, req.s_in)
-        push(t + lat, "prefill_done", (srv.replica.group_id, req))
+        lat = prefill_latency(self.cluster, self.profile, srv.replica.plan,
+                              1, req.s_in)
+        self.push(t + lat, "prefill_done",
+                  (self.epoch, srv.replica.group_id, req))
 
-    def start_round(t: float, srv: _DecodeServer) -> None:
+    def start_round(self, t: float, srv: _DecodeServer) -> None:
         if srv.in_round:
+            return
+        if t < srv.blocked_until:
+            # KV-drain window: wake up when the last migrated cache lands
+            self.push(srv.blocked_until, "kick",
+                      (self.epoch, srv.replica.group_id))
             return
         free = srv.max_batch - len(srv.active)
         if free > 0 and srv.pending:
-            for req in srv.pending[:free]:
-                srv.active.append((req, req.s_out))
+            for req, rem in srv.pending[:free]:
+                srv.active.append((req, rem))
                 req.phase = Phase.DECODING
             srv.pending = srv.pending[free:]
         if not srv.active:
             return
         srv.in_round = True
         batch = len(srv.active)
-        ctx = int(np.mean([r.s_in + (r.s_out - rem) for r, rem in srv.active]))
-        step = decode_step_latency(cluster, profile, srv.replica.plan,
-                                   batch, max(ctx, 1))
-        push(t + chunk_tokens * step, "round_done",
-             srv.replica.group_id)
+        ctx = int(np.mean([r.s_in + (r.s_out - rem)
+                           for r, rem in srv.active]))
+        step = decode_step_latency(self.cluster, self.profile,
+                                   srv.replica.plan, batch, max(ctx, 1))
+        self.push(t + self.chunk_tokens * step, "round_done",
+                  (self.epoch, srv.replica.group_id))
 
-    decode_tokens = 0
-    makespan = 0.0
-    while events:
-        t, _, kind, payload = heapq.heappop(events)
-        makespan = max(makespan, t)
-        if kind == "arrival":
-            req = payload
-            gid = pick_prefill()
-            dispatched[gid] += 1
-            req.prefill_group = gid
-            prefill[gid].queue.append(req)
-            start_prefill(t, prefill[gid])
-        elif kind == "prefill_done":
-            gid, req = payload
-            srv = prefill[gid]
-            srv.busy = False
-            req.prefill_end = t
-            req.phase = Phase.KV_TRANSFER
-            did = pick_decode(gid)
-            routed[(gid, did)] = routed.get((gid, did), 0.0) + 1
-            req.decode_group = did
-            tt = kv_transfer_time(cluster, profile, srv.replica.plan,
-                                  decode[did].replica.plan, 1, req.s_in)
-            begin = max(t, link_free.get((gid, did), t))
-            link_free[(gid, did)] = begin + tt
-            push(begin + tt, "transfer_done", req)
-            start_prefill(t, srv)
-        elif kind == "transfer_done":
-            req = payload
-            req.transfer_end = t
-            srv = decode[req.decode_group]
-            srv.pending.append(req)
-            start_round(t, srv)
-        elif kind == "round_done":
-            gid = payload
-            srv = decode[gid]
-            srv.in_round = False
-            still = []
+    # -- placement swap ---------------------------------------------------
+    def swap(self, t: float, new_placement: Placement) -> bool:
+        """Apply ``new_placement`` mid-trace. Returns False (and keeps
+        the current placement) if the new one has no usable replicas."""
+        if not (any(r.plan is not None
+                    for r in new_placement.prefill_replicas())
+                and any(r.plan is not None
+                        for r in new_placement.decode_replicas())):
+            return False
+        old_prefill = self.prefill
+        old_decode = self.decode
+
+        # gather in-system work before tearing the tables down
+        restart: List[Request] = []
+        for srv in old_prefill.values():
+            restart.extend(srv.queue)
+            if srv.current is not None:
+                restart.append(srv.current)   # mid-prefill: start over
+        migrate: List[Tuple[Request, int, ReplicaPlacement]] = []
+        for srv in old_decode.values():
             for req, rem in srv.active:
-                produced = min(chunk_tokens, rem)
-                decode_tokens += produced
-                rem -= produced
-                if rem <= 0:
-                    req.decode_end = t
-                    req.phase = Phase.DONE
-                else:
-                    still.append((req, rem))
-            srv.active = still
-            start_round(t, srv)
-    return SimResult(requests, makespan, decode_tokens)
+                migrate.append((req, rem, srv.replica))
+            for req, rem in srv.pending:
+                migrate.append((req, rem, srv.replica))
+
+        self._install(new_placement)
+        self.epoch += 1   # invalidate in-flight prefill_done / round_done
+        self._record_epoch_reps()
+        self.migrate_link = {}
+
+        # KV drain: each decode-resident request re-ships its cache at
+        # the cost model's transfer time, serialized per (old, new) route
+        # (mid-flight transfers that land later share the same ledger)
+        drain_end = t
+        for req, rem, old_rep in migrate:
+            did = self.any_decode()
+            dst = self.decode[did]
+            ctx = req.s_in + (req.s_out - rem)
+            tt = kv_transfer_time(self.cluster, self.profile, old_rep.plan,
+                                  dst.replica.plan, 1, max(ctx, 1))
+            key = (old_rep.group_id, did)
+            begin = max(t, self.migrate_link.get(key, t))
+            self.migrate_link[key] = begin + tt
+            dst.pending.append((req, rem))
+            req.decode_group = did
+            dst.blocked_until = max(dst.blocked_until, begin + tt)
+            drain_end = max(drain_end, begin + tt)
+
+        # queued / mid-prefill requests restart on the new prefill tables
+        for req in sorted(restart, key=lambda r: r.arrival):
+            gid = self.pick_prefill()
+            self.dispatched[gid] += 1
+            req.phase = Phase.QUEUED
+            req.prefill_group = gid
+            self.prefill[gid].queue.append(req)
+        for srv in self.prefill.values():
+            self.start_prefill(t, srv)
+        for srv in self.decode.values():
+            self.start_round(t, srv)
+
+        self.reschedules.append(RescheduleEvent(
+            time=t, drain_s=drain_end - t, migrated=len(migrate),
+            restarted=len(restart), max_flow=new_placement.max_flow))
+        return True
+
+    # -- event handlers ---------------------------------------------------
+    def on_arrival(self, t: float, req: Request) -> None:
+        gid = self.pick_prefill()
+        self.dispatched[gid] += 1
+        req.prefill_group = gid
+        self.prefill[gid].queue.append(req)
+        self.start_prefill(t, self.prefill[gid])
+
+    def on_prefill_done(self, t: float, epoch: int, gid: int,
+                        req: Request) -> None:
+        if epoch != self.epoch:
+            return   # stale: the request was requeued at swap time
+        srv = self.prefill[gid]
+        srv.busy = False
+        srv.current = None
+        req.prefill_end = t
+        req.phase = Phase.KV_TRANSFER
+        did = self.pick_decode(gid)
+        self.routed[(gid, did)] = self.routed.get((gid, did), 0.0) + 1
+        req.decode_group = did
+        tt = kv_transfer_time(self.cluster, self.profile, srv.replica.plan,
+                              self.decode[did].replica.plan, 1, req.s_in)
+        begin = max(t, self.link_free.get((gid, did), t))
+        self.link_free[(gid, did)] = begin + tt
+        self.push(begin + tt, "transfer_done", (self.epoch, req))
+        self.start_prefill(t, srv)
+
+    def on_transfer_done(self, t: float, epoch: int, req: Request) -> None:
+        if epoch != self.epoch or req.decode_group not in self.decode:
+            # the target replica dissolved mid-flight: the cache landed on
+            # the old group's devices, so re-ship it old-plan → new-plan
+            # (serialized per route, like the drain migrations) before it
+            # can be admitted
+            old_rep = self.decode_reps_by_epoch.get(
+                epoch, {}).get(req.decode_group)
+            did = self.any_decode()
+            dst = self.decode[did]
+            if old_rep is not None and old_rep.plan is not None:
+                tt = kv_transfer_time(self.cluster, self.profile,
+                                      old_rep.plan, dst.replica.plan,
+                                      1, req.s_in)
+                key = (old_rep.group_id, did)
+                begin = max(t, self.migrate_link.get(key, t))
+                self.migrate_link[key] = begin + tt
+                req.decode_group = did
+                self.push(begin + tt, "transfer_done", (self.epoch, req))
+                return
+            req.decode_group = did
+        req.transfer_end = t
+        srv = self.decode[req.decode_group]
+        srv.pending.append((req, req.s_out))
+        self.start_round(t, srv)
+
+    def on_round_done(self, t: float, epoch: int, gid: int) -> None:
+        if epoch != self.epoch:
+            return   # abandoned round: its requests migrated at swap time
+        srv = self.decode[gid]
+        srv.in_round = False
+        still = []
+        for req, rem in srv.active:
+            produced = min(self.chunk_tokens, rem)
+            self.decode_tokens += produced
+            rem -= produced
+            if rem <= 0:
+                req.decode_end = t
+                req.phase = Phase.DONE
+            else:
+                still.append((req, rem))
+        srv.active = still
+        self.start_round(t, srv)
+
+    # -- main loop --------------------------------------------------------
+    def run(self, requests: List[Request],
+            on_arrival_hook: Optional[Callable[[float, Request], None]] = None
+            ) -> None:
+        for req in requests:
+            self.push(req.arrival, "arrival", req)
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            self.makespan = max(self.makespan, t)
+            if kind == "arrival":
+                if on_arrival_hook is not None:
+                    on_arrival_hook(t, payload)
+                self.on_arrival(t, payload)
+            elif kind == "prefill_done":
+                epoch, gid, req = payload
+                self.on_prefill_done(t, epoch, gid, req)
+            elif kind == "transfer_done":
+                epoch, req = payload
+                self.on_transfer_done(t, epoch, req)
+            elif kind == "round_done":
+                epoch, gid = payload
+                self.on_round_done(t, epoch, gid)
+            elif kind == "kick":
+                epoch, gid = payload
+                if epoch == self.epoch and gid in self.decode:
+                    self.start_round(t, self.decode[gid])
+
+
+def simulate(cluster: ClusterSpec, profile: ModelProfile,
+             placement: Placement, requests: List[Request],
+             chunk_tokens: int = 16,
+             typical_context: int = 1024) -> SimResult:
+    """Deterministic: dispatch is load-corrected flow-proportional, so
+    the same placement and trace always produce the same result."""
+    sim = _DisaggSim(cluster, profile, placement, chunk_tokens,
+                     typical_context)
+    if not sim.feasible:
+        return SimResult(requests, float("inf"), 0)
+    sim.run(requests)
+    return SimResult(requests, sim.makespan, sim.decode_tokens)
+
+
+def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
+                    placement: Placement, requests: List[Request],
+                    monitor=None,
+                    rescheduler: Optional[Callable] = None,
+                    min_gap_s: float = 0.0,
+                    max_reschedules: int = 4,
+                    chunk_tokens: int = 16,
+                    typical_context: int = 1024) -> OnlineSimResult:
+    """Simulate with online workload-drift rescheduling.
+
+    ``monitor`` is a ``repro.core.scheduler.WorkloadMonitor`` (or any
+    object with observe/drifted/snapshot/rebase); ``rescheduler`` maps a
+    drifted ``Workload`` to a new ``Placement`` (typically a closure
+    over ``repro.core.scheduler.reschedule``). At most
+    ``max_reschedules`` swaps, spaced ``min_gap_s`` apart, are applied;
+    each pays the KV-drain cost described in the module docstring.
+
+    The monitor observes each request's true output length at arrival —
+    an oracle simplification consistent with the rest of the simulator
+    (service times also use true lengths). A production monitor only
+    learns s_out at completion, so real drift detection lags by roughly
+    one mean request latency; treat the benchmark numbers as the
+    detection-lag-free upper bound."""
+    sim = _DisaggSim(cluster, profile, placement, chunk_tokens,
+                     typical_context)
+    if not sim.feasible:
+        return OnlineSimResult(requests, float("inf"), 0, [])
+    state = {"last": -float("inf")}
+
+    def hook(t: float, req: Request) -> None:
+        if monitor is None or rescheduler is None:
+            return
+        monitor.observe(req.s_in, req.s_out)
+        if (len(sim.reschedules) >= max_reschedules
+                or t - state["last"] < min_gap_s
+                or not monitor.drifted()):
+            return
+        new_wl = monitor.snapshot()
+        new_placement = rescheduler(new_wl)
+        state["last"] = t
+        if new_placement is not None and sim.swap(t, new_placement):
+            monitor.rebase(new_wl)
+
+    sim.run(requests, on_arrival_hook=hook)
+    return OnlineSimResult(requests, sim.makespan, sim.decode_tokens,
+                           sim.reschedules)
 
 
 def slo_baselines(cluster: ClusterSpec, profile: ModelProfile,

@@ -1,15 +1,21 @@
-"""Workload generators (paper §5.1).
+"""Workload generators (paper §5.1) and time-varying traces.
 
 Four offline classes from the heavy/light prefill-decode taxonomy
 (heavy prefill > 512 prompt tokens; heavy decode > 128 output tokens),
 sampled with Azure-Conversation-like lognormal length distributions,
 plus an online trace with Poisson arrivals scaled to 75% of cluster
 peak throughput.
+
+``drifting_workload`` produces phased traces whose arrival rate and
+prompt/output mix change over time — the input to the online
+rescheduling path (DESIGN.md §7): a placement optimized for the first
+phase's mix goes stale once the mix drifts, and the WorkloadMonitor /
+``reschedule`` warm-start reacts.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -76,3 +82,72 @@ def mean_lengths(kind: str) -> tuple:
     from repro.core.cost_model import WORKLOADS
     wl = WORKLOADS[kind]
     return wl.s_in, wl.s_out
+
+
+# ---------------------------------------------------------------------------
+# Time-varying traces (workload drift)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TracePhase:
+    """One phase of a time-varying trace: Poisson arrivals at
+    ``rate_rps`` for ``duration_s`` seconds, classes drawn from ``mix``
+    (class name -> probability weight, normalized internally)."""
+    duration_s: float
+    rate_rps: float
+    mix: Dict[str, float]
+
+    def normalized_mix(self) -> Dict[str, float]:
+        total = sum(self.mix.values())
+        assert total > 0, "phase mix must have positive weight"
+        return {k: v / total for k, v in self.mix.items()}
+
+
+def drifting_workload(phases: Sequence[TracePhase],
+                      seed: int = 0) -> List[Request]:
+    """Concatenate ``phases`` into one trace with drifting statistics.
+
+    Arrivals are Poisson within each phase; each request's class is
+    drawn from the phase mix and its lengths from that class's
+    distributions. Phase boundaries are hard (the drift is a step
+    function — the worst case for a static placement)."""
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    t = 0.0
+    rid = 0
+    for phase in phases:
+        end = t + phase.duration_s
+        if phase.rate_rps <= 0.0:   # idle gap
+            t = end
+            continue
+        mix = phase.normalized_mix()
+        names = list(mix)
+        probs = np.array([mix[n] for n in names])
+        while True:
+            t += rng.exponential(1.0 / phase.rate_rps)
+            if t >= end:
+                break
+            kind = names[int(rng.choice(len(names), p=probs))]
+            pd, dd = WORKLOAD_DISTS[kind]
+            reqs.append(Request(rid=rid, s_in=int(pd.sample(rng, 1)[0]),
+                                s_out=int(dd.sample(rng, 1)[0]),
+                                arrival=float(t)))
+            rid += 1
+        t = end
+    return reqs
+
+
+def observed_workload(requests: Sequence[Request],
+                      name: str = "observed",
+                      prefill_batch: int = 1):
+    """Fit a scheduler ``Workload`` to a batch of observed requests
+    (mean prompt/output lengths). The offline counterpart of
+    ``WorkloadMonitor.snapshot`` (which streams the same fit over a
+    sliding window and inherits prefill_batch from its baseline)."""
+    from repro.core.cost_model import Workload
+    assert requests, "cannot fit a workload to zero requests"
+    s_in = int(np.mean([r.s_in for r in requests]))
+    s_out = int(np.mean([r.s_out for r in requests]))
+    return Workload(name, s_in=max(s_in, 1), s_out=max(s_out, 1),
+                    prefill_batch=prefill_batch)

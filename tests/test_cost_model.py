@@ -1,6 +1,7 @@
 """Table-1 cost model: units, monotonicity, memory feasibility."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (HPHD, HPLD, LLAMA2_70B, LPHD, OPT_30B, ModelProfile,

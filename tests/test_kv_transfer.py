@@ -1,0 +1,104 @@
+"""KV handoff helpers: slice_request / pad_capacity / transfer on
+attention caches and on SSM/xLSTM (constant-size state) caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import init_params, prefill
+from repro.serving import kv_transfer
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def attn_cache():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    params = init_params(KEY, cfg)
+    toks = jnp.zeros((3, 6), jnp.int32)
+    _, cache = prefill(params, cfg, toks, cache_capacity=8)
+    return cfg, cache
+
+
+@pytest.fixture(scope="module")
+def ssm_cache():
+    cfg = ARCHS["xlstm-125m"].reduced()
+    params = init_params(KEY, cfg)
+    toks = jnp.zeros((3, 6), jnp.int32)
+    _, cache = prefill(params, cfg, toks, cache_capacity=8)
+    return cfg, cache
+
+
+def test_slice_request_attention(attn_cache):
+    _, cache = attn_cache
+    for i in range(3):
+        one = kv_transfer.slice_request(cache, i)
+        for leaf in jax.tree.leaves(one):
+            if hasattr(leaf, "ndim") and leaf.ndim >= 2:
+                assert leaf.shape[1] == 1  # batch axis collapsed to 1
+
+
+def test_slice_request_values_match(attn_cache):
+    _, cache = attn_cache
+    one = kv_transfer.slice_request(cache, 2)
+    full = jax.tree.leaves(cache)
+    sliced = jax.tree.leaves(one)
+    for f, s in zip(full, sliced):
+        if hasattr(f, "ndim") and f.ndim >= 2:
+            np.testing.assert_array_equal(np.asarray(f[:, 2:3]),
+                                          np.asarray(s))
+
+
+def test_pad_capacity_attention(attn_cache):
+    _, cache = attn_cache
+    one = kv_transfer.slice_request(cache, 0)
+    grown = kv_transfer.pad_capacity(one, 16)
+    k, v = grown[0]["k"], grown[0]["v"]
+    assert k.shape[2] == 16 and v.shape[2] == 16
+    # original prefix preserved, padding zero
+    orig_k = one[0]["k"]
+    np.testing.assert_array_equal(np.asarray(k[:, :, :orig_k.shape[2]]),
+                                  np.asarray(orig_k))
+    assert not np.any(np.asarray(k[:, :, orig_k.shape[2]:]))
+    assert kv_transfer.transfer_bytes(grown) > kv_transfer.transfer_bytes(one)
+
+
+def test_pad_capacity_noop_when_large_enough(attn_cache):
+    _, cache = attn_cache
+    same = kv_transfer.pad_capacity(cache, 8)   # already at capacity 8
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(same)):
+        assert a.shape == b.shape
+
+
+def test_pad_capacity_passes_ssm_state_through(ssm_cache):
+    _, cache = ssm_cache
+    grown = kv_transfer.pad_capacity(cache, 64)
+    # constant-size recurrent state (DESIGN.md §5): no leaf grows
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(grown)):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slice_request_ssm(ssm_cache):
+    _, cache = ssm_cache
+    one = kv_transfer.slice_request(cache, 1)
+    for full, sl in zip(jax.tree.leaves(cache), jax.tree.leaves(one)):
+        if hasattr(full, "ndim") and full.ndim >= 2:
+            assert sl.shape[1] == 1
+            np.testing.assert_array_equal(np.asarray(full[:, 1:2]),
+                                          np.asarray(sl))
+
+
+def test_transfer_identity_without_shardings(attn_cache):
+    _, cache = attn_cache
+    out = kv_transfer.transfer(cache)   # no dst shardings: placement kept
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_transfer_bytes_counts_all_leaves(attn_cache):
+    _, cache = attn_cache
+    total = sum(leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(cache))
+    assert kv_transfer.transfer_bytes(cache) == total

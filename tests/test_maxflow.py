@@ -1,7 +1,9 @@
 """Preflow-push max-flow vs the networkx oracle (+ hypothesis graphs)."""
-import networkx as nx
 import numpy as np
 import pytest
+
+nx = pytest.importorskip("networkx")  # oracle for flow comparisons
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core.maxflow import FlowNetwork

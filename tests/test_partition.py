@@ -1,6 +1,7 @@
 """Graph-partition phase: spectral + KL invariants (property tests)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import LLAMA2_70B, OPT_30B

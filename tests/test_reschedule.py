@@ -1,0 +1,206 @@
+"""Online rescheduling: drift monitor, warm-start refinement, mid-trace
+placement swap in the simulator, coordinator rebalance."""
+import numpy as np
+import pytest
+
+from repro.core import (LLAMA2_70B, WORKLOADS, WorkloadMonitor, reschedule,
+                        schedule, solve_flow)
+from repro.core.cluster import heterogeneous_setting_1
+from repro.serving import (TracePhase, drifting_workload, observed_workload,
+                           simulate, simulate_online)
+
+
+@pytest.fixture(scope="module")
+def hetero():
+    return heterogeneous_setting_1()
+
+
+@pytest.fixture(scope="module")
+def sched_hpld(hetero):
+    return schedule(hetero, LLAMA2_70B, WORKLOADS["HPLD"], max_refine_iters=6)
+
+
+# -- WorkloadMonitor --------------------------------------------------------
+
+
+def test_monitor_no_drift_on_baseline_mix():
+    wl = WORKLOADS["HPLD"]
+    mon = WorkloadMonitor(wl, window=32, threshold=0.3, min_observations=16)
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        mon.observe(int(wl.s_in * rng.uniform(0.9, 1.1)),
+                    int(wl.s_out * rng.uniform(0.9, 1.1)))
+    assert not mon.drifted()
+    assert mon.drift() < 0.3
+
+
+def test_monitor_detects_drift_and_rebases():
+    wl = WORKLOADS["HPLD"]   # s_in=1024, s_out=64
+    mon = WorkloadMonitor(wl, window=32, threshold=0.3, min_observations=16)
+    lphd = WORKLOADS["LPHD"]  # s_in=256, s_out=256
+    for _ in range(32):
+        mon.observe(lphd.s_in, lphd.s_out)
+    assert mon.drifted()
+    snap = mon.snapshot()
+    assert snap.s_in == lphd.s_in and snap.s_out == lphd.s_out
+    mon.rebase(snap)
+    assert mon.n == 0 and not mon.drifted()
+
+
+def test_monitor_needs_min_observations():
+    mon = WorkloadMonitor(WORKLOADS["HPLD"], min_observations=16)
+    for _ in range(8):
+        mon.observe(64, 512)   # wildly drifted, but too few samples
+    assert mon.drift() > 0.3 and not mon.drifted()
+
+
+# -- warm-start reschedule --------------------------------------------------
+
+
+def test_reschedule_warm_start_improves_on_stale_placement(hetero,
+                                                           sched_hpld):
+    new_wl = WORKLOADS["LPHD"]
+    stale = solve_flow(hetero, LLAMA2_70B, sched_hpld.partition, new_wl)
+    res = reschedule(hetero, LLAMA2_70B, sched_hpld, new_wl,
+                     max_refine_iters=8)
+    # refinement starts from the stale partition: never worse, and the
+    # HPLD->LPHD shift leaves enough slack that it should strictly gain
+    assert res.placement.max_flow >= stale.placement.max_flow - 1e-6
+    res.partition.validate(hetero.num_devices)
+    assert res.placement.prefill_replicas() and res.placement.decode_replicas()
+    assert res.trace[0].action == "initial"
+
+
+def test_reschedule_same_workload_is_stable(hetero, sched_hpld):
+    res = reschedule(hetero, LLAMA2_70B, sched_hpld, WORKLOADS["HPLD"],
+                     max_refine_iters=4)
+    assert res.placement.max_flow >= sched_hpld.placement.max_flow * 0.99
+
+
+# -- drifting traces --------------------------------------------------------
+
+
+def test_drifting_workload_phases():
+    phases = [TracePhase(100.0, 2.0, {"HPLD": 1.0}),
+              TracePhase(100.0, 4.0, {"LPHD": 1.0})]
+    reqs = drifting_workload(phases, seed=0)
+    a = [r for r in reqs if r.arrival < 100.0]
+    b = [r for r in reqs if r.arrival >= 100.0]
+    assert a and b
+    assert all(r.arrival < 200.0 for r in reqs)
+    assert all(r.is_heavy_prefill and not r.is_heavy_decode for r in a)
+    assert all(not r.is_heavy_prefill and r.is_heavy_decode for r in b)
+    # rids are unique and ordered by arrival
+    assert [r.rid for r in reqs] == list(range(len(reqs)))
+
+
+def test_observed_workload_fits_means():
+    reqs = drifting_workload([TracePhase(50.0, 4.0, {"LPHD": 1.0})], seed=1)
+    wl = observed_workload(reqs)
+    assert wl.s_in == int(np.mean([r.s_in for r in reqs]))
+    assert wl.s_out == int(np.mean([r.s_out for r in reqs]))
+
+
+# -- simulator swap ---------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def drifted_trace():
+    phases = [TracePhase(100.0, 2.0, {"HPLD": 1.0}),
+              TracePhase(200.0, 6.0, {"LPHD": 1.0})]
+    return phases
+
+
+def test_simulate_online_no_monitor_matches_simulate(hetero, sched_hpld,
+                                                     drifted_trace):
+    r1 = drifting_workload(drifted_trace, seed=5)
+    r2 = drifting_workload(drifted_trace, seed=5)
+    base = simulate(hetero, LLAMA2_70B, sched_hpld.placement, r1)
+    on = simulate_online(hetero, LLAMA2_70B, sched_hpld.placement, r2)
+    assert on.reschedules == []
+    assert on.decode_tokens == base.decode_tokens
+    assert on.makespan == pytest.approx(base.makespan)
+
+
+def test_simulate_online_swap_completes_every_request(hetero, sched_hpld,
+                                                      drifted_trace):
+    reqs = drifting_workload(drifted_trace, seed=5)
+    mon = WorkloadMonitor(WORKLOADS["HPLD"], window=48, threshold=0.3,
+                          min_observations=24)
+
+    def rescheduler(wl):
+        return reschedule(hetero, LLAMA2_70B, sched_hpld, wl,
+                          max_refine_iters=6).placement
+
+    on = simulate_online(hetero, LLAMA2_70B, sched_hpld.placement, reqs,
+                         monitor=mon, rescheduler=rescheduler,
+                         min_gap_s=60.0)
+    assert on.reschedules, "drifted trace must trigger a reschedule"
+    # no token lost or double-counted across the swap
+    assert on.decode_tokens == sum(r.s_out for r in reqs)
+    assert all(r.decode_end is not None for r in on.requests)
+    for ev in on.reschedules:
+        assert ev.drain_s >= 0.0 and ev.max_flow > 0
+
+
+def test_simulate_online_beats_static_under_drift(hetero, sched_hpld,
+                                                  drifted_trace):
+    r1 = drifting_workload(drifted_trace, seed=5)
+    r2 = drifting_workload(drifted_trace, seed=5)
+    stat = simulate(hetero, LLAMA2_70B, sched_hpld.placement, r1)
+    mon = WorkloadMonitor(WORKLOADS["HPLD"], window=48, threshold=0.3,
+                          min_observations=24)
+
+    def rescheduler(wl):
+        return reschedule(hetero, LLAMA2_70B, sched_hpld, wl,
+                          max_refine_iters=6).placement
+
+    on = simulate_online(hetero, LLAMA2_70B, sched_hpld.placement, r2,
+                         monitor=mon, rescheduler=rescheduler,
+                         min_gap_s=60.0)
+    assert on.decode_throughput >= stat.decode_throughput
+
+
+# -- coordinator rebalance --------------------------------------------------
+
+
+def test_coordinator_rebalance_from_flow_assignment(hetero, sched_hpld):
+    import jax
+    from repro.configs import ARCHS
+    from repro.models import init_params
+    from repro.serving import Coordinator
+
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_dec = len(sched_hpld.placement.decode_replicas())
+    coord = Coordinator(cfg, params, num_decode_engines=max(n_dec, 1),
+                        slots_per_engine=2, capacity=32)
+    w = coord.apply_flow_assignment(sched_hpld.placement)
+    assert w.shape == (max(n_dec, 1),)
+    assert w.sum() == pytest.approx(1.0)
+    # weights follow the flow into each decode group
+    per_group = {}
+    for (_, did), f in sched_hpld.placement.kv_routes.items():
+        per_group[did] = per_group.get(did, 0.0) + f
+    flows = [per_group.get(g, 0.0) for g in
+             sorted(r.group_id for r in sched_hpld.placement.decode_replicas())]
+    expect = np.array(flows) / sum(flows)
+    np.testing.assert_allclose(np.asarray(w), expect, atol=1e-6)
+
+
+def test_coordinator_update_route_weights_validates():
+    import jax
+    from repro.configs import ARCHS
+    from repro.models import init_params
+    from repro.serving import Coordinator
+
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    coord = Coordinator(cfg, params, num_decode_engines=2,
+                        slots_per_engine=2, capacity=32)
+    coord._routed[:] = [5.0, 1.0]
+    coord.update_route_weights([3.0, 1.0], reset_counts=True)
+    np.testing.assert_allclose(coord._weights, [0.75, 0.25])
+    assert coord._routed.sum() == 0.0
+    with pytest.raises(AssertionError):
+        coord.update_route_weights([1.0])   # wrong engine count
