@@ -2,19 +2,32 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-drift lint
+.PHONY: test unit serve-smoke bench bench-drift bench-serving lint
 
-# Tier-1 verify: the whole test suite, stop at first failure.
-test:
+# Tier-1 verify: the whole test suite (stop at first failure), then the
+# serving smoke run through the real session API on the reduced arch.
+test: unit serve-smoke
+
+unit:
 	$(PYTHON) -m pytest -x -q
 
-# All paper benchmarks (figures/tables) + the drift-rescheduling one.
+# End-to-end smoke: event-driven ServeSession on the reduced arch with
+# Poisson arrivals + streaming (DESIGN.md §8).
+serve-smoke:
+	$(PYTHON) -m repro.launch.serve --requests 4 --prompt-len 12 \
+		--max-new 6 --decode-engines 2 --rate-rps 8
+
+# All paper benchmarks (figures/tables) + the beyond-paper ones.
 bench:
 	$(PYTHON) -m benchmarks.run
 
 # Just the online-rescheduling benchmark (static vs adaptive placement).
 bench-drift:
 	$(PYTHON) -m benchmarks.run drift
+
+# Prefill/decode interference: legacy inline path vs pipelined session.
+bench-serving:
+	$(PYTHON) -m benchmarks.run serving
 
 # Byte-compile everything — catches syntax/indentation errors without
 # needing a linter wheel in the image.

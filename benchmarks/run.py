@@ -7,7 +7,7 @@ time, roofline terms).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [module ...]
         modules default to all; names: fig6, fig8, fig9, fig10,
-        table3, table4, table5, roofline, drift
+        table3, table4, table5, roofline, drift, serving
 """
 from __future__ import annotations
 
@@ -27,6 +27,7 @@ MODULES = {
     "table5": "benchmarks.table5_scalability",
     "roofline": "benchmarks.roofline_report",
     "drift": "benchmarks.drift_reschedule",
+    "serving": "benchmarks.serving_pipeline",
 }
 
 

@@ -1,9 +1,12 @@
 """End-to-end driver: REAL disaggregated serving with JAX engines.
 
-A prefill engine turns prompts into (first token, KV cache); the cache
-is resharded/transferred to decode engines running continuous batching
-over fixed slots; dispatch is flow-proportional. Output is verified
-token-identical to a monolithic generate loop.
+Uses the event-driven ``ServeSession`` API (DESIGN.md §8): requests are
+submitted non-blocking, prefill runs as bucketed/padded micro-batches,
+the KV cache is resharded/transferred to decode engines running
+continuous batching over fixed slots, and tokens stream back through
+callbacks. Output is verified token-identical to a monolithic generate
+loop and to the legacy blocking ``Coordinator.serve`` wrapper, and the
+run reports the shared runtime/simulator metrics schema.
 
 Run:  PYTHONPATH=src python examples/disaggregated_serving.py \
           [--arch qwen3-1.7b] [--requests 6]
@@ -51,22 +54,40 @@ def main():
     coord = Coordinator(cfg, params, num_decode_engines=2,
                         slots_per_engine=2, capacity=capacity,
                         route_weights=[2.0, 1.0])  # flow-proportional
+
+    # -- session API: submit / step / stream ---------------------------
+    streamed = {i: [] for i in range(args.requests)}
+    sess = coord.session()
     t0 = time.perf_counter()
-    outs = coord.serve([ServeRequest(i, prompts[i], args.max_new)
-                        for i in range(args.requests)])
+    for i in range(args.requests):
+        sess.submit(ServeRequest(i, prompts[i], args.max_new),
+                    on_token=lambda rid, tok, fin: streamed[rid].append(tok))
+    while sess.unfinished:
+        sess.step()     # prefill | KV handoff | decode — non-blocking
     dt = time.perf_counter() - t0
+    outs = sess.results()
 
     ok = 0
     for i, out in enumerate(outs):
         ref = monolithic(cfg, params, list(prompts[i]), args.max_new,
                          capacity)
-        match = out.tokens == ref
+        match = out.tokens == ref and streamed[i] == ref
         ok += match
-        print(f"req {i}: disagg={out.tokens} "
-              f"{'== monolithic' if match else f'!= {ref}'}")
+        print(f"req {i}: session={out.tokens} "
+              f"{'== monolithic == stream' if match else f'!= {ref}'}")
+    m = sess.metrics()
     print(f"\n{ok}/{len(outs)} token-identical; served in {dt:.1f}s "
           f"(incl. jit) across 1 prefill + 2 decode engines")
+    print(f"metrics (shared schema): throughput={m.decode_throughput:.1f}"
+          f"tok/s avg_ttft={m.avg_ttft * 1e3:.0f}ms "
+          f"avg_tpot={m.avg_tpot * 1e3:.0f}ms")
     assert ok == len(outs)
+
+    # -- legacy wrapper: byte-for-byte the session output --------------
+    legacy = coord.serve([ServeRequest(100 + i, prompts[i], args.max_new)
+                          for i in range(args.requests)])
+    assert all(lo.tokens == so.tokens for lo, so in zip(legacy, outs))
+    print("legacy serve() wrapper == session output")
 
 
 if __name__ == "__main__":

@@ -23,12 +23,17 @@ print(result.placement.describe(cluster))
 
 # 3. Serve 100 heavy-prefill/heavy-decode requests through the
 #    event-driven simulator, disaggregated vs colocated baseline.
+#    SimResult reports the shared serving-metrics schema (DESIGN.md §8)
+#    — the runtime Coordinator's ServeSession.metrics() has the same
+#    fields, so simulated and real runs are directly comparable.
 reqs = offline_workload("HPHD", 100, seed=0)
 sim = simulate(cluster, LLAMA2_70B, result.placement, reqs)
 col = simulate_colocated(cluster, LLAMA2_70B, result.placement.replicas,
                          offline_workload("HPHD", 100, seed=0))
 print(f"\nHexGen-2 (disaggregated): {sim.decode_throughput:.0f} tok/s, "
-      f"avg latency {sim.avg_latency:.1f}s")
+      f"avg latency {sim.avg_latency:.1f}s, avg TTFT {sim.avg_ttft:.1f}s, "
+      f"avg TPOT {sim.avg_tpot * 1e3:.0f}ms")
 print(f"HexGen  (colocated)     : {col.decode_throughput:.0f} tok/s, "
-      f"avg latency {col.avg_latency:.1f}s")
+      f"avg latency {col.avg_latency:.1f}s, avg TTFT {col.avg_ttft:.1f}s, "
+      f"avg TPOT {col.avg_tpot * 1e3:.0f}ms")
 print(f"speedup: {sim.decode_throughput / col.decode_throughput:.2f}x")

@@ -107,7 +107,15 @@ class WorkloadMonitor:
     def n(self) -> int:
         return len(self._s_in)
 
-    def observe(self, s_in: int, s_out: int) -> None:
+    def observe(self, s_in, s_out: Optional[int] = None) -> None:
+        """Record one served request.
+
+        Accepts either a lifecycle ``repro.serving.Request`` (the shared
+        serving type, DESIGN.md §8) or raw ``(s_in, s_out)`` token
+        counts."""
+        if s_out is None:
+            req = s_in
+            s_in, s_out = req.s_in, req.s_out
         self._s_in.append(max(int(s_in), 1))
         self._s_out.append(max(int(s_out), 1))
 

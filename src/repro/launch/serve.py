@@ -1,16 +1,24 @@
 """Serving launcher: run the disaggregated runtime on a selectable arch.
 
+Drives the event-driven ``ServeSession`` API (DESIGN.md §8): requests
+are submitted with (optionally Poisson-paced) arrival times, tokens
+stream via callbacks, and the run reports the shared runtime/simulator
+``ServeMetrics`` schema — TTFT/TPOT/throughput directly comparable to
+``repro.serving.simulate`` output.
+
 On CPU this serves the REDUCED variant of the requested architecture
 (the full configs are exercised via the dry-run); on a real TPU mesh the
 same code path serves the full config with the Pallas kernels engaged.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
-        --requests 8 --prompt-len 16 --max-new 12 --decode-engines 2
+        --requests 8 --prompt-len 16 --max-new 12 --decode-engines 2 \
+        [--rate-rps 4.0] [--stream]
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -29,6 +37,12 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--decode-engines", type=int, default=2)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--prefill-batch", type=int, default=4,
+                    help="max prompts per bucketed prefill micro-batch")
+    ap.add_argument("--rate-rps", type=float, default=0.0,
+                    help="Poisson arrival rate; 0 = all at t=0")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each token as it is generated")
     ap.add_argument("--full", action="store_true",
                     help="use the full config (TPU-scale; default reduced)")
     ap.add_argument("--seed", type=int, default=0)
@@ -52,18 +66,46 @@ def main() -> None:
     reqs = [ServeRequest(i, rng.integers(0, cfg.vocab, args.prompt_len)
                          .astype(np.int32), args.max_new, dict(extra))
             for i in range(args.requests)]
+    if args.rate_rps > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate_rps,
+                                             size=args.requests))
+    else:
+        arrivals = np.zeros(args.requests)
 
     capacity = args.prompt_len + args.max_new + 4
     coord = Coordinator(cfg, params, num_decode_engines=args.decode_engines,
                         slots_per_engine=args.slots, capacity=capacity)
+
+    def on_token(rid: int, tok: int, fin: bool) -> None:
+        if args.stream:
+            print(f"  [stream] req {rid}: {tok}{' <done>' if fin else ''}")
+
+    sess = coord.session(max_prefill_batch=args.prefill_batch)
+    pending = collections.deque(
+        (float(arrivals[i]), r) for i, r in enumerate(reqs))
     t0 = time.perf_counter()
-    outs = coord.serve(reqs)
+    # event loop: submit at arrival time, step the pipeline otherwise
+    while pending or sess.unfinished:
+        while pending and pending[0][0] <= sess.now():
+            arr, r = pending.popleft()
+            sess.submit(r, arrival_time=arr, on_token=on_token)
+        if not sess.step():
+            if pending:
+                time.sleep(max(0.0, min(pending[0][0] - sess.now(), 0.005)))
+            elif sess.unfinished:
+                raise RuntimeError("serve stalled with requests in flight")
     dt = time.perf_counter() - t0
+
+    outs = sess.results()
     total = sum(len(o.tokens) for o in outs)
     for o in outs[:4]:
         print(f"  req {o.rid}: {o.tokens}")
+    m = sess.metrics()
     print(f"[serve] {len(outs)} requests, {total} tokens in {dt:.1f}s "
           f"({total / dt:.1f} tok/s incl. compile)")
+    print(f"[serve] metrics: throughput={m.decode_throughput:.1f}tok/s "
+          f"avg_ttft={m.avg_ttft * 1e3:.0f}ms avg_tpot={m.avg_tpot * 1e3:.0f}ms "
+          f"avg_latency={m.avg_latency:.2f}s p99={m.p99_latency:.2f}s")
 
 
 if __name__ == "__main__":

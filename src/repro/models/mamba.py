@@ -63,12 +63,16 @@ def mamba_prefill(params: Dict, x: jax.Array, state: int, conv: int
     xz = x @ params["in_proj"]
     xi, z = jnp.split(xz, 2, axis=-1)                 # [B,S,di]
 
-    # causal depthwise conv over time
+    # causal depthwise conv over time. fp32 taps accumulated in the same
+    # order as mamba_decode so the prefill→decode handoff is drift-free:
+    # a bf16 tap sum here vs a fused contraction there rounds differently
+    # and compounds through the SSM recurrence.
     pad = jnp.zeros((bsz, conv - 1, di), xi.dtype)
     xpad = jnp.concatenate([pad, xi], axis=1)
-    conv_out = sum(
-        xpad[:, i:i + s] * params["conv_w"][i] for i in range(conv))
-    conv_out = jax.nn.silu((conv_out + params["conv_b"]).astype(jnp.float32))
+    xpad32 = xpad.astype(jnp.float32)
+    w32 = params["conv_w"].astype(jnp.float32)
+    conv_out = sum(xpad32[:, i:i + s] * w32[i] for i in range(conv))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
 
     dt, b, c = _ssm_inputs(params, conv_out.astype(x.dtype), state)
     a = -jnp.exp(params["a_log"])                     # [di, N]
@@ -107,8 +111,11 @@ def mamba_decode(params: Dict, x: jax.Array, cache: Dict, state: int,
     xi, z = jnp.split(xz, 2, axis=-1)                 # [B,di]
 
     hist = jnp.concatenate([cache["conv"], xi[:, None]], axis=1)  # [B,conv,di]
-    conv_out = jnp.einsum("bcd,cd->bd", hist, params["conv_w"])
-    conv_out = jax.nn.silu((conv_out + params["conv_b"]).astype(jnp.float32))
+    # fp32 taps, summed in the same order as mamba_prefill (see there)
+    hist32 = hist.astype(jnp.float32)
+    w32 = params["conv_w"].astype(jnp.float32)
+    conv_out = sum(hist32[:, i] * w32[i] for i in range(conv))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
 
     dt, b, c = _ssm_inputs(params, conv_out.astype(x.dtype), state)
     a = -jnp.exp(params["a_log"])

@@ -431,8 +431,14 @@ def _cross_memory(params: Params, cfg: ArchConfig,
 
 def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array,
             cache_capacity: Optional[int] = None,
+            last_index: Optional[jax.Array] = None,
             **extra: jax.Array) -> Tuple[jax.Array, Tuple]:
-    """tokens [B,S] → (last-token logits [B,V], cache pytree)."""
+    """tokens [B,S] → (last-token logits [B,V], cache pytree).
+
+    ``last_index`` [B]: per-row index of the true last prompt token.
+    When prompts are right-padded to a shape bucket (serving), the
+    logits must be read at the true position, not the padded tail —
+    causal masking keeps positions ≤ last_index pad-invariant."""
     b, s = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     x = _embed(params, cfg, tokens, positions)
@@ -440,7 +446,13 @@ def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array,
               cross_embeds=_cross_memory(params, cfg, extra),
               causal=True, cache_capacity=cache_capacity or s)
     x, caches, _ = _stack_prefill(params["blocks"], cfg, x, ctx)
-    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    if last_index is None:
+        x = x[:, -1:]
+    else:
+        idx = jnp.asarray(last_index, jnp.int32).reshape(b, 1, 1)
+        x = jnp.take_along_axis(x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])),
+                                axis=1)
+    x = common.rms_norm(x, params["final_norm"])
     logits = (x @ params["lm_head"])[:, 0]
     return logits, caches
 

@@ -1,6 +1,9 @@
 """Disaggregated serving: engines (runtime domain), simulator
-(scheduling domain), workload generators, request lifecycle."""
-from repro.serving.request import Phase, Request
+(scheduling domain), workload generators, and the shared request
+lifecycle + metrics schema both domains report (DESIGN.md §8)."""
+from repro.serving.request import (IllegalTransition, Phase, Request,
+                                   RequestState, TRANSITIONS)
+from repro.serving.metrics import METRIC_FIELDS, ServeMetrics
 from repro.serving.workload import (TracePhase, drifting_workload,
                                     observed_workload, offline_workload,
                                     online_workload, WORKLOAD_DISTS)
@@ -8,12 +11,15 @@ from repro.serving.simulator import (OnlineSimResult, RescheduleEvent,
                                      SimResult, simulate, simulate_colocated,
                                      simulate_online, slo_baselines)
 from repro.serving.engine import DecodeEngine, PrefillEngine, Slot
-from repro.serving.coordinator import Coordinator, ServeRequest, ServeResult
+from repro.serving.coordinator import (Coordinator, PollStatus, ServeRequest,
+                                       ServeResult, ServeSession)
 from repro.serving import kv_transfer
 
-__all__ = ["Phase", "Request", "TracePhase", "drifting_workload",
-           "observed_workload", "offline_workload", "online_workload",
-           "WORKLOAD_DISTS", "OnlineSimResult", "RescheduleEvent",
-           "SimResult", "simulate", "simulate_colocated", "simulate_online",
-           "slo_baselines", "DecodeEngine", "PrefillEngine", "Slot",
-           "Coordinator", "ServeRequest", "ServeResult", "kv_transfer"]
+__all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
+           "TRANSITIONS", "METRIC_FIELDS", "ServeMetrics", "TracePhase",
+           "drifting_workload", "observed_workload", "offline_workload",
+           "online_workload", "WORKLOAD_DISTS", "OnlineSimResult",
+           "RescheduleEvent", "SimResult", "simulate", "simulate_colocated",
+           "simulate_online", "slo_baselines", "DecodeEngine",
+           "PrefillEngine", "Slot", "Coordinator", "PollStatus",
+           "ServeRequest", "ServeResult", "ServeSession", "kv_transfer"]

@@ -1,27 +1,46 @@
 """Task coordinator: drives disaggregated serving end to end.
 
 The in-process replacement for HexGen-2's libp2p coordinator
-(DESIGN.md §3): it owns one PrefillEngine and one-or-more DecodeEngines,
-dispatches incoming requests, performs the KV handoff, and runs decode
-continuous batching. Dispatch across decode engines follows the
-scheduler's flow assignment proportions when given one, and can be
-rebalanced mid-serve from a rescheduled Placement's flow assignment
-(``apply_flow_assignment`` — the runtime-domain half of the online
-rescheduling path, DESIGN.md §7).
+(DESIGN.md §3): it owns one PrefillEngine and one-or-more DecodeEngines
+and exposes the event-driven request lifecycle (DESIGN.md §8) through
+``ServeSession``:
+
+    sess = coord.session()
+    sess.submit(req, on_token=cb)      # non-blocking, QUEUED
+    while sess.step():                 # prefill | KV handoff | decode —
+        ...                            #   separate stages, one step()
+    sess.metrics()                     # ServeMetrics, same schema as
+                                       #   the simulator's SimResult
+
+``step()`` advances the three pipeline stages independently: a bounded
+bucketed/padded prefill micro-batch (one jit'd call), KV handoffs into
+free decode slots (flow-weighted routing), and one decode step across
+all engines — so a prefill burst can no longer starve in-flight decode
+the way the old blocking ``serve(requests)`` loop did. ``serve()``
+survives as a thin wrapper over a session.
+
+Dispatch across decode engines follows the scheduler's flow assignment
+proportions when given one, and can be rebalanced mid-serve from a
+rescheduled Placement's flow assignment (``apply_flow_assignment`` —
+the runtime-domain half of the online rescheduling path, DESIGN.md §7).
 
 This is the runtime-domain path (real JAX execution); the
 scheduling-domain evaluation lives in ``simulator.py``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import time
+from typing import (Any, Callable, Dict, List, Optional, Sequence)
 
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.serving import kv_transfer
 from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.metrics import ServeMetrics
+from repro.serving.request import Request, RequestState
 
 
 @dataclasses.dataclass
@@ -36,6 +55,226 @@ class ServeRequest:
 class ServeResult:
     rid: int
     tokens: List[int]             # generated tokens (incl. first)
+    lifecycle: Optional[Request] = None   # state + timestamps (§8)
+
+
+@dataclasses.dataclass
+class PollStatus:
+    rid: int
+    state: RequestState
+    tokens: List[int]             # snapshot of tokens streamed so far
+    done: bool
+
+
+#: Streaming callback: (rid, token, finished) — invoked in generation
+#: order, exactly once per produced token.
+TokenCallback = Callable[[int, int, bool], None]
+
+
+@dataclasses.dataclass
+class _Entry:
+    req: ServeRequest
+    life: Request
+    tokens: List[int]
+    on_token: Optional[TokenCallback] = None
+    cache: Any = None             # prefilled KV awaiting handoff
+    first: Optional[int] = None
+
+
+class ServeSession:
+    """One serving run over the coordinator's engines.
+
+    ``submit`` is non-blocking; ``step`` advances the prefill, KV
+    handoff, and decode stages once each and returns whether anything
+    progressed; ``poll``/streaming callbacks expose per-request
+    progress; ``metrics`` reports the shared runtime/simulator schema.
+
+    ``max_prefill_batch`` bounds prefill work per step — the knob that
+    trades first-token latency against decode-step jitter during
+    prefill bursts. ``inline_prefill=True`` reproduces the legacy
+    blocking behaviour (drain the whole prefill queue, one exact-shape
+    call per request, before any decode step) for interference
+    benchmarks; it is not meant for serving.
+    """
+
+    def __init__(self, coord: "Coordinator",
+                 max_prefill_batch: int = 4,
+                 inline_prefill: bool = False,
+                 clock: Optional[Callable[[], float]] = None):
+        self.coord = coord
+        self.max_prefill_batch = max(1, max_prefill_batch)
+        self.inline_prefill = inline_prefill
+        self._clock = clock or time.perf_counter
+        self._t0 = self._clock()
+        self._entries: Dict[int, _Entry] = {}
+        self._order: List[int] = []
+        self._queue: collections.deque = collections.deque()    # QUEUED rids
+        self._handoff: collections.deque = collections.deque()  # KV_TRANSFER
+        self._unfinished = 0
+        self._decode_tokens = 0
+        self._makespan = 0.0
+
+    # -- clock ----------------------------------------------------------
+    def now(self) -> float:
+        return self._clock() - self._t0
+
+    # -- submission -----------------------------------------------------
+    def submit(self, req: ServeRequest, arrival_time: Optional[float] = None,
+               on_token: Optional[TokenCallback] = None) -> int:
+        """Enqueue a request (non-blocking). ``arrival_time`` defaults
+        to the session clock's now; TTFT/latency measure from it."""
+        assert req.rid not in self._entries, f"duplicate rid {req.rid}"
+        arrival = self.now() if arrival_time is None else arrival_time
+        life = Request(rid=req.rid, s_in=len(req.prompt),
+                       s_out=req.max_new_tokens, arrival=arrival)
+        self._entries[req.rid] = _Entry(req=req, life=life, tokens=[],
+                                        on_token=on_token)
+        self._order.append(req.rid)
+        self._queue.append(req.rid)
+        self._unfinished += 1
+        return req.rid
+
+    # -- pipeline stages ------------------------------------------------
+    def _emit(self, e: _Entry, token: int, finished: bool) -> None:
+        e.tokens.append(token)
+        self._decode_tokens += 1
+        if e.on_token is not None:
+            e.on_token(e.req.rid, token, finished)
+
+    def _finish(self, e: _Entry) -> None:
+        e.life.advance(RequestState.DONE, self.now())
+        e.life.tokens_out = len(e.tokens)   # may be < s_out at capacity
+        e.cache = None
+        self._unfinished -= 1
+        self._makespan = max(self._makespan, e.life.decode_end)
+
+    def _step_prefill(self) -> bool:
+        """Run one bounded prefill micro-batch (bucketed/padded, one
+        jit'd call for pure-attention archs). Inline mode drains the
+        whole queue with exact-shape calls — the legacy behaviour.
+
+        The KV-handoff backlog is capped at the fleet's total slot
+        count: each backlog entry holds a full-capacity cache pytree,
+        so prefilling further ahead than decode can admit would grow
+        memory without bound on long queues. Decode keeps draining the
+        backlog, so prefill resumes as slots free up."""
+        if not self._queue:
+            return False
+        if self.inline_prefill:
+            take = len(self._queue)
+        else:
+            total_slots = sum(e.num_slots for e in self.coord.decode_engines)
+            take = min(self.max_prefill_batch, len(self._queue),
+                       total_slots - len(self._handoff))
+            if take <= 0:
+                return False
+        batch = [self._entries[self._queue.popleft()] for _ in range(take)]
+        t = self.now()
+        for e in batch:
+            e.life.advance(RequestState.PREFILLING, t)
+        if self.inline_prefill:
+            # legacy path: one EXACT-shape call per request (no bucket
+            # padding), exactly what the old blocking serve() loop did
+            outs = []
+            for e in batch:
+                tok, cache = self.coord.prefill_engine.prefill(
+                    np.asarray(e.req.prompt, np.int32)[None], **e.req.extra)
+                outs.append((int(tok[0]), cache))
+        else:
+            outs = self.coord.prefill_engine.prefill_batch(
+                [np.asarray(e.req.prompt, np.int32) for e in batch],
+                [e.req.extra for e in batch])
+        t = self.now()
+        for e, (first, cache) in zip(batch, outs):
+            self._emit(e, first, finished=e.req.max_new_tokens <= 1)
+            if e.req.max_new_tokens <= 1:
+                self._finish(e)       # PREFILLING → DONE (no KV ships)
+                continue
+            e.first = first
+            e.cache = cache
+            e.life.advance(RequestState.KV_TRANSFER, t)
+            self._handoff.append(e.req.rid)
+        return True
+
+    def _step_handoff(self) -> bool:
+        """Admit prefilled requests into free decode slots: transfer
+        the KV (resharding device_put) and install it. Routing picks
+        the least-loaded *flow-weighted* engine among those with free
+        slots."""
+        progressed = False
+        while self._handoff:
+            eng_idx = self.coord.pick_engine_with_free_slot()
+            if eng_idx is None:
+                break
+            e = self._entries[self._handoff.popleft()]
+            cache = kv_transfer.pad_capacity(e.cache, self.coord.capacity)
+            cache = kv_transfer.transfer(cache)
+            self.coord.decode_engines[eng_idx].admit(
+                e.req.rid, e.first, len(e.req.prompt),
+                e.req.max_new_tokens, cache)
+            self.coord.note_routed(eng_idx)
+            e.cache = None
+            e.life.decode_group = eng_idx
+            e.life.advance(RequestState.DECODING, self.now())
+            progressed = True
+        return progressed
+
+    def _step_decode(self) -> bool:
+        """One decode step across every engine with active slots."""
+        progressed = False
+        for eng in self.coord.decode_engines:
+            for rid, tok, finished in eng.step():
+                e = self._entries[rid]
+                self._emit(e, tok, finished)
+                if finished:
+                    self._finish(e)
+                progressed = True
+        return progressed
+
+    # -- driving --------------------------------------------------------
+    def step(self) -> bool:
+        """Advance all three stages once. Returns True while the
+        session is making progress; False once idle (all done, or
+        nothing can move)."""
+        a = self._step_prefill()
+        b = self._step_handoff()
+        c = self._step_decode()
+        return a or b or c
+
+    @property
+    def unfinished(self) -> int:
+        return self._unfinished
+
+    def run(self) -> "ServeSession":
+        """Step until every submitted request is DONE."""
+        while self._unfinished:
+            if not self.step():
+                raise RuntimeError("serve session stalled: "
+                                   f"{self._unfinished} unfinished, "
+                                   "no stage can progress")
+        return self
+
+    # -- results --------------------------------------------------------
+    def poll(self, rid: int) -> PollStatus:
+        e = self._entries[rid]
+        return PollStatus(rid=rid, state=e.life.phase,
+                          tokens=list(e.tokens),
+                          done=e.life.phase is RequestState.DONE)
+
+    def result(self, rid: int) -> ServeResult:
+        e = self._entries[rid]
+        return ServeResult(rid=rid, tokens=list(e.tokens), lifecycle=e.life)
+
+    def results(self) -> List[ServeResult]:
+        """All results, in submission order."""
+        return [self.result(rid) for rid in self._order]
+
+    def metrics(self) -> ServeMetrics:
+        """The shared runtime/simulator schema (DESIGN.md §8) over the
+        requests served so far."""
+        return ServeMetrics(
+            requests=[self._entries[rid].life for rid in self._order],
+            makespan=self._makespan, decode_tokens=self._decode_tokens)
 
 
 class Coordinator:
@@ -53,11 +292,22 @@ class Coordinator:
         assert len(w) == num_decode_engines
         self._weights = np.asarray(w, float) / sum(w)
         self._routed = np.zeros(num_decode_engines)
+        self._active_session: Optional[ServeSession] = None
 
-    def _pick_engine(self) -> int:
-        # flow-proportional, load-corrected (same rule as the simulator)
-        load = (self._routed + 1) / np.maximum(self._weights, 1e-9)
-        return int(np.argmin(load))
+    # -- routing --------------------------------------------------------
+    def pick_engine_with_free_slot(self) -> Optional[int]:
+        """Least normalized load among flow-weighted engines that have a
+        free slot (same rule as the simulator's dispatch); None when
+        every engine is full."""
+        free = [i for i, e in enumerate(self.decode_engines)
+                if e.free_slots()]
+        if not free:
+            return None
+        return min(free, key=lambda i: (self._routed[i] + 1)
+                   / max(self._weights[i], 1e-9))
+
+    def note_routed(self, eng_idx: int) -> None:
+        self._routed[eng_idx] += 1
 
     # -- online rebalance (DESIGN.md §7) --------------------------------
     def update_route_weights(self, weights: Sequence[float],
@@ -95,48 +345,31 @@ class Coordinator:
         self.update_route_weights(w, reset_counts=reset_counts)
         return self._weights
 
-    def serve(self, requests: List[ServeRequest]) -> List[ServeResult]:
-        results = {r.rid: ServeResult(r.rid, []) for r in requests}
-        queue = list(requests)
-        inflight = {r.rid: r for r in requests}
+    # -- sessions -------------------------------------------------------
+    def session(self, **kwargs) -> ServeSession:
+        """Open an event-driven serving session (DESIGN.md §8).
 
-        while queue or any(s.active for e in self.decode_engines
-                           for s in e.slots):
-            # admit as many queued requests as free slots allow
-            progressed = False
-            while queue:
-                eng_idx = self._pick_engine()
-                eng = self.decode_engines[eng_idx]
-                if not eng.free_slots():
-                    # try any engine with space
-                    free = [i for i, e in enumerate(self.decode_engines)
-                            if e.free_slots()]
-                    if not free:
-                        break
-                    eng_idx = free[0]
-                    eng = self.decode_engines[eng_idx]
-                req = queue.pop(0)
-                self._routed[eng_idx] += 1
-                first, cache = self._prefill_one(req)
-                results[req.rid].tokens.append(first)
-                if req.max_new_tokens <= 1:
-                    continue
-                cache = kv_transfer.pad_capacity(cache, self.capacity)
-                cache = kv_transfer.transfer(cache)
-                eng.admit(req.rid, first, len(req.prompt),
-                          req.max_new_tokens, cache)
-                progressed = True
-            # one decode step across engines
-            for eng in self.decode_engines:
-                for rid, tok, finished in eng.step():
-                    results[rid].tokens.append(tok)
-                    progressed = True
-            if not progressed and queue:
-                raise RuntimeError("coordinator stalled: no free slots and "
-                                   "no active decode")
-        return [results[r.rid] for r in requests]
+        Sessions own the coordinator's engines exclusively while they
+        have requests in flight: the decode slots and routing counters
+        are shared state, so a second concurrent session would consume
+        the first one's tokens. Opening a new session is allowed only
+        once the previous one has drained."""
+        if (self._active_session is not None
+                and self._active_session.unfinished):
+            raise RuntimeError(
+                "coordinator already has an active session with "
+                f"{self._active_session.unfinished} requests in flight; "
+                "drain it before opening another")
+        self._active_session = ServeSession(self, **kwargs)
+        return self._active_session
 
-    def _prefill_one(self, req: ServeRequest) -> Tuple[int, Any]:
-        tokens = np.asarray(req.prompt, np.int32)[None]
-        next_tok, cache = self.prefill_engine.prefill(tokens, **req.extra)
-        return int(next_tok[0]), cache
+    def serve(self, requests: List[ServeRequest],
+              on_token: Optional[TokenCallback] = None) -> List[ServeResult]:
+        """Blocking batch entry point — a thin compatibility wrapper
+        over the session API: submit everything at t=0, step to
+        completion, return results in submission order."""
+        sess = self.session()
+        for r in requests:
+            sess.submit(r, on_token=on_token)
+        sess.run()
+        return sess.results()

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer
+from repro.serving import kv_transfer
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -32,24 +33,75 @@ def _bucket(n: int, lo: int = 8) -> int:
 
 
 class PrefillEngine:
-    """Serves the prefill phase: prompt → (first token, cache)."""
+    """Serves the prefill phase: prompt → (first token, cache).
+
+    ``prefill_batch`` is the serving entry point: prompts are padded to
+    power-of-two (batch, seq) buckets so one jit'd compilation per
+    bucket serves any trace, and the argmax is masked to each prompt's
+    true last position. Padding is only safe when every mixer's state
+    is position-masked (plain/cross attention: padded-tail KV is masked
+    out of decode and overwritten as generation advances); recurrent
+    mixers (mamba/xlstm) and sliding-window position rings would absorb
+    the pad tokens, so those architectures fall back to exact-shape
+    prefill (one compile per prompt length)."""
 
     def __init__(self, cfg: ArchConfig, params: Any,
                  cache_capacity: int = 256):
         self.cfg = cfg
         self.params = params
         self.cache_capacity = cache_capacity
+        self.supports_padding = all(spec.mixer in ("attn", "cross_attn")
+                                    for spec in cfg.period)
         self._fn = jax.jit(
             functools.partial(transformer.prefill, cfg=cfg,
                               cache_capacity=cache_capacity),
             static_argnames=())
 
     def prefill(self, tokens: np.ndarray, **extra) -> Tuple[np.ndarray, Any]:
-        """tokens [B,S] (already bucketed/padded) → (next_token [B], cache)."""
+        """tokens [B,S] (exact shapes) → (next_token [B], cache)."""
         logits, cache = self._fn(self.params, tokens=jnp.asarray(tokens),
                                  **extra)
         next_tok = jnp.argmax(logits, axis=-1)
         return np.asarray(next_tok), cache
+
+    def prefill_batch(self, prompts: Sequence[np.ndarray],
+                      extras: Optional[Sequence[Dict[str, Any]]] = None,
+                      ) -> List[Tuple[int, Any]]:
+        """Prefill ``prompts`` (ragged lengths) in ONE jit'd call when
+        the architecture allows padding; returns per-request
+        (first_token, single-request cache slice [.., 1, ..])."""
+        n = len(prompts)
+        extras = list(extras) if extras is not None else [{}] * n
+        max_len = max(len(p) for p in prompts)
+        uniform_extras = all(ex.keys() == extras[0].keys() for ex in extras)
+        if (not self.supports_padding or max_len > self.cache_capacity
+                or not uniform_extras):
+            out = []
+            for p, ex in zip(prompts, extras):
+                tok, cache = self.prefill(np.asarray(p, np.int32)[None], **ex)
+                out.append((int(tok[0]), kv_transfer.slice_request(cache, 0)))
+            return out
+
+        seq = min(_bucket(max_len), self.cache_capacity)
+        bsz = _bucket(n, lo=1)
+        toks = np.zeros((bsz, seq), np.int32)
+        last = np.zeros((bsz,), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
+            last[i] = len(p) - 1
+        batched = {}
+        for key in extras[0]:
+            stack = np.concatenate([np.asarray(ex[key]) for ex in extras])
+            if bsz > n:
+                padshape = (bsz - n,) + stack.shape[1:]
+                stack = np.concatenate(
+                    [stack, np.zeros(padshape, stack.dtype)])
+            batched[key] = stack
+        logits, cache = self._fn(self.params, tokens=jnp.asarray(toks),
+                                 last_index=jnp.asarray(last), **batched)
+        first = np.asarray(jnp.argmax(logits, axis=-1))
+        return [(int(first[i]), kv_transfer.slice_request(cache, i))
+                for i in range(n)]
 
 
 @dataclasses.dataclass

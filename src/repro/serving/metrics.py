@@ -1,0 +1,81 @@
+"""Shared serving-metrics schema (DESIGN.md §8).
+
+``ServeMetrics`` is computed from a list of lifecycle ``Request``
+records plus (makespan, decode_tokens) — nothing domain-specific. The
+scheduling-domain ``SimResult`` subclasses it and the runtime
+``ServeSession.metrics()`` returns it directly, so simulator and real
+JAX runs report the SAME schema (throughput, TTFT, TPOT, SLO
+attainment) and are directly comparable; ``METRIC_FIELDS`` is the
+parity contract the tests pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+#: The shared runtime/simulator metrics schema. Every name is a
+#: property (or method, for slo_attainment) on ServeMetrics and on
+#: every subclass — tests/test_lifecycle.py asserts parity.
+METRIC_FIELDS = ("decode_throughput", "avg_latency", "p99_latency",
+                 "avg_ttft", "p99_ttft", "avg_tpot", "slo_attainment")
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    requests: List[Request]
+    makespan: float
+    decode_tokens: int
+
+    @property
+    def decode_throughput(self) -> float:
+        """tokens/s — the paper's offline metric."""
+        return self.decode_tokens / self.makespan if self.makespan > 0 else 0.0
+
+    def _stat(self, attr: str, fn) -> float:
+        vals = [getattr(r, attr) for r in self.requests
+                if getattr(r, attr) is not None]
+        return float(fn(vals)) if vals else float("inf")
+
+    @property
+    def avg_latency(self) -> float:
+        return self._stat("latency", np.mean)
+
+    @property
+    def p99_latency(self) -> float:
+        return self._stat("latency", lambda v: np.percentile(v, 99))
+
+    @property
+    def avg_ttft(self) -> float:
+        return self._stat("ttft", np.mean)
+
+    @property
+    def p99_ttft(self) -> float:
+        return self._stat("ttft", lambda v: np.percentile(v, 99))
+
+    @property
+    def avg_tpot(self) -> float:
+        return self._stat("tpot", np.mean)
+
+    def slo_attainment(self, slo_per_request: Dict[int, float],
+                       scale: float) -> float:
+        ok = sum(1 for r in self.requests
+                 if r.latency is not None
+                 and r.latency <= scale * slo_per_request[r.rid])
+        return ok / max(len(self.requests), 1)
+
+    def summary(self, slo: Optional[Dict[int, float]] = None,
+                slo_scale: float = 5.0) -> Dict[str, float]:
+        """The schema as one flat dict (benchmark/report rows)."""
+        out = {"decode_throughput": self.decode_throughput,
+               "avg_latency": self.avg_latency,
+               "p99_latency": self.p99_latency,
+               "avg_ttft": self.avg_ttft,
+               "p99_ttft": self.p99_ttft,
+               "avg_tpot": self.avg_tpot}
+        if slo is not None:
+            out["slo_attainment"] = self.slo_attainment(slo, slo_scale)
+        return out

@@ -1,4 +1,18 @@
-"""Request lifecycle for disaggregated serving."""
+"""Request lifecycle for disaggregated serving.
+
+One state machine shared by BOTH domains (DESIGN.md §8): the
+scheduling-domain simulator and the runtime Coordinator's ServeSession
+drive the same ``RequestState`` transitions and stamp the same
+timestamps, so TTFT/TPOT/latency are computed identically on both
+sides.
+
+    QUEUED → PREFILLING → KV_TRANSFER → DECODING → DONE
+
+``advance`` enforces the legal edges (a request can never be DECODING
+before its KV handoff, etc.); ``restart`` is the one sanctioned
+back-edge — online rescheduling requeues queued/mid-prefill requests on
+the new placement (DESIGN.md §7).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -6,12 +20,31 @@ import enum
 from typing import Optional
 
 
-class Phase(enum.Enum):
+class RequestState(enum.Enum):
     QUEUED = "queued"
     PREFILLING = "prefilling"
     KV_TRANSFER = "kv_transfer"
     DECODING = "decoding"
     DONE = "done"
+
+
+# Backwards-compatible alias (pre-PR-2 name).
+Phase = RequestState
+
+
+#: Legal lifecycle edges. PREFILLING → DONE covers single-token requests
+#: (the first token is produced by prefill itself; no KV ever ships).
+TRANSITIONS = {
+    RequestState.QUEUED: (RequestState.PREFILLING,),
+    RequestState.PREFILLING: (RequestState.KV_TRANSFER, RequestState.DONE),
+    RequestState.KV_TRANSFER: (RequestState.DECODING,),
+    RequestState.DECODING: (RequestState.DONE,),
+    RequestState.DONE: (),
+}
+
+
+class IllegalTransition(RuntimeError):
+    pass
 
 
 @dataclasses.dataclass
@@ -20,7 +53,7 @@ class Request:
     s_in: int                     # prompt tokens
     s_out: int                    # tokens to generate
     arrival: float                # seconds
-    phase: Phase = Phase.QUEUED
+    phase: RequestState = RequestState.QUEUED
     # timeline (filled by simulator / coordinator)
     prefill_start: Optional[float] = None
     prefill_end: Optional[float] = None
@@ -28,7 +61,43 @@ class Request:
     decode_end: Optional[float] = None
     prefill_group: Optional[int] = None
     decode_group: Optional[int] = None
+    #: tokens actually produced — differs from s_out when the runtime
+    #: truncates at slot capacity; None means "all s_out produced"
+    tokens_out: Optional[int] = None
 
+    # -- lifecycle ------------------------------------------------------
+    def advance(self, state: RequestState, t: float) -> "Request":
+        """Move to ``state`` at time ``t``, stamping the timestamp that
+        edge owns. Raises IllegalTransition on a bad edge."""
+        if state not in TRANSITIONS[self.phase]:
+            raise IllegalTransition(
+                f"req {self.rid}: {self.phase.value} -> {state.value}")
+        if state is RequestState.PREFILLING:
+            self.prefill_start = t
+        elif state is RequestState.KV_TRANSFER:
+            self.prefill_end = t
+        elif state is RequestState.DECODING:
+            self.transfer_end = t
+        elif state is RequestState.DONE:
+            if self.phase is RequestState.PREFILLING:   # single-token
+                self.prefill_end = t
+                self.transfer_end = t
+            self.decode_end = t
+        self.phase = state
+        return self
+
+    def restart(self) -> "Request":
+        """Requeue after a placement swap: queued/mid-prefill work starts
+        over on the new prefill replicas (prefill is stateless)."""
+        if self.phase is RequestState.DONE:
+            raise IllegalTransition(f"req {self.rid}: restart after DONE")
+        self.phase = RequestState.QUEUED
+        self.prefill_start = None
+        self.prefill_end = None
+        self.transfer_end = None
+        return self
+
+    # -- derived metrics ------------------------------------------------
     @property
     def latency(self) -> Optional[float]:
         if self.decode_end is None:
@@ -41,6 +110,16 @@ class Request:
         if self.prefill_end is None:
             return None
         return self.prefill_end - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token after the first (decode cadence)."""
+        if self.decode_end is None or self.prefill_end is None:
+            return None
+        n = self.s_out if self.tokens_out is None else self.tokens_out
+        if n <= 1:
+            return 0.0
+        return (self.decode_end - self.prefill_end) / (n - 1)
 
     @property
     def is_heavy_prefill(self) -> bool:

@@ -46,36 +46,16 @@ from repro.core.cost_model import (ModelProfile, decode_step_latency,
                                    kv_transfer_time, max_decode_batch,
                                    prefill_latency)
 from repro.core.placement import Placement, ReplicaPlacement
-from repro.serving.request import Phase, Request
+from repro.serving.metrics import ServeMetrics
+from repro.serving.request import Request, RequestState
 
 
 @dataclasses.dataclass
-class SimResult:
-    requests: List[Request]
-    makespan: float
-    decode_tokens: int
-
-    @property
-    def decode_throughput(self) -> float:
-        """tokens/s — the paper's offline metric."""
-        return self.decode_tokens / self.makespan if self.makespan > 0 else 0.0
-
-    @property
-    def avg_latency(self) -> float:
-        lats = [r.latency for r in self.requests if r.latency is not None]
-        return float(np.mean(lats)) if lats else float("inf")
-
-    @property
-    def p99_latency(self) -> float:
-        lats = [r.latency for r in self.requests if r.latency is not None]
-        return float(np.percentile(lats, 99)) if lats else float("inf")
-
-    def slo_attainment(self, slo_per_request: Dict[int, float],
-                       scale: float) -> float:
-        ok = sum(1 for r in self.requests
-                 if r.latency is not None
-                 and r.latency <= scale * slo_per_request[r.rid])
-        return ok / max(len(self.requests), 1)
+class SimResult(ServeMetrics):
+    """Scheduling-domain result: the shared metrics schema
+    (``ServeMetrics``, DESIGN.md §8) computed over simulated requests.
+    Runtime ``ServeSession.metrics()`` returns the same schema, so the
+    two domains are directly comparable."""
 
 
 @dataclasses.dataclass
@@ -216,8 +196,7 @@ class _DisaggSim:
         req = srv.queue.pop(0)
         srv.busy = True
         srv.current = req
-        req.phase = Phase.PREFILLING
-        req.prefill_start = t
+        req.advance(RequestState.PREFILLING, t)
         lat = prefill_latency(self.cluster, self.profile, srv.replica.plan,
                               1, req.s_in)
         self.push(t + lat, "prefill_done",
@@ -233,9 +212,7 @@ class _DisaggSim:
             return
         free = srv.max_batch - len(srv.active)
         if free > 0 and srv.pending:
-            for req, rem in srv.pending[:free]:
-                srv.active.append((req, rem))
-                req.phase = Phase.DECODING
+            srv.active.extend(srv.pending[:free])
             srv.pending = srv.pending[free:]
         if not srv.active:
             return
@@ -300,7 +277,7 @@ class _DisaggSim:
         for req in sorted(restart, key=lambda r: r.arrival):
             gid = self.pick_prefill()
             self.dispatched[gid] += 1
-            req.phase = Phase.QUEUED
+            req.restart()
             req.prefill_group = gid
             self.prefill[gid].queue.append(req)
         for srv in self.prefill.values():
@@ -328,8 +305,7 @@ class _DisaggSim:
         srv = self.prefill[gid]
         srv.busy = False
         srv.current = None
-        req.prefill_end = t
-        req.phase = Phase.KV_TRANSFER
+        req.advance(RequestState.KV_TRANSFER, t)
         did = self.pick_decode(gid)
         self.routed[(gid, did)] = self.routed.get((gid, did), 0.0) + 1
         req.decode_group = did
@@ -361,7 +337,9 @@ class _DisaggSim:
                 self.push(begin + tt, "transfer_done", (self.epoch, req))
                 return
             req.decode_group = did
-        req.transfer_end = t
+        # DECODING = KV resident on the decode replica (it may still
+        # wait in ``pending`` for a continuous-batch slot)
+        req.advance(RequestState.DECODING, t)
         srv = self.decode[req.decode_group]
         srv.pending.append((req, req.s_out))
         self.start_round(t, srv)
@@ -377,8 +355,7 @@ class _DisaggSim:
             self.decode_tokens += produced
             rem -= produced
             if rem <= 0:
-                req.decode_end = t
-                req.phase = Phase.DONE
+                req.advance(RequestState.DONE, t)
             else:
                 still.append((req, rem))
         srv.active = still
@@ -458,7 +435,7 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
     def hook(t: float, req: Request) -> None:
         if monitor is None or rescheduler is None:
             return
-        monitor.observe(req.s_in, req.s_out)
+        monitor.observe(req)   # lifecycle-typed observation (DESIGN.md §8)
         if (len(sim.reschedules) >= max_reschedules
                 or t - state["last"] < min_gap_s
                 or not monitor.drifted()):
@@ -542,7 +519,7 @@ def simulate_colocated(cluster: ClusterSpec, profile: ModelProfile,
         # prefill first when a slot is free (continuous batching admits)
         if srv.prefill_q and len(srv.active) < srv.max_batch:
             req = srv.prefill_q.pop(0)
-            req.prefill_start = t
+            req.advance(RequestState.PREFILLING, t)
             dur = prefill_latency(cluster, profile, srv.rep.plan, 1,
                                   req.s_in) * interference
             srv.busy = True
@@ -571,7 +548,9 @@ def simulate_colocated(cluster: ClusterSpec, profile: ModelProfile,
             si, req = payload
             srv = servers[si]
             srv.busy = False
-            req.prefill_end = req.transfer_end = t
+            # colocated: KV stays in place — zero-cost handoff at t
+            req.advance(RequestState.KV_TRANSFER, t)
+            req.advance(RequestState.DECODING, t)
             req.decode_group = srv.rep.group_id
             srv.active.append((req, req.s_out))
             kick(t, si)
@@ -585,7 +564,7 @@ def simulate_colocated(cluster: ClusterSpec, profile: ModelProfile,
                 decode_tokens += produced
                 rem -= produced
                 if rem <= 0:
-                    req.decode_end = t
+                    req.advance(RequestState.DONE, t)
                 else:
                     still.append((req, rem))
             srv.active = still

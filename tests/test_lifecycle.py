@@ -1,0 +1,236 @@
+"""Request-lifecycle API (DESIGN.md §8): state-transition invariants,
+streaming callbacks, legacy-wrapper equivalence, and runtime/simulator
+metrics-schema parity."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import HPHD, LLAMA2_70B, schedule
+from repro.core.cluster import heterogeneous_setting_1
+from repro.core.scheduler import WorkloadMonitor
+from repro.core.cost_model import WORKLOADS
+from repro.models import init_params
+from repro.serving import (Coordinator, IllegalTransition, METRIC_FIELDS,
+                           Request, RequestState, ServeMetrics, ServeRequest,
+                           offline_workload, simulate)
+
+KEY = jax.random.PRNGKey(11)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    return cfg, init_params(KEY, cfg)
+
+
+@pytest.fixture(scope="module")
+def placed():
+    cl = heterogeneous_setting_1()
+    res = schedule(cl, LLAMA2_70B, HPHD, max_refine_iters=4)
+    return cl, res.placement
+
+
+# ---------------------------------------------------------------------------
+# state machine
+# ---------------------------------------------------------------------------
+
+
+def test_legal_lifecycle_stamps_timestamps():
+    r = Request(rid=0, s_in=8, s_out=4, arrival=1.0)
+    r.advance(RequestState.PREFILLING, 2.0)
+    r.advance(RequestState.KV_TRANSFER, 3.0)
+    r.advance(RequestState.DECODING, 4.0)
+    r.advance(RequestState.DONE, 5.0)
+    assert (r.prefill_start, r.prefill_end, r.transfer_end, r.decode_end) \
+        == (2.0, 3.0, 4.0, 5.0)
+    assert r.ttft == 2.0 and r.latency == 4.0
+    assert r.tpot == pytest.approx(2.0 / 3)
+
+
+@pytest.mark.parametrize("bad", [RequestState.DECODING, RequestState.DONE,
+                                 RequestState.KV_TRANSFER])
+def test_no_decoding_before_kv_transfer(bad):
+    """A queued request can never jump ahead in the pipeline."""
+    r = Request(rid=0, s_in=8, s_out=4, arrival=0.0)
+    with pytest.raises(IllegalTransition):
+        r.advance(bad, 1.0)
+
+
+def test_no_decode_straight_from_prefill():
+    r = Request(rid=0, s_in=8, s_out=4, arrival=0.0)
+    r.advance(RequestState.PREFILLING, 1.0)
+    with pytest.raises(IllegalTransition):
+        r.advance(RequestState.DECODING, 2.0)
+
+
+def test_single_token_shortcut_and_restart():
+    r = Request(rid=0, s_in=8, s_out=1, arrival=0.0)
+    r.advance(RequestState.PREFILLING, 1.0)
+    r.advance(RequestState.DONE, 2.0)       # first token IS the output
+    assert r.ttft == 2.0 and r.latency == 2.0 and r.tpot == 0.0
+    with pytest.raises(IllegalTransition):
+        r.restart()
+    r2 = Request(rid=1, s_in=8, s_out=4, arrival=0.0)
+    r2.advance(RequestState.PREFILLING, 1.0)
+    r2.restart()                            # reschedule requeues it
+    assert r2.phase is RequestState.QUEUED and r2.prefill_start is None
+
+
+def test_simulator_drives_lifecycle(placed):
+    cl, placement = placed
+    reqs = offline_workload("HPHD", 40, seed=1)
+    sim = simulate(cl, LLAMA2_70B, placement, reqs)
+    for r in sim.requests:
+        assert r.phase is RequestState.DONE
+        assert r.arrival <= r.prefill_start <= r.prefill_end \
+            <= r.transfer_end <= r.decode_end
+        assert r.ttft is not None and r.tpot is not None
+
+
+# ---------------------------------------------------------------------------
+# runtime session: streaming, poll, legacy wrapper
+# ---------------------------------------------------------------------------
+
+
+def _reqs(cfg, n, lens=(5, 4, 6, 5, 3), max_new=4, seed=5):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(i, rng.integers(0, cfg.vocab, lens[i % len(lens)])
+                         .astype(np.int32), max_new) for i in range(n)]
+
+
+def test_streaming_matches_results_and_poll(small_model):
+    cfg, params = small_model
+    coord = Coordinator(cfg, params, num_decode_engines=2,
+                        slots_per_engine=2, capacity=32)
+    sess = coord.session()
+    streamed = {}
+    seen_states = set()
+    for r in _reqs(cfg, 5):
+        sess.submit(r, on_token=lambda rid, t, f:
+                    streamed.setdefault(rid, []).append(t))
+    while sess.unfinished:
+        sess.step()
+        for rid in streamed:
+            st = sess.poll(rid)
+            seen_states.add(st.state)
+            assert st.tokens == streamed[rid]    # poll == stream so far
+    for out in sess.results():
+        assert out.tokens == streamed[out.rid]   # ordering preserved
+        assert out.lifecycle.phase is RequestState.DONE
+    assert RequestState.DONE in seen_states
+
+
+def test_legacy_serve_equals_session(small_model):
+    """The blocking wrapper must be byte-for-byte the session output."""
+    cfg, params = small_model
+    mk = lambda: Coordinator(cfg, params, num_decode_engines=2,
+                             slots_per_engine=2, capacity=32)
+    reqs = _reqs(cfg, 5)
+    legacy = mk().serve([ServeRequest(r.rid, r.prompt, r.max_new_tokens)
+                         for r in reqs])
+    sess = mk().session()
+    for r in reqs:
+        sess.submit(r)
+    session_out = sess.run().results()
+    assert [o.tokens for o in legacy] == [o.tokens for o in session_out]
+
+
+def test_sessions_are_exclusive_while_in_flight(small_model):
+    """Decode slots and routing counters are shared: a second session
+    over the same engines must be refused until the first drains."""
+    cfg, params = small_model
+    coord = Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=2, capacity=32)
+    sess = coord.session()
+    for r in _reqs(cfg, 2):
+        sess.submit(r)
+    sess.step()
+    with pytest.raises(RuntimeError, match="active session"):
+        coord.session()
+    sess.run()
+    assert coord.session() is not sess    # drained: reopening is fine
+
+
+def test_prefill_backlog_bounded_by_slots(small_model):
+    """Prefill must not run unboundedly ahead of decode admission —
+    each handoff entry pins a full-capacity KV cache."""
+    cfg, params = small_model
+    coord = Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=2, capacity=32)
+    sess = coord.session(max_prefill_batch=4)
+    for r in _reqs(cfg, 10):
+        sess.submit(r)
+    while sess.unfinished:
+        sess.step()
+        assert len(sess._handoff) <= 2    # total slot count
+    assert all(len(o.tokens) == 4 for o in sess.results())
+
+
+def test_single_token_requests_runtime(small_model):
+    cfg, params = small_model
+    coord = Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=2, capacity=32)
+    outs = coord.serve(_reqs(cfg, 3, max_new=1))
+    assert all(len(o.tokens) == 1 for o in outs)
+    assert all(o.lifecycle.phase is RequestState.DONE for o in outs)
+
+
+def test_prefill_batch_matches_exact_shapes(small_model):
+    """Bucketed/padded batched prefill must reproduce exact-shape
+    prefill: same first token, same KV at true positions."""
+    cfg, params = small_model
+    from repro.serving.engine import PrefillEngine
+    eng = PrefillEngine(cfg, params, cache_capacity=32)
+    assert eng.supports_padding
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (5, 3, 7)]
+    batched = eng.prefill_batch(prompts)
+    for p, (tok, cache) in zip(prompts, batched):
+        ref_tok, ref_cache = eng.prefill(p[None])
+        assert tok == int(ref_tok[0])
+        k_b = np.asarray(jax.tree.leaves(cache)[0], np.float32)
+        k_r = np.asarray(jax.tree.leaves(ref_cache)[0], np.float32)
+        assert np.array_equal(k_b[:, :, :len(p)], k_r[:, :, :len(p)])
+
+
+# ---------------------------------------------------------------------------
+# shared metrics schema: runtime == simulator
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_schema_parity(small_model, placed):
+    cfg, params = small_model
+    coord = Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=2, capacity=32)
+    sess = coord.session()
+    for r in _reqs(cfg, 3):
+        sess.submit(r)
+    runtime = sess.run().metrics()
+
+    cl, placement = placed
+    sim = simulate(cl, LLAMA2_70B, placement,
+                   offline_workload("HPHD", 20, seed=2))
+
+    assert isinstance(sim, ServeMetrics)          # one schema, two domains
+    for field in METRIC_FIELDS:
+        assert hasattr(runtime, field), f"runtime missing {field}"
+        assert hasattr(sim, field), f"simulator missing {field}"
+    # identical summary keys, all finite on completed runs
+    rs, ss = runtime.summary(), sim.summary()
+    assert set(rs) == set(ss)
+    for k, v in {**rs, **ss}.items():
+        assert np.isfinite(v), k
+    # both sides measure with the same lifecycle Request type
+    assert {type(r) for r in runtime.requests} \
+        == {type(r) for r in sim.requests} == {Request}
+
+
+def test_monitor_consumes_lifecycle_requests():
+    mon = WorkloadMonitor(WORKLOADS["HPLD"], window=8, min_observations=2)
+    mon.observe(Request(rid=0, s_in=100, s_out=200, arrival=0.0))
+    mon.observe(700, 300)                     # raw counts still accepted
+    assert mon.n == 2
+    snap = mon.snapshot()
+    assert snap.s_in == 400 and snap.s_out == 250
