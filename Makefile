@@ -2,7 +2,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test unit serve-smoke bench bench-drift bench-serving lint
+.PHONY: test unit serve-smoke bench bench-drift bench-serving bench-prefix lint
 
 # Tier-1 verify: the whole test suite (stop at first failure), then the
 # serving smoke run through the real session API on the reduced arch.
@@ -12,10 +12,14 @@ unit:
 	$(PYTHON) -m pytest -x -q
 
 # End-to-end smoke: event-driven ServeSession on the reduced arch with
-# Poisson arrivals + streaming (DESIGN.md §8).
+# Poisson arrivals + streaming (DESIGN.md §8), then a shared-prefix
+# trace through the radix prefix caches with cache-aware routing (§9).
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --requests 4 --prompt-len 12 \
 		--max-new 6 --decode-engines 2 --rate-rps 8
+	$(PYTHON) -m repro.launch.serve --requests 8 --max-new 4 \
+		--decode-engines 2 --prefill-engines 2 --rate-rps 8 \
+		--prefix-trace multiturn
 
 # All paper benchmarks (figures/tables) + the beyond-paper ones.
 bench:
@@ -28,6 +32,10 @@ bench-drift:
 # Prefill/decode interference: legacy inline path vs pipelined session.
 bench-serving:
 	$(PYTHON) -m benchmarks.run serving
+
+# Shared-prefix KV reuse: cache-aware vs cache-blind routing (§9).
+bench-prefix:
+	$(PYTHON) -m benchmarks.run prefix
 
 # Byte-compile everything — catches syntax/indentation errors without
 # needing a linter wheel in the image.

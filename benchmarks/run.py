@@ -7,7 +7,7 @@ time, roofline terms).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [module ...]
         modules default to all; names: fig6, fig8, fig9, fig10,
-        table3, table4, table5, roofline, drift, serving
+        table3, table4, table5, roofline, drift, serving, prefix
 """
 from __future__ import annotations
 
@@ -28,6 +28,7 @@ MODULES = {
     "roofline": "benchmarks.roofline_report",
     "drift": "benchmarks.drift_reschedule",
     "serving": "benchmarks.serving_pipeline",
+    "prefix": "benchmarks.prefix_reuse",
 }
 
 

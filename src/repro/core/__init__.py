@@ -15,7 +15,8 @@ from repro.core.cost_model import (B_TYPE, HPHD, HPLD, LLAMA2_70B, LPHD, LPLD,
                                    decode_latency, kv_transfer_time,
                                    make_plan, max_decode_batch,
                                    plan_fits_memory, prefill_capacity,
-                                   prefill_latency)
+                                   prefill_latency, prefix_bytes_per_token,
+                                   prefix_cache_budget)
 from repro.core.flowgraph import DEFAULT_PERIOD, solve_flow
 from repro.core.maxflow import FlowNetwork, FlowResult
 from repro.core.partition import (GroupPartition, initial_partition,
@@ -34,7 +35,8 @@ __all__ = [
     "WORKLOADS", "HPLD", "HPHD", "LPHD", "LPLD", "OPT_30B", "LLAMA2_70B",
     "decode_capacity", "decode_latency", "kv_transfer_time", "make_plan",
     "max_decode_batch", "plan_fits_memory", "prefill_capacity",
-    "prefill_latency", "DEFAULT_PERIOD", "solve_flow", "FlowNetwork",
+    "prefill_latency", "prefix_bytes_per_token", "prefix_cache_budget",
+    "DEFAULT_PERIOD", "solve_flow", "FlowNetwork",
     "FlowResult", "GroupPartition", "initial_partition", "kernighan_lin",
     "num_groups", "spectral_partition", "Placement", "ReplicaPlacement",
     "RefineTrace", "iterative_refinement", "ScheduleResult", "schedule",

@@ -271,13 +271,23 @@ def _pp_comm_time(cluster: ClusterSpec, src: Sequence[int], dst: Sequence[int],
 
 
 def prefill_latency(cluster: ClusterSpec, profile: ModelProfile,
-                    plan: ParallelPlan, batch: int, s_in: int) -> float:
-    """End-to-end prefill latency of one batch through the pipeline."""
+                    plan: ParallelPlan, batch: int, s_in: int,
+                    cached_len: int = 0) -> float:
+    """End-to-end prefill latency of one batch through the pipeline.
+
+    ``cached_len`` prompt tokens are already held in a prefix cache
+    (DESIGN.md §9): only the ``s_in - cached_len`` suffix pays linear
+    FLOPs and TP/PP traffic, while each suffix token's attention still
+    spans the full (cached + new) context — the mean attended context
+    is ``(cached_len + s_in) / 2``. ``cached_len=0`` reduces to the
+    paper's Table-1 formula."""
+    cached_len = min(max(int(cached_len), 0), max(s_in - 1, 0))
     total = 0.0
-    ntok = batch * s_in
+    ntok = batch * (s_in - cached_len)
     for j, (stage, l) in enumerate(zip(plan.stages, plan.layers)):
         flops = (profile.flops_per_token_layer * ntok
-                 + profile.attn_flops_coeff * ntok * (s_in / 2.0)
+                 + profile.attn_flops_coeff * ntok
+                 * ((cached_len + s_in) / 2.0)
                  * profile.attn_layer_fraction) * l
         total += _stage_compute_time(cluster, stage, flops)
         # 4 collectives per layer (2 AllReduce fwd ≈ 4 msg volumes, Table 1)
@@ -351,6 +361,36 @@ def max_decode_batch(cluster: ClusterSpec, profile: ModelProfile,
         else:
             hi = mid - 1
     return lo
+
+
+def prefix_bytes_per_token(profile: ModelProfile) -> float:
+    """KV bytes one cached prompt token occupies across all layers —
+    what the prefix cache charges per stored radix-edge token
+    (DESIGN.md §9). Constant-size recurrent state is excluded: an SSM
+    prefix snapshot costs O(1), accounted via the per-entry slab bytes
+    on the runtime side."""
+    return (profile.kv_bytes_token_layer * profile.num_layers
+            * profile.attn_layer_fraction)
+
+
+def prefix_cache_budget(cluster: ClusterSpec, profile: ModelProfile,
+                        plan: ParallelPlan, batch: int, s_total: int,
+                        fraction: float = 0.5) -> float:
+    """Bytes a replica can dedicate to prefix KV (DESIGN.md §9).
+
+    The cost model's memory headroom: per stage, device capacity (the
+    same 0.9 derate ``plan_fits_memory`` uses) minus the working set
+    (params + the serving batch's KV + activations), times the TP
+    degree (each shard holds its slice of cached KV), summed over
+    stages and scaled by ``fraction`` — the rest is left for batch
+    growth and fragmentation. Clamps at 0 for plans already at the
+    memory edge."""
+    total = 0.0
+    for j, stage in enumerate(plan.stages):
+        cap = min(cluster.devices[d].gpu.memory for d in stage) * 0.9
+        need = stage_memory_bytes(profile, plan, j, batch, s_total)
+        total += max(cap - need, 0.0) * len(stage)
+    return fraction * total
 
 
 def kv_transfer_time(cluster: ClusterSpec, profile: ModelProfile,

@@ -13,7 +13,12 @@ same code path serves the full config with the Pallas kernels engaged.
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         --requests 8 --prompt-len 16 --max-new 12 --decode-engines 2 \
-        [--rate-rps 4.0] [--stream]
+        [--rate-rps 4.0] [--stream] \
+        [--prefix-trace multiturn --prefill-engines 2]
+
+``--prefix-trace`` swaps the random prompts for a shared-prefix
+workload (DESIGN.md §9), enables the per-engine radix prefix caches,
+and reports hit-rate metrics alongside the usual schema.
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ import numpy as np
 from repro.configs import ASSIGNED, get_config
 from repro.models import init_params
 from repro.serving import Coordinator, ServeRequest
+from repro.serving.workload import PREFIX_TRACES, prefix_trace
 
 
 def main() -> None:
@@ -41,6 +47,17 @@ def main() -> None:
                     help="max prompts per bucketed prefill micro-batch")
     ap.add_argument("--rate-rps", type=float, default=0.0,
                     help="Poisson arrival rate; 0 = all at t=0")
+    ap.add_argument("--prefix-trace", choices=sorted(PREFIX_TRACES),
+                    default=None,
+                    help="serve a shared-prefix trace (multi-turn chat / "
+                         "common system prompt / few-shot agentic) with "
+                         "per-engine radix prefix caches enabled "
+                         "(DESIGN.md §9) and report hit-rate metrics")
+    ap.add_argument("--prefill-engines", type=int, default=1,
+                    help="prefill engines for cache-aware routing")
+    ap.add_argument("--prefix-cache-mb", type=float, default=256.0,
+                    help="per-engine prefix-cache byte budget (MB); KV "
+                         "slabs beyond it are LRU-evicted")
     ap.add_argument("--stream", action="store_true",
                     help="print each token as it is generated")
     ap.add_argument("--full", action="store_true",
@@ -63,18 +80,39 @@ def main() -> None:
     if cfg.num_image_tokens:
         extra["image_embeds"] = np.zeros(
             (1, cfg.num_image_tokens, cfg.d_model), np.float32)
-    reqs = [ServeRequest(i, rng.integers(0, cfg.vocab, args.prompt_len)
-                         .astype(np.int32), args.max_new, dict(extra))
-            for i in range(args.requests)]
-    if args.rate_rps > 0:
-        arrivals = np.cumsum(rng.exponential(1.0 / args.rate_rps,
-                                             size=args.requests))
+    if args.prefix_trace is not None:
+        # shared-prefix workload (DESIGN.md §9): prompts carry real
+        # token content; prefix caching + cache-aware routing are on.
+        # --rate-rps 0 keeps its contract: generate at a nominal pace
+        # for ordering, then collapse every arrival to t=0.
+        trace = prefix_trace(args.prefix_trace, args.requests,
+                             args.rate_rps if args.rate_rps > 0 else 8.0,
+                             seed=args.seed, vocab=cfg.vocab,
+                             think_time_s=0.25)
+        reqs = [ServeRequest(r.rid, np.asarray(r.tokens, np.int32),
+                             min(r.s_out, args.max_new), dict(extra))
+                for r in trace]
+        arrivals = np.array([r.arrival for r in trace])
+        if args.rate_rps <= 0:
+            arrivals[:] = 0.0
+        capacity = max(len(r.prompt) for r in reqs) + args.max_new + 4
+        prefix_bytes = args.prefix_cache_mb * 1e6
     else:
-        arrivals = np.zeros(args.requests)
+        reqs = [ServeRequest(i, rng.integers(0, cfg.vocab, args.prompt_len)
+                             .astype(np.int32), args.max_new, dict(extra))
+                for i in range(args.requests)]
+        if args.rate_rps > 0:
+            arrivals = np.cumsum(rng.exponential(1.0 / args.rate_rps,
+                                                 size=args.requests))
+        else:
+            arrivals = np.zeros(args.requests)
+        capacity = args.prompt_len + args.max_new + 4
+        prefix_bytes = None
 
-    capacity = args.prompt_len + args.max_new + 4
     coord = Coordinator(cfg, params, num_decode_engines=args.decode_engines,
-                        slots_per_engine=args.slots, capacity=capacity)
+                        slots_per_engine=args.slots, capacity=capacity,
+                        num_prefill_engines=args.prefill_engines,
+                        prefix_cache_bytes=prefix_bytes)
 
     def on_token(rid: int, tok: int, fin: bool) -> None:
         if args.stream:
@@ -106,6 +144,11 @@ def main() -> None:
     print(f"[serve] metrics: throughput={m.decode_throughput:.1f}tok/s "
           f"avg_ttft={m.avg_ttft * 1e3:.0f}ms avg_tpot={m.avg_tpot * 1e3:.0f}ms "
           f"avg_latency={m.avg_latency:.2f}s p99={m.p99_latency:.2f}s")
+    if args.prefix_trace is not None:
+        print(f"[serve] prefix cache ({args.prefix_trace}): "
+              f"hit_rate={m.cache_hit_rate:.3f} "
+              f"reused_tokens={m.reused_tokens} "
+              f"prefill_tokens_computed={m.prefill_tokens_computed}")
 
 
 if __name__ == "__main__":

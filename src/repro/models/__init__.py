@@ -1,8 +1,11 @@
 """Model zoo: composable blocks + the period-scan model builder."""
 from repro.models.transformer import (count_active_params, count_params,
                                       decode_step, init_cache, init_params,
-                                      prefill, train_forward, cache_specs)
+                                      prefill, prefill_continue,
+                                      supports_prefix_continue,
+                                      train_forward, cache_specs)
 
 __all__ = ["count_active_params", "count_params", "decode_step",
-           "init_cache", "init_params", "prefill", "train_forward",
+           "init_cache", "init_params", "prefill", "prefill_continue",
+           "supports_prefix_continue", "train_forward",
            "cache_specs"]

@@ -63,19 +63,23 @@ def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       causal: bool = True, window: int = 0,
-                      q_chunk: int = Q_CHUNK) -> jax.Array:
+                      q_chunk: int = Q_CHUNK,
+                      q_offset: int = 0) -> jax.Array:
     """Query-chunked attention: O(q_chunk · Sk) live scores. The XLA-level
-    flash-attention analogue used for long-prefill lowering on any backend."""
+    flash-attention analogue used for long-prefill lowering on any
+    backend. ``q_offset``: absolute position of q's first row (suffix
+    prefill attends a suffix against a longer cached context)."""
     b, s, h, hd = q.shape
     if s <= q_chunk:
-        return full_attention(q, k, v, causal=causal, window=window)
+        return full_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset)
     assert s % q_chunk == 0, (s, q_chunk)
     n = s // q_chunk
 
     def body(i):
         qc = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
         return full_attention(qc, k, v, causal=causal, window=window,
-                              q_offset=i * q_chunk)
+                              q_offset=q_offset + i * q_chunk)
 
     out = jax.lax.map(body, jnp.arange(n))            # [n,B,qc,H,hd]
     return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)

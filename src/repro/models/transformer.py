@@ -457,6 +457,108 @@ def prefill(params: Params, cfg: ArchConfig, tokens: jax.Array,
     return logits, caches
 
 
+def _attn_prefill_continue(cfg: ArchConfig, p: Params, x: jax.Array,
+                           cache: Cache, ctx: Ctx,
+                           prefix_len: int) -> Tuple[jax.Array, Cache]:
+    """Full-attention block over suffix rows against a seeded KV slab.
+
+    The suffix's q/k/v are computed exactly as in ``_attn_prefill``
+    (absolute positions → identical RoPE), and each suffix row's
+    attention spans cached keys [0, prefix_len) plus the causal suffix
+    — per-row the same reduction as full prefill's row at that
+    position, so outputs are bit-identical against full prefill's
+    reference/chunked lowering (attention, norms, and MLP are all
+    row-wise; see tests/test_prefix_cache.py). When full prefill
+    dispatches to the TPU flash kernel the two paths differ at ulp
+    level, as any two attention reduction orders do."""
+    b, s, _ = x.shape
+    h = common.rms_norm(x, p["norm1"])
+    ap = p["attn"]
+    q, k, v = _qkv(ap, cfg, h, ctx.positions, rope=not cfg.is_encdec)
+    kc, vc = cache["k"], cache["v"]
+    kmajor = cfg.kv_layout == "kmajor"
+    if kmajor:
+        kc, vc = kc.swapaxes(1, 2), vc.swapaxes(1, 2)    # → [B,S,kv,hd]
+    k_ctx = jnp.concatenate([kc[:, :prefix_len], k], axis=1)
+    v_ctx = jnp.concatenate([vc[:, :prefix_len], v], axis=1)
+    # same lowering rule as prefill_attention's non-flash path: long
+    # suffixes take the query-chunked O(q_chunk·Sk) route instead of
+    # materializing the full [S_suf, S_total] score tensor
+    if s > attention.Q_CHUNK and s % attention.Q_CHUNK == 0:
+        out = attention.chunked_attention(q, k_ctx, v_ctx, causal=True,
+                                          q_offset=prefix_len)
+    else:
+        out = attention.full_attention(q, k_ctx, v_ctx, causal=True,
+                                       q_offset=prefix_len)
+    x = x + out.reshape(b, s, cfg.q_dim) @ ap["wo"]
+    # write the suffix KV into the slab; stale entries past the prompt
+    # (a longer cached superstring) stay behind — decode masks them out
+    # via valid_len, exactly like prefill's zero padding
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k, prefix_len, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v, prefix_len, axis=1)
+    if kmajor:
+        kc, vc = kc.swapaxes(1, 2), vc.swapaxes(1, 2)
+    return x, {"k": kc, "v": vc}
+
+
+def _stack_prefill_continue(blocks: Tuple, cfg: ArchConfig, x: jax.Array,
+                            caches: Tuple, ctx: Ctx,
+                            prefix_len: int) -> Tuple[jax.Array, Tuple]:
+    def period_body(x, scan_in):
+        period_params, period_caches = scan_in
+        new_caches = []
+        for bi, spec in enumerate(cfg.period):
+            p = period_params[bi]
+            x, c = _attn_prefill_continue(cfg, p, x, period_caches[bi], ctx,
+                                          prefix_len)
+            h = common.rms_norm(x, p["norm2"])
+            x = x + mlp.apply_mlp(p["mlp"], h, cfg.activation)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(period_body, x, (blocks, caches))
+    return x, new_caches
+
+
+def supports_prefix_continue(cfg: ArchConfig) -> bool:
+    """Suffix-only prefill is row-wise-exact only for pure full-attention
+    + dense-MLP stacks: recurrent mixers and sliding-window rings carry
+    running state a mid-sequence entry cannot seed, and MoE capacity
+    clipping couples rows across the batch. ``attn_data_local`` configs
+    are excluded too — the continue path does not replicate
+    ``_attn_prefill``'s data-axis sharding constraints."""
+    return (all(spec.mixer == "attn" and spec.ffn == "mlp"
+                for spec in cfg.period)
+            and not cfg.is_encdec and not cfg.num_image_tokens
+            and not cfg.attn_data_local)
+
+
+def prefill_continue(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                     caches: Tuple, prefix_len: int
+                     ) -> Tuple[jax.Array, Tuple]:
+    """Suffix-only prefill seeded from a cached KV slab (DESIGN.md §9).
+
+    ``tokens`` [B,S_suf] are the prompt's uncached suffix, occupying
+    absolute positions ``prefix_len .. prefix_len+S_suf-1``; ``caches``
+    is a capacity-sized cache pytree whose first ``prefix_len``
+    sequence slots hold the shared prefix's KV (the shape
+    ``kv_transfer`` ships). Returns (last-token logits, updated
+    caches) — exactly what ``prefill`` returns for the full prompt.
+    ``prefix_len`` must be static (one compile per (suffix, prefix)
+    shape pair, like exact-shape prefill)."""
+    assert supports_prefix_continue(cfg), cfg.name
+    b, s = tokens.shape
+    positions = prefix_len + jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = _embed(params, cfg, tokens, positions)
+    ctx = Ctx(positions=positions, cross_embeds=None, causal=True,
+              cache_capacity=0)
+    x, new_caches = _stack_prefill_continue(params["blocks"], cfg, x,
+                                            caches, ctx, prefix_len)
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, new_caches
+
+
 def decode_step(params: Params, cfg: ArchConfig, caches: Tuple,
                 tokens: jax.Array, positions: jax.Array
                 ) -> Tuple[jax.Array, Tuple]:

@@ -4,9 +4,16 @@ lifecycle + metrics schema both domains report (DESIGN.md §8)."""
 from repro.serving.request import (IllegalTransition, Phase, Request,
                                    RequestState, TRANSITIONS)
 from repro.serving.metrics import METRIC_FIELDS, ServeMetrics
-from repro.serving.workload import (TracePhase, drifting_workload,
-                                    observed_workload, offline_workload,
-                                    online_workload, WORKLOAD_DISTS)
+from repro.serving.prefix_cache import (CacheStats, MatchResult, PrefixCache,
+                                        route_score)
+from repro.serving.workload import (PREFIX_TRACES, TracePhase,
+                                    drifting_workload,
+                                    fewshot_agentic_workload,
+                                    multi_turn_workload, observed_workload,
+                                    offline_workload, online_workload,
+                                    prefix_trace,
+                                    shared_system_prompt_workload,
+                                    WORKLOAD_DISTS)
 from repro.serving.simulator import (OnlineSimResult, RescheduleEvent,
                                      SimResult, simulate, simulate_colocated,
                                      simulate_online, slo_baselines)
@@ -16,10 +23,14 @@ from repro.serving.coordinator import (Coordinator, PollStatus, ServeRequest,
 from repro.serving import kv_transfer
 
 __all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
-           "TRANSITIONS", "METRIC_FIELDS", "ServeMetrics", "TracePhase",
-           "drifting_workload", "observed_workload", "offline_workload",
-           "online_workload", "WORKLOAD_DISTS", "OnlineSimResult",
-           "RescheduleEvent", "SimResult", "simulate", "simulate_colocated",
-           "simulate_online", "slo_baselines", "DecodeEngine",
-           "PrefillEngine", "Slot", "Coordinator", "PollStatus",
-           "ServeRequest", "ServeResult", "ServeSession", "kv_transfer"]
+           "TRANSITIONS", "METRIC_FIELDS", "ServeMetrics", "CacheStats",
+           "MatchResult", "PrefixCache", "route_score", "PREFIX_TRACES",
+           "TracePhase", "drifting_workload", "fewshot_agentic_workload",
+           "multi_turn_workload", "observed_workload", "offline_workload",
+           "online_workload", "prefix_trace",
+           "shared_system_prompt_workload", "WORKLOAD_DISTS",
+           "OnlineSimResult", "RescheduleEvent", "SimResult", "simulate",
+           "simulate_colocated", "simulate_online", "slo_baselines",
+           "DecodeEngine", "PrefillEngine", "Slot", "Coordinator",
+           "PollStatus", "ServeRequest", "ServeResult", "ServeSession",
+           "kv_transfer"]

@@ -24,6 +24,14 @@ proportions when given one, and can be rebalanced mid-serve from a
 rescheduled Placement's flow assignment (``apply_flow_assignment`` —
 the runtime-domain half of the online rescheduling path, DESIGN.md §7).
 
+Shared-prefix KV reuse (DESIGN.md §9): with ``prefix_cache_bytes`` set
+the coordinator keeps one radix-tree ``PrefixCache`` per prefill
+engine, holding real KV slabs keyed by prompt tokens. Dispatch across
+prefill engines scores matched-prefix length against flow-weighted
+load (mirroring the production-stack KV router), and a hit runs
+``PrefillEngine.prefill_suffix`` — only the uncached suffix pays
+compute, bit-identically to full prefill on supporting archs.
+
 This is the runtime-domain path (real JAX execution); the
 scheduling-domain evaluation lives in ``simulator.py``.
 """
@@ -32,7 +40,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import (Any, Callable, Dict, List, Optional, Sequence)
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 import numpy as np
 
@@ -40,6 +48,7 @@ from repro.configs.base import ArchConfig
 from repro.serving import kv_transfer
 from repro.serving.engine import DecodeEngine, PrefillEngine
 from repro.serving.metrics import ServeMetrics
+from repro.serving.prefix_cache import MatchResult, PrefixCache, route_score
 from repro.serving.request import Request, RequestState
 
 
@@ -126,7 +135,8 @@ class ServeSession:
         assert req.rid not in self._entries, f"duplicate rid {req.rid}"
         arrival = self.now() if arrival_time is None else arrival_time
         life = Request(rid=req.rid, s_in=len(req.prompt),
-                       s_out=req.max_new_tokens, arrival=arrival)
+                       s_out=req.max_new_tokens, arrival=arrival,
+                       tokens=tuple(int(t) for t in req.prompt))
         self._entries[req.rid] = _Entry(req=req, life=life, tokens=[],
                                         on_token=on_token)
         self._order.append(req.rid)
@@ -174,18 +184,19 @@ class ServeSession:
             e.life.advance(RequestState.PREFILLING, t)
         if self.inline_prefill:
             # legacy path: one EXACT-shape call per request (no bucket
-            # padding), exactly what the old blocking serve() loop did
-            outs = []
+            # padding, no prefix reuse) on engine 0 — exactly what the
+            # old blocking serve() loop did
+            outs = {}
             for e in batch:
                 tok, cache = self.coord.prefill_engine.prefill(
                     np.asarray(e.req.prompt, np.int32)[None], **e.req.extra)
-                outs.append((int(tok[0]), cache))
+                outs[e.req.rid] = (int(tok[0]), cache, 0)
         else:
-            outs = self.coord.prefill_engine.prefill_batch(
-                [np.asarray(e.req.prompt, np.int32) for e in batch],
-                [e.req.extra for e in batch])
+            outs = self._route_and_prefill(batch)
         t = self.now()
-        for e, (first, cache) in zip(batch, outs):
+        for e in batch:
+            first, cache, cached = outs[e.req.rid]
+            e.life.cached_len = cached
             self._emit(e, first, finished=e.req.max_new_tokens <= 1)
             if e.req.max_new_tokens <= 1:
                 self._finish(e)       # PREFILLING → DONE (no KV ships)
@@ -195,6 +206,61 @@ class ServeSession:
             e.life.advance(RequestState.KV_TRANSFER, t)
             self._handoff.append(e.req.rid)
         return True
+
+    def _route_and_prefill(self, batch: List[_Entry]
+                           ) -> Dict[int, Tuple[int, Any, int]]:
+        """Route each request to a prefill engine (§9 cache-aware when
+        caches exist), run hits as suffix-only prefills seeded from
+        their matched KV slab and misses as one bucketed micro-batch
+        per engine, then record every freshly produced slab in the
+        winning engine's radix cache. Returns
+        {rid: (first_token, cache, cached_len)}."""
+        coord = self.coord
+        routed: Dict[int, List[_Entry]] = {}
+        matches: Dict[int, MatchResult] = {}
+        for e in batch:
+            idx, m = coord.route_prefill(e.req.prompt)
+            routed.setdefault(idx, []).append(e)
+            if m is not None:
+                matches[e.req.rid] = m
+        out: Dict[int, Tuple[int, Any, int]] = {}
+        for idx in sorted(routed):
+            eng = coord.prefill_engines[idx]
+            cache_obj = (coord.prefix_caches[idx]
+                         if coord.prefix_caches is not None else None)
+            hits, misses = [], []
+            for e in routed[idx]:
+                m = matches.get(e.req.rid)
+                cached = 0
+                if (m is not None and m.payload is not None
+                        and eng.supports_prefix_reuse and not e.req.extra):
+                    cached = min(m.length, len(e.req.prompt) - 1)
+                    if (cached < 1 or kv_transfer.slab_capacity(
+                            m.payload, coord.cfg) < len(e.req.prompt)):
+                        cached = 0
+                (hits if cached else misses).append((e, cached))
+            for e, cached in hits:
+                tok, cache = eng.prefill_suffix(
+                    np.asarray(e.req.prompt, np.int32), cached,
+                    matches[e.req.rid].payload)
+                out[e.req.rid] = (tok, cache, cached)
+            if misses:
+                res = eng.prefill_batch(
+                    [np.asarray(e.req.prompt, np.int32) for e, _ in misses],
+                    [e.req.extra for e, _ in misses])
+                for (e, _), (tok, cache) in zip(misses, res):
+                    out[e.req.rid] = (tok, cache, 0)
+            for e in routed[idx]:
+                if (cache_obj is not None and eng.supports_prefix_reuse
+                        and not e.req.extra):
+                    slab = out[e.req.rid][1]
+                    cache_obj.insert(
+                        tuple(int(t) for t in e.req.prompt), payload=slab,
+                        payload_bytes=kv_transfer.transfer_bytes(slab))
+                m = matches.get(e.req.rid)
+                if m is not None and m.node is not None:
+                    cache_obj.unlock(m.node)
+        return out
 
     def _step_handoff(self) -> bool:
         """Admit prefilled requests into free decode slots: transfer
@@ -207,7 +273,8 @@ class ServeSession:
             if eng_idx is None:
                 break
             e = self._entries[self._handoff.popleft()]
-            cache = kv_transfer.pad_capacity(e.cache, self.coord.capacity)
+            cache = kv_transfer.pad_capacity(e.cache, self.coord.capacity,
+                                             cfg=self.coord.cfg)
             cache = kv_transfer.transfer(cache)
             self.coord.decode_engines[eng_idx].admit(
                 e.req.rid, e.first, len(e.req.prompt),
@@ -278,13 +345,33 @@ class ServeSession:
 
 
 class Coordinator:
+    """``num_prefill_engines``/``prefix_cache_bytes``/``cache_alpha``
+    configure the §9 prefix-reuse path: N prefill engines, each with a
+    byte-budgeted radix cache of served prompts (``prefix_cache_bytes``
+    is the per-engine budget; None disables reuse entirely — the
+    pre-§9 behaviour, byte-for-byte)."""
+
     def __init__(self, cfg: ArchConfig, params: Any,
                  num_decode_engines: int = 1, slots_per_engine: int = 4,
                  capacity: int = 128,
-                 route_weights: Optional[Sequence[float]] = None):
+                 route_weights: Optional[Sequence[float]] = None,
+                 num_prefill_engines: int = 1,
+                 prefill_route_weights: Optional[Sequence[float]] = None,
+                 prefix_cache_bytes: Optional[float] = None,
+                 cache_alpha: float = 2.0):
         self.cfg = cfg
         self.capacity = capacity
-        self.prefill_engine = PrefillEngine(cfg, params, capacity)
+        self.cache_alpha = cache_alpha
+        self.prefill_engines = [PrefillEngine(cfg, params, capacity)
+                                for _ in range(num_prefill_engines)]
+        self.prefix_caches: Optional[List[PrefixCache]] = None
+        if prefix_cache_bytes is not None:
+            self.prefix_caches = [PrefixCache(prefix_cache_bytes)
+                                  for _ in range(num_prefill_engines)]
+        pw = list(prefill_route_weights or [1.0] * num_prefill_engines)
+        assert len(pw) == num_prefill_engines
+        self._prefill_weights = np.asarray(pw, float) / sum(pw)
+        self._prefill_routed = np.zeros(num_prefill_engines)
         self.decode_engines = [DecodeEngine(cfg, params, slots_per_engine,
                                             capacity)
                                for _ in range(num_decode_engines)]
@@ -294,7 +381,36 @@ class Coordinator:
         self._routed = np.zeros(num_decode_engines)
         self._active_session: Optional[ServeSession] = None
 
+    @property
+    def prefill_engine(self) -> PrefillEngine:
+        """Back-compat alias: the first (pre-§9: only) prefill engine."""
+        return self.prefill_engines[0]
+
     # -- routing --------------------------------------------------------
+    def route_prefill(self, prompt: np.ndarray
+                      ) -> Tuple[int, Optional[MatchResult]]:
+        """Pick a prefill engine for ``prompt``: matched-prefix ratio
+        blended with normalized flow-weighted load (``route_score``,
+        mirroring the production-stack KV router). Returns the engine
+        index and — when prefix caching is on — the winner's match,
+        with its providing path pinned until the caller unlocks it.
+        Cache-less (or single-engine cold) routing reduces to
+        least-normalized-load."""
+        base = (self._prefill_routed + 1) / np.maximum(
+            self._prefill_weights, 1e-9)
+        if self.prefix_caches is None:
+            idx = int(np.argmin(base))
+            self._prefill_routed[idx] += 1
+            return idx, None
+        tokens = tuple(int(t) for t in prompt)
+        lo = float(base.min())
+        scores = [route_score(
+            self.prefix_caches[i].matched_len(tokens) / max(len(tokens), 1),
+            float(base[i]), lo, self.cache_alpha)
+            for i in range(len(self.prefill_engines))]
+        idx = int(np.argmax(scores))
+        self._prefill_routed[idx] += 1
+        return idx, self.prefix_caches[idx].match(tokens, lock=True)
     def pick_engine_with_free_slot(self) -> Optional[int]:
         """Least normalized load among flow-weighted engines that have a
         free slot (same rule as the simulator's dispatch); None when

@@ -52,10 +52,18 @@ class PrefillEngine:
         self.cache_capacity = cache_capacity
         self.supports_padding = all(spec.mixer in ("attn", "cross_attn")
                                     for spec in cfg.period)
+        # suffix-only prefill (DESIGN.md §9) is exact only for pure
+        # attention+MLP stacks; recurrent/SWA archs fall back to full
+        # prefill (their prefix "KV" is a constant-size state snapshot
+        # a mid-sequence entry cannot re-seed exactly)
+        self.supports_prefix_reuse = transformer.supports_prefix_continue(cfg)
         self._fn = jax.jit(
             functools.partial(transformer.prefill, cfg=cfg,
                               cache_capacity=cache_capacity),
             static_argnames=())
+        self._suffix_fn = jax.jit(
+            functools.partial(transformer.prefill_continue, cfg=cfg),
+            static_argnames=("prefix_len",))
 
     def prefill(self, tokens: np.ndarray, **extra) -> Tuple[np.ndarray, Any]:
         """tokens [B,S] (exact shapes) → (next_token [B], cache)."""
@@ -63,6 +71,26 @@ class PrefillEngine:
                                  **extra)
         next_tok = jnp.argmax(logits, axis=-1)
         return np.asarray(next_tok), cache
+
+    def prefill_suffix(self, prompt: np.ndarray, cached_len: int,
+                       slab: Any) -> Tuple[int, Any]:
+        """Prefill only ``prompt[cached_len:]`` seeded from ``slab`` — a
+        batch-1 cache pytree (the ``kv_transfer`` shape discipline)
+        whose first ``cached_len`` sequence slots hold the shared
+        prefix's KV. Returns (first_token, batch-1 cache) exactly like
+        a ``prefill_batch`` element; bit-identical to full prefill on
+        supporting archs (exact shapes: one compile per
+        (suffix, prefix) length pair)."""
+        assert self.supports_prefix_reuse, self.cfg.name
+        assert 0 < cached_len < len(prompt), (cached_len, len(prompt))
+        cap = kv_transfer.slab_capacity(slab, self.cfg)
+        assert cap >= len(prompt), (cap, len(prompt))
+        suffix = np.asarray(prompt[cached_len:], np.int32)[None]
+        logits, cache = self._suffix_fn(self.params,
+                                        tokens=jnp.asarray(suffix),
+                                        caches=slab,
+                                        prefix_len=int(cached_len))
+        return int(np.asarray(jnp.argmax(logits, axis=-1))[0]), cache
 
     def prefill_batch(self, prompts: Sequence[np.ndarray],
                       extras: Optional[Sequence[Dict[str, Any]]] = None,

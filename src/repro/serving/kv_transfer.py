@@ -12,10 +12,81 @@ prefill batch.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+
+#: Roles a cache leaf can play in the handoff / prefix-slab machinery
+#: (DESIGN.md §3, §9). Only "kv" and "pos" leaves have a growable
+#: sequence axis; everything else is shape-fixed and must pass through
+#: untouched:
+#:   kv         — full-attention K/V slab, seq axis grows to capacity
+#:   pos        — growable position leaf (legacy heuristic only; the
+#:                declared classification never produces it)
+#:   window_kv  — sliding-window ring buffer (fixed size = window)
+#:   window_pos — ring-buffer absolute positions (fixed size = window)
+#:   cross_kv   — cross-attention memory KV (fixed size = image/enc len)
+#:   state      — constant-size recurrent state (SSM/xLSTM), O(1) in seq
+LEAF_ROLES = ("kv", "pos", "window_kv", "window_pos", "cross_kv", "state")
+
+
+def leaf_role(path: Sequence[Any], leaf: Any, cfg: Any = None) -> str:
+    """Classify one cache-pytree leaf (see ``LEAF_ROLES``).
+
+    With ``cfg`` (an ArchConfig) the role is DECLARED: the leaf's
+    top-level index in the period-stacked cache names its BlockSpec, so
+    cross-attention and sliding-window K/V — which match the bare
+    ``k``/``v`` name+ndim heuristic but must never be grown (their
+    "sequence" axis is image-token count / ring-buffer window) — are
+    classified correctly. Without ``cfg`` the legacy heuristic applies:
+    literal names ``k``/``v`` at ndim 5 are "kv", ``pos`` at ndim 3 is
+    a growable "pos", anything else is "state"."""
+    keys = [getattr(p, "key", getattr(p, "name", getattr(p, "idx", None)))
+            for p in path]
+    name = keys[-1] if keys else ""
+    if cfg is not None:
+        block = next((k for k in keys if isinstance(k, int)), None)
+        if block is None or block >= len(cfg.period):
+            return "state"
+        mixer = cfg.period[block].mixer
+        if mixer == "cross_attn":
+            return "cross_kv"
+        if mixer == "swa":
+            return "window_pos" if name == "pos" else "window_kv"
+        if mixer == "attn" and name in ("k", "v"):
+            return "kv"
+        return "state"
+    if name in ("k", "v") and getattr(leaf, "ndim", 0) == 5:
+        return "kv"
+    if name == "pos" and getattr(leaf, "ndim", 0) == 3:
+        return "pos"
+    return "state"
+
+
+def kv_seq_axis(cfg: Any = None) -> int:
+    """Axis of the growable sequence dim on a role-"kv" leaf (the cache
+    layout is [period, batch, seq, kv_heads, hd] for "bshd" and
+    [period, batch, kv_heads, seq, hd] for "kmajor")."""
+    if cfg is not None and getattr(cfg, "kv_layout", "bshd") == "kmajor":
+        return 3
+    return 2
+
+
+def slab_capacity(cache: Any, cfg: Any = None) -> int:
+    """Token capacity of a cache slab's attention KV (DESIGN.md §9):
+    the sequence extent of its role-"kv" leaves. 0 when the cache has
+    none (pure recurrent state — a constant-size prefix snapshot)."""
+    axis = kv_seq_axis(cfg)
+    caps = set()
+
+    def visit(path, leaf):
+        if leaf_role(path, leaf, cfg) == "kv":
+            caps.add(int(leaf.shape[axis]))
+
+    jax.tree_util.tree_map_with_path(visit, cache)
+    assert len(caps) <= 1, f"inconsistent slab KV capacities: {caps}"
+    return caps.pop() if caps else 0
 
 
 def slice_request(cache: Any, batch_index: int) -> Any:
@@ -30,18 +101,25 @@ def slice_request(cache: Any, batch_index: int) -> Any:
     return jax.tree.map(pick, cache)
 
 
-def pad_capacity(cache: Any, target: int) -> Any:
-    """Grow attention caches' sequence dim (axis 2 of k/v/pos leaves) to
-    ``target`` slots. Non-attention state (SSM/xLSTM) passes through."""
+def pad_capacity(cache: Any, target: int, cfg: Any = None) -> Any:
+    """Grow full-attention caches' sequence dim to ``target`` slots.
+
+    Leaves are classified by ``leaf_role``: only role-"kv" (and, on the
+    cfg-less heuristic path, legacy "pos") leaves grow; sliding-window
+    ring buffers, cross-attention memory, and constant-size recurrent
+    state pass through untouched — growing a ring buffer or an
+    image-token memory would corrupt decode masking. Pass ``cfg`` so
+    those leaves are classified declaratively rather than by the bare
+    k/v/pos name+ndim heuristic."""
+    axis = kv_seq_axis(cfg)
 
     def pad(path, leaf):
-        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
-        name = keys[-1] if keys else ""
-        if name in ("k", "v") and leaf.ndim == 5 and leaf.shape[2] < target:
+        role = leaf_role(path, leaf, cfg)
+        if role == "kv" and leaf.ndim == 5 and leaf.shape[axis] < target:
             cfgpad = [(0, 0)] * leaf.ndim
-            cfgpad[2] = (0, target - leaf.shape[2])
+            cfgpad[axis] = (0, target - leaf.shape[axis])
             return jnp.pad(leaf, cfgpad)
-        if name == "pos" and leaf.ndim == 3 and leaf.shape[2] < target:
+        if role == "pos" and leaf.ndim == 3 and leaf.shape[2] < target:
             cfgpad = [(0, 0), (0, 0), (0, target - leaf.shape[2])]
             return jnp.pad(leaf, cfgpad, constant_values=-1)
         return leaf

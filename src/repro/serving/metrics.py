@@ -19,9 +19,15 @@ from repro.serving.request import Request
 
 #: The shared runtime/simulator metrics schema. Every name is a
 #: property (or method, for slo_attainment) on ServeMetrics and on
-#: every subclass — tests/test_lifecycle.py asserts parity.
+#: every subclass — tests/test_lifecycle.py asserts parity. The last
+#: three are the prefix-cache fields (DESIGN.md §9): both domains stamp
+#: ``Request.cached_len`` at prefill dispatch, so sim-vs-runtime hit
+#: rates are computed from lifecycle records the same way and are
+#: directly comparable.
 METRIC_FIELDS = ("decode_throughput", "avg_latency", "p99_latency",
-                 "avg_ttft", "p99_ttft", "avg_tpot", "slo_attainment")
+                 "avg_ttft", "p99_ttft", "avg_tpot", "slo_attainment",
+                 "cache_hit_rate", "reused_tokens",
+                 "prefill_tokens_computed")
 
 
 @dataclasses.dataclass
@@ -60,6 +66,24 @@ class ServeMetrics:
     def avg_tpot(self) -> float:
         return self._stat("tpot", np.mean)
 
+    # -- prefix-cache fields (DESIGN.md §9) -----------------------------
+    @property
+    def reused_tokens(self) -> int:
+        """Prompt tokens served from a prefix cache instead of computed."""
+        return int(sum(r.cached_len for r in self.requests))
+
+    @property
+    def prefill_tokens_computed(self) -> int:
+        """Prompt tokens that actually paid prefill compute."""
+        return int(sum(r.s_in - r.cached_len for r in self.requests))
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Token-level hit rate: reused / total prompt tokens (0.0 on a
+        cold or cache-less run)."""
+        total = sum(r.s_in for r in self.requests)
+        return self.reused_tokens / total if total else 0.0
+
     def slo_attainment(self, slo_per_request: Dict[int, float],
                        scale: float) -> float:
         ok = sum(1 for r in self.requests
@@ -75,7 +99,10 @@ class ServeMetrics:
                "p99_latency": self.p99_latency,
                "avg_ttft": self.avg_ttft,
                "p99_ttft": self.p99_ttft,
-               "avg_tpot": self.avg_tpot}
+               "avg_tpot": self.avg_tpot,
+               "cache_hit_rate": self.cache_hit_rate,
+               "reused_tokens": float(self.reused_tokens),
+               "prefill_tokens_computed": float(self.prefill_tokens_computed)}
         if slo is not None:
             out["slo_attainment"] = self.slo_attainment(slo, slo_scale)
         return out

@@ -1,0 +1,336 @@
+"""Shared-prefix KV reuse: a token-level radix-tree cache (DESIGN.md §9).
+
+One tree per prefill replica, in BOTH domains. Heavy real traffic
+(multi-turn chat, shared system prompts, few-shot agentic templates)
+re-prefills the same prefix tokens endlessly; caching KV by token
+prefix and prefilling only the uncached suffix is the dominant
+production optimization (SGLang's RadixAttention, vLLM's prefix
+caching). The two domains use the same tree:
+
+  * runtime (``serving/coordinator.py``): nodes carry a real KV slab —
+    the single-request cache pytree a finished prefill produced, at the
+    engine's slot capacity (``kv_transfer`` shape discipline). A hit
+    seeds ``PrefillEngine.prefill_suffix``.
+  * simulator (``serving/simulator.py``): nodes carry no payload; the
+    tree only answers "how many prompt tokens does this replica already
+    hold", and the cost model charges prefill on the uncached suffix.
+
+Accounting follows the domain: the simulator charges
+``bytes_per_token`` per stored edge token (radix sharing stores a
+shared prefix once); the runtime charges each attached slab's real
+buffer bytes (slabs are capacity-padded, so per-token accounting would
+undercount). Budgets come from the cost model's memory headroom
+(``repro.core.cost_model.prefix_cache_budget``).
+
+Eviction is LRU over *unpinned leaves* only: ``match(..., lock=True)``
+ref-counts the path that backs an in-flight prefill, and interior
+nodes are never dropped before their children — so a pinned prefix can
+never be yanked out from under a running suffix prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+def _common_len(a: Sequence[int], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
+class _Node:
+    """One radix edge: ``edge`` tokens appended to the parent's path."""
+
+    __slots__ = ("edge", "children", "parent", "refs", "last_access",
+                 "payload", "payload_bytes", "depth")
+
+    def __init__(self, edge: Tuple[int, ...], parent: Optional["_Node"]):
+        self.edge = edge
+        self.children: Dict[int, "_Node"] = {}
+        self.parent = parent
+        self.refs = 0                  # in-flight readers pinning this path
+        self.last_access = 0
+        self.payload: Any = None       # runtime KV slab (None in simulator)
+        self.payload_bytes = 0
+        self.depth = (parent.depth if parent else 0) + len(edge)
+
+
+@dataclasses.dataclass
+class MatchResult:
+    """Longest cached prefix of a prompt on one replica.
+
+    ``length`` tokens are already held; ``payload`` (runtime only) is a
+    KV slab covering at least ``length`` positions; ``node`` is the
+    pinned handle to pass to ``unlock`` when ``lock=True`` was used."""
+    length: int
+    payload: Any = None
+    node: Optional[_Node] = None
+
+
+@dataclasses.dataclass
+class CacheStats:
+    lookups: int = 0
+    hits: int = 0                 # lookups with length > 0
+    reused_tokens: int = 0
+    inserted_tokens: int = 0
+    evicted_tokens: int = 0
+
+
+class PrefixCache:
+    """Token-level radix tree with ref-counted nodes and LRU leaf
+    eviction under a byte budget (DESIGN.md §9)."""
+
+    def __init__(self, capacity_bytes: Optional[float] = None,
+                 bytes_per_token: float = 0.0):
+        self.capacity_bytes = (float("inf") if capacity_bytes is None
+                               else float(capacity_bytes))
+        self.bytes_per_token = float(bytes_per_token)
+        self.root = _Node((), None)
+        self.used_bytes = 0.0
+        self.stats = CacheStats()
+        self._clock = itertools.count(1)
+
+    # -- internals ------------------------------------------------------
+    def _touch(self, node: _Node) -> None:
+        t = next(self._clock)
+        while node is not None:
+            node.last_access = t
+            node = node.parent
+
+    def _walk(self, tokens: Sequence[int]) -> Tuple[_Node, int]:
+        """Descend as far as ``tokens`` match. Returns (deepest node the
+        match reaches into, matched length). The node may be matched
+        only partway through its edge (matched < node.depth)."""
+        node, i = self.root, 0
+        while i < len(tokens):
+            child = node.children.get(tokens[i])
+            if child is None:
+                break
+            c = _common_len(child.edge, tokens[i:])
+            i += c
+            node = child
+            if c < len(child.edge):
+                break
+        return node, i
+
+    def _split(self, node: _Node, at: int) -> _Node:
+        """Split ``node``'s edge after ``at`` tokens; returns the new
+        parent holding the first ``at`` tokens. Byte usage, refs, and
+        payload placement are preserved (payload stays on the deeper
+        half — it covers the full original path)."""
+        assert 0 < at < len(node.edge)
+        top = _Node(node.edge[:at], node.parent)
+        top.refs = node.refs           # a pinned path pins every ancestor
+        top.last_access = node.last_access
+        node.parent.children[top.edge[0]] = top
+        node.edge = node.edge[at:]
+        node.parent = top
+        node.depth = top.depth + len(node.edge)
+        top.children[node.edge[0]] = node
+        return top
+
+    def _find_payload(self, node: _Node) -> Any:
+        """Any slab in ``node``'s subtree covers the path prefix through
+        ``node`` (slabs are inserted for full prompts, so a descendant's
+        slab is a superstring's KV)."""
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            if n.payload is not None:
+                return n.payload, n
+            stack.extend(n.children.values())
+        return None, None
+
+    # -- queries --------------------------------------------------------
+    def match(self, tokens: Sequence[int], lock: bool = False) -> MatchResult:
+        """Longest cached prefix of ``tokens``. With ``lock=True`` the
+        providing path is pinned (ref-counted) until ``unlock``."""
+        self.stats.lookups += 1
+        if not len(tokens):
+            return MatchResult(0)
+        node, length = self._walk(tokens)
+        if length == 0:
+            return MatchResult(0)
+        self.stats.hits += 1
+        payload, holder = (None, None)
+        if node is not self.root:
+            payload, holder = self._find_payload(node)
+        self._touch(node)
+        pinned = None
+        if lock:
+            pinned = holder if holder is not None else node
+            n = pinned
+            while n is not None:
+                n.refs += 1
+                n = n.parent
+        return MatchResult(length, payload, pinned)
+
+    def unlock(self, node: Optional[_Node]) -> None:
+        while node is not None:
+            node.refs -= 1
+            assert node.refs >= 0, "prefix-cache refcount underflow"
+            node = node.parent
+
+    def matched_len(self, tokens: Sequence[int]) -> int:
+        """Match length without touching stats or LRU order (routing
+        probes score every replica; only the winner 'uses' its cache)."""
+        if not len(tokens):
+            return 0
+        _, length = self._walk(tokens)
+        return length
+
+    # -- insertion ------------------------------------------------------
+    def insert(self, tokens: Sequence[int], payload: Any = None,
+               payload_bytes: int = 0) -> int:
+        """Record that this replica now holds KV for ``tokens``.
+
+        Returns the number of NEW tokens stored (0 if fully present or
+        the budget cannot fit them). ``payload`` (runtime) is attached
+        at the deepest node of the path; replacing an existing slab
+        swaps the byte charge."""
+        tokens = tuple(int(t) for t in tokens)
+        if not tokens:
+            return 0
+        node, length = self._walk(tokens)
+        if length < node.depth:                     # stopped mid-edge
+            node = self._split(node, len(node.edge) - (node.depth - length))
+        new = tokens[length:]
+        need = len(new) * self.bytes_per_token
+        if payload is not None:
+            need += payload_bytes
+            if not new:
+                # replacing the payload already attached at this node:
+                # its bytes are freed by the swap, so only charge the
+                # delta — evicting bystanders for a net-zero replacement
+                # would throw away their cached prefixes for nothing
+                need -= node.payload_bytes
+        # pin the extension point: _make_room's LRU sweep must not evict
+        # the (possibly unpinned-leaf) node the new edge attaches to —
+        # it would orphan the insert and leak its byte charge
+        anchor = node
+        pin = anchor
+        while pin is not None:
+            pin.refs += 1
+            pin = pin.parent
+        try:
+            if not self._make_room(need):
+                self._touch(node)
+                return 0
+            if new:
+                leaf = _Node(new, node)
+                node.children[new[0]] = leaf
+                node = leaf
+                self.used_bytes += len(new) * self.bytes_per_token
+                self.stats.inserted_tokens += len(new)
+            if payload is not None:
+                if node.payload is not None:
+                    self.used_bytes -= node.payload_bytes
+                node.payload = payload
+                node.payload_bytes = payload_bytes
+                self.used_bytes += payload_bytes
+            self._touch(node)
+            return len(new)
+        finally:
+            pin = anchor
+            while pin is not None:
+                pin.refs -= 1
+                pin = pin.parent
+
+    # -- eviction -------------------------------------------------------
+    def _evictable(self) -> List[_Node]:
+        out = []
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if not n.children and n.refs == 0:
+                out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    def _drop_leaf(self, leaf: _Node) -> float:
+        freed = len(leaf.edge) * self.bytes_per_token + leaf.payload_bytes
+        self.used_bytes -= freed
+        self.stats.evicted_tokens += len(leaf.edge)
+        del leaf.parent.children[leaf.edge[0]]
+        return freed
+
+    def _make_room(self, need: float) -> bool:
+        """Evict LRU unpinned leaves until ``need`` more bytes fit.
+        Never drops a pinned node. Returns False when impossible."""
+        if need > self.capacity_bytes:
+            return False
+        while self.used_bytes + need > self.capacity_bytes:
+            leaves = self._evictable()
+            if not leaves:
+                return False
+            victim = min(leaves, key=lambda n: n.last_access)
+            self._drop_leaf(victim)
+            # a payload-less interior node that just became a bare leaf
+            # answers matches it can no longer back — let the LRU sweep
+            # reclaim it on the next round (its last_access is stale)
+        return True
+
+    def evict_tokens(self, n_tokens: int) -> int:
+        """Explicitly drop ≥ n_tokens of unpinned LRU leaves (used by
+        tests and by operators shrinking a replica's budget)."""
+        dropped = 0
+        while dropped < n_tokens:
+            leaves = self._evictable()
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.last_access)
+            dropped += len(victim.edge)
+            self._drop_leaf(victim)
+        return dropped
+
+    def clear(self) -> None:
+        """Invalidate everything — a §7 placement swap moves the replica
+        off the devices that hold this KV."""
+        self.root = _Node((), None)
+        self.used_bytes = 0.0
+
+    # -- introspection --------------------------------------------------
+    @property
+    def num_tokens(self) -> int:
+        total = 0
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            total += len(n.edge)
+            stack.extend(n.children.values())
+        return total
+
+    @property
+    def num_nodes(self) -> int:
+        total = 0
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            total += 1
+            stack.extend(n.children.values())
+        return total
+
+    @property
+    def hit_rate(self) -> float:
+        return self.stats.hits / max(self.stats.lookups, 1)
+
+
+# ---------------------------------------------------------------------------
+# Cache-aware routing score (mirrors vLLM production-stack's KV router)
+# ---------------------------------------------------------------------------
+
+
+def route_score(hit_ratio: float, load: float, min_load: float,
+                cache_alpha: float = 2.0) -> float:
+    """Blend matched-prefix ratio with normalized flow-weighted load.
+
+    ``load`` is the replica's (dispatched+1)/flow_weight term,
+    ``min_load`` the fleet minimum; with no cache hits anywhere the rule
+    reduces exactly to least-normalized-load dispatch (the pre-§9 rule).
+    ``cache_alpha`` is how many multiples of the fleet-relative load
+    imbalance one full prefix hit is worth."""
+    return cache_alpha * hit_ratio - (load / max(min_load, 1e-12) - 1.0)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+from typing import Optional, Sequence
 
 
 class RequestState(enum.Enum):
@@ -64,6 +64,23 @@ class Request:
     #: tokens actually produced — differs from s_out when the runtime
     #: truncates at slot capacity; None means "all s_out produced"
     tokens_out: Optional[int] = None
+    # -- shared-prefix descriptors (DESIGN.md §9) -----------------------
+    #: prompt token ids (length s_in). The runtime prefix cache keys on
+    #: these; trace generators fill them for shared-prefix workloads.
+    #: None means "content-free request" (legacy traces): no KV reuse.
+    tokens: Optional[Sequence[int]] = None
+    #: which prefix group (conversation / template) this prompt extends,
+    #: and how many leading tokens it shares with the group's
+    #: ACCUMULATED context (prompt + trace response for multi-turn) —
+    #: a descriptor of trace structure for analysis, NOT a cache
+    #: oracle: the reusable length is bounded by what a replica
+    #: actually prefilled, and only ``cached_len`` (stamped at
+    #: dispatch) reports realized reuse
+    prefix_id: Optional[int] = None
+    shared_len: int = 0
+    #: prompt tokens served from a prefix cache at prefill dispatch
+    #: (stamped by whichever domain ran the prefill; 0 = cold)
+    cached_len: int = 0
 
     # -- lifecycle ------------------------------------------------------
     def advance(self, state: RequestState, t: float) -> "Request":
@@ -95,6 +112,7 @@ class Request:
         self.prefill_start = None
         self.prefill_end = None
         self.transfer_end = None
+        self.cached_len = 0      # re-stamped when the new replica prefills
         return self
 
     # -- derived metrics ------------------------------------------------

@@ -17,6 +17,15 @@ Faithful mechanics:
     ``chunk_tokens`` steps at the cost model's step latency for the
     current batch size and mean context.
 
+Shared-prefix KV reuse (DESIGN.md §9): with ``prefix_caching=True``
+every prefill replica carries a token-level radix tree of the prompts
+it has served (budgeted by the cost model's memory headroom, LRU leaf
+eviction). Dispatch becomes cache-aware — replicas are scored by
+matched-prefix length blended with flow weight and load — and prefill
+charges the cost model only for the uncached suffix. A §7 placement
+swap invalidates every tree: the cached KV lives on the old replicas'
+devices.
+
 Online rescheduling (DESIGN.md §7): ``simulate_online`` additionally
 feeds every arrival to a ``WorkloadMonitor`` and, when the observed mix
 drifts, asks a rescheduler callback for a new placement and applies it
@@ -44,9 +53,11 @@ import numpy as np
 from repro.core.cluster import ClusterSpec
 from repro.core.cost_model import (ModelProfile, decode_step_latency,
                                    kv_transfer_time, max_decode_batch,
-                                   prefill_latency)
+                                   prefill_latency, prefix_bytes_per_token,
+                                   prefix_cache_budget)
 from repro.core.placement import Placement, ReplicaPlacement
 from repro.serving.metrics import ServeMetrics
+from repro.serving.prefix_cache import PrefixCache, route_score
 from repro.serving.request import Request, RequestState
 
 
@@ -66,6 +77,9 @@ class RescheduleEvent:
     migrated: int             # decode-resident requests whose KV moved
     restarted: int            # queued / mid-prefill requests restarted
     max_flow: float           # new placement's solved flow
+    #: cached prefix tokens dropped with the old prefill replicas
+    #: (their KV lives on devices the new placement reassigned, §9)
+    prefix_tokens_invalidated: int = 0
 
 
 @dataclasses.dataclass
@@ -75,11 +89,13 @@ class OnlineSimResult(SimResult):
 
 
 class _PrefillServer:
-    def __init__(self, replica: ReplicaPlacement):
+    def __init__(self, replica: ReplicaPlacement,
+                 cache: Optional[PrefixCache] = None):
         self.replica = replica
         self.queue: List[Request] = []
         self.busy = False
         self.current: Optional[Request] = None
+        self.cache = cache               # per-replica radix state (§9)
 
 
 class _DecodeServer:
@@ -102,11 +118,17 @@ class _DisaggSim:
 
     def __init__(self, cluster: ClusterSpec, profile: ModelProfile,
                  placement: Placement, chunk_tokens: int,
-                 typical_context: int):
+                 typical_context: int, prefix_caching: bool = False,
+                 cache_alpha: float = 2.0,
+                 prefix_budget_fraction: float = 0.5):
         self.cluster = cluster
         self.profile = profile
         self.chunk_tokens = chunk_tokens
         self.typical_context = typical_context
+        self.prefix_caching = prefix_caching
+        self.cache_alpha = cache_alpha
+        self.prefix_budget_fraction = prefix_budget_fraction
+        self._pins: Dict[int, Tuple[PrefixCache, object]] = {}
         self.epoch = 0
         self.events: List[Tuple[float, int, str, object]] = []
         self.seq = 0
@@ -123,9 +145,19 @@ class _DisaggSim:
             self._record_epoch_reps()
 
     # -- placement installation -----------------------------------------
+    def _new_cache(self, replica: ReplicaPlacement) -> Optional[PrefixCache]:
+        if not self.prefix_caching:
+            return None
+        budget = prefix_cache_budget(self.cluster, self.profile, replica.plan,
+                                     batch=1, s_total=self.typical_context,
+                                     fraction=self.prefix_budget_fraction)
+        return PrefixCache(capacity_bytes=budget,
+                           bytes_per_token=prefix_bytes_per_token(
+                               self.profile))
+
     def _install(self, placement: Placement) -> bool:
         self.placement = placement
-        self.prefill = {r.group_id: _PrefillServer(r)
+        self.prefill = {r.group_id: _PrefillServer(r, self._new_cache(r))
                         for r in placement.prefill_replicas()
                         if r.plan is not None}
         self.decode = {}
@@ -171,11 +203,27 @@ class _DisaggSim:
         self.seq += 1
 
     # -- dispatch rules ---------------------------------------------------
-    def pick_prefill(self) -> int:
-        # least normalized load among flow-weighted replicas
-        return min(self.prefill,
-                   key=lambda g: (self.dispatched[g] + 1)
-                   / max(self.pref_weight[g], 1e-9))
+    def pick_prefill(self, req: Optional[Request] = None) -> int:
+        """Cache-aware when §9 is on and the request carries tokens:
+        replicas are scored by matched-prefix ratio blended with the
+        normalized flow-weighted load (``route_score``); with no hits
+        anywhere this reduces exactly to least-normalized-load."""
+        if (not self.prefix_caching or req is None or req.tokens is None):
+            # least normalized load among flow-weighted replicas
+            return min(self.prefill,
+                       key=lambda g: (self.dispatched[g] + 1)
+                       / max(self.pref_weight[g], 1e-9))
+        base = {g: (self.dispatched[g] + 1) / max(self.pref_weight[g], 1e-9)
+                for g in self.prefill}
+        lo = min(base.values())
+
+        def score(g: int) -> float:
+            cache = self.prefill[g].cache
+            hit = (cache.matched_len(req.tokens) / max(req.s_in, 1)
+                   if cache is not None else 0.0)
+            return route_score(hit, base[g], lo, self.cache_alpha)
+
+        return min(self.prefill, key=lambda g: (-score(g), base[g], g))
 
     def pick_decode(self, p: int) -> int:
         opts = self.route_weight[p]
@@ -197,8 +245,18 @@ class _DisaggSim:
         srv.busy = True
         srv.current = req
         req.advance(RequestState.PREFILLING, t)
+        # §9: match at service start (the tree may have grown since
+        # dispatch), pin the providing path for the prefill's duration,
+        # and charge the cost model only for the uncached suffix
+        req.cached_len = 0
+        if srv.cache is not None and req.tokens is not None:
+            m = srv.cache.match(req.tokens, lock=True)
+            req.cached_len = min(m.length, req.s_in - 1)
+            srv.cache.stats.reused_tokens += req.cached_len
+            if m.node is not None:
+                self._pins[req.rid] = (srv.cache, m.node)
         lat = prefill_latency(self.cluster, self.profile, srv.replica.plan,
-                              1, req.s_in)
+                              1, req.s_in, cached_len=req.cached_len)
         self.push(t + lat, "prefill_done",
                   (self.epoch, srv.replica.group_id, req))
 
@@ -236,6 +294,13 @@ class _DisaggSim:
             return False
         old_prefill = self.prefill
         old_decode = self.decode
+        # §9: the swap moves prefill groups onto different devices — the
+        # cached prefix KV stays behind and every radix tree dies with
+        # its server (fresh caches are built by _install)
+        invalidated = sum(srv.cache.num_tokens
+                          for srv in old_prefill.values()
+                          if srv.cache is not None)
+        self._pins.clear()
 
         # gather in-system work before tearing the tables down
         restart: List[Request] = []
@@ -275,7 +340,7 @@ class _DisaggSim:
 
         # queued / mid-prefill requests restart on the new prefill tables
         for req in sorted(restart, key=lambda r: r.arrival):
-            gid = self.pick_prefill()
+            gid = self.pick_prefill(req)
             self.dispatched[gid] += 1
             req.restart()
             req.prefill_group = gid
@@ -287,12 +352,13 @@ class _DisaggSim:
 
         self.reschedules.append(RescheduleEvent(
             time=t, drain_s=drain_end - t, migrated=len(migrate),
-            restarted=len(restart), max_flow=new_placement.max_flow))
+            restarted=len(restart), max_flow=new_placement.max_flow,
+            prefix_tokens_invalidated=invalidated))
         return True
 
     # -- event handlers ---------------------------------------------------
     def on_arrival(self, t: float, req: Request) -> None:
-        gid = self.pick_prefill()
+        gid = self.pick_prefill(req)
         self.dispatched[gid] += 1
         req.prefill_group = gid
         self.prefill[gid].queue.append(req)
@@ -305,6 +371,15 @@ class _DisaggSim:
         srv = self.prefill[gid]
         srv.busy = False
         srv.current = None
+        # §9: record this prompt's KV in the replica's radix state
+        # (budget-evicting LRU leaves) BEFORE releasing the pinned
+        # provider path — the insert extends that very path, so it must
+        # stay ineligible for eviction until the extension lands
+        if srv.cache is not None and req.tokens is not None:
+            srv.cache.insert(req.tokens)
+        pin = self._pins.pop(req.rid, None)
+        if pin is not None:
+            pin[0].unlock(pin[1])
         req.advance(RequestState.KV_TRANSFER, t)
         did = self.pick_decode(gid)
         self.routed[(gid, did)] = self.routed.get((gid, did), 0.0) + 1
@@ -392,11 +467,20 @@ class _DisaggSim:
 def simulate(cluster: ClusterSpec, profile: ModelProfile,
              placement: Placement, requests: List[Request],
              chunk_tokens: int = 16,
-             typical_context: int = 1024) -> SimResult:
+             typical_context: int = 1024,
+             prefix_caching: bool = False,
+             cache_alpha: float = 2.0,
+             prefix_budget_fraction: float = 0.5) -> SimResult:
     """Deterministic: dispatch is load-corrected flow-proportional, so
-    the same placement and trace always produce the same result."""
+    the same placement and trace always produce the same result.
+
+    ``prefix_caching`` turns on per-prefill-replica radix caches and
+    cache-aware dispatch (DESIGN.md §9); requests without token content
+    are served cold either way."""
     sim = _DisaggSim(cluster, profile, placement, chunk_tokens,
-                     typical_context)
+                     typical_context, prefix_caching=prefix_caching,
+                     cache_alpha=cache_alpha,
+                     prefix_budget_fraction=prefix_budget_fraction)
     if not sim.feasible:
         return SimResult(requests, float("inf"), 0)
     sim.run(requests)
@@ -410,7 +494,10 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
                     min_gap_s: float = 0.0,
                     max_reschedules: int = 4,
                     chunk_tokens: int = 16,
-                    typical_context: int = 1024) -> OnlineSimResult:
+                    typical_context: int = 1024,
+                    prefix_caching: bool = False,
+                    cache_alpha: float = 2.0,
+                    prefix_budget_fraction: float = 0.5) -> OnlineSimResult:
     """Simulate with online workload-drift rescheduling.
 
     ``monitor`` is a ``repro.core.scheduler.WorkloadMonitor`` (or any
@@ -427,7 +514,9 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
     one mean request latency; treat the benchmark numbers as the
     detection-lag-free upper bound."""
     sim = _DisaggSim(cluster, profile, placement, chunk_tokens,
-                     typical_context)
+                     typical_context, prefix_caching=prefix_caching,
+                     cache_alpha=cache_alpha,
+                     prefix_budget_fraction=prefix_budget_fraction)
     if not sim.feasible:
         return OnlineSimResult(requests, float("inf"), 0, [])
     state = {"last": -float("inf")}

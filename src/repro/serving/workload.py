@@ -11,6 +11,10 @@ prompt/output mix change over time — the input to the online
 rescheduling path (DESIGN.md §7): a placement optimized for the first
 phase's mix goes stale once the mix drifts, and the WorkloadMonitor /
 ``reschedule`` warm-start reacts.
+
+The shared-prefix generators (``multi_turn_workload`` and friends)
+produce traces whose prompts overlap token-for-token — the input to the
+prefix-cache subsystem (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -136,6 +140,142 @@ def drifting_workload(phases: Sequence[TracePhase],
             rid += 1
         t = end
     return reqs
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix traces (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# The prefix-cache subsystem only matters if the workload actually shares
+# prefixes. These generators emit requests WITH prompt-token content
+# (``Request.tokens``) plus the scheduling-domain descriptor
+# (``prefix_id``, ``shared_len``), so the same trace drives the real
+# runtime (tokens feed the engines) and the simulator (the radix state
+# is keyed on the same tokens). Three production shapes:
+#
+#   * multi-turn conversations — turn k's prompt extends turn k-1's
+#     full context (prompt + that turn's response), the dominant chat
+#     pattern;
+#   * common system prompt — every request opens with one shared
+#     instruction block;
+#   * few-shot agentic templates — a small set of long exemplar
+#     prefixes, each reused by many calls.
+
+
+def _tok(rng: np.random.Generator, n: int, vocab: int) -> List[int]:
+    return [int(t) for t in rng.integers(0, vocab, size=n)]
+
+
+def multi_turn_workload(conversations: int, turns: int, rate_rps: float,
+                        seed: int = 0, vocab: int = 512,
+                        system_len: int = 48, user_len: int = 24,
+                        out_len: int = 16,
+                        think_time_s: float = 2.0) -> List[Request]:
+    """Multi-turn chat: each conversation's turn k prompt is the full
+    history (previous prompt + previous response) plus a fresh user
+    message, so consecutive turns share an ever-growing prefix.
+
+    Conversations open with Poisson arrivals at ``rate_rps``; turns
+    within a conversation are spaced by exponential think time. The
+    trace fixes the "response" tokens (the runtime's actual generations
+    differ, but the *prompt* content — which is what prefix caching
+    keys on — is what the trace pins)."""
+    rng = np.random.default_rng(seed)
+    opens = np.cumsum(rng.exponential(1.0 / max(rate_rps, 1e-9),
+                                      size=conversations))
+    reqs: List[Request] = []
+    for c in range(conversations):
+        history = _tok(rng, system_len, vocab)
+        t = float(opens[c])
+        for k in range(turns):
+            ulen = max(1, int(rng.poisson(user_len)))
+            olen = max(1, int(rng.poisson(out_len)))
+            prompt = history + _tok(rng, ulen, vocab)
+            reqs.append(Request(
+                rid=len(reqs), s_in=len(prompt), s_out=olen, arrival=t,
+                tokens=tuple(prompt), prefix_id=c,
+                shared_len=len(history) if k else 0))
+            # next turn extends this prompt + this turn's (trace) response
+            history = prompt + _tok(rng, olen, vocab)
+            t += float(rng.exponential(think_time_s))
+    reqs.sort(key=lambda r: r.arrival)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def shared_system_prompt_workload(n: int, rate_rps: float, seed: int = 0,
+                                  vocab: int = 512, system_len: int = 96,
+                                  user_len: int = 32,
+                                  out_len: int = 24) -> List[Request]:
+    """Every request opens with ONE shared system prompt followed by a
+    unique user tail — the ceiling case for prefix reuse."""
+    rng = np.random.default_rng(seed)
+    system = _tok(rng, system_len, vocab)
+    arrivals = np.cumsum(rng.exponential(1.0 / max(rate_rps, 1e-9), size=n))
+    reqs = []
+    for i in range(n):
+        ulen = max(1, int(rng.poisson(user_len)))
+        olen = max(1, int(rng.poisson(out_len)))
+        prompt = system + _tok(rng, ulen, vocab)
+        reqs.append(Request(rid=i, s_in=len(prompt), s_out=olen,
+                            arrival=float(arrivals[i]),
+                            tokens=tuple(prompt), prefix_id=0,
+                            shared_len=system_len if i else 0))
+    return reqs
+
+
+def fewshot_agentic_workload(n: int, rate_rps: float, templates: int = 4,
+                             seed: int = 0, vocab: int = 512,
+                             template_len: int = 128, task_len: int = 24,
+                             out_len: int = 32) -> List[Request]:
+    """Agentic / few-shot traffic: a small pool of long exemplar
+    templates; each call picks one and appends a short task."""
+    rng = np.random.default_rng(seed)
+    pool = [_tok(rng, template_len, vocab) for _ in range(templates)]
+    seen = [False] * templates
+    arrivals = np.cumsum(rng.exponential(1.0 / max(rate_rps, 1e-9), size=n))
+    reqs = []
+    for i in range(n):
+        tid = int(rng.integers(templates))
+        tlen = max(1, int(rng.poisson(task_len)))
+        olen = max(1, int(rng.poisson(out_len)))
+        prompt = pool[tid] + _tok(rng, tlen, vocab)
+        reqs.append(Request(rid=i, s_in=len(prompt), s_out=olen,
+                            arrival=float(arrivals[i]),
+                            tokens=tuple(prompt), prefix_id=tid,
+                            shared_len=template_len if seen[tid] else 0))
+        seen[tid] = True
+    return reqs
+
+
+PREFIX_TRACES = {
+    "multiturn": multi_turn_workload,
+    "sysprompt": shared_system_prompt_workload,
+    "fewshot": fewshot_agentic_workload,
+}
+
+
+def prefix_trace(kind: str, n: int, rate_rps: float, seed: int = 0,
+                 vocab: int = 512,
+                 think_time_s: Optional[float] = None) -> List[Request]:
+    """Uniform entry point over the shared-prefix generators: ``n`` is
+    the (approximate) request count whatever the trace shape.
+    ``think_time_s`` (multiturn only) overrides the between-turn gap —
+    smoke runs pass a small value so a wall-clock driver doesn't sleep
+    through real conversation pauses."""
+    if kind == "multiturn":
+        turns = 4
+        kw = {} if think_time_s is None else {"think_time_s": think_time_s}
+        return multi_turn_workload(max(1, n // turns), turns, rate_rps,
+                                   seed=seed, vocab=vocab, **kw)
+    if kind == "sysprompt":
+        return shared_system_prompt_workload(n, rate_rps, seed=seed,
+                                             vocab=vocab)
+    if kind == "fewshot":
+        return fewshot_agentic_workload(n, rate_rps, seed=seed, vocab=vocab)
+    raise KeyError(f"unknown prefix trace {kind!r}; "
+                   f"options: {sorted(PREFIX_TRACES)}")
 
 
 def observed_workload(requests: Sequence[Request],

@@ -90,6 +90,74 @@ def test_slice_request_ssm(ssm_cache):
                                           np.asarray(sl))
 
 
+@pytest.fixture(scope="module")
+def cross_cache():
+    cfg = ARCHS["llama-3.2-vision-90b"].reduced()
+    params = init_params(KEY, cfg)
+    toks = jnp.zeros((2, 6), jnp.int32)
+    img = jnp.zeros((2, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    _, cache = prefill(params, cfg, toks, cache_capacity=8,
+                       image_embeds=img)
+    return cfg, cache
+
+
+def test_pad_capacity_cross_attention_fixed(cross_cache):
+    """Regression (§9 leaf-role hardening): cross-attention K/V share
+    the literal k/v names and ndim with self-attention slabs, but their
+    'sequence' axis is the image-token count — growing it would feed
+    decode's unmasked cross-attention zero-valued memory. With the
+    declared roles (cfg passed) only self-attn leaves grow."""
+    cfg, cache = cross_cache
+    target = 64
+    grown = kv_transfer.pad_capacity(cache, target, cfg=cfg)
+
+    def by_role(tree, role):
+        out = []
+
+        def visit(path, leaf):
+            if kv_transfer.leaf_role(path, leaf, cfg) == role:
+                out.append((path, leaf))
+
+        jax.tree_util.tree_map_with_path(visit, tree)
+        return out
+
+    cross = by_role(grown, "cross_kv")
+    assert cross, "vision cache must contain cross-attention leaves"
+    for (path, leaf), (_, orig) in zip(cross, by_role(cache, "cross_kv")):
+        assert leaf.shape == orig.shape          # image memory untouched
+        np.testing.assert_array_equal(np.asarray(leaf), np.asarray(orig))
+    kv = by_role(grown, "kv")
+    assert kv, "vision cache must contain self-attention leaves"
+    for (path, leaf) in kv:
+        assert leaf.shape[kv_transfer.kv_seq_axis(cfg)] == target
+
+
+def test_leaf_role_heuristic_matches_declared_for_dense(attn_cache):
+    """Without cfg the legacy name+ndim heuristic must agree with the
+    declared classification on plain dense-attention caches."""
+    cfg, cache = attn_cache
+
+    def roles(with_cfg):
+        out = []
+
+        def visit(path, leaf):
+            out.append(kv_transfer.leaf_role(path, leaf,
+                                             cfg if with_cfg else None))
+
+        jax.tree_util.tree_map_with_path(visit, cache)
+        return out
+
+    assert roles(True) == roles(False)
+    assert set(roles(True)) == {"kv"}
+
+
+def test_slab_capacity(attn_cache):
+    cfg, cache = attn_cache
+    assert kv_transfer.slab_capacity(cache, cfg) == 8
+    grown = kv_transfer.pad_capacity(cache, 16, cfg=cfg)
+    assert kv_transfer.slab_capacity(grown, cfg) == 16
+
+
 def test_transfer_identity_without_shardings(attn_cache):
     _, cache = attn_cache
     out = kv_transfer.transfer(cache)   # no dst shardings: placement kept

@@ -1,0 +1,262 @@
+"""Prefix-cache subsystem (DESIGN.md §9): radix-tree unit invariants,
+cache-aware simulator behaviour, and runtime suffix-prefill
+bit-identity. Property-based radix tests live in
+tests/test_prefix_cache_props.py (optional hypothesis dep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import LLAMA2_70B, WORKLOADS, schedule
+from repro.core.cluster import heterogeneous_setting_1
+from repro.models import init_params, prefill
+from repro.serving import (Coordinator, PrefixCache, ServeRequest, simulate)
+from repro.serving.workload import multi_turn_workload, prefix_trace
+
+KEY = jax.random.PRNGKey(21)
+
+
+# ---------------------------------------------------------------------------
+# radix tree
+# ---------------------------------------------------------------------------
+
+
+def test_insert_match_split():
+    pc = PrefixCache()
+    assert pc.insert([1, 2, 3]) == 3
+    assert pc.insert([1, 2, 4, 5]) == 2          # shares [1,2], adds [4,5]
+    assert pc.matched_len([1, 2, 3]) == 3
+    assert pc.matched_len([1, 2, 4, 5, 6]) == 4
+    assert pc.matched_len([1, 2, 9]) == 2        # stops at the split point
+    assert pc.matched_len([7, 8]) == 0
+    assert pc.insert([1, 2, 3]) == 0             # fully present
+    assert pc.num_tokens == 5                    # shared prefix stored once
+
+
+def test_match_payload_covers_prefix():
+    pc = PrefixCache()
+    pc.insert([1, 2, 3, 4], payload="slab-A", payload_bytes=10)
+    m = pc.match([1, 2, 9])
+    assert m.length == 2 and m.payload == "slab-A"   # superstring's slab
+    pc.insert([1, 2, 3, 4, 5], payload="slab-B", payload_bytes=10)
+    m = pc.match([1, 2, 3, 4, 5])
+    assert m.length == 5 and m.payload in ("slab-A", "slab-B")
+
+
+def test_lru_eviction_respects_budget_and_pins():
+    pc = PrefixCache(capacity_bytes=8, bytes_per_token=1.0)
+    pc.insert([1, 1, 1, 1])
+    m = pc.match([1, 1, 1, 1], lock=True)            # pin the hot path
+    pc.insert([2, 2, 2, 2])
+    pc.insert([3, 3, 3, 3])                          # must evict [2,...]
+    assert pc.used_bytes <= 8
+    assert pc.matched_len([1, 1, 1, 1]) == 4         # pinned path survives
+    assert pc.matched_len([2, 2, 2, 2]) == 0         # LRU victim
+    assert pc.matched_len([3, 3, 3, 3]) == 4
+    pc.unlock(m.node)
+    # with the pin released the old path is evictable again
+    pc.insert([4, 4, 4, 4, 4])
+    assert pc.used_bytes <= 8
+
+
+def test_pinned_never_dropped_under_full_pressure():
+    pc = PrefixCache(capacity_bytes=6, bytes_per_token=1.0)
+    pc.insert([5, 6, 7])
+    m = pc.match([5, 6, 7], lock=True)
+    # larger than the whole budget minus the pinned path: refused
+    assert pc.insert([8] * 6) == 0
+    assert pc.matched_len([5, 6, 7]) == 3
+    assert pc.used_bytes <= 6
+    pc.unlock(m.node)
+    assert pc.insert([8] * 6) == 6                   # now it fits
+    assert pc.matched_len([5, 6, 7]) == 0
+
+
+def test_insert_never_orphans_its_own_extension_point():
+    """Regression: extending a cached prompt under budget pressure must
+    not let the LRU sweep evict the very chain being extended (which
+    would attach the new leaf to a detached parent — unreachable
+    tokens, permanently leaked bytes)."""
+    pc = PrefixCache(capacity_bytes=1000, bytes_per_token=1.0)
+    prompt = [1] * 400
+    assert pc.insert(prompt) == 400
+    # the multi-turn extension cannot fit alongside its own prefix:
+    # the insert must be refused outright, never half-applied
+    assert pc.insert(prompt + [2] * 700) == 0
+    assert pc.matched_len(prompt) == 400           # prefix still reachable
+    assert pc.used_bytes == pc.num_tokens == 400   # no orphaned bytes
+    # an unrelated chain IS evictable to make room for an extension
+    pc2 = PrefixCache(capacity_bytes=1000, bytes_per_token=1.0)
+    pc2.insert([9] * 500)
+    pc2.insert(prompt)
+    assert pc2.insert(prompt + [2] * 300) == 300   # evicts the [9]-chain
+    assert pc2.matched_len(prompt + [2] * 300) == 700
+    assert pc2.matched_len([9] * 500) == 0
+    assert pc2.used_bytes == pc2.num_tokens == 700
+
+
+def test_refcounts_balanced_and_clear():
+    pc = PrefixCache()
+    pc.insert([1, 2, 3])
+    pc.insert([1, 2, 4])
+    handles = [pc.match([1, 2, 3], lock=True) for _ in range(3)]
+    for h in handles:
+        pc.unlock(h.node)
+
+    def refs(node):
+        yield node.refs
+        for c in node.children.values():
+            yield from refs(c)
+
+    assert all(r == 0 for r in refs(pc.root))
+    pc.clear()                                       # §7 swap invalidation
+    assert pc.matched_len([1, 2, 3]) == 0 and pc.used_bytes == 0
+
+
+def test_payload_bytes_accounting():
+    pc = PrefixCache(capacity_bytes=100, bytes_per_token=1.0)
+    pc.insert([1, 2], payload="a", payload_bytes=50)
+    assert pc.used_bytes == 52
+    pc.insert([1, 2], payload="b", payload_bytes=30)  # replace slab
+    assert pc.used_bytes == 32
+    pc.evict_tokens(2)
+    assert pc.used_bytes == 0
+
+
+def test_payload_replacement_charges_only_the_delta():
+    """Regression: re-serving a cached prompt swaps its slab in place —
+    only the byte delta may trigger eviction, never the full new slab
+    size (which would evict bystander prefixes for a net-zero swap)."""
+    pc = PrefixCache(capacity_bytes=100, bytes_per_token=1.0)
+    pc.insert([1, 2], payload="a", payload_bytes=50)   # used 52
+    pc.insert([3, 4], payload="c", payload_bytes=40)   # used 94
+    pc.insert([1, 2], payload="b", payload_bytes=55)   # delta +5 → 99
+    assert pc.used_bytes == 99
+    assert pc.matched_len([3, 4]) == 2                 # bystander survives
+    assert pc.match([1, 2]).payload == "b"
+
+
+# ---------------------------------------------------------------------------
+# scheduling-domain: cache-aware simulation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def placed():
+    cl = heterogeneous_setting_1()
+    res = schedule(cl, LLAMA2_70B, WORKLOADS["LPLD"], max_refine_iters=2)
+    return cl, res.placement
+
+
+def test_sim_prefix_caching_beats_blind(placed):
+    cl, placement = placed
+    blind = simulate(cl, LLAMA2_70B, placement,
+                     prefix_trace("multiturn", 60, 4.0, seed=5))
+    aware = simulate(cl, LLAMA2_70B, placement,
+                     prefix_trace("multiturn", 60, 4.0, seed=5),
+                     prefix_caching=True)
+    assert blind.cache_hit_rate == 0.0 and blind.reused_tokens == 0
+    assert aware.cache_hit_rate > 0.2
+    assert aware.prefill_tokens_computed < blind.prefill_tokens_computed
+    assert aware.avg_ttft < blind.avg_ttft
+    # same tokens decoded either way — reuse only skips prefill work
+    assert aware.decode_tokens == blind.decode_tokens
+
+
+def test_sim_cold_trace_unchanged_by_flag(placed):
+    """Content-free requests (legacy traces) must simulate identically
+    with the cache on: there is nothing to match."""
+    from repro.serving import offline_workload
+    cl, placement = placed
+    a = simulate(cl, LLAMA2_70B, placement, offline_workload("LPLD", 30, 7))
+    b = simulate(cl, LLAMA2_70B, placement, offline_workload("LPLD", 30, 7),
+                 prefix_caching=True)
+    assert a.avg_ttft == b.avg_ttft and a.makespan == b.makespan
+    assert b.cache_hit_rate == 0.0
+
+
+def test_multi_turn_trace_shapes():
+    reqs = multi_turn_workload(4, 3, 2.0, seed=0)
+    assert len(reqs) == 12
+    for r in reqs:
+        assert r.tokens is not None and len(r.tokens) == r.s_in
+    by_conv = {}
+    for r in sorted(reqs, key=lambda r: r.arrival):
+        prev = by_conv.get(r.prefix_id)
+        if prev is not None:
+            # turn k's prompt extends turn k-1's full prompt
+            assert r.shared_len >= len(prev)
+            assert r.tokens[:len(prev)] == prev
+        by_conv[r.prefix_id] = r.tokens
+
+
+# ---------------------------------------------------------------------------
+# runtime: suffix-only prefill bit-identity + served-output equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    return cfg, init_params(KEY, cfg)
+
+
+def test_prefill_suffix_bit_identical(small_model):
+    """Suffix-only prefill seeded from a cached slab must reproduce full
+    prefill exactly: same logits, same KV at every prompt position
+    (attention/norms/MLP are row-wise — DESIGN.md §9)."""
+    cfg, params = small_model
+    from repro.serving.engine import PrefillEngine
+    eng = PrefillEngine(cfg, params, cache_capacity=32)
+    assert eng.supports_prefix_reuse
+    rng = np.random.default_rng(3)
+    full = rng.integers(0, cfg.vocab, 14).astype(np.int32)
+    for cut in (1, 7, 13):
+        _, slab = prefill(params, cfg, jnp.asarray(full[:cut])[None],
+                          cache_capacity=32)
+        ref_logits, ref_cache = prefill(params, cfg, jnp.asarray(full)[None],
+                                        cache_capacity=32)
+        tok, cache = eng.prefill_suffix(full, cut, slab)
+        assert tok == int(jnp.argmax(ref_logits, -1)[0])
+        for a, b in zip(jax.tree.leaves(ref_cache), jax.tree.leaves(cache)):
+            assert np.array_equal(np.asarray(a)[:, :, :len(full)],
+                                  np.asarray(b)[:, :, :len(full)]), cut
+
+
+def test_serve_with_prefix_cache_matches_cacheless(small_model):
+    """End-to-end: a cache-aware coordinator must emit exactly the same
+    tokens as a cache-blind one on a shared-prefix batch, while
+    actually reusing prefixes."""
+    cfg, params = small_model
+    rng = np.random.default_rng(11)
+    sysp = rng.integers(0, cfg.vocab, 8)
+    prompts = [np.concatenate([sysp, rng.integers(0, cfg.vocab, 3 + i)])
+               .astype(np.int32) for i in range(4)]
+    reqs = lambda: [ServeRequest(i, p, 3) for i, p in enumerate(prompts)]
+
+    blind = Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=2, capacity=32)
+    ref = [o.tokens for o in blind.serve(reqs())]
+
+    aware = Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=2, capacity=32,
+                        num_prefill_engines=2,
+                        prefix_cache_bytes=float("inf"))
+    sess = aware.session(max_prefill_batch=1)   # serialize: later prompts
+    for r in reqs():                            # see earlier KV
+        sess.submit(r)
+    outs = sess.run().results()
+    assert [o.tokens for o in outs] == ref
+    m = sess.metrics()
+    assert m.reused_tokens > 0 and m.cache_hit_rate > 0.0
+    reused = [o.lifecycle.cached_len for o in outs]
+    assert max(reused) >= len(sysp)             # the shared system prompt
+
+
+def test_prefix_cache_disabled_is_default(small_model):
+    cfg, params = small_model
+    coord = Coordinator(cfg, params)
+    assert coord.prefix_caches is None
+    idx, m = coord.route_prefill(np.array([1, 2, 3], np.int32))
+    assert idx == 0 and m is None

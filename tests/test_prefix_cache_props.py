@@ -1,0 +1,99 @@
+"""Property-based radix-tree invariants (DESIGN.md §9): insert/match
+agrees with a reference longest-common-prefix oracle; eviction honors
+the byte budget and never drops a pinned node; refcounts balance."""
+import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import PrefixCache
+
+seqs_st = st.lists(st.lists(st.integers(0, 5), min_size=1, max_size=10),
+                   min_size=1, max_size=10)
+probe_st = st.lists(st.integers(0, 5), max_size=12)
+
+
+def _lcp(a, b):
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+@settings(max_examples=200, deadline=None)
+@given(seqs=seqs_st, probe=probe_st)
+def test_match_is_longest_common_prefix(seqs, probe):
+    pc = PrefixCache()
+    for s in seqs:
+        assert pc.insert(s) >= 0
+    ref = max((_lcp(s, probe) for s in seqs), default=0)
+    assert pc.matched_len(probe) == ref
+    # every inserted sequence is fully retained (no budget, no eviction)
+    for s in seqs:
+        assert pc.matched_len(s) == len(s)
+
+
+@settings(max_examples=200, deadline=None)
+@given(seqs=seqs_st)
+def test_radix_stores_each_distinct_token_once(seqs):
+    """num_tokens equals the trie size of the inserted set — shared
+    prefixes are stored exactly once."""
+    pc = PrefixCache()
+    for s in seqs:
+        pc.insert(s)
+    trie = {tuple(s[:i + 1]) for s in seqs for i in range(len(s))}
+    assert pc.num_tokens == len(trie)
+    assert pc.used_bytes == 0.0          # bytes_per_token defaults to 0
+
+
+@settings(max_examples=150, deadline=None)
+@given(seqs=seqs_st, budget=st.integers(1, 24))
+def test_eviction_honors_budget_and_pins(seqs, budget):
+    pc = PrefixCache(capacity_bytes=budget, bytes_per_token=1.0)
+    pinned = seqs[0]
+    handle = None
+    if pc.insert(pinned) == len(pinned):
+        handle = pc.match(pinned, lock=True).node
+    for s in seqs[1:]:
+        pc.insert(s)
+        assert pc.used_bytes <= budget
+        # byte accounting always equals the reachable tree (an insert
+        # must never orphan nodes or leak their charge)
+        assert pc.used_bytes == pc.num_tokens * 1.0
+        if handle is not None:
+            # eviction never drops a pinned node (nor its ancestors)
+            assert pc.matched_len(pinned) == len(pinned)
+    if handle is not None:
+        pc.unlock(handle)
+
+    def refs(node):
+        yield node.refs
+        for c in node.children.values():
+            yield from refs(c)
+
+    assert all(r == 0 for r in refs(pc.root))
+
+
+@settings(max_examples=150, deadline=None)
+@given(seqs=seqs_st, n_locks=st.integers(0, 4))
+def test_refcount_lock_unlock_balance(seqs, n_locks):
+    pc = PrefixCache()
+    for s in seqs:
+        pc.insert(s)
+    handles = [pc.match(seqs[i % len(seqs)], lock=True).node
+               for i in range(n_locks)]
+    # interleave more inserts (splits must preserve pin counts)
+    for s in seqs:
+        pc.insert(list(s) + [9])
+    for h in handles:
+        pc.unlock(h)
+
+    def refs(node):
+        yield node.refs
+        for c in node.children.values():
+            yield from refs(c)
+
+    assert all(r == 0 for r in refs(pc.root))
+    for i in range(n_locks):
+        assert pc.matched_len(seqs[i % len(seqs)]) == len(seqs[i % len(seqs)])
