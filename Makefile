@@ -2,7 +2,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test unit serve-smoke bench bench-drift bench-serving bench-prefix lint
+.PHONY: test unit serve-smoke bench bench-drift bench-serving bench-prefix \
+	bench-kvstream bench-smoke lint
 
 # Tier-1 verify: the whole test suite (stop at first failure), then the
 # serving smoke run through the real session API on the reduced arch.
@@ -13,13 +14,17 @@ unit:
 
 # End-to-end smoke: event-driven ServeSession on the reduced arch with
 # Poisson arrivals + streaming (DESIGN.md §8), then a shared-prefix
-# trace through the radix prefix caches with cache-aware routing (§9).
+# trace through the radix prefix caches with cache-aware routing (§9),
+# then the int8+chunked KV-handoff codec end to end (§10).
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --requests 4 --prompt-len 12 \
 		--max-new 6 --decode-engines 2 --rate-rps 8
 	$(PYTHON) -m repro.launch.serve --requests 8 --max-new 4 \
 		--decode-engines 2 --prefill-engines 2 --rate-rps 8 \
 		--prefix-trace multiturn
+	$(PYTHON) -m repro.launch.serve --requests 6 --prompt-len 12 \
+		--max-new 5 --decode-engines 2 --rate-rps 8 \
+		--kv-codec int8-chunked
 
 # All paper benchmarks (figures/tables) + the beyond-paper ones.
 bench:
@@ -36,6 +41,15 @@ bench-serving:
 # Shared-prefix KV reuse: cache-aware vs cache-blind routing (§9).
 bench-prefix:
 	$(PYTHON) -m benchmarks.run prefix
+
+# Compressed/chunked KV handoff: codec sweep + scheduler feedback (§10).
+bench-kvstream:
+	$(PYTHON) -m benchmarks.run kvstream
+
+# CI-sized benchmark smoke: kvstream + prefix at toy sizes; every
+# module writes its BENCH_<name>.json artifact (gitignored).
+bench-smoke:
+	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run kvstream prefix
 
 # Byte-compile everything — catches syntax/indentation errors without
 # needing a linter wheel in the image.

@@ -24,6 +24,7 @@ Run:  PYTHONPATH=src python -m benchmarks.prefix_reuse
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import List, Tuple
 
@@ -37,13 +38,16 @@ from repro.core.placement import Placement, ReplicaPlacement
 from repro.serving import simulate
 from repro.serving.workload import multi_turn_workload
 
-TRACE = dict(conversations=16, turns=4, rate_rps=4.0)
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+TRACE = (dict(conversations=6, turns=3, rate_rps=4.0) if SMOKE
+         else dict(conversations=16, turns=4, rate_rps=4.0))
 
 
 def _sim_pair() -> List[Tuple[str, float, str]]:
     rows = []
     cl = PAPER_SETTINGS["hetero1"]()
-    sched = schedule(cl, LLAMA2_70B, WORKLOADS["LPLD"], max_refine_iters=6)
+    sched = schedule(cl, LLAMA2_70B, WORKLOADS["LPLD"],
+                     max_refine_iters=2 if SMOKE else 6)
     results = {}
     for label, caching in (("blind", False), ("aware", True)):
         t0 = time.perf_counter()

@@ -5,15 +5,30 @@ wall-clock of producing that row (scheduling + simulation); ``derived``
 is the headline metric (throughput, latency, SLO attainment, scheduler
 time, roofline terms).
 
+Each module additionally persists a machine-readable
+``BENCH_<name>.json`` artifact in the working directory — rows plus the
+git sha and run config — so the perf trajectory is trackable across
+PRs (the artifacts are .gitignored; diff them out-of-band).
+
 Usage:  PYTHONPATH=src python -m benchmarks.run [module ...]
         modules default to all; names: fig6, fig8, fig9, fig10,
-        table3, table4, table5, roofline, drift, serving, prefix
+        table3, table4, table5, roofline, drift, serving, prefix,
+        kvstream
+
+``REPRO_BENCH_SMOKE=1`` shrinks the modules that support it (kvstream,
+prefix) to CI-smoke sizes (``make bench-smoke``).
 """
 from __future__ import annotations
 
+import datetime
+import json
+import os
+import platform
+import subprocess
 import sys
 import time
 import traceback
+from typing import List, Tuple
 
 from benchmarks.common import emit
 
@@ -29,7 +44,45 @@ MODULES = {
     "drift": "benchmarks.drift_reschedule",
     "serving": "benchmarks.serving_pipeline",
     "prefix": "benchmarks.prefix_reuse",
+    "kvstream": "benchmarks.kv_streaming",
 }
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:  # noqa: BLE001 — artifacts must not break the run
+        return "unknown"
+
+
+def write_artifact(name: str, rows: List[Tuple[str, float, str]],
+                   elapsed_s: float) -> None:
+    """Persist one module's rows as ``BENCH_<name>.json`` (metrics +
+    config + git sha) in the working directory."""
+    artifact = {
+        "benchmark": name,
+        "git_sha": _git_sha(),
+        "generated_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "elapsed_s": round(elapsed_s, 3),
+        "config": {
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "smoke": bool(os.environ.get("REPRO_BENCH_SMOKE")),
+            "argv": sys.argv[1:],
+        },
+        "rows": [{"name": n, "us_per_call": us, "derived": derived}
+                 for n, us, derived in rows],
+    }
+    path = f"BENCH_{name}.json"
+    try:
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=2)
+            f.write("\n")
+    except OSError as e:  # pragma: no cover — read-only checkouts
+        print(f"{name}.ARTIFACT_SKIPPED,0.0,{e}", file=sys.stderr)
 
 
 def main() -> None:
@@ -38,9 +91,12 @@ def main() -> None:
     failures = 0
     for name in names:
         modname = MODULES.get(name, name)
+        t_mod = time.perf_counter()
         try:
             mod = __import__(modname, fromlist=["run"])
-            emit(mod.run())
+            rows = mod.run()
+            emit(rows)
+            write_artifact(name, rows, time.perf_counter() - t_mod)
         except Exception as e:  # noqa: BLE001 — report and continue
             failures += 1
             print(f"{name}.ERROR,0.0,{type(e).__name__}: {e}")

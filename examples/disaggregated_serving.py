@@ -42,6 +42,11 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b", choices=ASSIGNED)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--kv-codec", choices=("none", "int8", "int8-chunked"),
+                    default="none",
+                    help="KV-handoff wire format (DESIGN.md §10); int8 "
+                         "variants ship the cache compressed, decode-side "
+                         "logits stay within the documented tolerance")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -53,7 +58,8 @@ def main():
 
     coord = Coordinator(cfg, params, num_decode_engines=2,
                         slots_per_engine=2, capacity=capacity,
-                        route_weights=[2.0, 1.0])  # flow-proportional
+                        route_weights=[2.0, 1.0],  # flow-proportional
+                        kv_codec=args.kv_codec)
 
     # -- session API: submit / step / stream ---------------------------
     streamed = {i: [] for i in range(args.requests)}
@@ -81,7 +87,14 @@ def main():
     print(f"metrics (shared schema): throughput={m.decode_throughput:.1f}"
           f"tok/s avg_ttft={m.avg_ttft * 1e3:.0f}ms "
           f"avg_tpot={m.avg_tpot * 1e3:.0f}ms")
-    assert ok == len(outs)
+    if args.kv_codec != "none":
+        print(f"kv codec {args.kv_codec}: shipped={m.kv_bytes_shipped:.0f}B "
+              f"ratio={m.kv_compression_ratio:.2f} "
+              f"(token match vs exact handoff: {ok}/{len(outs)})")
+    else:
+        # exact codec: the handoff is bit-identical, so the session MUST
+        # reproduce the monolithic generate loop token for token
+        assert ok == len(outs)
 
     # -- legacy wrapper: byte-for-byte the session output --------------
     legacy = coord.serve([ServeRequest(100 + i, prompts[i], args.max_new)

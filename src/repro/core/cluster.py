@@ -213,6 +213,23 @@ def heterogeneous_setting_5() -> ClusterSpec:
     )
 
 
+def kv_skewed_setting(inter_node_scale: float = 0.05) -> ClusterSpec:
+    """Bandwidth-skewed beyond-paper setting (DESIGN.md §10): capable
+    compute on every node behind a starved inter-node fabric
+    (``inter_node_scale`` × the normal link tiers), so the φ→δ KV-cache
+    links — not replica compute — are the binding constraint. This is
+    the regime where KV compression changes both serving latency and
+    the max-flow scheduler's decisions."""
+    cl = build_cluster([("H100", 2), ("A100", 2), ("A6000", 2),
+                        ("A6000", 2)],
+                       name=f"kv-skewed-{inter_node_scale:g}")
+    for i, di in enumerate(cl.devices):
+        for j, dj in enumerate(cl.devices):
+            if di.node != dj.node:
+                cl.bandwidth[i, j] *= inter_node_scale
+    return cl
+
+
 PAPER_SETTINGS = {
     "homogeneous": homogeneous_setting,
     "hetero1": heterogeneous_setting_1,

@@ -33,6 +33,23 @@ from repro.core.cluster import ClusterSpec
 
 B_TYPE = 2.0  # bytes per parameter / activation element (fp16)
 
+#: Bytes per element for the KV-cache dtypes a profile can declare.
+#: ``kv_bytes_token_layer`` derives from this instead of assuming fp16,
+#: so bf16/fp8/int8-KV deployments price their transfers correctly.
+DTYPE_BYTES = {"fp32": 4.0, "float32": 4.0, "tf32": 4.0,
+               "fp16": 2.0, "float16": 2.0, "bf16": 2.0, "bfloat16": 2.0,
+               "fp8": 1.0, "float8_e4m3fn": 1.0, "float8_e5m2": 1.0,
+               "int8": 1.0}
+
+
+def dtype_bytes(dtype) -> float:
+    """Bytes per element for a dtype name or numpy/jax dtype object."""
+    name = dtype if isinstance(dtype, str) else np.dtype(dtype).name
+    if name not in DTYPE_BYTES:
+        raise KeyError(f"unknown KV dtype '{name}'; "
+                       f"known: {sorted(DTYPE_BYTES)}")
+    return DTYPE_BYTES[name]
+
 # MFU-style derating: achievable fraction of peak FLOPS / HBM bandwidth for
 # transformer inference kernels. Single scalars — the *relative* ordering
 # across heterogeneous devices is what the scheduler consumes.
@@ -73,26 +90,48 @@ class ModelProfile:
     # Quadratic attention FLOPs coefficient: per token at context length s,
     # attention adds attn_flops_coeff * s FLOPs per attention layer.
     attn_flops_coeff: float = 0.0
+    #: Bytes per stored KV element (already folded into
+    #: ``kv_bytes_token_layer`` by the constructors) — the KV codec's
+    #: compression-ratio math needs it separately (DESIGN.md §10).
+    kv_elem_bytes: float = B_TYPE
+    #: Elements sharing one fp32 scale under per-head-group int8
+    #: quantization (head_dim for the per-head-vector scheme).
+    kv_quant_group: int = 128
+    #: Contiguous layer groups a chunked KV stream can split into — the
+    #: period-stack extent of the runtime cache pytree
+    #: (``ChunkedTransferPlan`` slices that axis). None (paper-profile
+    #: default) means every layer is its own group.
+    layer_groups: Optional[int] = None
 
     # ------------------------------------------------------------------
     @property
     def total_param_bytes(self) -> float:
         return self.param_bytes_layer * self.num_layers + self.embed_param_bytes
 
-    def kv_bytes_per_request(self, seq: float) -> float:
-        """KV/state bytes one request owns across all layers at context ``seq``."""
+    def kv_state_bytes_split(self, seq: float) -> tuple:
+        """(attention KV bytes, recurrent-state bytes) one request owns
+        across all layers at context ``seq`` — the ONE decomposition of
+        per-request cache bytes; the §10 codec accounting compresses
+        the KV term and ships the state term raw."""
         attn_layers = self.num_layers * self.attn_layer_fraction
         ssm_layers = self.num_layers - attn_layers
-        return (self.kv_bytes_token_layer * seq * attn_layers
-                + self.state_bytes_layer * ssm_layers)
+        return (self.kv_bytes_token_layer * seq * attn_layers,
+                self.state_bytes_layer * ssm_layers)
+
+    def kv_bytes_per_request(self, seq: float) -> float:
+        """KV/state bytes one request owns across all layers at context ``seq``."""
+        kv, state = self.kv_state_bytes_split(seq)
+        return kv + state
 
     # -- constructors ---------------------------------------------------
     @staticmethod
     def dense(name: str, num_layers: int, hidden: int, ffn: int,
               num_heads: int, kv_heads: int, vocab: int,
-              head_dim: Optional[int] = None) -> "ModelProfile":
+              head_dim: Optional[int] = None,
+              kv_dtype: str = "fp16") -> "ModelProfile":
         hd = head_dim or hidden // num_heads
         q_dim, kv_dim = num_heads * hd, kv_heads * hd
+        kv_b = dtype_bytes(kv_dtype)
         # attn: Wq(H→q_dim) Wk,Wv(H→kv_dim) Wo(q_dim→H); ffn: gated 3 mats
         attn_params = hidden * (q_dim + 2 * kv_dim) + q_dim * hidden
         ffn_params = 3 * hidden * ffn
@@ -102,18 +141,21 @@ class ModelProfile:
             flops_per_token_layer=2.0 * params,
             param_bytes_layer=params * B_TYPE,
             scan_bytes_layer=params * B_TYPE,
-            kv_bytes_token_layer=2.0 * kv_dim * B_TYPE,
+            kv_bytes_token_layer=2.0 * kv_dim * kv_b,
             embed_param_bytes=2.0 * vocab * hidden * B_TYPE,
             attn_flops_coeff=4.0 * q_dim,
+            kv_elem_bytes=kv_b, kv_quant_group=hd,
         )
 
     @staticmethod
     def moe(name: str, num_layers: int, hidden: int, ffn: int,
             num_heads: int, kv_heads: int, vocab: int,
             num_experts: int, top_k: int,
-            head_dim: Optional[int] = None) -> "ModelProfile":
+            head_dim: Optional[int] = None,
+            kv_dtype: str = "fp16") -> "ModelProfile":
         hd = head_dim or hidden // num_heads
         q_dim, kv_dim = num_heads * hd, kv_heads * hd
+        kv_b = dtype_bytes(kv_dtype)
         attn_params = hidden * (q_dim + 2 * kv_dim) + q_dim * hidden
         expert_params = 3 * hidden * ffn
         router_params = hidden * num_experts
@@ -127,9 +169,10 @@ class ModelProfile:
             # with moderate batches top-k routing touches most experts, so we
             # charge the resident expert bytes (the paper-era worst case).
             scan_bytes_layer=resident * B_TYPE,
-            kv_bytes_token_layer=2.0 * kv_dim * B_TYPE,
+            kv_bytes_token_layer=2.0 * kv_dim * kv_b,
             embed_param_bytes=2.0 * vocab * hidden * B_TYPE,
             attn_flops_coeff=4.0 * q_dim,
+            kv_elem_bytes=kv_b, kv_quant_group=hd,
         )
 
     @staticmethod
@@ -146,6 +189,47 @@ class ModelProfile:
             state_bytes_layer=state_bytes_layer,
             attn_layer_fraction=0.0,
             embed_param_bytes=2.0 * vocab * hidden * B_TYPE,
+        )
+
+    @staticmethod
+    def from_arch(cfg, kv_dtype=None) -> "ModelProfile":
+        """Profile an ``ArchConfig`` (runtime-domain model description)
+        so both serving domains account KV traffic with the same math
+        — the sim-vs-runtime parity contract for ``kv_bytes_shipped``
+        (DESIGN.md §10). ``kv_dtype`` defaults to the runtime cache
+        dtype (``models.common.DEFAULT_DTYPE``), resolved lazily so the
+        scheduling domain stays importable without JAX."""
+        if kv_dtype is None:
+            try:
+                from repro.models.common import DEFAULT_DTYPE as kv_dtype
+            except ImportError:  # pragma: no cover — jax-less install
+                kv_dtype = "bf16"
+        kv_b = dtype_bytes(kv_dtype)
+        hd = cfg.head_dim
+        q_dim, kv_dim = cfg.num_heads * hd, cfg.kv_heads * hd
+        attn_params = cfg.d_model * (q_dim + 2 * kv_dim) + q_dim * cfg.d_model
+        ffn_params = 3.0 * cfg.d_model * max(cfg.d_ff, 1)
+        params = attn_params + ffn_params
+        frac = cfg.attn_layer_count / max(cfg.num_layers, 1)
+        # constant-size recurrent state per non-attention layer: mamba
+        # conv ring + fp32 SSM state (xLSTM states are the same order)
+        state = 0.0
+        if frac < 1.0:
+            di = cfg.d_model * max(cfg.ssm_expand, 1)
+            state = ((cfg.ssm_conv - 1) * di * kv_b
+                     + di * cfg.ssm_state * 4.0)
+        return ModelProfile(
+            name=cfg.name, num_layers=cfg.num_layers, hidden=cfg.d_model,
+            flops_per_token_layer=2.0 * params,
+            param_bytes_layer=params * B_TYPE,
+            scan_bytes_layer=params * B_TYPE,
+            kv_bytes_token_layer=2.0 * kv_dim * kv_b,
+            state_bytes_layer=state,
+            attn_layer_fraction=frac,
+            embed_param_bytes=2.0 * cfg.vocab * cfg.d_model * B_TYPE,
+            attn_flops_coeff=4.0 * q_dim,
+            kv_elem_bytes=kv_b, kv_quant_group=hd,
+            layer_groups=cfg.num_periods,
         )
 
 
@@ -395,7 +479,9 @@ def prefix_cache_budget(cluster: ClusterSpec, profile: ModelProfile,
 
 def kv_transfer_time(cluster: ClusterSpec, profile: ModelProfile,
                      src_plan: ParallelPlan, dst_plan: ParallelPlan,
-                     batch: int, s_in: int) -> float:
+                     batch: int, s_in: int,
+                     compression_ratio: float = 1.0,
+                     chunks: int = 1) -> float:
     """KV-cache shipping time, one request batch, prefill → decode replica.
 
     Layer-matched routing (paper §3.3 connection type 3): the device
@@ -403,9 +489,26 @@ def kv_transfer_time(cluster: ClusterSpec, profile: ModelProfile,
     the device holding layer j on the decode side. Transfers over
     distinct device pairs proceed in parallel; the completion time is
     the max over pairs of their serialized load (plus one link latency).
+
+    KV-handoff pipeline terms (DESIGN.md §10):
+
+    ``compression_ratio`` — raw/wire ratio of the codec on attention KV
+    leaves (``kv_compression.profile_kv_ratio``); exempt recurrent
+    state ships uncompressed.
+
+    ``chunks`` — layer-group chunks of a rate-matched streaming
+    handoff: chunk *i* ships while layer-group *i+1* still prefills, so
+    the EXPOSED post-prefill time is the max per-chunk serialized load
+    (≈ serialized/chunks + one link latency) instead of the sum.
+    ``chunks=1`` is the blocking single-shot handoff and reproduces the
+    pre-§10 formula exactly. Callers that need link *occupancy* (flow
+    capacities, drain ledgers) must keep ``chunks=1``: chunking hides
+    latency behind compute, it does not add bandwidth.
     """
+    ratio = max(float(compression_ratio), 1e-9)
+    chunks = max(int(chunks), 1)
     per_layer = (profile.kv_bytes_token_layer * s_in * batch
-                 * profile.attn_layer_fraction
+                 * profile.attn_layer_fraction / ratio
                  + profile.state_bytes_layer * batch
                  * (1.0 - profile.attn_layer_fraction))
     if per_layer <= 0.0:
@@ -428,6 +531,9 @@ def kv_transfer_time(cluster: ClusterSpec, profile: ModelProfile,
     worst = 0.0
     for (sj, dj), bytes_ in load.items():
         src, dst = src_plan.stages[sj], dst_plan.stages[dj]
+        # chunked streaming: only the last layer-group chunk is exposed
+        # past the end of prefill compute
+        bytes_ /= chunks
         # each of the |src| TP shards sends its KV slice; shards go in
         # parallel over their own best link → divide by min(|src|,|dst|)
         lanes = max(1, min(len(src), len(dst)))

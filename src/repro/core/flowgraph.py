@@ -47,9 +47,19 @@ def _dispatch_capacity(cluster: ClusterSpec, devices: List[int],
 
 def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
                part: GroupPartition, wl: Workload,
-               period: float = DEFAULT_PERIOD) -> FlowGraphResult:
+               period: float = DEFAULT_PERIOD,
+               kv_compression_ratio: float = 1.0) -> FlowGraphResult:
     """Pick per-replica optimal plans, build the flow network, run
-    preflow-push, and assemble a Placement."""
+    preflow-push, and assemble a Placement.
+
+    ``kv_compression_ratio`` scales the φ→δ KV-link capacities by the
+    serving codec's raw/wire ratio (DESIGN.md §10): compressed KV edges
+    carry proportionally more flow, so ``maxflow``/``refine``
+    co-optimize placement WITH compression — a bandwidth-starved edge
+    that capped the uncompressed solution may stop being the min-cut.
+    Chunked overlap deliberately does NOT enter these capacities: it
+    hides latency behind prefill compute but leaves link occupancy
+    (req/period throughput) unchanged."""
     replicas: List[ReplicaPlacement] = []
     for gid, (group, is_pref) in enumerate(zip(part.groups, part.is_prefill)):
         if is_pref:
@@ -85,7 +95,8 @@ def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
             if d.is_prefill or d.plan is None or d.capacity <= 0.0:
                 continue
             t_kv = kv_transfer_time(cluster, profile, p.plan, d.plan,
-                                    batch=1, s_in=wl.s_in)
+                                    batch=1, s_in=wl.s_in,
+                                    compression_ratio=kv_compression_ratio)
             cap = period / t_kv if t_kv > 0 else float(period * 1e6)
             add(f"g{p.group_id}.out", f"g{d.group_id}.in", cap)
 

@@ -129,9 +129,15 @@ def iterative_refinement(
     seed: int = 0,
     anneal: float = 0.0,
     on_step: Optional[Callable[[RefineTrace], None]] = None,
+    kv_compression_ratio: float = 1.0,
 ) -> Tuple[GroupPartition, FlowGraphResult, List[RefineTrace]]:
     """Max-flow-guided edge-swap loop. Returns the refined partition, its
     flow result, and the improvement trace.
+
+    ``kv_compression_ratio`` is the serving codec's KV raw/wire ratio
+    (DESIGN.md §10): every solve prices the φ→δ links at compressed
+    bytes, so refinement chases the bottlenecks that remain AFTER
+    compression.
 
     ``anneal`` > 0 enables simulated-annealing acceptance (beyond-paper
     extension): a worsening candidate is accepted with probability
@@ -141,7 +147,8 @@ def iterative_refinement(
     """
     rng = np.random.default_rng(seed)
     cur_part = part
-    cur_res = solve_flow(cluster, profile, part, wl, period)
+    cur_res = solve_flow(cluster, profile, part, wl, period,
+                         kv_compression_ratio=kv_compression_ratio)
     best_part, best_res = cur_part, cur_res
     trace = [RefineTrace(0, best_res.placement.max_flow, "initial")]
     if on_step:
@@ -152,8 +159,10 @@ def iterative_refinement(
                                       guided=guided)
         moved = False
         cur_flow = cur_res.placement.max_flow
-        scored = [(name, cand, solve_flow(cluster, profile, cand, wl,
-                                          period)) for name, cand in cands]
+        scored = [(name, cand,
+                   solve_flow(cluster, profile, cand, wl, period,
+                              kv_compression_ratio=kv_compression_ratio))
+                  for name, cand in cands]
         scored.sort(key=lambda t: -t[2].placement.max_flow)
         pick = None
         if scored and scored[0][2].placement.max_flow > cur_flow * (1 + 1e-6):

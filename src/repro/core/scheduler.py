@@ -50,7 +50,11 @@ def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
              guided: bool = True,
              seed: int = 0,
              on_step: Optional[Callable[[RefineTrace], None]] = None,
+             kv_compression_ratio: float = 1.0,
              ) -> ScheduleResult:
+    """``kv_compression_ratio`` > 1 prices the φ→δ KV links at the
+    serving codec's compressed bytes (DESIGN.md §10), letting the whole
+    search co-optimize placement with compression."""
     t0 = time.perf_counter()
     k0 = k if k is not None else num_groups(cluster, profile)
     best: Optional[ScheduleResult] = None
@@ -66,7 +70,8 @@ def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
             rpart, res, trace = iterative_refinement(
                 cluster, profile, part, wl, period,
                 max_iters=max_refine_iters, guided=guided, seed=seed,
-                on_step=on_step)
+                on_step=on_step,
+                kv_compression_ratio=kv_compression_ratio)
             cand = ScheduleResult(res.placement, rpart, res, trace,
                                   time.perf_counter() - t0)
             if best is None or cand.placement.max_flow > best.placement.max_flow:
@@ -154,6 +159,7 @@ def reschedule(cluster: ClusterSpec, profile: ModelProfile,
                guided: bool = True,
                seed: int = 0,
                on_step: Optional[Callable[[RefineTrace], None]] = None,
+               kv_compression_ratio: float = 1.0,
                ) -> ScheduleResult:
     """Warm-start rescheduling for a drifted workload.
 
@@ -171,6 +177,6 @@ def reschedule(cluster: ClusterSpec, profile: ModelProfile,
     rpart, res, trace = iterative_refinement(
         cluster, profile, part, wl, period,
         max_iters=max_refine_iters, guided=guided, seed=seed,
-        on_step=on_step)
+        on_step=on_step, kv_compression_ratio=kv_compression_ratio)
     return ScheduleResult(res.placement, rpart, res, trace,
                           time.perf_counter() - t0)

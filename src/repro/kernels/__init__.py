@@ -2,12 +2,16 @@
 
 flash_attention   — prefill (causal, GQA, optional sliding window)
 decode_attention  — one-token GQA decode over a long KV cache
+kv_quant          — int8 KV-cache quantize/dequantize for the §10
+                    compressed prefill→decode handoff
 
-Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the
-jit'd layout-adapting wrappers the model layer calls.
+Each kernel has a pure-jnp oracle (``ref.py`` / the ``*_ref`` functions
+in ``kv_quant``); ``ops.py`` holds the jit'd layout-adapting wrappers
+the model layer calls.
 """
-from repro.kernels import ops, ref
+from repro.kernels import kv_quant, ops, ref
 from repro.kernels.decode_attention import gqa_decode_bhsd
 from repro.kernels.flash_attention import flash_attention_bhsd
 
-__all__ = ["ops", "ref", "gqa_decode_bhsd", "flash_attention_bhsd"]
+__all__ = ["kv_quant", "ops", "ref", "gqa_decode_bhsd",
+           "flash_attention_bhsd"]

@@ -1,0 +1,285 @@
+"""Pallas TPU int8 KV-cache quantization kernels (DESIGN.md §10).
+
+The KV handoff between prefill and decode replicas is the binding
+constraint of disaggregated serving over heterogeneous links; shipping
+the cache as symmetric int8 instead of bf16/fp32 cuts the wire bytes
+~2-4x at negligible decode-logit error. Two granularities:
+
+  * ``quantize_int8``           — one fp32 scale per head vector (the
+    trailing ``head_dim`` axis): the per-head-group symmetric scheme.
+    Scales cost 4/head_dim bytes per element on the wire.
+  * ``quantize_int8_blockwise`` — one fp32 scale per [block_rows, D]
+    tile of the row-flattened array: coarser, cheaper scale traffic,
+    slightly larger error. Not wired into a ``KVCodec`` yet — it is
+    the scale scheme the ROADMAP's fp8/int4 group-quant codecs build
+    on (per-head scales cost 4/head_dim bytes/elem, prohibitive at
+    sub-byte payloads).
+
+Both have pure-jnp oracles (``*_ref``) and run the Pallas kernels in
+interpret mode off-TPU, mirroring ``kernels.ops``. On TPU, shapes whose
+trailing dim is not lane-aligned fall back to the oracle — the codec
+never fails on an odd cache layout.
+
+Zero rows round-trip exactly: an all-zero head vector gets the epsilon
+scale and quantizes to all-zero int8, which dequantizes to exact zeros
+(pad_capacity padding therefore survives the codec bit-identically).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: Smallest representable scale: keeps all-zero rows at scale*127 == 0
+#: after rounding while avoiding 0/0 in the quantize divide.
+EPS_SCALE = 1e-12
+#: Row-block size for the grid (rows per kernel invocation).
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "interpret":
+        return True
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp oracles
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8_ref(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-head-vector int8: one fp32 scale per trailing-axis
+    vector. Returns (q int8 with x's shape, scale fp32 [..., 1])."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0,
+                        EPS_SCALE)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q: jax.Array, scale: jax.Array,
+                        dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_int8_blockwise_ref(x2d: jax.Array, block_rows: int
+                                ) -> Tuple[jax.Array, jax.Array]:
+    """One fp32 scale per [block_rows, D] tile of a 2-D array (rows must
+    be a multiple of ``block_rows``). Returns (q int8, scale [nb, 1])."""
+    n, d = x2d.shape
+    assert n % block_rows == 0, (n, block_rows)
+    xb = x2d.astype(jnp.float32).reshape(n // block_rows, block_rows * d)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0,
+                        EPS_SCALE)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(n, d), scale
+
+
+def dequantize_int8_blockwise_ref(q2d: jax.Array, scale: jax.Array,
+                                  block_rows: int,
+                                  dtype=jnp.float32) -> jax.Array:
+    n, d = q2d.shape
+    qb = q2d.astype(jnp.float32).reshape(n // block_rows, block_rows * d)
+    return (qb * scale).reshape(n, d).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (grid over row blocks; per-row scales live in the same
+# block so no cross-block state is needed)
+# ---------------------------------------------------------------------------
+
+
+def _quant_rows_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                       # [R, D]
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)        # [R, 1]
+    scale = jnp.maximum(amax / 127.0, EPS_SCALE)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_rows_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32)
+                  * s_ref[...]).astype(o_ref.dtype)
+
+
+def _quant_block_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                       # [R, D]
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, EPS_SCALE)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _dequant_block_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32)
+                  * s_ref[0, 0]).astype(o_ref.dtype)
+
+
+def _pad_rows(x2d: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    n = x2d.shape[0]
+    rem = n % block
+    if rem == 0:
+        return x2d, n
+    return jnp.pad(x2d, ((0, block - rem), (0, 0))), n
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _quant_rows_call(x2d, block_rows: int, interpret: bool):
+    n, d = x2d.shape
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _quant_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                   pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.int8),
+                   jax.ShapeDtypeStruct((n, 1), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
+                                             "dtype"))
+def _dequant_rows_call(q2d, s2d, block_rows: int, interpret: bool, dtype):
+    n, d = q2d.shape
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _dequant_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), dtype),
+        interpret=interpret,
+    )(q2d, s2d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _quant_block_call(x2d, block_rows: int, interpret: bool):
+    n, d = x2d.shape
+    nb = n // block_rows
+    return pl.pallas_call(
+        _quant_block_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
+                                             "dtype"))
+def _dequant_block_call(q2d, s2d, block_rows: int, interpret: bool, dtype):
+    n, d = q2d.shape
+    return pl.pallas_call(
+        _dequant_block_kernel,
+        grid=(n // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), dtype),
+        interpret=interpret,
+    )(q2d, s2d)
+
+
+# ---------------------------------------------------------------------------
+# Public wrappers (any-rank arrays; per-head-vector granularity)
+# ---------------------------------------------------------------------------
+
+
+def _tpu_aligned(d: int) -> bool:
+    """Lane alignment needed to run compiled (non-interpret) on TPU."""
+    return d % 128 == 0
+
+
+def quantize_int8(x: jax.Array,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: Optional[bool] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 with one fp32 scale per trailing-axis vector
+    (per head group for a [..., heads, head_dim] KV slab).
+
+    Returns (q int8, scale fp32) with ``q.shape == x.shape`` and
+    ``scale.shape == x.shape[:-1] + (1,)``."""
+    interp = _interpret() if interpret is None else interpret
+    d = x.shape[-1]
+    if not interp and not _tpu_aligned(d):
+        return quantize_int8_ref(x)
+    x2d = x.reshape(-1, d)
+    block = min(block_rows, x2d.shape[0])
+    padded, n = _pad_rows(x2d, block)
+    q, s = _quant_rows_call(padded, block, interp)
+    return (q[:n].reshape(x.shape),
+            s[:n].reshape(x.shape[:-1] + (1,)))
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32,
+                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Inverse of ``quantize_int8``."""
+    interp = _interpret() if interpret is None else interpret
+    d = q.shape[-1]
+    if not interp and not _tpu_aligned(d):
+        return dequantize_int8_ref(q, scale, dtype)
+    q2d = q.reshape(-1, d)
+    s2d = scale.reshape(-1, 1)
+    block = min(block_rows, q2d.shape[0])
+    qp, n = _pad_rows(q2d, block)
+    sp, _ = _pad_rows(s2d, block)
+    out = _dequant_rows_call(qp, sp, block, interp, jnp.dtype(dtype))
+    return out[:n].reshape(q.shape)
+
+
+def quantize_int8_blockwise(x2d: jax.Array, block_rows: int = 32,
+                            interpret: Optional[bool] = None
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Coarse variant: one fp32 scale per [block_rows, D] tile. Rows are
+    zero-padded to a block multiple; the returned scale is [nb, 1]."""
+    interp = _interpret() if interpret is None else interpret
+    n, d = x2d.shape
+    padded, _ = _pad_rows(x2d, block_rows)
+    if not interp and not _tpu_aligned(d):
+        q, s = quantize_int8_blockwise_ref(padded, block_rows)
+    else:
+        q, s = _quant_block_call(padded, block_rows, interp)
+    return q[:n], s
+
+
+def dequantize_int8_blockwise(q2d: jax.Array, scale: jax.Array,
+                              block_rows: int = 32, dtype=jnp.float32,
+                              interpret: Optional[bool] = None) -> jax.Array:
+    interp = _interpret() if interpret is None else interpret
+    n, d = q2d.shape
+    qp, _ = _pad_rows(q2d, block_rows)
+    if not interp and not _tpu_aligned(d):
+        out = dequantize_int8_blockwise_ref(qp, scale, block_rows, dtype)
+    else:
+        out = _dequant_block_call(qp, scale, block_rows, interp,
+                                  jnp.dtype(dtype))
+    return out[:n]
+
+
+def wire_bytes_per_element(group: int) -> float:
+    """Wire bytes per KV element under per-group int8: 1 payload byte
+    plus the amortized fp32 scale. ``group`` is elements per scale
+    (head_dim for the per-head-vector scheme). The ONE encoding of the
+    wire format's size — every byte-accounting path
+    (``kv_transfer.transfer_bytes``, ``kv_compression``, the cost
+    model's ratio) derives from it."""
+    return 1.0 + 4.0 / max(int(group), 1)
+
+
+def compression_ratio(elem_bytes: float, group: int) -> float:
+    """raw/wire bytes ratio of the int8 scheme for ``elem_bytes``-wide
+    source elements; clamped at 1.0 (never 'compress' int8 into more
+    bytes)."""
+    return max(float(elem_bytes) / wire_bytes_per_element(group), 1.0)

@@ -14,11 +14,15 @@ Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         --requests 8 --prompt-len 16 --max-new 12 --decode-engines 2 \
         [--rate-rps 4.0] [--stream] \
-        [--prefix-trace multiturn --prefill-engines 2]
+        [--prefix-trace multiturn --prefill-engines 2] \
+        [--kv-codec int8-chunked]
 
 ``--prefix-trace`` swaps the random prompts for a shared-prefix
 workload (DESIGN.md §9), enables the per-engine radix prefix caches,
 and reports hit-rate metrics alongside the usual schema.
+
+``--kv-codec`` selects the §10 KV-handoff wire format (none / int8 /
+int8-chunked) and reports shipped bytes + compression ratio.
 """
 from __future__ import annotations
 
@@ -55,6 +59,13 @@ def main() -> None:
                          "(DESIGN.md §9) and report hit-rate metrics")
     ap.add_argument("--prefill-engines", type=int, default=1,
                     help="prefill engines for cache-aware routing")
+    ap.add_argument("--kv-codec", choices=("none", "int8", "int8-chunked"),
+                    default="none",
+                    help="KV-handoff wire format (DESIGN.md §10): int8 "
+                         "ships attention KV quantized (per-head-group "
+                         "fp32 scales); int8-chunked additionally streams "
+                         "per-layer-group chunks the decode engines "
+                         "install as they land")
     ap.add_argument("--prefix-cache-mb", type=float, default=256.0,
                     help="per-engine prefix-cache byte budget (MB); KV "
                          "slabs beyond it are LRU-evicted")
@@ -112,7 +123,8 @@ def main() -> None:
     coord = Coordinator(cfg, params, num_decode_engines=args.decode_engines,
                         slots_per_engine=args.slots, capacity=capacity,
                         num_prefill_engines=args.prefill_engines,
-                        prefix_cache_bytes=prefix_bytes)
+                        prefix_cache_bytes=prefix_bytes,
+                        kv_codec=args.kv_codec)
 
     def on_token(rid: int, tok: int, fin: bool) -> None:
         if args.stream:
@@ -149,6 +161,13 @@ def main() -> None:
               f"hit_rate={m.cache_hit_rate:.3f} "
               f"reused_tokens={m.reused_tokens} "
               f"prefill_tokens_computed={m.prefill_tokens_computed}")
+    if args.kv_codec != "none":
+        slab_ratio = (sess.kv_physical_bytes_raw
+                      / max(sess.kv_physical_bytes_wire, 1))
+        print(f"[serve] kv codec ({args.kv_codec}): "
+              f"shipped={m.kv_bytes_shipped:.0f}B "
+              f"ratio={m.kv_compression_ratio:.2f} "
+              f"measured_slab_ratio={slab_ratio:.2f}")
 
 
 if __name__ == "__main__":

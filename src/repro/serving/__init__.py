@@ -20,7 +20,9 @@ from repro.serving.simulator import (OnlineSimResult, RescheduleEvent,
 from repro.serving.engine import DecodeEngine, PrefillEngine, Slot
 from repro.serving.coordinator import (Coordinator, PollStatus, ServeRequest,
                                        ServeResult, ServeSession)
-from repro.serving import kv_transfer
+from repro.serving import kv_compression, kv_transfer
+from repro.serving.kv_compression import (CODECS, ChunkedTransferPlan,
+                                          KVCodec, QuantizedLeaf, get_codec)
 
 __all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
            "TRANSITIONS", "METRIC_FIELDS", "ServeMetrics", "CacheStats",
@@ -33,4 +35,5 @@ __all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
            "simulate_colocated", "simulate_online", "slo_baselines",
            "DecodeEngine", "PrefillEngine", "Slot", "Coordinator",
            "PollStatus", "ServeRequest", "ServeResult", "ServeSession",
-           "kv_transfer"]
+           "kv_transfer", "kv_compression", "CODECS", "ChunkedTransferPlan",
+           "KVCodec", "QuantizedLeaf", "get_codec"]

@@ -45,7 +45,9 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.serving import kv_transfer
+from repro.core.cost_model import ModelProfile
+from repro.models.common import DEFAULT_DTYPE
+from repro.serving import kv_compression, kv_transfer
 from repro.serving.engine import DecodeEngine, PrefillEngine
 from repro.serving.metrics import ServeMetrics
 from repro.serving.prefix_cache import MatchResult, PrefixCache, route_score
@@ -122,6 +124,11 @@ class ServeSession:
         self._unfinished = 0
         self._decode_tokens = 0
         self._makespan = 0.0
+        #: measured (padded-slab) handoff bytes, raw vs on-the-wire —
+        #: the physical counterpart of the cost-accounting lifecycle
+        #: stamps (DESIGN.md §10); reported by the kvstream benchmark
+        self.kv_physical_bytes_raw = 0
+        self.kv_physical_bytes_wire = 0
 
     # -- clock ----------------------------------------------------------
     def now(self) -> float:
@@ -264,21 +271,53 @@ class ServeSession:
 
     def _step_handoff(self) -> bool:
         """Admit prefilled requests into free decode slots: transfer
-        the KV (resharding device_put) and install it. Routing picks
-        the least-loaded *flow-weighted* engine among those with free
+        the KV (resharding device_put) through the coordinator's codec
+        (DESIGN.md §10) and install it. A chunked codec encodes once,
+        splits along the period-stack axis, and the decode engine
+        installs each layer-group chunk as it lands; other codecs ship
+        one (possibly int8-compressed) pytree. Routing picks the
+        least-loaded *flow-weighted* engine among those with free
         slots."""
         progressed = False
+        codec = self.coord.kv_codec
+        cfg = self.coord.cfg
         while self._handoff:
             eng_idx = self.coord.pick_engine_with_free_slot()
             if eng_idx is None:
                 break
             e = self._entries[self._handoff.popleft()]
+            eng = self.coord.decode_engines[eng_idx]
             cache = kv_transfer.pad_capacity(e.cache, self.coord.capacity,
-                                             cfg=self.coord.cfg)
-            cache = kv_transfer.transfer(cache)
-            self.coord.decode_engines[eng_idx].admit(
-                e.req.rid, e.first, len(e.req.prompt),
-                e.req.max_new_tokens, cache)
+                                             cfg=cfg)
+            t0 = self.now()
+            encoded = kv_compression.encode(cache, cfg, codec)
+            if codec.chunked:
+                plan = kv_compression.ChunkedTransferPlan.for_cache(
+                    encoded, codec.chunks)
+                landing = ((p0, kv_compression.decode(
+                    kv_transfer.transfer(chunk)))
+                    for (p0, _), chunk in zip(plan.bounds,
+                                              plan.split(encoded)))
+                eng.admit_chunked(e.req.rid, e.first, len(e.req.prompt),
+                                  e.req.max_new_tokens, landing)
+            else:
+                eng.admit(e.req.rid, e.first, len(e.req.prompt),
+                          e.req.max_new_tokens,
+                          kv_compression.decode(
+                              kv_transfer.transfer(encoded)))
+            # §10 accounting: lifecycle stamps use the shared
+            # cost-model math (sim-comparable); the session counters
+            # track the measured padded-slab bytes (sized off the
+            # already-encoded tree — no extra encode)
+            prof = self.coord.acct_profile
+            e.life.kv_bytes_raw += kv_compression.profile_raw_bytes(
+                prof, e.life.s_in)
+            e.life.kv_bytes_wire += kv_compression.profile_wire_bytes(
+                prof, e.life.s_in, codec)
+            e.life.kv_serialized_s += self.now() - t0
+            self.kv_physical_bytes_raw += kv_transfer.transfer_bytes(cache)
+            self.kv_physical_bytes_wire += kv_compression.encoded_bytes(
+                encoded)
             self.coord.note_routed(eng_idx)
             e.cache = None
             e.life.decode_group = eng_idx
@@ -349,7 +388,14 @@ class Coordinator:
     configure the §9 prefix-reuse path: N prefill engines, each with a
     byte-budgeted radix cache of served prompts (``prefix_cache_bytes``
     is the per-engine budget; None disables reuse entirely — the
-    pre-§9 behaviour, byte-for-byte)."""
+    pre-§9 behaviour, byte-for-byte).
+
+    ``kv_codec`` names the §10 handoff wire format ("none"/"int8"/
+    "int8-chunked", or a ``kv_compression.KVCodec``): attention KV
+    leaves ship int8-quantized (recurrent state and cross-attention
+    memory always exempt), and the chunked variant streams per-layer-
+    group chunks that decode engines install as they land. The default
+    ships raw leaves bit-identically."""
 
     def __init__(self, cfg: ArchConfig, params: Any,
                  num_decode_engines: int = 1, slots_per_engine: int = 4,
@@ -358,10 +404,16 @@ class Coordinator:
                  num_prefill_engines: int = 1,
                  prefill_route_weights: Optional[Sequence[float]] = None,
                  prefix_cache_bytes: Optional[float] = None,
-                 cache_alpha: float = 2.0):
+                 cache_alpha: float = 2.0,
+                 kv_codec=None):
         self.cfg = cfg
         self.capacity = capacity
         self.cache_alpha = cache_alpha
+        self.kv_codec = kv_compression.get_codec(kv_codec)
+        #: cost-model view of this arch at the runtime cache dtype —
+        #: the shared §10 byte-accounting both domains stamp from
+        self.acct_profile = ModelProfile.from_arch(cfg,
+                                                   kv_dtype=DEFAULT_DTYPE)
         self.prefill_engines = [PrefillEngine(cfg, params, capacity)
                                 for _ in range(num_prefill_engines)]
         self.prefix_caches: Optional[List[PrefixCache]] = None

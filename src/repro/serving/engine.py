@@ -188,6 +188,36 @@ class DecodeEngine:
         self.tokens[idx] = first_token
         return idx
 
+    def install_chunk(self, slot_idx: int, period_start: int,
+                      chunk: Any) -> None:
+        """Install one layer-group chunk of a transferred cache
+        (DESIGN.md §10): ``chunk`` has the full cache pytree structure
+        with every leaf's period-stack axis sliced to the group, and is
+        written at ``(period_start, slot_idx)`` via a dynamic update —
+        chunks land independently, in any order."""
+
+        def install(dst, src):
+            if dst.ndim < 2 or not isinstance(src, jax.Array):
+                return dst
+            starts = (period_start, slot_idx) + (0,) * (dst.ndim - 2)
+            return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                                starts)
+
+        self.cache = jax.tree.map(install, self.cache, chunk)
+
+    def admit_chunked(self, rid: int, first_token: int, prompt_len: int,
+                      s_out: int, chunks: Any) -> int:
+        """Chunk-streaming admission: install each ``(period_start,
+        chunk)`` as it lands, then activate the slot. Equivalent to
+        ``admit`` once every chunk has arrived."""
+        idx = self.free_slots()[0]
+        for period_start, chunk in chunks:
+            self.install_chunk(idx, period_start, chunk)
+        self.slots[idx] = Slot(rid=rid, length=prompt_len + 1,
+                               remaining=s_out - 1, active=True)
+        self.tokens[idx] = first_token
+        return idx
+
     # -- decode ----------------------------------------------------------
     def step(self) -> List[Tuple[int, int, bool]]:
         """Advance every active slot one token.

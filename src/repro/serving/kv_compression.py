@@ -1,0 +1,283 @@
+"""KV-cache compression & chunked streaming for the prefill→decode
+handoff (DESIGN.md §10).
+
+``KVCodec`` names a wire format for the cache pytree crossing the φ→δ
+boundary:
+
+  * ``none``          — raw leaves, one blocking transfer (bit-exact);
+  * ``int8``          — role-"kv"/"window_kv" float leaves ship as
+    symmetric int8 with one fp32 scale per head vector
+    (``kernels.kv_quant``); everything the codec cannot round-trip —
+    mamba/xLSTM recurrent state, conv rings, cross-attention memory,
+    int32 position rings — passes through untouched, classified by
+    ``kv_transfer.leaf_role``;
+  * ``int8-chunked``  — int8 plus a ``ChunkedTransferPlan``: the cache
+    splits into per-layer-group chunks along the period-stack axis so
+    chunk *i* can ship while layer-group *i+1* still prefills, and the
+    decode engine installs chunks as they land.
+
+Both serving domains consume the same object. The runtime encodes real
+arrays (``encode``/``decode``/``encoded_bytes``); the scheduling domain
+prices the identical scheme analytically (``profile_raw_bytes`` /
+``profile_wire_bytes`` / ``profile_kv_ratio``) — the shared math is what
+makes ``kv_bytes_shipped``/``kv_compression_ratio`` directly comparable
+across simulator and runtime under the METRIC_FIELDS parity contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kv_quant
+from repro.serving import kv_transfer
+
+#: Leaf roles the int8 codec may quantize: growable full-attention KV
+#: and sliding-window KV rings — float slabs whose values feed dot
+#: products that tolerate ~0.4% relative error. Every other role
+#: (recurrent state, conv rings, cross-attention memory, position
+#: buffers) is exempt: the codec cannot guarantee a faithful round-trip
+#: through their downstream recurrences / integer semantics.
+QUANT_ROLES = frozenset({"kv", "window_kv"})
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedLeaf:
+    """One compressed cache leaf: int8 payload + fp32 per-head-vector
+    scales + the original dtype (restored on decode). Registered as a
+    pytree node so ``jax.device_put`` / chunk slicing map straight over
+    the payload arrays."""
+
+    def __init__(self, q: jax.Array, scale: jax.Array, dtype: Any):
+        self.q = q
+        self.scale = scale
+        self.dtype = jnp.dtype(dtype)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (str(self.dtype),)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.q.size * self.q.dtype.itemsize
+                   + self.scale.size * self.scale.dtype.itemsize)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"QuantizedLeaf(q={tuple(self.q.shape)}, "
+                f"scale={tuple(self.scale.shape)}, dtype={self.dtype})")
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCodec:
+    """Named wire format for the KV handoff.
+
+    ``chunks`` is the layer-group count of the streaming plan (clamped
+    to the cache's period-stack extent at split time); it only applies
+    when ``chunked``."""
+
+    name: str
+    quantize: bool
+    chunked: bool
+    chunks: int = 1
+
+    @property
+    def is_exact(self) -> bool:
+        return not self.quantize
+
+
+CODECS = {
+    "none": KVCodec("none", quantize=False, chunked=False),
+    "int8": KVCodec("int8", quantize=True, chunked=False),
+    "int8-chunked": KVCodec("int8-chunked", quantize=True, chunked=True,
+                            chunks=8),
+}
+
+
+def get_codec(codec: Union[None, str, KVCodec]) -> KVCodec:
+    """Resolve None (→ "none"), a codec name, or a KVCodec instance."""
+    if codec is None:
+        return CODECS["none"]
+    if isinstance(codec, KVCodec):
+        return codec
+    if codec not in CODECS:
+        raise KeyError(f"unknown KV codec '{codec}'; known: {sorted(CODECS)}")
+    return CODECS[codec]
+
+
+def _quantizable(role: str, leaf: Any) -> bool:
+    return (role in QUANT_ROLES and hasattr(leaf, "dtype")
+            and jnp.issubdtype(leaf.dtype, jnp.floating))
+
+
+def quantizes(codec: Union[None, str, KVCodec], path: Sequence[Any],
+              leaf: Any, cfg: Any = None) -> bool:
+    """Would ``codec`` quantize this cache leaf? (The byte-accounting
+    predicate ``kv_transfer.transfer_bytes`` shares with ``encode``.)"""
+    codec = get_codec(codec)
+    return codec.quantize and _quantizable(
+        kv_transfer.leaf_role(path, leaf, cfg), leaf)
+
+
+# ---------------------------------------------------------------------------
+# Runtime-domain: encode / decode real cache pytrees
+# ---------------------------------------------------------------------------
+
+
+def require_cfg_for(codec: Union[None, str, KVCodec], cfg: Any) -> None:
+    """Quantizing codecs refuse to run on the cfg-less name heuristic:
+    cross-attention K/V share the bare ``k``/``v`` name+ndim with
+    self-attention slabs, so without declared roles the codec would
+    silently quantize the very leaves the exemption contract protects
+    (the §9 pad_capacity hazard, §10 edition)."""
+    if not get_codec(codec).is_exact and cfg is None:
+        raise ValueError(
+            "a quantizing KV codec requires the ArchConfig (cfg): the "
+            "cfg-less leaf-role heuristic cannot distinguish "
+            "cross-attention memory from self-attention KV "
+            "(DESIGN.md §10 exemption contract)")
+
+
+def encode(cache: Any, cfg: Any = None,
+           codec: Union[None, str, KVCodec] = None) -> Any:
+    """Compress a cache pytree leaf-by-leaf. Exact codecs return the
+    cache unchanged; int8 codecs replace each quantizable leaf (by
+    ``kv_transfer.leaf_role``) with a ``QuantizedLeaf``. ``cfg`` is
+    REQUIRED for quantizing codecs (``require_cfg_for``) so SWA rings /
+    cross-attention memory are classified declaratively."""
+    codec = get_codec(codec)
+    if codec.is_exact:
+        return cache
+    require_cfg_for(codec, cfg)
+
+    def enc(path, leaf):
+        if quantizes(codec, path, leaf, cfg):
+            q, scale = kv_quant.quantize_int8(leaf)
+            return QuantizedLeaf(q, scale, leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(enc, cache)
+
+
+def decode(encoded: Any) -> Any:
+    """Invert ``encode``: dequantize every ``QuantizedLeaf`` back to its
+    original dtype; raw leaves pass through."""
+
+    def dec(leaf):
+        if isinstance(leaf, QuantizedLeaf):
+            return kv_quant.dequantize_int8(leaf.q, leaf.scale, leaf.dtype)
+        return leaf
+
+    return jax.tree.map(dec, encoded, is_leaf=lambda x:
+                        isinstance(x, QuantizedLeaf))
+
+
+def encoded_bytes(tree: Any) -> int:
+    """Wire size of an encoded (or raw) cache pytree."""
+    total = 0
+    for leaf in jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, QuantizedLeaf)):
+        if isinstance(leaf, QuantizedLeaf):
+            total += leaf.nbytes
+        elif hasattr(leaf, "size"):
+            total += int(leaf.size * leaf.dtype.itemsize)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Chunked streaming plan (per-layer-group handoff)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedTransferPlan:
+    """Splits a (possibly encoded) cache along the period-stack axis
+    (axis 0 of every leaf — layer ``l`` lives in period ``l // len(
+    cfg.period)``) into contiguous layer groups. The coordinator ships
+    chunk *i* while group *i+1* is still prefilling; the decode engine
+    installs each chunk as it lands (``DecodeEngine.admit_chunked``)."""
+
+    bounds: Tuple[Tuple[int, int], ...]   # [p0, p1) per chunk
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.bounds)
+
+    @staticmethod
+    def for_cache(cache: Any, num_chunks: int) -> "ChunkedTransferPlan":
+        leaves = [l for l in jax.tree.leaves(cache) if hasattr(l, "shape")]
+        assert leaves, "empty cache pytree"
+        periods = int(leaves[0].shape[0])
+        n = max(1, min(int(num_chunks), periods))
+        edges = [round(i * periods / n) for i in range(n + 1)]
+        bounds = tuple((edges[i], edges[i + 1]) for i in range(n)
+                       if edges[i + 1] > edges[i])
+        return ChunkedTransferPlan(bounds)
+
+    def split(self, cache: Any) -> List[Any]:
+        """Chunk pytrees in layer order (leaf axis 0 sliced to each
+        period group). Works transparently through ``QuantizedLeaf``."""
+        return [jax.tree.map(
+            lambda leaf, p0=p0, p1=p1: jax.lax.slice_in_dim(
+                leaf, p0, p1, axis=0), cache)
+            for p0, p1 in self.bounds]
+
+    def join(self, chunks: Sequence[Any]) -> Any:
+        """Reassemble ``split`` output into the full cache pytree."""
+        assert len(chunks) == self.num_chunks
+        return jax.tree.map(
+            lambda *leaves: jnp.concatenate(leaves, axis=0), *chunks)
+
+
+# ---------------------------------------------------------------------------
+# Scheduling-domain accounting (shared with the runtime's lifecycle
+# stamping — the sim-vs-runtime parity contract)
+# ---------------------------------------------------------------------------
+
+
+def profile_kv_ratio(profile: Any, codec: Union[None, str, KVCodec]) -> float:
+    """raw/wire ratio of the codec on the profile's *attention KV*
+    leaves (state/cross leaves are exempt and handled separately by
+    ``profile_wire_bytes``). This is the ratio fed to
+    ``cost_model.kv_transfer_time`` and the flowgraph's φ→δ edge
+    capacities."""
+    codec = get_codec(codec)
+    if not codec.quantize:
+        return 1.0
+    return kv_quant.compression_ratio(profile.kv_elem_bytes,
+                                      profile.kv_quant_group)
+
+
+def profile_raw_bytes(profile: Any, s_in: int) -> float:
+    """Uncompressed KV/state bytes one request ships at context
+    ``s_in`` — the cost model's accounting, identical in both domains."""
+    return float(profile.kv_bytes_per_request(s_in))
+
+
+def profile_wire_bytes(profile: Any, s_in: int,
+                       codec: Union[None, str, KVCodec]) -> float:
+    """Bytes actually crossing the wire for one request: attention KV
+    divided by the codec ratio, exempt state bytes unchanged (the
+    KV/state split comes from ``ModelProfile.kv_state_bytes_split`` —
+    the same decomposition ``profile_raw_bytes`` sums)."""
+    codec = get_codec(codec)
+    kv, state = profile.kv_state_bytes_split(s_in)
+    return kv / profile_kv_ratio(profile, codec) + state
+
+
+def sim_chunks(profile: Any, codec: Union[None, str, KVCodec]) -> int:
+    """Layer-group chunk count the simulator models for this codec
+    (1 = blocking single-shot handoff). Clamped to the profile's
+    ``layer_groups`` — the period-stack extent the runtime's
+    ``ChunkedTransferPlan`` can physically split — so both domains
+    model the same stream shape."""
+    codec = get_codec(codec)
+    if not codec.chunked:
+        return 1
+    groups = getattr(profile, "layer_groups", None) or int(
+        profile.num_layers)
+    return max(1, min(codec.chunks, groups))

@@ -128,18 +128,58 @@ def pad_capacity(cache: Any, target: int, cfg: Any = None) -> Any:
 
 
 def transfer(cache: Any, dst_shardings: Optional[Any] = None,
-             donate: bool = False) -> Any:
+             donate: bool = False, codec: Any = None,
+             cfg: Any = None) -> Any:
     """Ship a cache pytree to the decode replica's layout.
 
     ``dst_shardings``: pytree of NamedSharding (or a single device) —
-    None keeps placement (single-device test runtime)."""
-    if dst_shardings is None:
-        return cache
-    return jax.device_put(cache, dst_shardings, donate=donate)
+    None keeps placement (single-device test runtime).
+
+    ``codec``: a ``kv_compression.KVCodec`` (or its name) — the wire
+    format of the handoff (DESIGN.md §10). The cache is encoded
+    leaf-by-leaf on the source, the COMPRESSED pytree crosses the
+    device boundary, and the decode side dequantizes back to the
+    original dtypes. ``None``/"none" ships raw leaves bit-identically
+    (the pre-§10 behaviour). Quantizing codecs REQUIRE ``cfg`` so leaf
+    roles are classified declaratively (the codec never quantizes
+    recurrent state or cross-attention memory; the cfg-less heuristic
+    cannot tell the latter apart)."""
+    from repro.serving import kv_compression  # circular-safe lazy import
+    codec_obj = kv_compression.get_codec(codec)
+    if codec_obj.is_exact:
+        if dst_shardings is None:
+            return cache
+        return jax.device_put(cache, dst_shardings, donate=donate)
+    encoded = kv_compression.encode(cache, cfg, codec_obj)
+    if dst_shardings is not None:
+        # the wire crossing: only int8 payloads + fp32 scales move
+        encoded = jax.device_put(encoded, dst_shardings, donate=donate)
+    return kv_compression.decode(encoded)
 
 
-def transfer_bytes(cache: Any) -> int:
-    """Wire size of a cache pytree (for logging / cost cross-checks)."""
-    return int(sum(leaf.size * leaf.dtype.itemsize
-                   for leaf in jax.tree.leaves(cache)
-                   if hasattr(leaf, "size")))
+def transfer_bytes(cache: Any, codec: Any = None, cfg: Any = None) -> int:
+    """Wire size of a cache pytree (for logging / cost cross-checks).
+
+    With a ``codec``, the size the encoded pytree occupies on the wire
+    (int8 payload + fp32 per-head-vector scales for quantized leaves,
+    raw bytes for exempt ones) — computed analytically, without
+    materializing the encoding."""
+    from repro.kernels import kv_quant       # circular-safe lazy import
+    from repro.serving import kv_compression
+    codec_obj = kv_compression.get_codec(codec)
+    kv_compression.require_cfg_for(codec_obj, cfg)
+    total = 0
+
+    def visit(path, leaf):
+        nonlocal total
+        if not hasattr(leaf, "size"):
+            return
+        if (not codec_obj.is_exact
+                and kv_compression.quantizes(codec_obj, path, leaf, cfg)):
+            group = leaf.shape[-1] if getattr(leaf, "ndim", 0) else 1
+            total += int(leaf.size * kv_quant.wire_bytes_per_element(group))
+        else:
+            total += int(leaf.size * leaf.dtype.itemsize)
+
+    jax.tree_util.tree_map_with_path(visit, cache)
+    return total

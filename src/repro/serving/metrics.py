@@ -24,10 +24,17 @@ from repro.serving.request import Request
 #: ``Request.cached_len`` at prefill dispatch, so sim-vs-runtime hit
 #: rates are computed from lifecycle records the same way and are
 #: directly comparable.
+#: The final three are the KV-handoff fields (DESIGN.md §10): both
+#: domains stamp ``Request.kv_bytes_raw``/``kv_bytes_wire`` (and the
+#: serialized/overlap transfer seconds) at handoff from the same
+#: ``kv_compression`` accounting, so shipped bytes and compression
+#: ratios are directly comparable sim-vs-runtime.
 METRIC_FIELDS = ("decode_throughput", "avg_latency", "p99_latency",
                  "avg_ttft", "p99_ttft", "avg_tpot", "slo_attainment",
                  "cache_hit_rate", "reused_tokens",
-                 "prefill_tokens_computed")
+                 "prefill_tokens_computed",
+                 "kv_bytes_shipped", "kv_compression_ratio",
+                 "transfer_overlap_frac")
 
 
 @dataclasses.dataclass
@@ -84,6 +91,30 @@ class ServeMetrics:
         total = sum(r.s_in for r in self.requests)
         return self.reused_tokens / total if total else 0.0
 
+    # -- KV-handoff fields (DESIGN.md §10) ------------------------------
+    @property
+    def kv_bytes_shipped(self) -> float:
+        """Wire bytes of every φ→δ KV shipment (handoffs + migrations),
+        after the codec. Equals the raw bytes when no codec compresses."""
+        return float(sum(r.kv_bytes_wire for r in self.requests))
+
+    @property
+    def kv_compression_ratio(self) -> float:
+        """raw/wire over all shipped KV (1.0 when nothing shipped or
+        the codec is exact)."""
+        raw = sum(r.kv_bytes_raw for r in self.requests)
+        wire = sum(r.kv_bytes_wire for r in self.requests)
+        return raw / wire if wire > 0 else 1.0
+
+    @property
+    def transfer_overlap_frac(self) -> float:
+        """Fraction of serialized KV-transfer seconds hidden behind
+        prefill compute by chunked streaming (0.0 for blocking
+        handoffs and for the synchronous single-host runtime)."""
+        serialized = sum(r.kv_serialized_s for r in self.requests)
+        overlap = sum(r.kv_overlap_s for r in self.requests)
+        return overlap / serialized if serialized > 0 else 0.0
+
     def slo_attainment(self, slo_per_request: Dict[int, float],
                        scale: float) -> float:
         ok = sum(1 for r in self.requests
@@ -102,7 +133,10 @@ class ServeMetrics:
                "avg_tpot": self.avg_tpot,
                "cache_hit_rate": self.cache_hit_rate,
                "reused_tokens": float(self.reused_tokens),
-               "prefill_tokens_computed": float(self.prefill_tokens_computed)}
+               "prefill_tokens_computed": float(self.prefill_tokens_computed),
+               "kv_bytes_shipped": self.kv_bytes_shipped,
+               "kv_compression_ratio": self.kv_compression_ratio,
+               "transfer_overlap_frac": self.transfer_overlap_frac}
         if slo is not None:
             out["slo_attainment"] = self.slo_attainment(slo, slo_scale)
         return out

@@ -81,6 +81,20 @@ class Request:
     #: prompt tokens served from a prefix cache at prefill dispatch
     #: (stamped by whichever domain ran the prefill; 0 = cold)
     cached_len: int = 0
+    # -- KV-handoff accounting (DESIGN.md §10) --------------------------
+    #: cost-accounting bytes of this request's φ→δ KV shipments:
+    #: ``kv_bytes_raw`` uncompressed, ``kv_bytes_wire`` after the codec.
+    #: Both domains stamp them from the SAME ``kv_compression`` profile
+    #: math at handoff (and again on §7 migrations), which is what makes
+    #: ``kv_bytes_shipped``/``kv_compression_ratio`` directly comparable
+    #: sim-vs-runtime. 0 = nothing shipped yet.
+    kv_bytes_raw: float = 0.0
+    kv_bytes_wire: float = 0.0
+    #: serialized (no-overlap) transfer seconds, and the portion hidden
+    #: behind prefill compute by chunked streaming — the runtime stamps
+    #: overlap 0 (its single-host device_put is synchronous)
+    kv_serialized_s: float = 0.0
+    kv_overlap_s: float = 0.0
 
     # -- lifecycle ------------------------------------------------------
     def advance(self, state: RequestState, t: float) -> "Request":
@@ -113,6 +127,11 @@ class Request:
         self.prefill_end = None
         self.transfer_end = None
         self.cached_len = 0      # re-stamped when the new replica prefills
+        # restart happens strictly pre-handoff, so no KV ever shipped
+        self.kv_bytes_raw = 0.0
+        self.kv_bytes_wire = 0.0
+        self.kv_serialized_s = 0.0
+        self.kv_overlap_s = 0.0
         return self
 
     # -- derived metrics ------------------------------------------------

@@ -26,6 +26,17 @@ charges the cost model only for the uncached suffix. A §7 placement
 swap invalidates every tree: the cached KV lives on the old replicas'
 devices.
 
+Compressed/chunked KV handoff (DESIGN.md §10): with ``kv_codec`` set
+(including the explicit ``"none"``) the handoff runs the staged/
+blocking pipeline model — the prefill replica holds each request's KV
+until its stream drains, int8 codecs shrink the stream by the shared
+``kv_compression`` accounting ratio, and chunked codecs start
+streaming mid-prefill so only the last layer-group chunk is exposed
+past prefill end. ``kv_codec=None`` keeps the legacy detached-handoff
+abstraction (one §8-alignment change applies to every path: requests
+with ``s_out <= 1`` finish at prefill and never ship KV, like the
+runtime).
+
 Online rescheduling (DESIGN.md §7): ``simulate_online`` additionally
 feeds every arrival to a ``WorkloadMonitor`` and, when the observed mix
 drifts, asks a rescheduler callback for a new placement and applies it
@@ -56,6 +67,7 @@ from repro.core.cost_model import (ModelProfile, decode_step_latency,
                                    prefill_latency, prefix_bytes_per_token,
                                    prefix_cache_budget)
 from repro.core.placement import Placement, ReplicaPlacement
+from repro.serving import kv_compression
 from repro.serving.metrics import ServeMetrics
 from repro.serving.prefix_cache import PrefixCache, route_score
 from repro.serving.request import Request, RequestState
@@ -120,7 +132,8 @@ class _DisaggSim:
                  placement: Placement, chunk_tokens: int,
                  typical_context: int, prefix_caching: bool = False,
                  cache_alpha: float = 2.0,
-                 prefix_budget_fraction: float = 0.5):
+                 prefix_budget_fraction: float = 0.5,
+                 kv_codec=None):
         self.cluster = cluster
         self.profile = profile
         self.chunk_tokens = chunk_tokens
@@ -128,6 +141,16 @@ class _DisaggSim:
         self.prefix_caching = prefix_caching
         self.cache_alpha = cache_alpha
         self.prefix_budget_fraction = prefix_budget_fraction
+        # §10 KV-handoff pipeline: None keeps the legacy abstraction
+        # (handoff detached from the prefill server, uncompressed); a
+        # codec — including the explicit "none" — switches to the
+        # staged/blocking model where the prefill replica holds the KV
+        # until its stream drains, so compression and chunked overlap
+        # shorten the hold and feed straight into TTFT under load.
+        self.kv_pipeline = kv_codec is not None
+        self.codec = kv_compression.get_codec(kv_codec)
+        self.kv_ratio = kv_compression.profile_kv_ratio(profile, self.codec)
+        self.kv_chunks = kv_compression.sim_chunks(profile, self.codec)
         self._pins: Dict[int, Tuple[PrefixCache, object]] = {}
         self.epoch = 0
         self.events: List[Tuple[float, int, str, object]] = []
@@ -321,7 +344,8 @@ class _DisaggSim:
         self.migrate_link = {}
 
         # KV drain: each decode-resident request re-ships its cache at
-        # the cost model's transfer time, serialized per (old, new) route
+        # the cost model's transfer time — codec-compressed bytes when a
+        # §10 codec is active — serialized per (old, new) route
         # (mid-flight transfers that land later share the same ledger)
         drain_end = t
         for req, rem, old_rep in migrate:
@@ -329,7 +353,9 @@ class _DisaggSim:
             dst = self.decode[did]
             ctx = req.s_in + (req.s_out - rem)
             tt = kv_transfer_time(self.cluster, self.profile, old_rep.plan,
-                                  dst.replica.plan, 1, max(ctx, 1))
+                                  dst.replica.plan, 1, max(ctx, 1),
+                                  compression_ratio=self.kv_ratio)
+            self._stamp_kv(req, max(ctx, 1), tt, 0.0)
             key = (old_rep.group_id, did)
             begin = max(t, self.migrate_link.get(key, t))
             self.migrate_link[key] = begin + tt
@@ -364,12 +390,23 @@ class _DisaggSim:
         self.prefill[gid].queue.append(req)
         self.start_prefill(t, self.prefill[gid])
 
+    def _stamp_kv(self, req: Request, ctx: int, serialized: float,
+                  overlap: float) -> None:
+        """Stamp one KV shipment's cost accounting on the lifecycle
+        record — the same ``kv_compression`` math the runtime stamps,
+        which is what makes the §10 metrics comparable across domains."""
+        req.kv_bytes_raw += kv_compression.profile_raw_bytes(
+            self.profile, ctx)
+        req.kv_bytes_wire += kv_compression.profile_wire_bytes(
+            self.profile, ctx, self.codec)
+        req.kv_serialized_s += serialized
+        req.kv_overlap_s += overlap
+
     def on_prefill_done(self, t: float, epoch: int, gid: int,
                         req: Request) -> None:
         if epoch != self.epoch:
             return   # stale: the request was requeued at swap time
         srv = self.prefill[gid]
-        srv.busy = False
         srv.current = None
         # §9: record this prompt's KV in the replica's radix state
         # (budget-evicting LRU leaves) BEFORE releasing the pinned
@@ -380,16 +417,64 @@ class _DisaggSim:
         pin = self._pins.pop(req.rid, None)
         if pin is not None:
             pin[0].unlock(pin[1])
+        if req.s_out <= 1:
+            # single-token request: prefill itself produced the only
+            # token — PREFILLING → DONE, no KV ever ships (§8), exactly
+            # like the runtime session
+            srv.busy = False
+            self.decode_tokens += req.s_out
+            req.advance(RequestState.DONE, t)
+            self.start_prefill(t, srv)
+            return
         req.advance(RequestState.KV_TRANSFER, t)
         did = self.pick_decode(gid)
         self.routed[(gid, did)] = self.routed.get((gid, did), 0.0) + 1
         req.decode_group = did
-        tt = kv_transfer_time(self.cluster, self.profile, srv.replica.plan,
-                              self.decode[did].replica.plan, 1, req.s_in)
-        begin = max(t, self.link_free.get((gid, did), t))
-        self.link_free[(gid, did)] = begin + tt
-        self.push(begin + tt, "transfer_done", (self.epoch, req))
-        self.start_prefill(t, srv)
+        key = (gid, did)
+        serial = kv_transfer_time(self.cluster, self.profile,
+                                  srv.replica.plan,
+                                  self.decode[did].replica.plan, 1, req.s_in,
+                                  compression_ratio=self.kv_ratio)
+        if not self.kv_pipeline:
+            # legacy abstraction: the handoff detaches from the prefill
+            # server immediately; only the route ledger serializes it
+            srv.busy = False
+            begin = max(t, self.link_free.get(key, t))
+            self.link_free[key] = begin + serial
+            self._stamp_kv(req, req.s_in, serial, 0.0)
+            self.push(begin + serial, "transfer_done", (self.epoch, req))
+            self.start_prefill(t, srv)
+            return
+        # §10 staged/blocking handoff: the prefill replica holds the KV
+        # until its stream drains. A chunked codec began streaming
+        # rate-matched layer groups DURING prefill, so on an idle route
+        # only the last chunk (serial/chunks + link latency) is exposed
+        # past t; the blocking single-shot codec exposes all of it.
+        # Rate-matching bounds what prefill compute can hide: the first
+        # chunk exists only once its layer group finished computing, so
+        # the stream can start no earlier than 1/chunks into this
+        # request's own prefill — on links slower than compute the full
+        # serialized load past that point stays exposed.
+        exposed = serial if self.kv_chunks <= 1 else kv_transfer_time(
+            self.cluster, self.profile, srv.replica.plan,
+            self.decode[did].replica.plan, 1, req.s_in,
+            compression_ratio=self.kv_ratio, chunks=self.kv_chunks)
+        stream_earliest = t - (serial - exposed)
+        if req.prefill_start is not None and self.kv_chunks > 1:
+            first_chunk_ready = (req.prefill_start
+                                 + (t - req.prefill_start) / self.kv_chunks)
+            stream_earliest = max(stream_earliest, first_chunk_ready)
+        start = max(stream_earliest, self.link_free.get(key, 0.0))
+        done = start + serial
+        self.link_free[key] = done
+        # overlap realized = stream time hidden before prefill end;
+        # clamp float residue so unchunked handoffs report exactly 0
+        overlap = serial - (done - t)
+        self._stamp_kv(req, req.s_in, serial,
+                       overlap if overlap > 1e-9 * serial else 0.0)
+        self.push(done, "transfer_done", (self.epoch, req))
+        # srv.busy stays True: the staging slot frees when the stream ends
+        self.push(done, "handoff_free", (self.epoch, gid))
 
     def on_transfer_done(self, t: float, epoch: int, req: Request) -> None:
         if epoch != self.epoch or req.decode_group not in self.decode:
@@ -404,11 +489,13 @@ class _DisaggSim:
             if old_rep is not None and old_rep.plan is not None:
                 tt = kv_transfer_time(self.cluster, self.profile,
                                       old_rep.plan, dst.replica.plan,
-                                      1, req.s_in)
+                                      1, req.s_in,
+                                      compression_ratio=self.kv_ratio)
                 key = (old_rep.group_id, did)
                 begin = max(t, self.migrate_link.get(key, t))
                 self.migrate_link[key] = begin + tt
                 req.decode_group = did
+                self._stamp_kv(req, req.s_in, tt, 0.0)
                 self.push(begin + tt, "transfer_done", (self.epoch, req))
                 return
             req.decode_group = did
@@ -462,6 +549,13 @@ class _DisaggSim:
                 epoch, gid = payload
                 if epoch == self.epoch and gid in self.decode:
                     self.start_round(t, self.decode[gid])
+            elif kind == "handoff_free":
+                # §10 staged handoff: the prefill replica's KV stream
+                # drained — release the staging slot, resume prefilling
+                epoch, gid = payload
+                if epoch == self.epoch and gid in self.prefill:
+                    self.prefill[gid].busy = False
+                    self.start_prefill(t, self.prefill[gid])
 
 
 def simulate(cluster: ClusterSpec, profile: ModelProfile,
@@ -470,17 +564,28 @@ def simulate(cluster: ClusterSpec, profile: ModelProfile,
              typical_context: int = 1024,
              prefix_caching: bool = False,
              cache_alpha: float = 2.0,
-             prefix_budget_fraction: float = 0.5) -> SimResult:
+             prefix_budget_fraction: float = 0.5,
+             kv_codec=None) -> SimResult:
     """Deterministic: dispatch is load-corrected flow-proportional, so
     the same placement and trace always produce the same result.
 
     ``prefix_caching`` turns on per-prefill-replica radix caches and
     cache-aware dispatch (DESIGN.md §9); requests without token content
-    are served cold either way."""
+    are served cold either way.
+
+    ``kv_codec`` (DESIGN.md §10) activates the staged/blocking KV
+    handoff model under the named wire format ("none", "int8",
+    "int8-chunked" or a ``KVCodec``): the prefill replica holds each
+    request's KV until its stream drains, compressed edges drain
+    faster, and chunked codecs expose only the last layer-group chunk
+    past prefill end. ``None`` keeps the legacy detached-handoff
+    abstraction (modulo the §8 alignment: single-token requests finish
+    at prefill and ship no KV on every path)."""
     sim = _DisaggSim(cluster, profile, placement, chunk_tokens,
                      typical_context, prefix_caching=prefix_caching,
                      cache_alpha=cache_alpha,
-                     prefix_budget_fraction=prefix_budget_fraction)
+                     prefix_budget_fraction=prefix_budget_fraction,
+                     kv_codec=kv_codec)
     if not sim.feasible:
         return SimResult(requests, float("inf"), 0)
     sim.run(requests)
@@ -497,7 +602,8 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
                     typical_context: int = 1024,
                     prefix_caching: bool = False,
                     cache_alpha: float = 2.0,
-                    prefix_budget_fraction: float = 0.5) -> OnlineSimResult:
+                    prefix_budget_fraction: float = 0.5,
+                    kv_codec=None) -> OnlineSimResult:
     """Simulate with online workload-drift rescheduling.
 
     ``monitor`` is a ``repro.core.scheduler.WorkloadMonitor`` (or any
@@ -516,7 +622,8 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
     sim = _DisaggSim(cluster, profile, placement, chunk_tokens,
                      typical_context, prefix_caching=prefix_caching,
                      cache_alpha=cache_alpha,
-                     prefix_budget_fraction=prefix_budget_fraction)
+                     prefix_budget_fraction=prefix_budget_fraction,
+                     kv_codec=kv_codec)
     if not sim.feasible:
         return OnlineSimResult(requests, float("inf"), 0, [])
     state = {"last": -float("inf")}

@@ -1,0 +1,80 @@
+"""Pallas int8 KV-quantization kernels (DESIGN.md §10): interpret-mode
+kernels vs the jnp oracles, round-trip error bounds, zero-padding
+exactness, and the wire-ratio arithmetic the codec/scheduler share."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import kv_quant
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("shape", [(4, 32), (2, 3, 5, 2, 32), (65, 16),
+                                   (1, 128), (300, 64)])
+def test_quantize_matches_ref(shape):
+    x = jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+    q, s = kv_quant.quantize_int8(x)
+    qr, sr = kv_quant.quantize_int8_ref(x)
+    assert q.shape == x.shape and q.dtype == jnp.int8
+    assert s.shape == x.shape[:-1] + (1,) and s.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    # scales agree up to XLA fusion/reassociation rounding
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_roundtrip_error_bounded_by_half_scale(dtype):
+    x = jnp.asarray(RNG.normal(size=(6, 4, 32)).astype(np.float32)).astype(dtype)
+    q, s = kv_quant.quantize_int8(x)
+    back = kv_quant.dequantize_int8(q, s, dtype)
+    assert back.dtype == dtype
+    err = np.abs(np.asarray(back, np.float32) - np.asarray(x, np.float32))
+    # symmetric round-to-nearest: elementwise error ≤ scale/2 (plus the
+    # target dtype's own rounding for bf16)
+    bound = np.asarray(s) / 2.0 + (0.0 if dtype == jnp.float32 else 0.02)
+    assert np.all(err <= bound + 1e-7)
+
+
+def test_zero_rows_roundtrip_exact():
+    """pad_capacity zero-padding must survive the codec bit-identically."""
+    x = jnp.zeros((8, 64), jnp.float32)
+    q, s = kv_quant.quantize_int8(x)
+    assert not np.any(np.asarray(q))
+    np.testing.assert_array_equal(
+        np.asarray(kv_quant.dequantize_int8(q, s)), np.zeros((8, 64)))
+
+
+def test_mixed_zero_and_signal_rows():
+    x = np.zeros((4, 32), np.float32)
+    x[1] = RNG.normal(size=32)
+    q, s = kv_quant.quantize_int8(jnp.asarray(x))
+    back = np.asarray(kv_quant.dequantize_int8(q, s))
+    assert not back[0].any() and not back[2:].any()
+    assert np.max(np.abs(back[1] - x[1])) <= float(np.asarray(s)[1, 0]) / 2 + 1e-7
+
+
+def test_blockwise_matches_ref_and_roundtrips():
+    x = jnp.asarray(RNG.normal(size=(65, 16)).astype(np.float32))
+    q, s = kv_quant.quantize_int8_blockwise(x, block_rows=32)
+    qr, sr = kv_quant.quantize_int8_blockwise_ref(
+        jnp.pad(x, ((0, 31), (0, 0))), 32)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr)[:65])
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+    assert s.shape == (3, 1)          # ceil(65/32) row blocks
+    back = kv_quant.dequantize_int8_blockwise(q, s, block_rows=32)
+    assert back.shape == x.shape
+    # one scale per 32x16 tile: error bounded by that tile's scale/2
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    per_row_bound = np.repeat(np.asarray(s), 32, axis=0)[:65] / 2.0
+    assert np.all(err <= per_row_bound + 1e-7)
+
+
+def test_wire_ratio_arithmetic():
+    # fp32 at head_dim 32: 4 bytes -> 1 + 4/32 bytes
+    assert kv_quant.compression_ratio(4, 32) == pytest.approx(4 / (1 + 4 / 32))
+    # bf16 at head_dim 128
+    assert kv_quant.compression_ratio(2, 128) == pytest.approx(2 / (1 + 4 / 128))
+    # int8 source: never "compress" into more bytes
+    assert kv_quant.compression_ratio(1, 64) == 1.0

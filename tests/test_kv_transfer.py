@@ -170,3 +170,108 @@ def test_transfer_bytes_counts_all_leaves(attn_cache):
     total = sum(leaf.size * leaf.dtype.itemsize
                 for leaf in jax.tree.leaves(cache))
     assert kv_transfer.transfer_bytes(cache) == total
+
+
+# ---------------------------------------------------------------------------
+# Full arch-pool coverage: pad_capacity / slice_request / transfer_bytes
+# across GQA, MoE, SWA, mamba-hybrid, and vision cross-attention caches
+# (pre-§10, only the cross-attn regression covered non-vanilla caches).
+# ---------------------------------------------------------------------------
+
+#: (arch id, swa variant?, roles its cache must contain)
+POOL = [
+    ("qwen2.5-32b", False, {"kv"}),                    # GQA dense
+    ("qwen3-moe-30b-a3b", False, {"kv"}),              # MoE
+    ("qwen3-1.7b", True, {"window_kv", "window_pos"}),  # sliding window
+    ("jamba-v0.1-52b", False, {"kv", "state"}),        # mamba hybrid
+    ("llama-3.2-vision-90b", False, {"kv", "cross_kv"}),  # vision x-attn
+]
+
+
+@pytest.fixture(scope="module", params=POOL,
+                ids=[f"{a}{'-swa' if s else ''}" for a, s, _ in POOL])
+def pool_cache(request):
+    arch, swa, roles = request.param
+    cfg = ARCHS[arch]
+    if swa:
+        cfg = cfg.with_sliding_window(64)
+    cfg = cfg.reduced()
+    params = init_params(KEY, cfg)
+    toks = jnp.zeros((2, 6), jnp.int32)
+    extra = {}
+    if cfg.num_image_tokens:
+        extra["image_embeds"] = jnp.zeros(
+            (2, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    _, cache = prefill(params, cfg, toks, cache_capacity=8, **extra)
+    return cfg, cache, roles
+
+
+def _roles(cfg, cache):
+    found = {}
+
+    def visit(path, leaf):
+        found.setdefault(kv_transfer.leaf_role(path, leaf, cfg),
+                         []).append((path, leaf))
+
+    jax.tree_util.tree_map_with_path(visit, cache)
+    return found
+
+
+def test_pool_declared_roles_present(pool_cache):
+    cfg, cache, expected = pool_cache
+    assert expected <= set(_roles(cfg, cache))
+
+
+def test_pool_slice_request(pool_cache):
+    cfg, cache, _ = pool_cache
+    one = kv_transfer.slice_request(cache, 1)
+    for full, sl in zip(jax.tree.leaves(cache), jax.tree.leaves(one)):
+        if hasattr(full, "ndim") and full.ndim >= 2:
+            assert sl.shape[1] == 1
+            np.testing.assert_array_equal(np.asarray(full[:, 1:2]),
+                                          np.asarray(sl))
+
+
+def test_pool_pad_capacity_grows_only_kv(pool_cache):
+    cfg, cache, _ = pool_cache
+    target = 32
+    grown = kv_transfer.pad_capacity(cache, target, cfg=cfg)
+    axis = kv_transfer.kv_seq_axis(cfg)
+    saw_kv = False
+    for (path, leaf), (_, orig) in zip(
+            jax.tree_util.tree_flatten_with_path(grown)[0],
+            jax.tree_util.tree_flatten_with_path(cache)[0]):
+        role = kv_transfer.leaf_role(path, leaf, cfg)
+        if role == "kv":
+            saw_kv = True
+            assert leaf.shape[axis] == target
+            # original prefix preserved, padding zero
+            sl = [slice(None)] * leaf.ndim
+            sl[axis] = slice(0, orig.shape[axis])
+            np.testing.assert_array_equal(np.asarray(leaf[tuple(sl)]),
+                                          np.asarray(orig))
+            sl[axis] = slice(orig.shape[axis], None)
+            assert not np.any(np.asarray(leaf[tuple(sl)],
+                                         np.float32))
+        else:
+            # window rings, cross memory, recurrent state: untouched
+            assert leaf.shape == orig.shape
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.asarray(orig))
+    assert saw_kv == ("kv" in _roles(cfg, cache))
+
+
+def test_pool_transfer_bytes_and_codec(pool_cache):
+    cfg, cache, roles = pool_cache
+    raw = kv_transfer.transfer_bytes(cache)
+    assert raw == sum(leaf.size * leaf.dtype.itemsize
+                      for leaf in jax.tree.leaves(cache))
+    wire = kv_transfer.transfer_bytes(cache, codec="int8", cfg=cfg)
+    # every pool arch carries quantizable float KV (full or windowed)
+    assert wire < raw
+
+
+def test_pool_slab_capacity(pool_cache):
+    cfg, cache, roles = pool_cache
+    cap = kv_transfer.slab_capacity(cache, cfg)
+    assert cap == (8 if "kv" in roles else 0)
