@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test unit serve-smoke bench bench-drift bench-serving bench-prefix \
-	bench-kvstream bench-smoke lint
+	bench-kvstream bench-paged bench-smoke lint
 
 # Tier-1 verify: the whole test suite (stop at first failure), then the
 # serving smoke run through the real session API on the reduced arch.
@@ -25,6 +25,9 @@ serve-smoke:
 	$(PYTHON) -m repro.launch.serve --requests 6 --prompt-len 12 \
 		--max-new 5 --decode-engines 2 --rate-rps 8 \
 		--kv-codec int8-chunked
+	$(PYTHON) -m repro.launch.serve --requests 8 --prompt-len 18 \
+		--max-new 6 --decode-engines 2 --slots 4 --rate-rps 8 \
+		--paged --page-size 16
 
 # All paper benchmarks (figures/tables) + the beyond-paper ones.
 bench:
@@ -46,10 +49,15 @@ bench-prefix:
 bench-kvstream:
 	$(PYTHON) -m benchmarks.run kvstream
 
-# CI-sized benchmark smoke: kvstream + prefix at toy sizes; every
-# module writes its BENCH_<name>.json artifact (gitignored).
+# Paged KV decode: dense-vs-paged capacity, flow shift, page parity (§11).
+bench-paged:
+	$(PYTHON) -m benchmarks.run paged
+
+# CI-sized benchmark smoke: paged + kvstream + prefix at toy sizes;
+# every module writes BENCH_<name>.json (gitignored) AND mirrors it
+# into benchmarks/artifacts/ (tracked — the perf trajectory).
 bench-smoke:
-	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run kvstream prefix
+	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run paged kvstream prefix
 
 # Byte-compile everything — catches syntax/indentation errors without
 # needing a linter wheel in the image.

@@ -1,0 +1,293 @@
+"""Paged KV decode: block-table cache layout (DESIGN.md §11).
+
+Beyond-paper benchmark on a memory-skewed cluster — capable compute on
+every node behind a fast fabric, but sharply unequal HBM — so decode
+group sizing is bound by KV residency, the regime HexGen-2's
+memory-aware decode placement targets. Four parts:
+
+  1. Admitted-concurrency gain (scheduling domain): per decode group,
+     the max batch under DENSE accounting (per-slot slabs at the
+     runtime's power-of-two bucket capacity — what every slot really
+     pays) vs PAGED accounting (page-pool budget at mean residency),
+     at equal HBM. The §11 acceptance check: >= 1.5x aggregate. The
+     same placements then serve one trace through the simulator.
+
+  2. Scheduler feedback: the paged capacity accounting fed into
+     ``solve_flow`` must CHANGE the max-flow decode-group assignment
+     on a decode-bound partition (asserted), lifting max_flow; the
+     full two-phase search reports prefill/decode type flips.
+
+  3. Cross-domain page parity: the same trace through the REAL paged
+     runtime (reduced arch) and the paged simulator —
+     ``kv_pages_allocated`` must agree EXACTLY (both stamp their
+     allocator's count; preemption-free pools), per METRIC_FIELDS.
+
+  4. Runtime micro: a real paged ``DecodeEngine`` at the dense
+     engine's exact HBM budget admits >= 1.5x the concurrent requests
+     for short-lived contexts (measured admissions, not estimates).
+
+Run:  PYTHONPATH=src python -m benchmarks.paged_decode
+      (or python -m benchmarks.run paged; REPRO_BENCH_SMOKE=1 shrinks
+      every part to CI-smoke sizes)
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import LLAMA2_70B, WORKLOADS, schedule
+from repro.core.cluster import memory_skewed_setting
+from repro.core.cost_model import (dense_slot_capacity,
+                                   max_decode_batch_paged)
+from repro.core.flowgraph import solve_flow
+from repro.core.partition import GroupPartition
+from repro.serving import offline_workload, simulate
+from repro.serving.paging import pages_for_request
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+WL = WORKLOADS["HPHD"]
+PAGE = 16
+N_REQS = 24 if SMOKE else 64
+REFINE_ITERS = 2 if SMOKE else 6
+
+#: Decode-bound partition on the memory-skewed cluster: decode pinned
+#: to the memory-starved H100 pair (weights barely fit — KV residency
+#: is the binding constraint), prefill on the roomy A100/A6000 nodes.
+FIXED_PART = ([[0, 1], [2, 3, 4, 5], [6, 7, 8, 9], [10, 11, 12, 13]],
+              [False, True, True, True])
+
+
+def _placements(cl):
+    part = GroupPartition([list(g) for g in FIXED_PART[0]],
+                          list(FIXED_PART[1]))
+    bucket = dense_slot_capacity(WL.s_in + WL.s_out)
+    dense = solve_flow(cl, LLAMA2_70B, part, WL,
+                       dense_slot_capacity=bucket)
+    paged = solve_flow(cl, LLAMA2_70B, part, WL, paged_kv=True,
+                       page_size=PAGE)
+    return part, bucket, dense, paged
+
+
+def _concurrency_and_sim() -> List[Tuple[str, float, str]]:
+    rows = []
+    cl = memory_skewed_setting()
+    part, bucket, r_dense, r_paged = _placements(cl)
+
+    t0 = time.perf_counter()
+    total_d = total_p = 0
+    for gid, (group, is_pref) in enumerate(zip(part.groups,
+                                               part.is_prefill)):
+        if is_pref:
+            continue
+        plan = r_dense.placement.replica_by_group(gid).plan
+        bd = max_decode_batch_paged(cl, LLAMA2_70B, plan, WL,
+                                    page_size=PAGE, slot_capacity=bucket)
+        bp = max_decode_batch_paged(cl, LLAMA2_70B, plan, WL,
+                                    page_size=PAGE)
+        total_d += bd
+        total_p += bp
+    us = (time.perf_counter() - t0) * 1e6
+    gain = total_p / max(total_d, 1)
+    rows.append((f"paged.concurrency.{cl.name}", us,
+                 f"dense_batch={total_d} paged_batch={total_p} "
+                 f"slot_bucket={bucket} gain={gain:.2f}x "
+                 f"{'PASS' if gain >= 1.5 else 'FAIL'}"))
+    if gain < 1.5:
+        raise AssertionError(
+            "paged accounting must admit >= 1.5x the dense decode "
+            f"concurrency at equal HBM: {total_p} vs {total_d}")
+
+    for name, res, paged in (("dense", r_dense, False),
+                             ("paged", r_paged, True)):
+        t0 = time.perf_counter()
+        reqs = offline_workload("HPHD", N_REQS, seed=7)
+        sim = simulate(cl, LLAMA2_70B, res.placement, reqs,
+                       paged_kv=paged, page_size=PAGE)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"paged.sim.{name}", us,
+                     f"thpt={sim.decode_throughput:.1f}tok/s "
+                     f"avg_lat={sim.avg_latency:.2f}s "
+                     f"pages={sim.kv_pages_allocated} "
+                     f"util={sim.page_utilization:.3f} "
+                     f"frag={sim.page_fragmentation:.3f}"))
+    return rows
+
+
+def _scheduler_delta() -> List[Tuple[str, float, str]]:
+    rows = []
+    cl = memory_skewed_setting()
+    t0 = time.perf_counter()
+    _, bucket, r_dense, r_paged = _placements(cl)
+    us = (time.perf_counter() - t0) * 1e6
+    rd = {k: round(v, 6) for k, v in r_dense.placement.kv_routes.items()}
+    rp = {k: round(v, 6) for k, v in r_paged.placement.kv_routes.items()}
+    changed = rd != rp
+    lift = (r_paged.placement.max_flow
+            / max(r_dense.placement.max_flow, 1e-9))
+    rows.append(("paged.flow_shift", us,
+                 f"flow {r_dense.placement.max_flow:.0f}->"
+                 f"{r_paged.placement.max_flow:.0f} ({lift:.2f}x) "
+                 f"routes {sorted(rd)}->{sorted(rp)} "
+                 f"changed={changed} {'PASS' if changed else 'FAIL'}"))
+    if not changed:
+        raise AssertionError(
+            "paged capacity accounting must shift the max-flow decode "
+            f"assignment on {cl.name}: {rd} vs {rp}")
+
+    if not SMOKE:
+        t0 = time.perf_counter()
+        s_dense = schedule(cl, LLAMA2_70B, WL,
+                           max_refine_iters=REFINE_ITERS)
+        s_paged = schedule(cl, LLAMA2_70B, WL,
+                           max_refine_iters=REFINE_ITERS, paged_kv=True,
+                           page_size=PAGE)
+        us = (time.perf_counter() - t0) * 1e6
+        flips = sum(a != b for a, b in zip(s_dense.partition.is_prefill,
+                                           s_paged.partition.is_prefill))
+        regrouped = s_dense.partition.groups != s_paged.partition.groups
+        rows.append(("paged.schedule_delta", us,
+                     f"type_flips={flips} regrouped={regrouped} flow "
+                     f"{s_dense.placement.max_flow:.0f}->"
+                     f"{s_paged.placement.max_flow:.0f}"))
+    return rows
+
+
+# -- cross-domain page-count parity ------------------------------------------
+
+RT_TRACE = dict(conversations=4, turns=2, rate_rps=4.0, system_len=12,
+                user_len=6, out_len=4)
+
+
+def _runtime_parity() -> List[Tuple[str, float, str]]:
+    import jax
+    from repro.configs import ARCHS
+    from repro.core import make_plan
+    from repro.core.cluster import homogeneous_setting
+    from repro.core.cost_model import ModelProfile
+    from repro.core.placement import Placement, ReplicaPlacement
+    from repro.models import init_params
+    from repro.models.common import DEFAULT_DTYPE
+    from repro.serving import (Coordinator, ServeRequest,
+                               multi_turn_workload)
+
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    prof = ModelProfile.from_arch(cfg, kv_dtype=DEFAULT_DTYPE)
+
+    t0 = time.perf_counter()
+    cl = homogeneous_setting()
+    reps, routes = [], {}
+    for g in range(4):
+        devs = [2 * g, 2 * g + 1]
+        reps.append(ReplicaPlacement(g, devs, g < 2,
+                                     make_plan([devs], prof.num_layers, cl),
+                                     1.0))
+    for p in range(2):
+        for d in (2, 3):
+            routes[(p, d)] = 1.0
+    placement = Placement(reps, routes, max_flow=4.0, period=600.0)
+    reqs_sim = multi_turn_workload(seed=9, vocab=cfg.vocab, **RT_TRACE)
+    sim = simulate(cl, prof, placement, reqs_sim, paged_kv=True,
+                   page_size=PAGE)
+    sim_us = (time.perf_counter() - t0) * 1e6
+
+    t0 = time.perf_counter()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    coord = Coordinator(cfg, params, num_decode_engines=2,
+                        slots_per_engine=6, capacity=128,
+                        num_prefill_engines=2, paged=True, page_size=PAGE)
+    sess = coord.session(max_prefill_batch=1)
+    for r in sorted(multi_turn_workload(seed=9, vocab=cfg.vocab, **RT_TRACE),
+                    key=lambda r: r.arrival):
+        sess.submit(ServeRequest(r.rid, np.asarray(r.tokens, np.int32),
+                                 r.s_out), arrival_time=r.arrival)
+    m = sess.run().metrics()
+    rt_us = (time.perf_counter() - t0) * 1e6
+
+    exp = sum(pages_for_request(r.s_in, r.s_out, PAGE) for r in reqs_sim)
+    ok = (sim.kv_pages_allocated == m.kv_pages_allocated == exp
+          and abs(sim.page_utilization - m.page_utilization) < 1e-12)
+    rows = [
+        ("paged.sim_pages.homog", sim_us,
+         f"pages={sim.kv_pages_allocated} "
+         f"util={sim.page_utilization:.4f}"),
+        ("paged.runtime_pages.qwen3-1.7b-reduced", rt_us,
+         f"pages={m.kv_pages_allocated} util={m.page_utilization:.4f} "
+         f"preemptions={sum(r.preemptions for r in m.requests)}"),
+        ("paged.sim_vs_runtime", 0.0,
+         f"delta={abs(sim.kv_pages_allocated - m.kv_pages_allocated)} "
+         f"{'PASS' if ok else 'FAIL'}"),
+    ]
+    if not ok:
+        raise AssertionError(
+            "simulator and runtime must stamp identical "
+            f"kv_pages_allocated on the same trace: sim "
+            f"{sim.kv_pages_allocated} vs runtime {m.kv_pages_allocated} "
+            f"(arithmetic {exp})")
+    return rows
+
+
+def _runtime_micro() -> List[Tuple[str, float, str]]:
+    """Real paged engine at the dense engine's exact HBM budget: count
+    measured admissions of short-context requests."""
+    import jax
+    from repro.configs import ARCHS
+    from repro.models import init_params
+    from repro.serving import kv_transfer
+    from repro.serving.engine import DecodeEngine, PrefillEngine
+    from repro.serving.paging import PagingError
+
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cap, prompt_len, s_out = 128, 17, 4
+    dense_slots = 2
+
+    t0 = time.perf_counter()
+    pe = PrefillEngine(cfg, params, cache_capacity=cap)
+    dense = DecodeEngine(cfg, params, slots=dense_slots, capacity=cap)
+    # equal HBM: the paged pool holds exactly the dense slabs' pages
+    paged = DecodeEngine(cfg, params, slots=32, capacity=cap, paged=True,
+                         page_size=PAGE,
+                         num_pages=dense_slots * (cap // PAGE) + 1)
+    rng = np.random.default_rng(0)
+    admitted = {"dense": 0, "paged": 0}
+    for name, eng in (("dense", dense), ("paged", paged)):
+        for rid in range(64):
+            prompt = rng.integers(0, cfg.vocab, prompt_len).astype(np.int32)
+            first, slab = pe.prefill_batch([prompt])[0]
+            try:
+                if eng.paged:
+                    eng.admit(rid, first, prompt_len, s_out,
+                              kv_transfer.trim_to_pages(slab, prompt_len,
+                                                        PAGE, cfg=cfg))
+                else:
+                    eng.admit(rid, first, prompt_len, s_out,
+                              kv_transfer.pad_capacity(slab, cap, cfg=cfg))
+            except PagingError:
+                break
+            admitted[name] += 1
+    us = (time.perf_counter() - t0) * 1e6
+    gain = admitted["paged"] / max(admitted["dense"], 1)
+    ok = gain >= 1.5
+    rows = [("paged.engine_hbm_parity", us,
+             f"dense_admitted={admitted['dense']} "
+             f"paged_admitted={admitted['paged']} gain={gain:.1f}x "
+             f"pool={paged.pool.num_allocatable}pages "
+             f"{'PASS' if ok else 'FAIL'}")]
+    if not ok:
+        raise AssertionError(
+            "a paged engine at the dense HBM budget must admit >= 1.5x "
+            f"concurrent short requests: {admitted}")
+    return rows
+
+
+def run() -> List[Tuple[str, float, str]]:
+    return (_concurrency_and_sim() + _scheduler_delta()
+            + _runtime_parity() + _runtime_micro())
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -13,10 +13,13 @@ PRs (the artifacts are .gitignored; diff them out-of-band).
 Usage:  PYTHONPATH=src python -m benchmarks.run [module ...]
         modules default to all; names: fig6, fig8, fig9, fig10,
         table3, table4, table5, roofline, drift, serving, prefix,
-        kvstream
+        kvstream, paged
 
 ``REPRO_BENCH_SMOKE=1`` shrinks the modules that support it (kvstream,
-prefix) to CI-smoke sizes (``make bench-smoke``).
+prefix, paged) to CI-smoke sizes (``make bench-smoke``), and
+additionally mirrors each artifact into ``benchmarks/artifacts/`` —
+the TRACKED perf-trajectory record (full-size artifacts in the
+working directory stay gitignored).
 """
 from __future__ import annotations
 
@@ -45,6 +48,7 @@ MODULES = {
     "serving": "benchmarks.serving_pipeline",
     "prefix": "benchmarks.prefix_reuse",
     "kvstream": "benchmarks.kv_streaming",
+    "paged": "benchmarks.paged_decode",
 }
 
 
@@ -76,13 +80,21 @@ def write_artifact(name: str, rows: List[Tuple[str, float, str]],
         "rows": [{"name": n, "us_per_call": us, "derived": derived}
                  for n, us, derived in rows],
     }
-    path = f"BENCH_{name}.json"
-    try:
-        with open(path, "w") as f:
-            json.dump(artifact, f, indent=2)
-            f.write("\n")
-    except OSError as e:  # pragma: no cover — read-only checkouts
-        print(f"{name}.ARTIFACT_SKIPPED,0.0,{e}", file=sys.stderr)
+    paths = [f"BENCH_{name}.json"]
+    if artifact["config"]["smoke"]:
+        # the tracked perf-trajectory record: smoke runs are CI-sized
+        # and deterministic enough to commit (make bench-smoke)
+        adir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "artifacts")
+        os.makedirs(adir, exist_ok=True)
+        paths.append(os.path.join(adir, f"BENCH_{name}.json"))
+    for path in paths:
+        try:
+            with open(path, "w") as f:
+                json.dump(artifact, f, indent=2)
+                f.write("\n")
+        except OSError as e:  # pragma: no cover — read-only checkouts
+            print(f"{name}.ARTIFACT_SKIPPED,0.0,{e}", file=sys.stderr)
 
 
 def main() -> None:

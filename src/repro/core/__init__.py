@@ -10,12 +10,15 @@ Public API:
 from repro.core.cluster import (ClusterSpec, Device, GPUType, GPU_TYPES,
                                 PAPER_SETTINGS, build_cluster)
 from repro.core.cost_model import (B_TYPE, HPHD, HPLD, LLAMA2_70B, LPHD, LPLD,
-                                   OPT_30B, ModelProfile, ParallelPlan,
-                                   Workload, WORKLOADS, decode_capacity,
-                                   decode_latency, kv_transfer_time,
+                                   OPT_30B, PAGE_SIZE, ModelProfile,
+                                   ParallelPlan, Workload, WORKLOADS,
+                                   decode_capacity, decode_latency,
+                                   decode_page_budget, dense_slot_capacity,
+                                   kv_page_bytes, kv_transfer_time,
                                    make_plan, max_decode_batch,
-                                   plan_fits_memory, prefill_capacity,
-                                   prefill_latency, prefix_bytes_per_token,
+                                   max_decode_batch_paged, plan_fits_memory,
+                                   prefill_capacity, prefill_latency,
+                                   prefix_bytes_per_token,
                                    prefix_cache_budget)
 from repro.core.flowgraph import DEFAULT_PERIOD, solve_flow
 from repro.core.maxflow import FlowNetwork, FlowResult
@@ -33,8 +36,10 @@ __all__ = [
     "ClusterSpec", "Device", "GPUType", "GPU_TYPES", "PAPER_SETTINGS",
     "build_cluster", "B_TYPE", "ModelProfile", "ParallelPlan", "Workload",
     "WORKLOADS", "HPLD", "HPHD", "LPHD", "LPLD", "OPT_30B", "LLAMA2_70B",
-    "decode_capacity", "decode_latency", "kv_transfer_time", "make_plan",
-    "max_decode_batch", "plan_fits_memory", "prefill_capacity",
+    "decode_capacity", "decode_latency", "decode_page_budget",
+    "dense_slot_capacity", "kv_page_bytes", "kv_transfer_time", "make_plan",
+    "max_decode_batch", "max_decode_batch_paged", "PAGE_SIZE",
+    "plan_fits_memory", "prefill_capacity",
     "prefill_latency", "prefix_bytes_per_token", "prefix_cache_budget",
     "DEFAULT_PERIOD", "solve_flow", "FlowNetwork",
     "FlowResult", "GroupPartition", "initial_partition", "kernighan_lin",

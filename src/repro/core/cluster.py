@@ -230,6 +230,28 @@ def kv_skewed_setting(inter_node_scale: float = 0.05) -> ClusterSpec:
     return cl
 
 
+def memory_skewed_setting() -> ClusterSpec:
+    """Memory-skewed beyond-paper setting (DESIGN.md §11): ample
+    compute on every node behind a UNIFORMLY fast fabric, but sharply
+    unequal HBM per node — 80 GB H100/A100 nodes next to 48 GB A6000
+    nodes. Decode-group sizing is bound by KV residency, not FLOPs or
+    links, so the dense-vs-paged capacity accounting (padding vs real
+    residency) is the only lever that moves the max-flow assignment —
+    the regime the §11 paged layout targets."""
+    cl = build_cluster([("H100", 2), ("A100", 4), ("A6000", 4),
+                        ("A6000", 4)],
+                       name="memory-skewed")
+    # flatten the fabric: every inter-node link at InfiniBand tier so
+    # φ→δ KV links never bind (memory is the one skewed resource)
+    b, l = LINK_IB
+    for i, di in enumerate(cl.devices):
+        for j, dj in enumerate(cl.devices):
+            if di.node != dj.node:
+                cl.bandwidth[i, j] = b
+                cl.latency[i, j] = l
+    return cl
+
+
 PAPER_SETTINGS = {
     "homogeneous": homogeneous_setting,
     "hetero1": heterogeneous_setting_1,

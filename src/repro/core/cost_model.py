@@ -447,6 +447,112 @@ def max_decode_batch(cluster: ClusterSpec, profile: ModelProfile,
     return lo
 
 
+# ---------------------------------------------------------------------------
+# Paged KV decode accounting (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+#: Default KV page size in tokens (the §11 block-table granularity).
+PAGE_SIZE = 16
+
+
+def _pages(tokens: float, page_size: int) -> int:
+    """ceil(tokens / page_size) — duplicated from ``serving.paging``
+    so the scheduling domain stays importable without JAX."""
+    return max(0, -(-int(tokens) // int(page_size)))
+
+
+def dense_slot_capacity(s_total: int, lo: int = 8) -> int:
+    """The slab capacity a DENSE decode engine actually allocates per
+    slot for requests of total context ``s_total``: the power-of-two
+    bucket the runtime compiles for (``serving.engine._bucket``). This
+    is what every dense slot pays in HBM regardless of realized length
+    — the padding §11 converts into admitted concurrency."""
+    b = lo
+    while b < s_total:
+        b *= 2
+    return b
+
+
+def kv_page_bytes(profile: ModelProfile,
+                  page_size: int = PAGE_SIZE) -> float:
+    """HBM bytes one KV page occupies across all attention layers."""
+    return (page_size * profile.kv_bytes_token_layer
+            * profile.num_layers * profile.attn_layer_fraction)
+
+
+def decode_page_budget(cluster: ClusterSpec, profile: ModelProfile,
+                       plan: ParallelPlan, page_size: int = PAGE_SIZE,
+                       batch: int = 1, act_tokens: int = 1) -> int:
+    """KV pages the plan's HBM headroom holds (min over stages).
+
+    Per stage: device capacity (the same 0.9 derate as
+    ``plan_fits_memory``) minus params, embeddings, ``batch`` requests'
+    recurrent state, and decode-step activations (``act_tokens`` per
+    sequence — decode streams one token per step, unlike prefill's
+    full-sequence activations), divided by the stage's share of one
+    page's bytes. Returns 0 when any stage cannot even hold the
+    weights; a huge budget for pure-SSM profiles (no paged KV)."""
+    frac = profile.attn_layer_fraction
+    page_b_all_layers = kv_page_bytes(profile, page_size)
+    budget = float("inf")
+    for j, stage in enumerate(plan.stages):
+        tp = len(stage)
+        l = plan.layers[j]
+        cap = min(cluster.devices[d].gpu.memory for d in stage) * 0.9 * tp
+        need = profile.param_bytes_layer * l
+        if j in (0, plan.pp - 1):
+            need += profile.embed_param_bytes
+        need += batch * profile.state_bytes_layer * (1.0 - frac) * l
+        need += 4.0 * batch * act_tokens * profile.hidden * B_TYPE
+        headroom = cap - need
+        if headroom <= 0.0:
+            return 0
+        page_b = page_b_all_layers * l / max(profile.num_layers, 1)
+        if page_b <= 0.0:
+            continue            # this stage holds no attention KV
+        budget = min(budget, headroom / page_b)
+    if budget == float("inf"):   # pure-SSM: KV is O(1), pages unbounded
+        return 1 << 20
+    return int(budget)
+
+
+def _bisect_page_batch(cluster: ClusterSpec, profile: ModelProfile,
+                       plan: ParallelPlan, pages_per_req: int,
+                       page_size: int, cap: int) -> int:
+    lo, hi = 0, cap
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if decode_page_budget(cluster, profile, plan, page_size,
+                              batch=mid) >= mid * pages_per_req:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def max_decode_batch_paged(cluster: ClusterSpec, profile: ModelProfile,
+                           plan: ParallelPlan, wl: Workload,
+                           page_size: int = PAGE_SIZE,
+                           cap: int = 4096,
+                           slot_capacity: Optional[int] = None) -> int:
+    """Largest decode batch the PAGE budget admits (bisection): each
+    request holds ``ceil(mean_resident / page_size)`` pages at the
+    steady-state mean context ``s_in + s_out/2`` — real residency, not
+    the dense slab's padded capacity.
+
+    ``slot_capacity`` instead prices each request at a DENSE engine's
+    per-slot slab (``dense_slot_capacity`` bucket) under the SAME
+    headroom accounting, so dense-vs-paged comparisons isolate exactly
+    the padding-vs-residency difference."""
+    per_req = _pages(slot_capacity if slot_capacity
+                     else wl.s_in + wl.s_out / 2.0, page_size)
+    if per_req <= 0:
+        return max_decode_batch(cluster, profile, plan,
+                                wl.s_in + wl.s_out, cap)
+    return _bisect_page_batch(cluster, profile, plan, per_req,
+                              page_size, cap)
+
+
 def prefix_bytes_per_token(profile: ModelProfile) -> float:
     """KV bytes one cached prompt token occupies across all layers —
     what the prefix cache charges per stored radix-edge token
@@ -588,10 +694,30 @@ def prefill_capacity(cluster: ClusterSpec, profile: ModelProfile,
 
 
 def decode_capacity(cluster: ClusterSpec, profile: ModelProfile,
-                    plan: ParallelPlan, wl: Workload, period: float) -> float:
-    """Requests the decode replica finishes per ``period`` at its max batch."""
+                    plan: ParallelPlan, wl: Workload, period: float,
+                    paged: bool = False, page_size: int = PAGE_SIZE,
+                    slot_capacity: Optional[int] = None) -> float:
+    """Requests the decode replica finishes per ``period`` at its max batch.
+
+    Three memory accountings for the max batch (DESIGN.md §11):
+
+      * default (legacy): dense slabs priced at the request's final
+        context ``s_in + s_out`` — the paper's Appendix-A formula;
+      * ``slot_capacity``: dense slabs priced at what the runtime
+        engine really allocates per slot (the power-of-two bucket,
+        ``dense_slot_capacity``) under the page-budget headroom
+        accounting — padding included;
+      * ``paged=True``: the page-pool budget at mean real residency
+        (``max_decode_batch_paged``) — padding converted into
+        admitted concurrency."""
     s_total = wl.s_in + wl.s_out
-    b = max_decode_batch(cluster, profile, plan, s_total)
+    if paged:
+        b = max_decode_batch_paged(cluster, profile, plan, wl, page_size)
+    elif slot_capacity:
+        b = max_decode_batch_paged(cluster, profile, plan, wl, page_size,
+                                   slot_capacity=slot_capacity)
+    else:
+        b = max_decode_batch(cluster, profile, plan, s_total)
     if b == 0:
         return 0.0
     lat = decode_latency(cluster, profile, plan, b, wl.s_in, wl.s_out)

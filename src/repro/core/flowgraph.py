@@ -17,8 +17,8 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.cluster import ClusterSpec
-from repro.core.cost_model import (ModelProfile, Workload, kv_transfer_time,
-                                   B_TYPE)
+from repro.core.cost_model import (ModelProfile, PAGE_SIZE, Workload,
+                                   kv_transfer_time, B_TYPE)
 from repro.core.maxflow import FlowNetwork, FlowResult
 from repro.core.parallel_search import best_decode_plan, best_prefill_plan
 from repro.core.partition import GroupPartition
@@ -48,7 +48,11 @@ def _dispatch_capacity(cluster: ClusterSpec, devices: List[int],
 def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
                part: GroupPartition, wl: Workload,
                period: float = DEFAULT_PERIOD,
-               kv_compression_ratio: float = 1.0) -> FlowGraphResult:
+               kv_compression_ratio: float = 1.0,
+               paged_kv: bool = False,
+               page_size: int = PAGE_SIZE,
+               dense_slot_capacity: Optional[int] = None
+               ) -> FlowGraphResult:
     """Pick per-replica optimal plans, build the flow network, run
     preflow-push, and assemble a Placement.
 
@@ -59,13 +63,22 @@ def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
     that capped the uncompressed solution may stop being the min-cut.
     Chunked overlap deliberately does NOT enter these capacities: it
     hides latency behind prefill compute but leaves link occupancy
-    (req/period throughput) unchanged."""
+    (req/period throughput) unchanged.
+
+    ``paged_kv`` / ``dense_slot_capacity`` (DESIGN.md §11) switch the
+    decode-replica capacity accounting between the §11 page-pool budget
+    at real residency and the dense engine's bucketed slab: on a
+    memory-skewed cluster the two accountings admit different batch
+    sizes per group and the max-flow assignment shifts with them."""
     replicas: List[ReplicaPlacement] = []
     for gid, (group, is_pref) in enumerate(zip(part.groups, part.is_prefill)):
         if is_pref:
             plan, cap = best_prefill_plan(cluster, profile, group, wl, period)
         else:
-            plan, cap = best_decode_plan(cluster, profile, group, wl, period)
+            plan, cap = best_decode_plan(
+                cluster, profile, group, wl, period, paged_kv=paged_kv,
+                page_size=page_size,
+                dense_slot_capacity=dense_slot_capacity)
         replicas.append(ReplicaPlacement(gid, list(group), is_pref, plan, cap))
 
     net = FlowNetwork()

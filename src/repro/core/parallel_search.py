@@ -10,8 +10,8 @@ import itertools
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.cluster import ClusterSpec
-from repro.core.cost_model import (ModelProfile, ParallelPlan, Workload,
-                                   decode_capacity, make_plan,
+from repro.core.cost_model import (PAGE_SIZE, ModelProfile, ParallelPlan,
+                                   Workload, decode_capacity, make_plan,
                                    plan_fits_memory, prefill_capacity,
                                    prefill_latency)
 
@@ -82,11 +82,20 @@ def best_prefill_plan(cluster: ClusterSpec, profile: ModelProfile,
 
 def best_decode_plan(cluster: ClusterSpec, profile: ModelProfile,
                      group: Sequence[int], wl: Workload,
-                     period: float) -> Tuple[Optional[ParallelPlan], float]:
-    """Throughput-optimal plan; returns (plan, capacity req/period)."""
+                     period: float, paged_kv: bool = False,
+                     page_size: int = PAGE_SIZE,
+                     dense_slot_capacity: Optional[int] = None
+                     ) -> Tuple[Optional[ParallelPlan], float]:
+    """Throughput-optimal plan; returns (plan, capacity req/period).
+
+    ``paged_kv`` prices the max decode batch off the §11 page-pool
+    budget at real residency; ``dense_slot_capacity`` prices dense
+    slabs at the engine's bucketed slab (padding included)."""
     best, best_cap = None, 0.0
     for plan in candidate_plans(cluster, profile, group):
-        cap = decode_capacity(cluster, profile, plan, wl, period)
+        cap = decode_capacity(cluster, profile, plan, wl, period,
+                              paged=paged_kv, page_size=page_size,
+                              slot_capacity=dense_slot_capacity)
         if cap > best_cap:
             best, best_cap = plan, cap
     return best, best_cap

@@ -24,7 +24,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
-from repro.core.cost_model import ModelProfile, Workload
+from repro.core.cost_model import PAGE_SIZE, ModelProfile, Workload
 from repro.core.flowgraph import (DEFAULT_PERIOD, FlowGraphResult, solve_flow)
 from repro.core.partition import GroupPartition
 
@@ -130,6 +130,8 @@ def iterative_refinement(
     anneal: float = 0.0,
     on_step: Optional[Callable[[RefineTrace], None]] = None,
     kv_compression_ratio: float = 1.0,
+    paged_kv: bool = False,
+    page_size: int = PAGE_SIZE,
 ) -> Tuple[GroupPartition, FlowGraphResult, List[RefineTrace]]:
     """Max-flow-guided edge-swap loop. Returns the refined partition, its
     flow result, and the improvement trace.
@@ -137,7 +139,9 @@ def iterative_refinement(
     ``kv_compression_ratio`` is the serving codec's KV raw/wire ratio
     (DESIGN.md §10): every solve prices the φ→δ links at compressed
     bytes, so refinement chases the bottlenecks that remain AFTER
-    compression.
+    compression. ``paged_kv`` likewise prices decode-replica capacities
+    off the §11 page-pool budget at real residency, so refinement
+    chases what a PAGED fleet can actually admit.
 
     ``anneal`` > 0 enables simulated-annealing acceptance (beyond-paper
     extension): a worsening candidate is accepted with probability
@@ -148,7 +152,8 @@ def iterative_refinement(
     rng = np.random.default_rng(seed)
     cur_part = part
     cur_res = solve_flow(cluster, profile, part, wl, period,
-                         kv_compression_ratio=kv_compression_ratio)
+                         kv_compression_ratio=kv_compression_ratio,
+                         paged_kv=paged_kv, page_size=page_size)
     best_part, best_res = cur_part, cur_res
     trace = [RefineTrace(0, best_res.placement.max_flow, "initial")]
     if on_step:
@@ -161,7 +166,8 @@ def iterative_refinement(
         cur_flow = cur_res.placement.max_flow
         scored = [(name, cand,
                    solve_flow(cluster, profile, cand, wl, period,
-                              kv_compression_ratio=kv_compression_ratio))
+                              kv_compression_ratio=kv_compression_ratio,
+                              paged_kv=paged_kv, page_size=page_size))
                   for name, cand in cands]
         scored.sort(key=lambda t: -t[2].placement.max_flow)
         pick = None

@@ -26,7 +26,7 @@ import time
 from typing import Callable, List, Optional, Tuple
 
 from repro.core.cluster import ClusterSpec
-from repro.core.cost_model import ModelProfile, Workload
+from repro.core.cost_model import PAGE_SIZE, ModelProfile, Workload
 from repro.core.flowgraph import DEFAULT_PERIOD, FlowGraphResult, solve_flow
 from repro.core.partition import GroupPartition, initial_partition, num_groups
 from repro.core.placement import Placement
@@ -51,10 +51,15 @@ def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
              seed: int = 0,
              on_step: Optional[Callable[[RefineTrace], None]] = None,
              kv_compression_ratio: float = 1.0,
+             paged_kv: bool = False,
+             page_size: int = PAGE_SIZE,
              ) -> ScheduleResult:
     """``kv_compression_ratio`` > 1 prices the φ→δ KV links at the
     serving codec's compressed bytes (DESIGN.md §10), letting the whole
-    search co-optimize placement with compression."""
+    search co-optimize placement with compression. ``paged_kv`` prices
+    decode-group capacities off the §11 page-pool budget at real
+    residency instead of dense slabs, letting the search size decode
+    groups for what a paged fleet actually admits."""
     t0 = time.perf_counter()
     k0 = k if k is not None else num_groups(cluster, profile)
     best: Optional[ScheduleResult] = None
@@ -71,7 +76,8 @@ def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
                 cluster, profile, part, wl, period,
                 max_iters=max_refine_iters, guided=guided, seed=seed,
                 on_step=on_step,
-                kv_compression_ratio=kv_compression_ratio)
+                kv_compression_ratio=kv_compression_ratio,
+                paged_kv=paged_kv, page_size=page_size)
             cand = ScheduleResult(res.placement, rpart, res, trace,
                                   time.perf_counter() - t0)
             if best is None or cand.placement.max_flow > best.placement.max_flow:
@@ -160,6 +166,8 @@ def reschedule(cluster: ClusterSpec, profile: ModelProfile,
                seed: int = 0,
                on_step: Optional[Callable[[RefineTrace], None]] = None,
                kv_compression_ratio: float = 1.0,
+               paged_kv: bool = False,
+               page_size: int = PAGE_SIZE,
                ) -> ScheduleResult:
     """Warm-start rescheduling for a drifted workload.
 
@@ -177,6 +185,7 @@ def reschedule(cluster: ClusterSpec, profile: ModelProfile,
     rpart, res, trace = iterative_refinement(
         cluster, profile, part, wl, period,
         max_iters=max_refine_iters, guided=guided, seed=seed,
-        on_step=on_step, kv_compression_ratio=kv_compression_ratio)
+        on_step=on_step, kv_compression_ratio=kv_compression_ratio,
+        paged_kv=paged_kv, page_size=page_size)
     return ScheduleResult(res.placement, rpart, res, trace,
                           time.perf_counter() - t0)

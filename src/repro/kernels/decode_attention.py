@@ -108,3 +108,112 @@ def gqa_decode_bhsd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         interpret=interpret,
     )(valid_len, qg, k_cache, v_cache)
     return out.reshape(b, hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: the cache is a shared page pool, each sequence walks its
+# block table (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *,
+                         page_size: int, num_blocks: int, sm_scale: float):
+    """Same online-softmax recurrence as ``_decode_kernel``; the only
+    difference is WHERE each s-block comes from — the BlockSpec index
+    map resolved this grid step's logical block to a physical page via
+    the scalar-prefetched block table, so the body is unchanged except
+    for masking by the sequence's valid length."""
+    ib, isb = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(isb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [group, hd]
+    k = k_ref[0, 0].astype(jnp.float32)               # [page_size, hd]
+    v = v_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    valid_len = len_ref[ib]
+    kpos = isb * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < valid_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(isb == num_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def gqa_paged_decode_bhsd(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, block_tables: jax.Array,
+                          valid_len: jax.Array,
+                          interpret: bool = False) -> jax.Array:
+    """Paged GQA decode attention (DESIGN.md §11).
+
+    q [B,Hq,hd] (one token); page pools [N,Hkv,page_size,hd]; block
+    tables [B,num_blocks] int32 (physical page per logical s-block —
+    unallocated entries must be clamped to a scratch page by the
+    caller); valid_len [B] int32 → out [B,Hq,hd].
+
+    TPU-static paging: the pool and table shapes are fixed, and the
+    page indirection happens in the BlockSpec index map via scalar
+    prefetch — the kernel DMAs exactly the page the table names, no
+    pointer chasing (the §3 discipline: indices, not pointers)."""
+    b, hq, hd = q.shape
+    n_pages, hkv, page_size, _ = k_pages.shape
+    _, num_blocks = block_tables.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(b, hkv, group, hd)
+    block_tables = block_tables.astype(jnp.int32)
+    valid_len = valid_len.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_decode_kernel, page_size=page_size,
+                               num_blocks=num_blocks, sm_scale=sm_scale)
+
+    def page_map(ib, ih, isb, bt_ref):
+        return (bt_ref[ib, isb], ih, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                # block_tables rides in SMEM
+        grid=(b, hkv, num_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # valid_len
+            pl.BlockSpec((1, 1, group, hd),
+                         lambda ib, ih, isb, bt: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, hd), page_map),
+            pl.BlockSpec((1, 1, page_size, hd), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda ib, ih, isb, bt: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, valid_len, qg,
+      k_pages.reshape(n_pages, hkv, page_size, hd),
+      v_pages.reshape(n_pages, hkv, page_size, hd))
+    return out.reshape(b, hq, hd)

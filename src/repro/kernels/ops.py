@@ -13,7 +13,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention import gqa_decode_bhsd
+from repro.kernels.decode_attention import (gqa_decode_bhsd,
+                                            gqa_paged_decode_bhsd)
 from repro.kernels.flash_attention import flash_attention_bhsd
 
 
@@ -59,4 +60,31 @@ def gqa_decode_attention(q: jax.Array, k_cache: jax.Array,
     kt = jnp.swapaxes(k_cache, 1, 2)                   # [B,Hkv,S,hd]
     vt = jnp.swapaxes(v_cache, 1, 2)
     out = gqa_decode_bhsd(qt, kt, vt, vl, interpret=_interpret())
+    return out[:, None]
+
+
+def paged_decode_supported(q: jax.Array, k_pages: jax.Array) -> bool:
+    """[B,1,Hq,hd] q over a [N,ps,Hkv,hd] model-layout pool. The page
+    IS the kernel's s-block — (1, 1, page_size, hd) — so page_size only
+    needs the SUBLANE tile (16 covers bf16; fp32 needs 8), unlike the
+    dense kernel's 128-lane s-block gate. The default page_size=16
+    therefore takes the kernel path on TPU."""
+    return (q.shape[1] == 1 and k_pages.shape[1] % 16 == 0
+            and q.shape[2] % k_pages.shape[2] == 0)
+
+
+@jax.jit
+def gqa_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               valid_len: jax.Array) -> jax.Array:
+    """Model layout: q [B,1,Hq,hd], pools [N,ps,Hkv,hd], block tables
+    [B,nb] int32 (unallocated entries < 0), valid_len [] or [B]
+    → [B,1,Hq,hd] (DESIGN.md §11)."""
+    b = q.shape[0]
+    vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    qt = q[:, 0]                                       # [B,Hq,hd]
+    kt = jnp.swapaxes(k_pages, 1, 2)                   # [N,Hkv,ps,hd]
+    vt = jnp.swapaxes(v_pages, 1, 2)
+    out = gqa_paged_decode_bhsd(qt, kt, vt, bt, vl, interpret=_interpret())
     return out[:, None]

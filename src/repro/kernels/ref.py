@@ -44,3 +44,19 @@ def gqa_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bksd->bkgd", probs, v_cache.astype(jnp.float32))
     return out.reshape(b, hq, hd).astype(q.dtype)
+
+
+def gqa_paged_decode_ref(q: jax.Array, k_pages: jax.Array,
+                         v_pages: jax.Array, block_tables: jax.Array,
+                         valid_len: jax.Array) -> jax.Array:
+    """Paged-decode oracle: gather each sequence's pages into a dense
+    [B,Hkv,S,hd] view via the block table, then run the dense reference.
+    q [B,Hq,hd]; pools [N,Hkv,page_size,hd]; block_tables [B,nb] int32
+    (entries < 0 = unallocated → scratch page 0); valid_len [B]."""
+    n, hkv, ps, hd = k_pages.shape
+    b, nb = block_tables.shape
+    bt = jnp.maximum(block_tables, 0)
+    # [B,nb,Hkv,ps,hd] -> [B,Hkv,nb*ps,hd]
+    kd = jnp.moveaxis(k_pages[bt], 2, 1).reshape(b, hkv, nb * ps, hd)
+    vd = jnp.moveaxis(v_pages[bt], 2, 1).reshape(b, hkv, nb * ps, hd)
+    return gqa_decode_ref(q, kd, vd, valid_len)

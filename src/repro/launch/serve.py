@@ -66,6 +66,16 @@ def main() -> None:
                          "fp32 scales); int8-chunked additionally streams "
                          "per-layer-group chunks the decode engines "
                          "install as they land")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV decode (DESIGN.md §11): block-table "
+                         "cache layout over a ref-counted page pool — "
+                         "page-aligned handoffs, reclamation on finish, "
+                         "recompute preemption on pool exhaustion")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--pages-per-engine", type=int, default=0,
+                    help="page-pool size per decode engine (0 = the "
+                         "dense engine's HBM budget)")
     ap.add_argument("--prefix-cache-mb", type=float, default=256.0,
                     help="per-engine prefix-cache byte budget (MB); KV "
                          "slabs beyond it are LRU-evicted")
@@ -124,7 +134,9 @@ def main() -> None:
                         slots_per_engine=args.slots, capacity=capacity,
                         num_prefill_engines=args.prefill_engines,
                         prefix_cache_bytes=prefix_bytes,
-                        kv_codec=args.kv_codec)
+                        kv_codec=args.kv_codec,
+                        paged=args.paged, page_size=args.page_size,
+                        pages_per_engine=args.pages_per_engine or None)
 
     def on_token(rid: int, tok: int, fin: bool) -> None:
         if args.stream:
@@ -161,6 +173,15 @@ def main() -> None:
               f"hit_rate={m.cache_hit_rate:.3f} "
               f"reused_tokens={m.reused_tokens} "
               f"prefill_tokens_computed={m.prefill_tokens_computed}")
+    if args.paged:
+        pre = sum(r.preemptions for r in m.requests)
+        pools = [e.pool for e in coord.decode_engines]
+        print(f"[serve] paged kv (page_size={args.page_size}): "
+              f"pages_allocated={m.kv_pages_allocated} "
+              f"utilization={m.page_utilization:.3f} "
+              f"fragmentation={m.page_fragmentation:.3f} "
+              f"preemptions={pre} "
+              f"cow_copies={sum(p.stats.cow_copies for p in pools)}")
     if args.kv_codec != "none":
         slab_ratio = (sess.kv_physical_bytes_raw
                       / max(sess.kv_physical_bytes_wire, 1))

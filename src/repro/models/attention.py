@@ -165,6 +165,53 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return _gqa_out(probs, v_cache, q.dtype)
 
 
+def gather_pages(pages: jax.Array, block_tables: jax.Array,
+                 kv_layout: str = "bshd") -> jax.Array:
+    """Materialize the dense per-sequence view of a paged pool
+    (DESIGN.md §11): pool [N,ps,KV,hd] ("bshd") or [N,KV,ps,hd]
+    ("kmajor") + block tables [B,nb] (entries < 0 → scratch page 0)
+    → [B,nb*ps,KV,hd] / [B,KV,nb*ps,hd].
+
+    This is the oracle/off-TPU lowering of paged decode: positions the
+    table doesn't back read the scratch page and MUST be masked by
+    valid_len downstream. With ``nb*ps`` equal to a dense cache's
+    capacity the gathered view is shape-identical to that cache, so the
+    downstream attention reduction is bit-identical too."""
+    b, nb = block_tables.shape
+    bt = jnp.maximum(block_tables, 0)
+    g = pages[bt]                        # [B,nb,(ps,KV|KV,ps),hd]
+    if kv_layout == "kmajor":
+        n, kv, ps, hd = pages.shape
+        return jnp.moveaxis(g, 2, 1).reshape(b, kv, nb * ps, hd)
+    n, ps, kv, hd = pages.shape
+    return g.reshape(b, nb * ps, kv, hd)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           valid_len: jax.Array,
+                           use_kernel: Optional[bool] = None,
+                           kv_layout: str = "bshd") -> jax.Array:
+    """One new token against a PAGED KV cache (DESIGN.md §11).
+
+    q [B,1,H,hd]; pools [N,ps,KV,hd] ("bshd") / [N,KV,ps,hd]
+    ("kmajor"); block_tables [B,nb] int32. On TPU the Pallas kernel
+    walks the block table directly (no dense materialization); off-TPU
+    the gathered dense view reuses ``decode_attention`` — bit-identical
+    to a dense cache of capacity nb*ps holding the same values."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel and kv_layout == "bshd":
+        from repro.kernels import ops as kops
+        if kops.paged_decode_supported(q, k_pages):
+            return kops.gqa_paged_decode_attention(q, k_pages, v_pages,
+                                                   block_tables, valid_len)
+    kd = gather_pages(k_pages, block_tables, kv_layout)
+    vd = gather_pages(v_pages, block_tables, kv_layout)
+    return decode_attention(q, kd, vd, valid_len=valid_len,
+                            use_kernel=use_kernel, kv_layout=kv_layout)
+
+
 def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
     """Non-causal attention over a fixed memory (image tokens / enc output)."""
     scores = _gqa_scores(q, k)

@@ -38,6 +38,11 @@ class Ctx(NamedTuple):
     causal: bool                         # False inside the audio encoder
     cache_capacity: int                  # attention cache slots to allocate
     want_cache: bool = True              # False for train/encoder (no ys)
+    # paged decode (DESIGN.md §11): physical page per logical s-block,
+    # shared by every full-attention layer (all layers see the same
+    # positions); None = dense per-slot slabs
+    block_tables: Optional[jax.Array] = None   # [B, num_blocks] int32
+    page_size: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -277,6 +282,41 @@ def _attn_decode(spec: BlockSpec, cfg: ArchConfig, p: Params, x: jax.Array,
     return x, new_cache
 
 
+def _attn_decode_paged(spec: BlockSpec, cfg: ArchConfig, p: Params,
+                       x: jax.Array, cache: Cache, ctx: Ctx
+                       ) -> Tuple[jax.Array, Cache]:
+    """Full-attention decode over a PAGED cache (DESIGN.md §11): the
+    k/v leaves are page pools shared by every slot; ``ctx.block_tables``
+    maps each slot's logical s-blocks onto physical pages. The new
+    token's k/v scatter into (page, offset); unadmitted slots carry
+    table entries < 0, clamped onto the reserved scratch page so their
+    writes can never touch live pages. Attention is bit-identical to
+    the dense path on the same values (``attention.gather_pages``)."""
+    b = x.shape[0]
+    h = common.rms_norm(x, p["norm1"])
+    ap = p["attn"]
+    pos = ctx.positions                                  # [B,1]
+    q, k, v = _qkv(ap, cfg, h, pos if not cfg.is_encdec else None,
+                   not cfg.is_encdec)
+    ps = ctx.page_size
+    blk = pos[:, 0] // ps
+    off = pos[:, 0] % ps
+    bidx = jnp.arange(b)
+    page = jnp.maximum(ctx.block_tables[bidx, blk], 0)   # <0 → scratch 0
+    layout = cfg.kv_layout
+    if layout == "kmajor":                               # pool [N,KV,ps,hd]
+        kc = cache["k"].at[page, :, off].set(k[:, 0])
+        vc = cache["v"].at[page, :, off].set(v[:, 0])
+    else:                                                # pool [N,ps,KV,hd]
+        kc = cache["k"].at[page, off].set(k[:, 0])
+        vc = cache["v"].at[page, off].set(v[:, 0])
+    out = attention.paged_decode_attention(q, kc, vc, ctx.block_tables,
+                                           valid_len=pos[:, 0] + 1,
+                                           kv_layout=layout)
+    x = x + out.reshape(b, 1, cfg.q_dim) @ ap["wo"]
+    return x, {"k": kc, "v": vc}
+
+
 # ---------------------------------------------------------------------------
 # Generic block forward (prefill / decode)
 # ---------------------------------------------------------------------------
@@ -320,7 +360,12 @@ def block_prefill(spec: BlockSpec, cfg: ArchConfig, p: Params, x: jax.Array,
 
 def block_decode(spec: BlockSpec, cfg: ArchConfig, p: Params, x: jax.Array,
                  cache: Cache, ctx: Ctx) -> Tuple[jax.Array, Cache]:
-    if spec.mixer in ("attn", "swa", "cross_attn"):
+    if spec.mixer == "attn" and ctx.block_tables is not None:
+        # paged layout applies only to growable full-attention slabs;
+        # SWA rings, cross-attn memory, and recurrent state are
+        # constant-size per slot and keep the dense layout (§11)
+        x, cache = _attn_decode_paged(spec, cfg, p, x, cache, ctx)
+    elif spec.mixer in ("attn", "swa", "cross_attn"):
         x, cache = _attn_decode(spec, cfg, p, x, cache, ctx)
     elif spec.mixer == "mamba":
         h = common.rms_norm(x, p["norm1"])
@@ -572,6 +617,27 @@ def decode_step(params: Params, cfg: ArchConfig, caches: Tuple,
     return logits, new_caches
 
 
+def decode_step_paged(params: Params, cfg: ArchConfig, caches: Tuple,
+                      tokens: jax.Array, positions: jax.Array,
+                      block_tables: jax.Array, page_size: int
+                      ) -> Tuple[jax.Array, Tuple]:
+    """``decode_step`` over a paged cache (DESIGN.md §11): ``caches`` is
+    an ``init_paged_cache`` pytree (full-attention leaves are page
+    pools), ``block_tables`` [B, num_blocks] int32 maps every slot's
+    logical s-blocks to physical pages (< 0 = unallocated → scratch).
+    One table serves every attention layer — the period stack shares
+    positions. Bit-identical to ``decode_step`` on a dense cache
+    holding the same values at the same positions."""
+    x = _embed(params, cfg, tokens, positions)
+    ctx = Ctx(positions=positions, cross_embeds=None, causal=True,
+              cache_capacity=0, block_tables=block_tables,
+              page_size=int(page_size))
+    x, new_caches = _stack_decode(params["blocks"], cfg, x, caches, ctx)
+    x = common.rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, new_caches
+
+
 def train_forward(params: Params, cfg: ArchConfig, tokens: jax.Array,
                   labels: jax.Array, **extra: jax.Array) -> jax.Array:
     """Next-token cross-entropy loss (labels already shifted)."""
@@ -643,3 +709,26 @@ def init_cache(cfg: ArchConfig, batch: int, capacity: int,
 def cache_specs(cfg: ArchConfig, batch: int, capacity: int) -> Tuple:
     """ShapeDtypeStruct version of init_cache (no allocation)."""
     return jax.eval_shape(lambda: init_cache(cfg, batch, capacity))
+
+
+def init_paged_cache(cfg: ArchConfig, batch: int, num_pages: int,
+                     page_size: int, dtype=common.DEFAULT_DTYPE) -> Tuple:
+    """Paged variant of ``init_cache`` (DESIGN.md §11): full-attention
+    k/v leaves become SHARED page pools — [P, num_pages, page_size, kv,
+    hd] ("bshd") / [P, num_pages, kv, page_size, hd] ("kmajor") — with
+    no batch dim (the block table supplies per-slot structure); every
+    other mixer keeps its constant-size per-slot layout from
+    ``init_cache``. Pools are zero-filled, so scratch-page reads are
+    finite and masked reductions stay exact."""
+    dense = init_cache(cfg, batch, page_size, dtype)   # non-attn leaves
+    P = cfg.num_periods
+    caches = []
+    for spec, c in zip(cfg.period, dense):
+        if spec.mixer == "attn":
+            shp = ((P, num_pages, cfg.kv_heads, page_size, cfg.head_dim)
+                   if cfg.kv_layout == "kmajor"
+                   else (P, num_pages, page_size, cfg.kv_heads,
+                         cfg.head_dim))
+            c = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        caches.append(c)
+    return tuple(caches)

@@ -23,6 +23,10 @@ from repro.serving.coordinator import (Coordinator, PollStatus, ServeRequest,
 from repro.serving import kv_compression, kv_transfer
 from repro.serving.kv_compression import (CODECS, ChunkedTransferPlan,
                                           KVCodec, QuantizedLeaf, get_codec)
+from repro.serving.paging import (BlockTable, NoFreeSlotError,
+                                  OutOfPagesError, PagePool, PagedSlab,
+                                  PagingError, pages_for, pages_for_request,
+                                  shareable_pages)
 
 __all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
            "TRANSITIONS", "METRIC_FIELDS", "ServeMetrics", "CacheStats",
@@ -36,4 +40,7 @@ __all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
            "DecodeEngine", "PrefillEngine", "Slot", "Coordinator",
            "PollStatus", "ServeRequest", "ServeResult", "ServeSession",
            "kv_transfer", "kv_compression", "CODECS", "ChunkedTransferPlan",
-           "KVCodec", "QuantizedLeaf", "get_codec"]
+           "KVCodec", "QuantizedLeaf", "get_codec",
+           "BlockTable", "NoFreeSlotError", "OutOfPagesError", "PagePool",
+           "PagedSlab", "PagingError", "pages_for", "pages_for_request",
+           "shareable_pages"]

@@ -50,6 +50,7 @@ from repro.models.common import DEFAULT_DTYPE
 from repro.serving import kv_compression, kv_transfer
 from repro.serving.engine import DecodeEngine, PrefillEngine
 from repro.serving.metrics import ServeMetrics
+from repro.serving.paging import PagingError
 from repro.serving.prefix_cache import MatchResult, PrefixCache, route_score
 from repro.serving.request import Request, RequestState
 
@@ -90,6 +91,10 @@ class _Entry:
     on_token: Optional[TokenCallback] = None
     cache: Any = None             # prefilled KV awaiting handoff
     first: Optional[int] = None
+    # as-submitted prompt/budget: §11 preemption recompute rebuilds
+    # req.prompt = orig_prompt + tokens-emitted-so-far from these
+    orig_prompt: Any = None
+    orig_max: int = 0
 
 
 class ServeSession:
@@ -145,7 +150,10 @@ class ServeSession:
                        s_out=req.max_new_tokens, arrival=arrival,
                        tokens=tuple(int(t) for t in req.prompt))
         self._entries[req.rid] = _Entry(req=req, life=life, tokens=[],
-                                        on_token=on_token)
+                                        on_token=on_token,
+                                        orig_prompt=np.asarray(req.prompt,
+                                                               np.int32),
+                                        orig_max=req.max_new_tokens)
         self._order.append(req.rid)
         self._queue.append(req.rid)
         self._unfinished += 1
@@ -277,34 +285,70 @@ class ServeSession:
         installs each layer-group chunk as it lands; other codecs ship
         one (possibly int8-compressed) pytree. Routing picks the
         least-loaded *flow-weighted* engine among those with free
-        slots."""
+        slots (and, when paged, enough free-or-reclaimable pages).
+
+        Paged engines (DESIGN.md §11) receive a PAGE-ALIGNED slab —
+        trimmed to the prompt's pages instead of padded to the slot
+        capacity, so the wire carries residency, not padding — and the
+        transfer/chunk plans land directly in pool pages."""
         progressed = False
         codec = self.coord.kv_codec
         cfg = self.coord.cfg
+        paged = self.coord.paged
         while self._handoff:
-            eng_idx = self.coord.pick_engine_with_free_slot()
+            head = self._entries[self._handoff[0]]
+            eng_idx = self.coord.pick_engine_with_free_slot(
+                len(head.req.prompt))
             if eng_idx is None:
                 break
             e = self._entries[self._handoff.popleft()]
             eng = self.coord.decode_engines[eng_idx]
-            cache = kv_transfer.pad_capacity(e.cache, self.coord.capacity,
-                                             cfg=cfg)
+            resv = None
+            if paged:
+                tokens = tuple(int(t) for t in e.req.prompt)
+                cache = kv_transfer.trim_to_pages(
+                    e.cache, len(e.req.prompt), self.coord.page_size,
+                    cfg=cfg)
+                # §11 pool sharing: pin the engine's shareable prefix
+                # and ship ONLY the non-shared blocks — the wire
+                # carries residency the pool doesn't already hold
+                resv = eng.reserve_shared(tokens, len(e.req.prompt))
+                if resv is not None:
+                    cache = kv_transfer.drop_leading_blocks(
+                        cache, resv.blocks, self.coord.page_size, cfg=cfg)
+            else:
+                cache = kv_transfer.pad_capacity(e.cache,
+                                                 self.coord.capacity,
+                                                 cfg=cfg)
+                tokens = None
             t0 = self.now()
             encoded = kv_compression.encode(cache, cfg, codec)
-            if codec.chunked:
-                plan = kv_compression.ChunkedTransferPlan.for_cache(
-                    encoded, codec.chunks)
-                landing = ((p0, kv_compression.decode(
-                    kv_transfer.transfer(chunk)))
-                    for (p0, _), chunk in zip(plan.bounds,
-                                              plan.split(encoded)))
-                eng.admit_chunked(e.req.rid, e.first, len(e.req.prompt),
-                                  e.req.max_new_tokens, landing)
-            else:
-                eng.admit(e.req.rid, e.first, len(e.req.prompt),
-                          e.req.max_new_tokens,
-                          kv_compression.decode(
-                              kv_transfer.transfer(encoded)))
+            try:
+                if codec.chunked:
+                    plan = kv_compression.ChunkedTransferPlan.for_cache(
+                        encoded, codec.chunks)
+                    landing = ((p0, kv_compression.decode(
+                        kv_transfer.transfer(chunk)))
+                        for (p0, _), chunk in zip(plan.bounds,
+                                                  plan.split(encoded)))
+                    eng.admit_chunked(e.req.rid, e.first, len(e.req.prompt),
+                                      e.req.max_new_tokens, landing,
+                                      tokens=tokens, reservation=resv)
+                else:
+                    eng.admit(e.req.rid, e.first, len(e.req.prompt),
+                              e.req.max_new_tokens,
+                              kv_compression.decode(
+                                  kv_transfer.transfer(encoded)),
+                              tokens=tokens, reservation=resv)
+            except PagingError:
+                # explicit §11 admission failure (a competing admit
+                # claimed the pages first): requeue and retry once
+                # decode frees pages (admit consumed the reservation
+                # pin on its way out)
+                self._handoff.appendleft(e.req.rid)
+                break
+            if paged:
+                e.life.kv_page_size = self.coord.page_size
             # §10 accounting: lifecycle stamps use the shared
             # cost-model math (sim-comparable); the session counters
             # track the measured padded-slab bytes (sized off the
@@ -325,6 +369,30 @@ class ServeSession:
             progressed = True
         return progressed
 
+    def _recompute(self, rid: int, eng: DecodeEngine) -> None:
+        """Re-queue a page-preempted request for recompute (§11): its
+        decode residency was released, so the already-emitted tokens
+        are folded into the prompt and the (deterministic, greedy)
+        generation resumes via a fresh prefill — the vLLM recompute
+        policy. Emitted tokens stay emitted; §10/§11 stamps survive the
+        lifecycle restart (KV genuinely shipped and pages were
+        genuinely held)."""
+        e = self._entries[rid]
+        life = e.life
+        life.kv_pages_allocated += eng.pop_page_stamp(rid)
+        life.preemptions += 1
+        snap = (life.kv_bytes_raw, life.kv_bytes_wire,
+                life.kv_serialized_s, life.kv_overlap_s, life.cached_len)
+        life.restart()
+        (life.kv_bytes_raw, life.kv_bytes_wire, life.kv_serialized_s,
+         life.kv_overlap_s, life.cached_len) = snap
+        e.req.prompt = np.concatenate(
+            [e.orig_prompt, np.asarray(e.tokens, np.int32)])
+        e.req.max_new_tokens = e.orig_max - len(e.tokens)
+        e.cache = None
+        e.first = None
+        self._queue.append(rid)
+
     def _step_decode(self) -> bool:
         """One decode step across every engine with active slots."""
         progressed = False
@@ -333,7 +401,11 @@ class ServeSession:
                 e = self._entries[rid]
                 self._emit(e, tok, finished)
                 if finished:
+                    e.life.kv_pages_allocated += eng.pop_page_stamp(rid)
                     self._finish(e)
+                progressed = True
+            while eng.preempted:
+                self._recompute(eng.preempted.pop(0), eng)
                 progressed = True
         return progressed
 
@@ -395,7 +467,16 @@ class Coordinator:
     leaves ship int8-quantized (recurrent state and cross-attention
     memory always exempt), and the chunked variant streams per-layer-
     group chunks that decode engines install as they land. The default
-    ships raw leaves bit-identically."""
+    ships raw leaves bit-identically.
+
+    ``paged=True`` switches every decode engine to the §11 paged KV
+    layout: a ref-counted page pool of ``pages_per_engine`` pages
+    (default: the dense HBM budget) cut at ``page_size`` tokens,
+    block-table decode, page-aligned (trimmed, not capacity-padded)
+    handoffs, page reclamation on finish, and recompute preemption on
+    pool exhaustion. With prefix caching also on, each engine shares
+    pool pages copy-on-write between its radix prefix slabs and decode
+    residency."""
 
     def __init__(self, cfg: ArchConfig, params: Any,
                  num_decode_engines: int = 1, slots_per_engine: int = 4,
@@ -405,8 +486,14 @@ class Coordinator:
                  prefill_route_weights: Optional[Sequence[float]] = None,
                  prefix_cache_bytes: Optional[float] = None,
                  cache_alpha: float = 2.0,
-                 kv_codec=None):
+                 kv_codec=None,
+                 paged: bool = False, page_size: int = 16,
+                 pages_per_engine: Optional[int] = None):
         self.cfg = cfg
+        self.paged = paged
+        self.page_size = int(page_size)
+        if paged:
+            capacity = -(-capacity // self.page_size) * self.page_size
         self.capacity = capacity
         self.cache_alpha = cache_alpha
         self.kv_codec = kv_compression.get_codec(kv_codec)
@@ -424,9 +511,13 @@ class Coordinator:
         assert len(pw) == num_prefill_engines
         self._prefill_weights = np.asarray(pw, float) / sum(pw)
         self._prefill_routed = np.zeros(num_prefill_engines)
-        self.decode_engines = [DecodeEngine(cfg, params, slots_per_engine,
-                                            capacity)
-                               for _ in range(num_decode_engines)]
+        self.decode_engines = [
+            DecodeEngine(cfg, params, slots_per_engine, capacity,
+                         paged=paged, page_size=page_size,
+                         num_pages=pages_per_engine,
+                         share_prefix_pages=(paged and prefix_cache_bytes
+                                             is not None))
+            for _ in range(num_decode_engines)]
         w = list(route_weights or [1.0] * num_decode_engines)
         assert len(w) == num_decode_engines
         self._weights = np.asarray(w, float) / sum(w)
@@ -463,12 +554,14 @@ class Coordinator:
         idx = int(np.argmax(scores))
         self._prefill_routed[idx] += 1
         return idx, self.prefix_caches[idx].match(tokens, lock=True)
-    def pick_engine_with_free_slot(self) -> Optional[int]:
+    def pick_engine_with_free_slot(self,
+                                   prompt_len: int = 0) -> Optional[int]:
         """Least normalized load among flow-weighted engines that have a
-        free slot (same rule as the simulator's dispatch); None when
-        every engine is full."""
+        free slot — and, when paged (§11), enough free-or-reclaimable
+        pages for ``prompt_len`` — (same rule as the simulator's
+        dispatch); None when every engine is full."""
         free = [i for i, e in enumerate(self.decode_engines)
-                if e.free_slots()]
+                if e.can_admit(prompt_len)]
         if not free:
             return None
         return min(free, key=lambda i: (self._routed[i] + 1)

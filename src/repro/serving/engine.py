@@ -23,6 +23,10 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import transformer
 from repro.serving import kv_transfer
+from repro.serving.paging import (NoFreeSlotError, OutOfPagesError,
+                                  PagePool, PagedSlab, pages_for,
+                                  shareable_pages)
+from repro.serving.prefix_cache import PrefixCache
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -138,54 +142,370 @@ class Slot:
     length: int = 0          # tokens written so far (prompt + generated)
     remaining: int = 0       # tokens still to generate
     active: bool = False
+    # paged layout (DESIGN.md §11)
+    pages: List[int] = dataclasses.field(default_factory=list)
+    shared_pages: int = 0    # leading read-only aliases (never written)
+    src_offset: int = 0      # slab blocks omitted from the shipped slab
+    pages_seen: int = 0      # distinct pages ever held (the §11 stamp)
+    admit_seq: int = -1      # admission order, for youngest-first preempt
+
+
+@dataclasses.dataclass
+class SharedReservation:
+    """A pinned shared-prefix match handed out by
+    ``DecodeEngine.reserve_shared`` ahead of a paged handoff
+    (DESIGN.md §11): the coordinator ships the slab WITHOUT the
+    ``blocks`` leading pages (``kv_transfer.drop_leading_blocks``) and
+    the pinned radix path guarantees those pages survive slab eviction
+    until ``admit`` aliases them. Consumed (unlocked) by ``admit``/
+    ``admit_chunked`` — or ``release_reservation`` on failure."""
+    blocks: int
+    match: Any
 
 
 class DecodeEngine:
     """Continuous-batching decode over fixed slots.
 
-    ``slots`` is the static batch capacity; per-slot KV lives stacked in
-    one cache pytree. Admission copies a transferred prefill cache into
-    a free slot (a dynamic_update on the batch dim)."""
+    ``slots`` is the static batch capacity. Two cache layouts:
+
+      * dense (default): per-slot KV lives stacked in one cache pytree
+        at full ``capacity`` — every slot pays capacity × bytes/token.
+      * paged (``paged=True``, DESIGN.md §11): full-attention KV lives
+        in a shared ref-counted page pool; each slot holds a block
+        table and only ever occupies ``ceil(context / page_size)``
+        pages, so the pool admits concurrency by real residency. Pages
+        are allocated on demand as decode crosses page boundaries;
+        exhaustion first evicts shared prefix slabs, then preempts the
+        youngest slot (reported via ``preempted`` for recompute).
+
+    Admission copies a transferred prefill cache into a free slot (a
+    dynamic_update on the batch dim / per-page scatters into the pool).
+    With ``share_prefix_pages=True`` the engine keeps a radix tree of
+    admitted prompts whose nodes own pinned pages from the SAME pool
+    (``PagedSlab``): a request over a cached prefix aliases the fully
+    covered pages read-only and copies only the boundary page it will
+    write — copy-on-write at page granularity."""
 
     def __init__(self, cfg: ArchConfig, params: Any, slots: int,
-                 capacity: int):
+                 capacity: int, paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 share_prefix_pages: bool = False):
         self.cfg = cfg
         self.params = params
         self.num_slots = slots
+        self.paged = paged
+        self.page_size = int(page_size)
+        if paged:
+            capacity = pages_for(capacity, self.page_size) * self.page_size
         self.capacity = capacity
-        self.cache = transformer.init_cache(cfg, slots, capacity)
         self.slots = [Slot() for _ in range(slots)]
         self.tokens = np.zeros((slots,), np.int32)
+        self.preempted: List[int] = []    # rids evicted for recompute
+        self._page_stamps: Dict[int, int] = {}
+        self._admit_seq = 0
 
-        def step(params, cache, tokens, positions):
-            logits, cache = transformer.decode_step(
-                params, cfg, cache, tokens[:, None], positions[:, None])
+        if not paged:
+            self.pool = None
+            self.prefix_pages = None
+            self.block_tables = None
+            self.cache = transformer.init_cache(cfg, slots, capacity)
+
+            def step(params, cache, tokens, positions):
+                logits, cache = transformer.decode_step(
+                    params, cfg, cache, tokens[:, None], positions[:, None])
+                return jnp.argmax(logits, axis=-1), cache
+
+            self._step = jax.jit(step, donate_argnums=(1,))
+            return
+
+        self.num_blocks = capacity // self.page_size
+        # default pool: the dense engine's HBM budget (+1 scratch page);
+        # callers size it down (or slots up) to realize the paging win
+        n_pages = (slots * self.num_blocks + 1 if num_pages is None
+                   else int(num_pages))
+        self.cache = transformer.init_paged_cache(cfg, slots, n_pages,
+                                                  self.page_size)
+        self.pool = PagePool(n_pages, self.page_size,
+                             page_bytes=self._pool_bytes_per_page())
+        self.block_tables = np.full((slots, self.num_blocks), -1, np.int32)
+        #: §11 pool sharing: radix tree over admitted prompts; nodes own
+        #: pinned pages of THIS pool (payload release returns them)
+        self.prefix_pages = PrefixCache() if share_prefix_pages else None
+
+        def step_paged(params, cache, tokens, positions, block_tables):
+            logits, cache = transformer.decode_step_paged(
+                params, cfg, cache, tokens[:, None], positions[:, None],
+                block_tables, self.page_size)
             return jnp.argmax(logits, axis=-1), cache
 
-        self._step = jax.jit(step, donate_argnums=(1,))
+        self._step = jax.jit(step_paged, donate_argnums=(1,))
+
+    def _pool_bytes_per_page(self) -> float:
+        """Physical bytes one page occupies across the period-stacked
+        attention pools (for slab byte accounting)."""
+        total = 0.0
+        for spec, c in zip(self.cfg.period, self.cache):
+            if spec.mixer == "attn":
+                for leaf in (c["k"], c["v"]):
+                    total += leaf.nbytes / leaf.shape[1]
+        return total
 
     # -- slot admission -------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if not s.active]
 
+    @property
+    def free_pages(self) -> int:
+        return self.pool.free_pages if self.paged else 0
+
+    def _reclaimable_slab_pages(self) -> int:
+        """Pages slab eviction would ACTUALLY free: evictable-leaf slab
+        pages whose only reference is the slab itself (a page an active
+        slot still aliases stays resident through eviction)."""
+        if self.prefix_pages is None:
+            return 0
+        freeable = set()
+        for n in self.prefix_pages._evictable():
+            if isinstance(n.payload, PagedSlab):
+                freeable.update(p for p in n.payload.pages
+                                if self.pool.refcount(p) == 1)
+        return len(freeable)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Whether ``admit`` would succeed right now: a free slot, and
+        (paged) enough free-or-reclaimable pages for the prompt."""
+        if not self.free_slots():
+            return False
+        if not self.paged:
+            return True
+        need = pages_for(prompt_len, self.page_size)
+        return (self.pool.free_pages + self._reclaimable_slab_pages()
+                >= need)
+
+    def _take_slot(self) -> int:
+        free = self.free_slots()
+        if not free:
+            raise NoFreeSlotError(
+                f"all {self.num_slots} decode slots active "
+                f"(rids {[s.rid for s in self.slots]})")
+        return free[0]
+
+    def _alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` pages, evicting LRU prefix slabs on demand.
+
+        A doomed request fails fast WITHOUT evicting: when even full
+        reclamation cannot free ``n`` pages (slab pages aliased by
+        active slots survive eviction), wiping the radix would cost the
+        future hit rate and gain nothing."""
+        if (self.pool.free_pages < n
+                and self.pool.free_pages + self._reclaimable_slab_pages()
+                < n):
+            return self.pool.alloc(n)   # raises OutOfPagesError
+        while (self.prefix_pages is not None
+               and self.pool.free_pages < n
+               and self.prefix_pages.evict_tokens(1)):
+            pass
+        return self.pool.alloc(n)
+
+    def _install_pages(self, src: Any, pages: Sequence[int],
+                       first_block: int, period_start: int = 0,
+                       src_offset: int = 0) -> None:
+        """Scatter a page-aligned single-request slab into the pool.
+
+        ``src`` kv leaves are [P_range, 1, S, kv, hd] (/kmajor); logical
+        block ``first_block + j`` of the slab lands in physical page
+        ``pages[j]`` (blocks below ``first_block`` are shared prefix
+        pages, already pool-resident). ``src_offset`` blocks were
+        DROPPED from the shipped slab (a reservation handoff —
+        ``kv_transfer.drop_leading_blocks``), shifting where each
+        logical block sits in ``src``. Non-kv leaves are per-slot and
+        handled by ``_install_dense_leaves``."""
+        ps = self.page_size
+        seq_axis = kv_transfer.kv_seq_axis(self.cfg)  # on the 5-d leaf
+        new = []
+        for bi, (spec, dst) in enumerate(zip(self.cfg.period, self.cache)):
+            if spec.mixer != "attn":
+                new.append(dst)
+                continue
+            d = dict(dst)
+            for name in ("k", "v"):
+                leaf = src[bi][name]                   # [Pr,1,S,kv,hd]
+                pool = d[name]                         # [P,N,(ps,kv|kv,ps),hd]
+                for j, pg in enumerate(pages):
+                    s0 = (first_block + j - src_offset) * ps
+                    chunk = jax.lax.slice_in_dim(leaf, s0, s0 + ps,
+                                                 axis=seq_axis)
+                    # the slab's batch dim becomes the pool's page dim
+                    starts = (period_start, pg) + (0,) * (pool.ndim - 2)
+                    pool = jax.lax.dynamic_update_slice(
+                        pool, chunk.astype(pool.dtype), starts)
+                d[name] = pool
+            new.append(d)
+        self.cache = tuple(new)
+
+    def _install_dense_leaves(self, idx: int, cache_slice: Any,
+                              period_start: int = 0) -> None:
+        """Install the per-slot (non-paged) leaves of a transferred
+        cache — recurrent state, SWA rings, cross-attn memory."""
+        new = []
+        for spec, dst, src in zip(self.cfg.period, self.cache, cache_slice):
+            if spec.mixer == "attn":
+                new.append(dst)
+                continue
+
+            def install(d, s):
+                if d.ndim < 2 or not isinstance(s, jax.Array):
+                    return d
+                starts = (period_start, idx) + (0,) * (d.ndim - 2)
+                return jax.lax.dynamic_update_slice(d, s.astype(d.dtype),
+                                                    starts)
+
+            new.append(jax.tree.map(install, dst, src))
+        self.cache = tuple(new)
+
+    def reserve_shared(self, tokens: Optional[Sequence[int]],
+                       prompt_len: int) -> Optional[SharedReservation]:
+        """Pin the longest shareable cached prefix ahead of a handoff
+        so the coordinator can ship the slab WITHOUT those blocks
+        (``kv_transfer.drop_leading_blocks``). Returns None when
+        nothing is shareable. The pin is consumed by the next
+        ``admit``/``admit_chunked`` with ``reservation=``, or by
+        ``release_reservation`` if admission is abandoned."""
+        if not self.paged or self.prefix_pages is None or tokens is None:
+            return None
+        m = self.prefix_pages.match(tuple(int(t) for t in tokens),
+                                    lock=True)
+        k = 0
+        if isinstance(m.payload, PagedSlab):
+            k = min(len(m.payload.pages), m.length // self.page_size,
+                    shareable_pages(prompt_len, self.page_size))
+        if k <= 0:
+            self.prefix_pages.unlock(m.node)
+            return None
+        return SharedReservation(blocks=k, match=m)
+
+    def release_reservation(self,
+                            resv: Optional[SharedReservation]) -> None:
+        if resv is not None:
+            self.prefix_pages.unlock(resv.match.node)
+            resv.match = None
+
+    def _admit_paged(self, idx: int, prompt_len: int,
+                     tokens: Optional[Sequence[int]],
+                     reservation: Optional[SharedReservation] = None
+                     ) -> Tuple[List[int], int]:
+        """Build slot ``idx``'s block table for a ``prompt_len`` prompt:
+        alias shared prefix pages (copy-on-write boundary), allocate the
+        rest. Returns (fresh pages to install into, shared count)."""
+        ps = self.page_size
+        need = pages_for(prompt_len, ps)
+        if need > self.num_blocks:
+            self.release_reservation(reservation)
+            raise OutOfPagesError(
+                f"prompt of {prompt_len} tokens needs {need} blocks; "
+                f"block table holds {self.num_blocks}")
+        shared_pages: List[int] = []
+        if reservation is not None:
+            # pre-pinned match: the shipped slab omits these blocks
+            shared_pages = reservation.match.payload.pages[
+                :reservation.blocks]
+            self.pool.retain(shared_pages)
+            self.release_reservation(reservation)
+        elif self.prefix_pages is not None and tokens is not None:
+            # lock the providing path so _alloc's slab eviction cannot
+            # free the very pages we are about to alias
+            m = self.prefix_pages.match(tuple(int(t) for t in tokens),
+                                        lock=True)
+            try:
+                if isinstance(m.payload, PagedSlab):
+                    k = min(len(m.payload.pages), m.length // ps,
+                            shareable_pages(prompt_len, ps))
+                    shared_pages = m.payload.pages[:k]
+                    self.pool.retain(shared_pages)
+            finally:
+                self.prefix_pages.unlock(m.node)
+        try:
+            fresh = self._alloc(need - len(shared_pages))
+        except OutOfPagesError:
+            if shared_pages:
+                self.pool.release(shared_pages)
+            raise
+        if shared_pages and need > len(shared_pages):
+            self.pool.stats.cow_copies += 1   # boundary page copied
+        row = shared_pages + fresh
+        self.block_tables[idx, :] = -1
+        self.block_tables[idx, :len(row)] = row
+        slot = self.slots[idx]
+        slot.pages = list(row)
+        slot.shared_pages = len(shared_pages)
+        slot.src_offset = (len(shared_pages) if reservation is not None
+                           else 0)
+        slot.pages_seen = len(row)
+        return fresh, len(shared_pages)
+
+    def _record_prefix(self, idx: int, prompt_len: int,
+                       tokens: Optional[Sequence[int]]) -> None:
+        """Pin the prompt's fully-covered pages as a radix slab so later
+        prompts can share them (§11 pool sharing)."""
+        if self.prefix_pages is None or tokens is None:
+            return
+        full = shareable_pages(prompt_len, self.page_size)
+        if full <= 0:
+            return
+        slab = PagedSlab(self.pool, self.slots[idx].pages[:full])
+        # the engine's radix has no byte budget of its own (pool
+        # pressure reclaims via _alloc), so insert always attaches —
+        # replacing an older slab releases its pages via the §11
+        # prefix-cache payload hook
+        self.prefix_pages.insert(
+            tuple(int(t) for t in tokens[:full * self.page_size]),
+            payload=slab, payload_bytes=slab.payload_bytes)
+
     def admit(self, rid: int, first_token: int, prompt_len: int,
-              s_out: int, cache_slice: Any) -> int:
+              s_out: int, cache_slice: Any,
+              tokens: Optional[Sequence[int]] = None,
+              reservation: Optional[SharedReservation] = None) -> int:
         """Install a transferred single-request cache into a free slot.
 
-        ``cache_slice`` is the request's cache pytree with batch dim 1 and
-        the SAME capacity as this engine (kv_transfer guarantees it)."""
-        idx = self.free_slots()[0]
+        Dense: ``cache_slice`` has batch dim 1 and the SAME capacity as
+        this engine (kv_transfer guarantees it). Paged: kv leaves may
+        have any page-aligned extent covering the prompt — they land
+        directly in pool pages; with a ``reservation`` the slab omits
+        the reserved shared blocks and only the remainder ships/lands.
+        Raises ``NoFreeSlotError`` / ``OutOfPagesError`` (never a bare
+        IndexError) when admission is impossible, so the coordinator
+        can requeue or shed load."""
+        try:
+            idx = self._take_slot()
+        except NoFreeSlotError:
+            self.release_reservation(reservation)
+            raise
+        if self.paged:
+            fresh, shared = self._admit_paged(idx, prompt_len, tokens,
+                                              reservation)
+            if fresh:
+                self._install_pages(cache_slice, fresh, first_block=shared,
+                                    src_offset=self.slots[idx].src_offset)
+            self._install_dense_leaves(idx, cache_slice)
+        else:
 
-        def install(dst, src):
-            if dst.ndim < 2 or not isinstance(src, jax.Array):
-                return dst
-            return jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), idx, axis=1)
+            def install(dst, src):
+                if dst.ndim < 2 or not isinstance(src, jax.Array):
+                    return dst
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), idx, axis=1)
 
-        self.cache = jax.tree.map(install, self.cache, cache_slice)
-        self.slots[idx] = Slot(rid=rid, length=prompt_len + 1,
-                               remaining=s_out - 1, active=True)
+            self.cache = jax.tree.map(install, self.cache, cache_slice)
+        slot = self.slots[idx]
+        slot.rid = rid
+        slot.length = prompt_len + 1
+        slot.remaining = s_out - 1
+        slot.active = True
+        slot.admit_seq = self._admit_seq
+        self._admit_seq += 1
         self.tokens[idx] = first_token
+        if self.paged:
+            self._record_prefix(idx, prompt_len, tokens)
         return idx
 
     def install_chunk(self, slot_idx: int, period_start: int,
@@ -193,8 +513,18 @@ class DecodeEngine:
         """Install one layer-group chunk of a transferred cache
         (DESIGN.md §10): ``chunk`` has the full cache pytree structure
         with every leaf's period-stack axis sliced to the group, and is
-        written at ``(period_start, slot_idx)`` via a dynamic update —
-        chunks land independently, in any order."""
+        written at ``(period_start, slot_idx)`` — per-page scatters
+        into the pool when paged — via dynamic updates; chunks land
+        independently, in any order."""
+        if self.paged:
+            slot = self.slots[slot_idx]
+            self._install_pages(chunk, slot.pages[slot.shared_pages:],
+                                first_block=slot.shared_pages,
+                                period_start=period_start,
+                                src_offset=slot.src_offset)
+            self._install_dense_leaves(slot_idx, chunk,
+                                       period_start=period_start)
+            return
 
         def install(dst, src):
             if dst.ndim < 2 or not isinstance(src, jax.Array):
@@ -206,30 +536,111 @@ class DecodeEngine:
         self.cache = jax.tree.map(install, self.cache, chunk)
 
     def admit_chunked(self, rid: int, first_token: int, prompt_len: int,
-                      s_out: int, chunks: Any) -> int:
+                      s_out: int, chunks: Any,
+                      tokens: Optional[Sequence[int]] = None,
+                      reservation: Optional[SharedReservation] = None
+                      ) -> int:
         """Chunk-streaming admission: install each ``(period_start,
         chunk)`` as it lands, then activate the slot. Equivalent to
-        ``admit`` once every chunk has arrived."""
-        idx = self.free_slots()[0]
+        ``admit`` once every chunk has arrived. Same explicit
+        ``NoFreeSlotError``/``OutOfPagesError`` contract as ``admit``."""
+        try:
+            idx = self._take_slot()
+        except NoFreeSlotError:
+            self.release_reservation(reservation)
+            raise
+        slot = self.slots[idx]
+        if self.paged:
+            self._admit_paged(idx, prompt_len, tokens, reservation)
+        slot.rid = rid   # install_chunk needs the slot claimed
         for period_start, chunk in chunks:
             self.install_chunk(idx, period_start, chunk)
-        self.slots[idx] = Slot(rid=rid, length=prompt_len + 1,
-                               remaining=s_out - 1, active=True)
+        slot.length = prompt_len + 1
+        slot.remaining = s_out - 1
+        slot.active = True
+        slot.admit_seq = self._admit_seq
+        self._admit_seq += 1
         self.tokens[idx] = first_token
+        if self.paged:
+            self._record_prefix(idx, prompt_len, tokens)
         return idx
+
+    # -- page lifecycle --------------------------------------------------
+    def _release_slot(self, idx: int) -> None:
+        slot = self.slots[idx]
+        if self.paged and slot.pages:
+            self.pool.release(slot.pages)
+            slot.pages = []
+            slot.shared_pages = 0
+            self.block_tables[idx, :] = -1
+        self._page_stamps[slot.rid] = slot.pages_seen
+        slot.pages_seen = 0
+        slot.active = False
+
+    def pop_page_stamp(self, rid: int) -> int:
+        """Distinct pages the finished/preempted request's slot ever
+        held — the runtime side of the §11 page-count parity stamp."""
+        return self._page_stamps.pop(rid, 0)
+
+    def _preempt_youngest(self) -> int:
+        """Release the most recently admitted active slot for recompute
+        (vLLM-style page-exhaustion preemption: the latest request
+        yields). Returns the preempted slot index, or -1."""
+        cands = [i for i, s in enumerate(self.slots) if s.active]
+        if not cands:
+            return -1
+        idx = max(cands, key=lambda i: self.slots[i].admit_seq)
+        self.preempted.append(self.slots[idx].rid)
+        self._release_slot(idx)
+        return idx
+
+    def _grow(self, idx: int) -> bool:
+        """Ensure slot ``idx`` has a page for the position it is about
+        to write; on pool exhaustion the youngest active slot (possibly
+        this one) is preempted for recompute. Returns False when the
+        slot itself was preempted."""
+        slot = self.slots[idx]
+        need = pages_for(slot.length, self.page_size)  # writes length-1
+        while len(slot.pages) < need:
+            if len(slot.pages) >= self.num_blocks:
+                # block table full: behave like dense capacity overflow
+                return True
+            try:
+                pg = self._alloc(1)
+            except OutOfPagesError:
+                if self._preempt_youngest() == idx:
+                    return False
+                continue
+            self.block_tables[idx, len(slot.pages)] = pg[0]
+            slot.pages.extend(pg)
+            slot.pages_seen += 1
+        return True
 
     # -- decode ----------------------------------------------------------
     def step(self) -> List[Tuple[int, int, bool]]:
         """Advance every active slot one token.
 
-        Returns [(rid, token, finished)] for active slots."""
+        Returns [(rid, token, finished)] for active slots. Paged-mode
+        page exhaustion preempts youngest slots first (their rids land
+        in ``preempted`` for the coordinator to recompute) rather than
+        failing the step."""
+        if self.paged:
+            for i, s in enumerate(self.slots):
+                if s.active:
+                    self._grow(i)
         if not any(s.active for s in self.slots):
             return []
         positions = np.array([max(s.length - 1, 0) for s in self.slots],
                              np.int32)
-        toks, self.cache = self._step(self.params, self.cache,
-                                      jnp.asarray(self.tokens),
-                                      jnp.asarray(positions))
+        if self.paged:
+            toks, self.cache = self._step(self.params, self.cache,
+                                          jnp.asarray(self.tokens),
+                                          jnp.asarray(positions),
+                                          jnp.asarray(self.block_tables))
+        else:
+            toks, self.cache = self._step(self.params, self.cache,
+                                          jnp.asarray(self.tokens),
+                                          jnp.asarray(positions))
         toks = np.asarray(toks)
         out = []
         for i, s in enumerate(self.slots):
@@ -241,5 +652,8 @@ class DecodeEngine:
             finished = s.remaining <= 0 or s.length >= self.capacity
             out.append((s.rid, int(toks[i]), finished))
             if finished:
-                s.active = False
+                if self.paged:
+                    self._release_slot(i)
+                else:
+                    s.active = False
         return out

@@ -127,6 +127,99 @@ def pad_capacity(cache: Any, target: int, cfg: Any = None) -> Any:
     return jax.tree_util.tree_map_with_path(pad, cache)
 
 
+def trim_to_pages(cache: Any, tokens: int, page_size: int,
+                  cfg: Any = None) -> Any:
+    """Set role-"kv" leaves' sequence extent to exactly
+    ``ceil(tokens / page_size) * page_size`` slots (DESIGN.md §11).
+
+    The paged handoff ships page-aligned slabs instead of
+    capacity-padded ones: a prefill cache padded to the engine's slot
+    capacity is sliced down to the pages the prompt actually occupies
+    (or padded up from an exact-shape slab), so wire bytes track
+    residency, not padding. Every non-growable leaf passes through
+    untouched, exactly like ``pad_capacity``."""
+    target = max(1, -(-int(tokens) // int(page_size))) * int(page_size)
+    axis = kv_seq_axis(cfg)
+
+    def trim(path, leaf):
+        role = leaf_role(path, leaf, cfg)
+        if role != "kv" or getattr(leaf, "ndim", 0) != 5:
+            return leaf
+        cur = leaf.shape[axis]
+        if cur > target:
+            return jax.lax.slice_in_dim(leaf, 0, target, axis=axis)
+        if cur < target:
+            pad = [(0, 0)] * leaf.ndim
+            pad[axis] = (0, target - cur)
+            return jnp.pad(leaf, pad)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(trim, cache)
+
+
+def drop_leading_blocks(cache: Any, blocks: int, page_size: int,
+                        cfg: Any = None) -> Any:
+    """Drop the first ``blocks`` pages from role-"kv" leaves' sequence
+    axis (DESIGN.md §11): a handoff whose target engine will alias
+    those pages from a shared prefix slab ships only the remainder —
+    the wire carries the NON-shared residency. Other leaves (per-slot
+    state, rings, memory) pass through whole."""
+    if blocks <= 0:
+        return cache
+    axis = kv_seq_axis(cfg)
+    start = int(blocks) * int(page_size)
+
+    def drop(path, leaf):
+        if leaf_role(path, leaf, cfg) != "kv" or getattr(
+                leaf, "ndim", 0) != 5:
+            return leaf
+        # a page-aligned prompt fully covered by the shared prefix
+        # drops every block: the zero-extent slab ships nothing and
+        # the engine installs nothing
+        assert leaf.shape[axis] >= start, (leaf.shape, start)
+        return jax.lax.slice_in_dim(leaf, start, leaf.shape[axis],
+                                    axis=axis)
+
+    return jax.tree_util.tree_map_with_path(drop, cache)
+
+
+def split_pages(cache: Any, page_size: int, cfg: Any = None) -> list:
+    """Split a (possibly encoded) page-aligned single-request slab into
+    per-page slabs along the kv sequence axis — the unit the paged
+    decode engine installs and the unit the §10 codecs compose over:
+    per-head-vector int8 scales are sequence-local, so
+    ``encode ∘ split == split ∘ encode`` leaf-for-leaf (tested)."""
+    from repro.serving import kv_compression  # circular-safe lazy import
+    axis = kv_seq_axis(cfg)
+    cap = 0
+
+    def measure(path, leaf):
+        nonlocal cap
+        if isinstance(leaf, kv_compression.QuantizedLeaf):
+            leaf = leaf.q
+        if leaf_role(path, leaf, cfg) == "kv" and getattr(
+                leaf, "ndim", 0) == 5:
+            cap = max(cap, int(leaf.shape[axis]))
+
+    jax.tree_util.tree_map_with_path(
+        measure, cache,
+        is_leaf=lambda x: isinstance(x, kv_compression.QuantizedLeaf))
+    assert cap and cap % page_size == 0, (cap, page_size)
+
+    def page(path, leaf, p0):
+        if leaf_role(path, getattr(leaf, "q", leaf), cfg) == "kv" and \
+                getattr(getattr(leaf, "q", leaf), "ndim", 0) == 5:
+            return jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, p0, p0 + page_size,
+                                               axis=axis), leaf)
+        return leaf
+
+    return [jax.tree_util.tree_map_with_path(
+        lambda path, leaf, p0=p0: page(path, leaf, p0), cache,
+        is_leaf=lambda x: isinstance(x, kv_compression.QuantizedLeaf))
+        for p0 in range(0, cap, page_size)]
+
+
 def transfer(cache: Any, dst_shardings: Optional[Any] = None,
              donate: bool = False, codec: Any = None,
              cfg: Any = None) -> Any:

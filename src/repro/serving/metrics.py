@@ -29,12 +29,20 @@ from repro.serving.request import Request
 #: serialized/overlap transfer seconds) at handoff from the same
 #: ``kv_compression`` accounting, so shipped bytes and compression
 #: ratios are directly comparable sim-vs-runtime.
+#: The final three are the paged-decode fields (DESIGN.md §11): both
+#: domains stamp ``Request.kv_pages_allocated`` (sim: the
+#: ``paging.pages_for_request`` arithmetic; runtime: the real
+#: allocator), so page counts, pool utilization, and internal
+#: fragmentation are directly comparable — and must agree EXACTLY on
+#: the same trace.
 METRIC_FIELDS = ("decode_throughput", "avg_latency", "p99_latency",
                  "avg_ttft", "p99_ttft", "avg_tpot", "slo_attainment",
                  "cache_hit_rate", "reused_tokens",
                  "prefill_tokens_computed",
                  "kv_bytes_shipped", "kv_compression_ratio",
-                 "transfer_overlap_frac")
+                 "transfer_overlap_frac",
+                 "kv_pages_allocated", "page_utilization",
+                 "page_fragmentation")
 
 
 @dataclasses.dataclass
@@ -115,6 +123,35 @@ class ServeMetrics:
         overlap = sum(r.kv_overlap_s for r in self.requests)
         return overlap / serialized if serialized > 0 else 0.0
 
+    # -- paged-decode fields (DESIGN.md §11) ----------------------------
+    @property
+    def kv_pages_allocated(self) -> int:
+        """Distinct decode-residency KV pages across all requests (0 on
+        a dense run)."""
+        return int(sum(r.kv_pages_allocated for r in self.requests))
+
+    @property
+    def page_utilization(self) -> float:
+        """Token slots actually resident / token slots allocated, over
+        requests that held pages: the complement of internal
+        fragmentation. 1.0 when nothing was paged."""
+        slots = sum(r.kv_pages_allocated * r.kv_page_size
+                    for r in self.requests)
+        if slots <= 0:
+            return 1.0
+        used = sum(min(r.s_in + (r.s_out if r.tokens_out is None
+                                 else r.tokens_out) - 1,
+                       r.kv_pages_allocated * r.kv_page_size)
+                   for r in self.requests if r.kv_pages_allocated)
+        return used / slots
+
+    @property
+    def page_fragmentation(self) -> float:
+        """Allocated-but-unused fraction of paged token slots — the
+        padding a dense layout would multiply across its whole
+        capacity (0.0 on a dense run)."""
+        return 1.0 - self.page_utilization
+
     def slo_attainment(self, slo_per_request: Dict[int, float],
                        scale: float) -> float:
         ok = sum(1 for r in self.requests
@@ -136,7 +173,10 @@ class ServeMetrics:
                "prefill_tokens_computed": float(self.prefill_tokens_computed),
                "kv_bytes_shipped": self.kv_bytes_shipped,
                "kv_compression_ratio": self.kv_compression_ratio,
-               "transfer_overlap_frac": self.transfer_overlap_frac}
+               "transfer_overlap_frac": self.transfer_overlap_frac,
+               "kv_pages_allocated": float(self.kv_pages_allocated),
+               "page_utilization": self.page_utilization,
+               "page_fragmentation": self.page_fragmentation}
         if slo is not None:
             out["slo_attainment"] = self.slo_attainment(slo, slo_scale)
         return out

@@ -1,0 +1,219 @@
+"""Paged KV-cache accounting: ref-counted page pool + block tables
+(DESIGN.md §11).
+
+The decode phase is memory-capacity-bound (HexGen-2 sizes decode groups
+by per-device HBM; "Beyond the Buzz" makes the same point for
+disaggregated decode), yet dense per-slot slabs charge every slot
+``capacity × bytes/token`` regardless of actual length. Paging converts
+that padding into admitted concurrency: KV lives in fixed-size pages, a
+per-slot block table maps token positions onto pages, and a request
+only ever occupies ``ceil(context / page_size)`` pages.
+
+This module is the pure-accounting half, shared by BOTH serving
+domains:
+
+  * the runtime ``DecodeEngine`` drives a ``PagePool`` for its real
+    pool-laid-out cache arrays (``models.transformer.init_paged_cache``);
+  * the simulator drives an identical ``PagePool`` against the cost
+    model's page budget — same allocator, same refcounts, so simulated
+    and measured page counts agree EXACTLY on the same trace (the §11
+    parity contract, like the §10 byte accounting).
+
+Pages are ref-counted so one physical page can back several readers:
+radix prefix slabs pin the pages of prompts they cache, and a new
+request admitted over a shared prefix retains those pages instead of
+re-installing them (copy-on-write: only the boundary page the request
+will write into is copied — see ``shareable_pages``).
+
+Page 0 is a reserved scratch page, never allocated: decode steps run
+over every slot (TPU-static batch), and inactive slots' writes are
+steered into it so they can never corrupt live pages.
+
+No JAX here — the scheduling domain must stay importable without it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List
+
+
+class PagingError(RuntimeError):
+    """Base class for paged-admission failures the coordinator can act
+    on (requeue, evict, preempt) instead of crashing on an IndexError."""
+
+
+class NoFreeSlotError(PagingError):
+    """Admission found no free decode slot (block-table row)."""
+
+
+class OutOfPagesError(PagingError):
+    """The page pool cannot satisfy an allocation."""
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` KV slots."""
+    assert page_size > 0
+    return max(0, -(-int(tokens) // int(page_size)))
+
+
+def pages_for_request(s_in: int, s_out: int, page_size: int) -> int:
+    """Total pages a request's decode residency ever occupies.
+
+    Decode writes positions ``s_in .. s_in + s_out - 2`` (the final
+    sampled token's KV is never written), so peak context is
+    ``s_in + s_out - 1`` slots; single-token requests (``s_out <= 1``)
+    finish at prefill and never hold pages (§8). BOTH domains stamp
+    ``Request.kv_pages_allocated`` from this arithmetic — the runtime
+    via its real allocator, whose count must match (tested)."""
+    if s_out <= 1:
+        return 0
+    return pages_for(s_in + s_out - 1, page_size)
+
+
+def shareable_pages(prefix_tokens: int, page_size: int) -> int:
+    """Leading pages of a cached prefix a new request may share
+    read-only. Decode writes from position ``prefix_tokens`` onward, so
+    only pages FULLY below it are safe to alias; the boundary page is
+    copied (copy-on-write at page granularity)."""
+    return int(prefix_tokens) // int(page_size)
+
+
+@dataclasses.dataclass
+class PoolStats:
+    allocs: int = 0            # pages handed out (incl. CoW copies)
+    releases: int = 0          # refcount drops that freed a page
+    shares: int = 0            # refcount bumps on already-live pages
+    cow_copies: int = 0        # boundary-page copies
+    failed_allocs: int = 0     # OutOfPagesError raised
+
+
+class PagePool:
+    """Fixed-size ref-counted page allocator (TPU-static: the page
+    count never changes; identity is an index, not a pointer).
+
+    ``alloc`` hands out free pages with refcount 1; ``retain`` bumps a
+    live page (prefix-slab pinning / shared admission); ``release``
+    drops one reference and returns the page to the free list when the
+    last reader leaves. ``page_bytes`` is optional metadata for byte
+    accounting (the cost model's ``kv_page_bytes``)."""
+
+    def __init__(self, num_pages: int, page_size: int,
+                 page_bytes: float = 0.0, reserve_scratch: bool = True):
+        assert num_pages >= (2 if reserve_scratch else 1), num_pages
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.page_bytes = float(page_bytes)
+        self.scratch = 0 if reserve_scratch else None
+        self._refs = [0] * self.num_pages
+        first = 1 if reserve_scratch else 0
+        # LIFO free list: recently-freed pages are re-used first (warm)
+        self._free: List[int] = list(range(self.num_pages - 1,
+                                           first - 1, -1))
+        self.stats = PoolStats()
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def num_allocatable(self) -> int:
+        return self.num_pages - (1 if self.scratch is not None else 0)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_allocatable - self.free_pages
+
+    @property
+    def utilization(self) -> float:
+        return self.pages_in_use / max(self.num_allocatable, 1)
+
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
+    # -- allocation ------------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` pages (refcount 1 each) or raise
+        ``OutOfPagesError`` leaving the pool untouched."""
+        if n > len(self._free):
+            self.stats.failed_allocs += 1
+            raise OutOfPagesError(
+                f"need {n} pages, {len(self._free)} free "
+                f"of {self.num_allocatable}")
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            assert self._refs[p] == 0, (p, self._refs[p])
+            self._refs[p] = 1
+        self.stats.allocs += n
+        return out
+
+    def retain(self, pages: Iterable[int]) -> None:
+        """Add one reference to each (live) page — sharing, not copying."""
+        for p in pages:
+            assert self._refs[p] > 0, f"retain of dead page {p}"
+            assert p != self.scratch
+            self._refs[p] += 1
+            self.stats.shares += 1
+
+    def release(self, pages: Iterable[int]) -> None:
+        """Drop one reference per page; a page whose last reference
+        leaves returns to the free list."""
+        for p in pages:
+            assert self._refs[p] > 0, f"release of dead page {p}"
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+                self.stats.releases += 1
+
+
+@dataclasses.dataclass
+class BlockTable:
+    """One slot's ordered page list: logical block ``i`` (token
+    positions ``[i*page_size, (i+1)*page_size)``) lives in physical
+    page ``pages[i]``. ``shared_prefix_pages`` marks how many leading
+    entries are read-only aliases of prefix-slab pages (refcounted in
+    the pool; never written — decode writes start past them)."""
+
+    pages: List[int] = dataclasses.field(default_factory=list)
+    shared_prefix_pages: int = 0
+
+    def __len__(self) -> int:
+        return len(self.pages)
+
+
+class PagedSlab:
+    """A pinned, read-only run of pages holding a cached prefix's KV —
+    the payload a radix ``PrefixCache`` node owns when prefix slabs and
+    decode residency share one pool (DESIGN.md §11). Covers
+    ``tokens = len(pages) * page_size`` positions exactly (only FULL
+    pages are ever exported; the partial tail page belongs to the slot
+    that will keep writing it).
+
+    Constructing a slab retains its pages; ``release()`` (called by the
+    prefix cache's eviction hook) drops them. ``payload_bytes`` charges
+    the pool bytes ONCE per physical page regardless of how many
+    readers share it — sharing is the point."""
+
+    def __init__(self, pool: PagePool, pages: Iterable[int] = ()):
+        self.pool = pool
+        self.pages = list(pages)
+        pool.retain(self.pages)
+        self._released = False
+
+    @property
+    def tokens(self) -> int:
+        return len(self.pages) * self.pool.page_size
+
+    @property
+    def payload_bytes(self) -> float:
+        return len(self.pages) * self.pool.page_bytes
+
+    def release(self) -> None:
+        if not self._released:
+            self.pool.release(self.pages)
+            self._released = True
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"PagedSlab({len(self.pages)} pages x "
+                f"{self.pool.page_size} tok"
+                f"{' released' if self._released else ''})")

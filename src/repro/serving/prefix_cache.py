@@ -34,6 +34,16 @@ import itertools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 
+def _release_payload(payload: Any) -> None:
+    """Payloads may own external resources — §11 ``PagedSlab`` nodes
+    pin ref-counted pages of the decode engine's pool. Eviction,
+    replacement, and ``clear`` call the payload's ``release()`` (when
+    it has one) so those pages return to the pool with the node."""
+    rel = getattr(payload, "release", None)
+    if callable(rel):
+        rel()
+
+
 def _common_len(a: Sequence[int], b: Sequence[int]) -> int:
     n = min(len(a), len(b))
     i = 0
@@ -229,6 +239,8 @@ class PrefixCache:
             if payload is not None:
                 if node.payload is not None:
                     self.used_bytes -= node.payload_bytes
+                    if node.payload is not payload:
+                        _release_payload(node.payload)
                 node.payload = payload
                 node.payload_bytes = payload_bytes
                 self.used_bytes += payload_bytes
@@ -255,6 +267,8 @@ class PrefixCache:
         freed = len(leaf.edge) * self.bytes_per_token + leaf.payload_bytes
         self.used_bytes -= freed
         self.stats.evicted_tokens += len(leaf.edge)
+        if leaf.payload is not None:
+            _release_payload(leaf.payload)
         del leaf.parent.children[leaf.edge[0]]
         return freed
 
@@ -289,7 +303,14 @@ class PrefixCache:
 
     def clear(self) -> None:
         """Invalidate everything — a §7 placement swap moves the replica
-        off the devices that hold this KV."""
+        off the devices that hold this KV. Attached payloads are
+        released (their pages return to the pool, §11)."""
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.payload is not None:
+                _release_payload(n.payload)
+            stack.extend(n.children.values())
         self.root = _Node((), None)
         self.used_bytes = 0.0
 

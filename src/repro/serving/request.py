@@ -95,6 +95,16 @@ class Request:
     #: overlap 0 (its single-host device_put is synchronous)
     kv_serialized_s: float = 0.0
     kv_overlap_s: float = 0.0
+    # -- paged-decode accounting (DESIGN.md §11) ------------------------
+    #: distinct KV pages this request's decode residency ever held, and
+    #: the page size they were cut at. The simulator stamps them from
+    #: ``paging.pages_for_request`` arithmetic; the runtime stamps the
+    #: REAL allocator count — the two must agree exactly on the same
+    #: trace (the §11 parity contract). 0 = dense slabs / never decoded.
+    kv_pages_allocated: int = 0
+    kv_page_size: int = 0
+    #: §11 preemptions this request survived (page-exhaustion recompute)
+    preemptions: int = 0
 
     # -- lifecycle ------------------------------------------------------
     def advance(self, state: RequestState, t: float) -> "Request":

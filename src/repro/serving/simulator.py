@@ -62,13 +62,15 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
-from repro.core.cost_model import (ModelProfile, decode_step_latency,
+from repro.core.cost_model import (PAGE_SIZE, ModelProfile,
+                                   decode_page_budget, decode_step_latency,
                                    kv_transfer_time, max_decode_batch,
                                    prefill_latency, prefix_bytes_per_token,
                                    prefix_cache_budget)
 from repro.core.placement import Placement, ReplicaPlacement
 from repro.serving import kv_compression
 from repro.serving.metrics import ServeMetrics
+from repro.serving.paging import OutOfPagesError, PagePool, pages_for
 from repro.serving.prefix_cache import PrefixCache, route_score
 from repro.serving.request import Request, RequestState
 
@@ -111,13 +113,19 @@ class _PrefillServer:
 
 
 class _DecodeServer:
-    def __init__(self, replica: ReplicaPlacement, max_batch: int):
+    def __init__(self, replica: ReplicaPlacement, max_batch: int,
+                 pool: Optional[PagePool] = None, page_size: int = 0):
         self.replica = replica
         self.max_batch = max(1, max_batch)
         self.active: List[Tuple[Request, int]] = []   # (req, remaining)
         self.pending: List[Tuple[Request, int]] = []  # (req, remaining)
         self.in_round = False
         self.blocked_until = 0.0   # KV-drain: no rounds before this time
+        # §11 paged admission: the SAME allocator the runtime engine
+        # drives, against the cost model's page budget. None = dense.
+        self.pool = pool
+        self.page_size = page_size
+        self.held: Dict[int, List[int]] = {}   # rid -> pages (grows only)
 
 
 class _DisaggSim:
@@ -133,7 +141,8 @@ class _DisaggSim:
                  typical_context: int, prefix_caching: bool = False,
                  cache_alpha: float = 2.0,
                  prefix_budget_fraction: float = 0.5,
-                 kv_codec=None):
+                 kv_codec=None, paged_kv: bool = False,
+                 page_size: int = PAGE_SIZE):
         self.cluster = cluster
         self.profile = profile
         self.chunk_tokens = chunk_tokens
@@ -141,6 +150,12 @@ class _DisaggSim:
         self.prefix_caching = prefix_caching
         self.cache_alpha = cache_alpha
         self.prefix_budget_fraction = prefix_budget_fraction
+        # §11 paged decode: admission/growth against the cost model's
+        # page budget instead of the dense max batch; page-exhaustion
+        # preempts the youngest resident request for recompute
+        self.paged_kv = paged_kv
+        self.page_size = int(page_size)
+        self.recompute_tokens: Dict[int, int] = {}   # rid -> tokens redone
         # §10 KV-handoff pipeline: None keeps the legacy abstraction
         # (handoff detached from the prefill server, uncompressed); a
         # codec — including the explicit "none" — switches to the
@@ -189,7 +204,16 @@ class _DisaggSim:
                 continue
             mb = max_decode_batch(self.cluster, self.profile, r.plan,
                                   self.typical_context)
-            self.decode[r.group_id] = _DecodeServer(r, mb)
+            if self.paged_kv:
+                budget = decode_page_budget(self.cluster, self.profile,
+                                            r.plan, self.page_size)
+                pool = PagePool(max(budget, 1) + 1, self.page_size)
+                # pool-bound, not slot-bound: each request holds >= 1
+                # page, so the pool itself caps concurrency
+                self.decode[r.group_id] = _DecodeServer(
+                    r, pool.num_allocatable, pool, self.page_size)
+            else:
+                self.decode[r.group_id] = _DecodeServer(r, mb)
         if not self.prefill or not self.decode:
             return False
 
@@ -278,10 +302,78 @@ class _DisaggSim:
             srv.cache.stats.reused_tokens += req.cached_len
             if m.node is not None:
                 self._pins[req.rid] = (srv.cache, m.node)
+        # §11 recompute: a preempted request re-prefills its original
+        # prompt PLUS the tokens it had already generated
+        redo = self.recompute_tokens.get(req.rid, 0)
         lat = prefill_latency(self.cluster, self.profile, srv.replica.plan,
-                              1, req.s_in, cached_len=req.cached_len)
+                              1, req.s_in + redo, cached_len=req.cached_len)
         self.push(t + lat, "prefill_done",
                   (self.epoch, srv.replica.group_id, req))
+
+    # -- §11 paged decode residency ---------------------------------------
+    def _admit_paged(self, srv: _DecodeServer) -> None:
+        """FIFO-admit pending requests while the pool can hold their
+        current context — the same ``pages_for`` arithmetic the runtime
+        allocator runs, so page counts match exactly."""
+        while srv.pending:
+            req, rem = srv.pending[0]
+            produced = req.s_out - rem
+            need = pages_for(req.s_in + produced, srv.page_size)
+            try:
+                pages = srv.pool.alloc(max(need, 1))
+            except OutOfPagesError:
+                break
+            srv.held[req.rid] = pages
+            req.kv_page_size = srv.page_size
+            srv.active.append(srv.pending.pop(0))
+
+    def _preempt_paged(self, t: float, srv: _DecodeServer,
+                       entry: Tuple[Request, int]) -> None:
+        """Page-exhaustion preemption (youngest resident first, the
+        runtime engine's policy): release the request's pages and send
+        it back through prefill for recompute. §10/§11 stamps survive
+        the lifecycle restart — KV genuinely shipped, pages were
+        genuinely held."""
+        req, rem = entry
+        srv.active.remove(entry)
+        pages = srv.held.pop(req.rid)
+        srv.pool.release(pages)
+        req.kv_pages_allocated += len(pages)
+        req.preemptions += 1
+        self.recompute_tokens[req.rid] = req.s_out - rem
+        pin = self._pins.pop(req.rid, None)
+        if pin is not None:
+            pin[0].unlock(pin[1])
+        snap = (req.kv_bytes_raw, req.kv_bytes_wire, req.kv_serialized_s,
+                req.kv_overlap_s)
+        req.restart()
+        (req.kv_bytes_raw, req.kv_bytes_wire, req.kv_serialized_s,
+         req.kv_overlap_s) = snap
+        gid = self.pick_prefill(req)
+        self.dispatched[gid] += 1
+        req.prefill_group = gid
+        self.prefill[gid].queue.append(req)
+        self.start_prefill(t, self.prefill[gid])
+
+    def _grow_paged(self, t: float, srv: _DecodeServer) -> None:
+        """Grow every resident request to the pages this round's tokens
+        will write (the runtime grows per step; per round is the same
+        total). Exhaustion preempts the youngest resident — possibly
+        the grower itself."""
+        for entry in list(srv.active):
+            if entry not in srv.active:
+                continue                      # preempted by an earlier grow
+            req, rem = entry
+            produced_after = (req.s_out - rem) + min(self.chunk_tokens, rem)
+            need = pages_for(req.s_in + produced_after - 1, srv.page_size)
+            while len(srv.held[req.rid]) < need:
+                try:
+                    srv.held[req.rid].extend(srv.pool.alloc(1))
+                except OutOfPagesError:
+                    victim = srv.active[-1]   # youngest resident
+                    self._preempt_paged(t, srv, victim)
+                    if victim is entry:
+                        break
 
     def start_round(self, t: float, srv: _DecodeServer) -> None:
         if srv.in_round:
@@ -291,10 +383,14 @@ class _DisaggSim:
             self.push(srv.blocked_until, "kick",
                       (self.epoch, srv.replica.group_id))
             return
-        free = srv.max_batch - len(srv.active)
-        if free > 0 and srv.pending:
-            srv.active.extend(srv.pending[:free])
-            srv.pending = srv.pending[free:]
+        if srv.pool is not None:
+            self._admit_paged(srv)
+            self._grow_paged(t, srv)
+        else:
+            free = srv.max_batch - len(srv.active)
+            if free > 0 and srv.pending:
+                srv.active.extend(srv.pending[:free])
+                srv.pending = srv.pending[free:]
         if not srv.active:
             return
         srv.in_round = True
@@ -335,6 +431,12 @@ class _DisaggSim:
         for srv in old_decode.values():
             for req, rem in srv.active:
                 migrate.append((req, rem, srv.replica))
+                if srv.pool is not None:
+                    # §11: the old pool dissolves with its replica —
+                    # stamp the pages this residency held; the new
+                    # server re-admits (and re-allocates) from pending
+                    req.kv_pages_allocated += len(
+                        srv.held.pop(req.rid, []))
             for req, rem in srv.pending:
                 migrate.append((req, rem, srv.replica))
 
@@ -500,10 +602,16 @@ class _DisaggSim:
                 return
             req.decode_group = did
         # DECODING = KV resident on the decode replica (it may still
-        # wait in ``pending`` for a continuous-batch slot)
+        # wait in ``pending`` for a continuous-batch slot). A §11
+        # recompute arrives here with its redone tokens already charged
+        # to the prefill (and re-emitted there, like the runtime's
+        # recompute), so only the REMAINDER decodes — re-decoding the
+        # redo tokens would inflate decode_tokens and makespan vs the
+        # runtime on the same trace.
         req.advance(RequestState.DECODING, t)
         srv = self.decode[req.decode_group]
-        srv.pending.append((req, req.s_out))
+        srv.pending.append((req, req.s_out
+                            - self.recompute_tokens.get(req.rid, 0)))
         self.start_round(t, srv)
 
     def on_round_done(self, t: float, epoch: int, gid: int) -> None:
@@ -517,6 +625,12 @@ class _DisaggSim:
             self.decode_tokens += produced
             rem -= produced
             if rem <= 0:
+                if srv.pool is not None:
+                    # §11 reclamation: pages return to the pool at
+                    # finish; the lifecycle stamps the allocator count
+                    pages = srv.held.pop(req.rid)
+                    srv.pool.release(pages)
+                    req.kv_pages_allocated += len(pages)
                 req.advance(RequestState.DONE, t)
             else:
                 still.append((req, rem))
@@ -565,7 +679,8 @@ def simulate(cluster: ClusterSpec, profile: ModelProfile,
              prefix_caching: bool = False,
              cache_alpha: float = 2.0,
              prefix_budget_fraction: float = 0.5,
-             kv_codec=None) -> SimResult:
+             kv_codec=None, paged_kv: bool = False,
+             page_size: int = PAGE_SIZE) -> SimResult:
     """Deterministic: dispatch is load-corrected flow-proportional, so
     the same placement and trace always produce the same result.
 
@@ -580,12 +695,21 @@ def simulate(cluster: ClusterSpec, profile: ModelProfile,
     faster, and chunked codecs expose only the last layer-group chunk
     past prefill end. ``None`` keeps the legacy detached-handoff
     abstraction (modulo the §8 alignment: single-token requests finish
-    at prefill and ship no KV on every path)."""
+    at prefill and ship no KV on every path).
+
+    ``paged_kv`` (DESIGN.md §11) replaces each decode replica's dense
+    max-batch admission with the paged model: a ref-counted page pool
+    sized by the cost model's ``decode_page_budget``, FIFO admission
+    while pages fit, per-round growth, reclamation at finish, and
+    youngest-first recompute preemption on exhaustion — the same
+    allocator arithmetic the runtime engine runs, so page counts agree
+    exactly on the same trace."""
     sim = _DisaggSim(cluster, profile, placement, chunk_tokens,
                      typical_context, prefix_caching=prefix_caching,
                      cache_alpha=cache_alpha,
                      prefix_budget_fraction=prefix_budget_fraction,
-                     kv_codec=kv_codec)
+                     kv_codec=kv_codec, paged_kv=paged_kv,
+                     page_size=page_size)
     if not sim.feasible:
         return SimResult(requests, float("inf"), 0)
     sim.run(requests)
@@ -603,7 +727,8 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
                     prefix_caching: bool = False,
                     cache_alpha: float = 2.0,
                     prefix_budget_fraction: float = 0.5,
-                    kv_codec=None) -> OnlineSimResult:
+                    kv_codec=None, paged_kv: bool = False,
+                    page_size: int = PAGE_SIZE) -> OnlineSimResult:
     """Simulate with online workload-drift rescheduling.
 
     ``monitor`` is a ``repro.core.scheduler.WorkloadMonitor`` (or any
@@ -623,7 +748,8 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
                      typical_context, prefix_caching=prefix_caching,
                      cache_alpha=cache_alpha,
                      prefix_budget_fraction=prefix_budget_fraction,
-                     kv_codec=kv_codec)
+                     kv_codec=kv_codec, paged_kv=paged_kv,
+                     page_size=page_size)
     if not sim.feasible:
         return OnlineSimResult(requests, float("inf"), 0, [])
     state = {"last": -float("inf")}

@@ -1,0 +1,579 @@
+"""Paged KV decode (DESIGN.md §11): kernel vs oracle, paged-vs-dense
+bit-identity across the arch pool, page lifecycle in engines/sim, and
+the cross-domain page-count parity contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.kernels import ref
+from repro.kernels.decode_attention import gqa_paged_decode_bhsd
+from repro.models import init_params, transformer
+from repro.serving import (Coordinator, ServeRequest, kv_compression,
+                           kv_transfer)
+from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.metrics import METRIC_FIELDS
+from repro.serving.paging import (NoFreeSlotError, OutOfPagesError,
+                                  PagePool, pages_for, pages_for_request)
+
+KEY = jax.random.PRNGKey(7)
+PS = 16
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+PAGED_CASES = [
+    # (b, hq, hkv, hd, page_size, num_blocks, num_pages)
+    (1, 4, 4, 64, 16, 4, 8),
+    (2, 8, 2, 64, 32, 8, 24),       # GQA group 4
+    (3, 4, 1, 128, 16, 8, 32),      # MQA
+    (2, 4, 2, 96, 64, 4, 12),       # non-pow2 head dim
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,hd,ps,nb,npages", PAGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_kernel_matches_oracle(b, hq, hkv, hd, ps, nb, npages,
+                                     dtype):
+    k1, k2, k3, k4, k5 = jax.random.split(KEY, 5)
+    q = _rand(k1, (b, hq, hd), dtype)
+    kp = _rand(k2, (npages, hkv, ps, hd), dtype)
+    vp = _rand(k3, (npages, hkv, ps, hd), dtype)
+    bt = jax.random.randint(k4, (b, nb), 0, npages)
+    vl = jax.random.randint(k5, (b,), 1, nb * ps + 1)
+    out = gqa_paged_decode_bhsd(q, kp, vp, bt, vl, interpret=True)
+    expect = ref.gqa_paged_decode_ref(q, kp, vp, bt, vl)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_paged_kernel_ignores_pages_past_valid_len():
+    """Rewriting pages past valid_len (scratch / other slots' pages)
+    must not change the output."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (2, 4, 64))
+    kp = _rand(k2, (16, 2, 16, 64))
+    vp = _rand(k3, (16, 2, 16, 64))
+    bt = jnp.arange(2 * 6, dtype=jnp.int32).reshape(2, 6) % 16
+    vl = jnp.array([20, 50])
+    out1 = gqa_paged_decode_bhsd(q, kp, vp, bt, vl, interpret=True)
+    # pages backing blocks >= ceil(vl/ps) are dead weight
+    kp2 = kp.at[jnp.asarray(bt[0, 2:])].set(99.0)
+    kp2 = kp2.at[jnp.asarray(bt[1, 4:])].set(-99.0)
+    vp2 = vp.at[jnp.asarray(bt[0, 2:])].set(-7.0)
+    out2 = gqa_paged_decode_bhsd(q, kp2, vp2, bt, vl, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_paged_kernel_aot_lowers_for_tpu():
+    qd = jax.ShapeDtypeStruct((4, 16, 128), jnp.bfloat16)
+    pool = jax.ShapeDtypeStruct((64, 2, 128, 128), jnp.bfloat16)
+    bt = jax.ShapeDtypeStruct((4, 16), jnp.int32)
+    vl = jax.ShapeDtypeStruct((4,), jnp.int32)
+    tr = jax.jit(gqa_paged_decode_bhsd).trace(qd, pool, pool, bt, vl)
+    txt = tr.lower(lowering_platforms=("tpu",)).as_text()
+    assert "tpu_custom_call" in txt
+
+
+# ---------------------------------------------------------------------------
+# Paged vs dense bit-identity across the arch pool
+# ---------------------------------------------------------------------------
+
+
+def _mixed_swa(cfg):
+    """llama4 variant with one attn block turned sliding-window: paged
+    full-attention pools coexist with a dense SWA ring."""
+    period = (cfg.period[0],
+              dataclasses.replace(cfg.period[1], mixer="swa"))
+    return dataclasses.replace(cfg, period=period, sliding_window=32,
+                               name=cfg.name + "+swa")
+
+
+ARCH_POOL = {
+    "gqa": lambda: ARCHS["qwen3-1.7b"].reduced(),
+    "moe": lambda: ARCHS["qwen3-moe-30b-a3b"].reduced(),
+    "swa": lambda: _mixed_swa(ARCHS["llama4-maverick-400b-a17b"].reduced()),
+    "jamba": lambda: ARCHS["jamba-v0.1-52b"].reduced(),
+    "vision": lambda: ARCHS["llama-3.2-vision-90b"].reduced(),
+    "kmajor": lambda: dataclasses.replace(
+        ARCHS["qwen2.5-32b"].reduced(), kv_layout="kmajor",
+        name="qwen2.5-32b-reduced-kmajor"),
+}
+
+
+@pytest.mark.parametrize("family", sorted(ARCH_POOL))
+def test_paged_vs_dense_bit_identity(family):
+    """Dense and paged decode must produce bit-identical (at minimum
+    argmax-stable) logits: the gathered page view is shape- and
+    value-identical to the dense slab, so reductions match."""
+    cfg = ARCH_POOL[family]()
+    params = init_params(KEY, cfg)
+    cap, steps = 64, 4
+    extra = {}
+    if cfg.num_image_tokens:
+        extra["image_embeds"] = np.zeros(
+            (1, cfg.num_image_tokens, cfg.d_model), np.float32)
+    pe = PrefillEngine(cfg, params, cache_capacity=cap)
+    dense = DecodeEngine(cfg, params, slots=2, capacity=cap)
+    paged = DecodeEngine(cfg, params, slots=2, capacity=cap, paged=True,
+                         page_size=PS)
+    rng = np.random.default_rng(4)
+    for rid, n in enumerate((13, 26)):
+        prompt = rng.integers(0, cfg.vocab, n).astype(np.int32)
+        first, slab = pe.prefill_batch([prompt], [extra])[0]
+        dense.admit(rid, first, n, steps + 1,
+                    kv_transfer.pad_capacity(slab, cap, cfg=cfg))
+        paged.admit(rid, first, n, steps + 1,
+                    kv_transfer.trim_to_pages(slab, n, PS, cfg=cfg))
+    for _ in range(steps):
+        out_d = dense.step()
+        out_p = paged.step()
+        assert out_d == out_p, (cfg.name, out_d, out_p)
+
+
+def test_decode_step_paged_logits_bit_identical():
+    """Model-level check: raw logits (not just argmax) are bitwise
+    equal between decode_step and decode_step_paged when the gathered
+    view has the dense capacity."""
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    params = init_params(KEY, cfg)
+    cap, slots = 64, 2
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (10, 23)]
+    dense = transformer.init_cache(cfg, slots, cap)
+    paged = transformer.init_paged_cache(cfg, slots, cap // PS * slots + 1,
+                                         PS)
+    bt = np.full((slots, cap // PS), -1, np.int32)
+    toks = np.zeros((slots,), np.int32)
+    lens = np.zeros((slots,), np.int32)
+    nxt = 1
+    for i, p in enumerate(prompts):
+        logits, cache = transformer.prefill(params, cfg,
+                                            jnp.asarray(p)[None],
+                                            cache_capacity=cap)
+        toks[i] = int(np.argmax(np.asarray(logits)[0]))
+        lens[i] = len(p) + 1
+        dense = jax.tree.map(
+            lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                d, s.astype(d.dtype), i, axis=1)
+            if hasattr(d, "ndim") and d.ndim >= 2 else d, dense, cache)
+        n_pg = pages_for(len(p), PS)
+        pages = list(range(nxt, nxt + n_pg))
+        nxt += n_pg
+        bt[i, :n_pg] = pages
+        new = []
+        for spec, pc, src in zip(cfg.period, paged, cache):
+            if spec.mixer == "attn":
+                d = dict(pc)
+                for nm in ("k", "v"):
+                    for j, pg in enumerate(pages):
+                        chunk = jax.lax.dynamic_slice_in_dim(
+                            src[nm][:, 0], j * PS, PS, axis=1)
+                        d[nm] = d[nm].at[:, pg].set(
+                            chunk.astype(d[nm].dtype))
+                new.append(d)
+            else:
+                new.append(jax.tree.map(
+                    lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                        d, s.astype(d.dtype), i, axis=1)
+                    if hasattr(d, "ndim") and d.ndim >= 2 else d, pc, src))
+        paged = tuple(new)
+    for step in range(3):
+        pos = np.maximum(lens - 1, 0).astype(np.int32)
+        ld, dense = transformer.decode_step(
+            params, cfg, dense, jnp.asarray(toks)[:, None],
+            jnp.asarray(pos)[:, None])
+        lp, paged = transformer.decode_step_paged(
+            params, cfg, paged, jnp.asarray(toks)[:, None],
+            jnp.asarray(pos)[:, None], jnp.asarray(bt), PS)
+        np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp))
+        toks = np.asarray(jnp.argmax(ld, axis=-1), np.int32)
+        lens += 1
+        for i in range(slots):
+            need = pages_for(int(lens[i]), PS)
+            have = int((bt[i] >= 0).sum())
+            if need > have:
+                bt[i, have] = nxt
+                nxt += 1
+
+
+# ---------------------------------------------------------------------------
+# Engine page lifecycle
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_rt():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    return cfg, init_params(KEY, cfg)
+
+
+def test_admit_errors_are_explicit(small_rt):
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=64)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, 20).astype(np.int32)
+    first, slab = pe.prefill_batch([prompt])[0]
+
+    dense = DecodeEngine(cfg, params, slots=1, capacity=64)
+    dense.admit(0, first, 20, 4, kv_transfer.pad_capacity(slab, 64,
+                                                          cfg=cfg))
+    with pytest.raises(NoFreeSlotError):
+        dense.admit(1, first, 20, 4,
+                    kv_transfer.pad_capacity(slab, 64, cfg=cfg))
+    with pytest.raises(NoFreeSlotError):
+        dense.admit_chunked(2, first, 20, 4, [])
+
+    tiny = DecodeEngine(cfg, params, slots=2, capacity=64, paged=True,
+                        page_size=PS, num_pages=3)   # 2 usable pages
+    trimmed = kv_transfer.trim_to_pages(slab, 20, PS, cfg=cfg)
+    tiny.admit(0, first, 20, 4, trimmed)
+    free_before = tiny.pool.free_pages
+    with pytest.raises(OutOfPagesError):
+        tiny.admit(1, first, 20, 4, trimmed)
+    assert tiny.pool.free_pages == free_before   # failure left no debris
+
+
+def test_page_reclamation_and_stamps(small_rt):
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=64)
+    eng = DecodeEngine(cfg, params, slots=3, capacity=64, paged=True,
+                       page_size=PS)
+    rng = np.random.default_rng(2)
+    jobs = [(0, 15, 4), (1, 17, 3), (2, 30, 5)]   # (rid, s_in, s_out)
+    for rid, s_in, s_out in jobs:
+        prompt = rng.integers(0, cfg.vocab, s_in).astype(np.int32)
+        first, slab = pe.prefill_batch([prompt])[0]
+        eng.admit(rid, first, s_in, s_out,
+                  kv_transfer.trim_to_pages(slab, s_in, PS, cfg=cfg))
+    assert eng.pool.pages_in_use == sum(pages_for(s, PS)
+                                        for _, s, _ in jobs)
+    while any(s.active for s in eng.slots):
+        eng.step()
+    assert eng.pool.pages_in_use == 0             # reclaimed on finish
+    for rid, s_in, s_out in jobs:
+        assert eng.pop_page_stamp(rid) == pages_for_request(s_in, s_out,
+                                                            PS)
+
+
+def test_cow_prefix_sharing_bit_identical(small_rt):
+    """Two engines — one sharing prefix pages CoW, one cold — must
+    decode identically; the shared run allocates fewer fresh pages and
+    the pinned slab survives decode writes (the boundary page was
+    copied, not aliased)."""
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=96)
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab, 37).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(0, cfg.vocab, k)
+                               .astype(np.int32)]) for k in (5, 9)]
+    outs = {}
+    for mode in ("cold", "shared"):
+        eng = DecodeEngine(cfg, params, slots=2, capacity=96, paged=True,
+                           page_size=PS,
+                           share_prefix_pages=(mode == "shared"))
+        for rid, p in enumerate(prompts):
+            first, slab = pe.prefill_batch([p])[0]
+            eng.admit(rid, first, len(p), 5,
+                      kv_transfer.trim_to_pages(slab, len(p), PS, cfg=cfg),
+                      tokens=p)
+        outs[mode] = [eng.step() for _ in range(5)]
+        if mode == "shared":
+            # 37-token prefix = 2 full pages aliased by request 1
+            assert eng.pool.stats.shares > 0
+            assert eng.pool.stats.cow_copies >= 1
+            # slab pages stay pinned after both requests finish
+            assert eng.pool.pages_in_use > 0
+            eng.prefix_pages.clear()
+            assert eng.pool.pages_in_use == 0     # release hook fired
+    assert outs["cold"] == outs["shared"]
+
+
+def test_preemption_recompute_completes(small_rt):
+    cfg, params = small_rt
+    rng = np.random.default_rng(6)
+    reqs = [ServeRequest(i, rng.integers(0, cfg.vocab, n).astype(np.int32),
+                         m) for i, (n, m) in enumerate(
+                             [(12, 6), (25, 8), (18, 5), (30, 7)])]
+    coord = Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=3, capacity=64, paged=True,
+                        page_size=PS, pages_per_engine=6)
+    outs = coord.serve([ServeRequest(r.rid, r.prompt.copy(),
+                                     r.max_new_tokens) for r in reqs])
+    m = coord._active_session.metrics()
+    assert sum(r.preemptions for r in m.requests) > 0   # pool forced it
+    for o, r in zip(outs, reqs):
+        assert len(o.tokens) == r.max_new_tokens
+        assert o.lifecycle.phase.value == "done"
+
+
+def test_coordinator_dense_equals_paged(small_rt):
+    cfg, params = small_rt
+
+    def mk():
+        r = np.random.default_rng(8)
+        return [ServeRequest(i, r.integers(0, cfg.vocab, n)
+                             .astype(np.int32), m)
+                for i, (n, m) in enumerate([(12, 5), (25, 7), (9, 4)])]
+
+    dense_out = Coordinator(cfg, params, num_decode_engines=2,
+                            slots_per_engine=2, capacity=64).serve(mk())
+    coord = Coordinator(cfg, params, num_decode_engines=2,
+                        slots_per_engine=2, capacity=64, paged=True,
+                        page_size=PS)
+    paged_out = coord.serve(mk())
+    for a, b in zip(dense_out, paged_out):
+        assert a.tokens == b.tokens
+    m = coord._active_session.metrics()
+    assert m.kv_pages_allocated == sum(
+        pages_for_request(r.s_in, r.s_out, PS) for r in m.requests)
+    assert 0.0 < m.page_utilization <= 1.0
+    assert m.page_fragmentation == pytest.approx(1 - m.page_utilization)
+
+
+# ---------------------------------------------------------------------------
+# Per-page transfer / codec composition
+# ---------------------------------------------------------------------------
+
+
+def test_trim_to_pages_shapes(small_rt):
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=64)
+    prompt = np.arange(21, dtype=np.int32) % cfg.vocab
+    _, slab = pe.prefill_batch([prompt])[0]
+    trimmed = kv_transfer.trim_to_pages(slab, 21, PS, cfg=cfg)
+    assert kv_transfer.slab_capacity(trimmed, cfg) == 32   # 2 pages
+    grown = kv_transfer.trim_to_pages(trimmed, 40, PS, cfg=cfg)
+    assert kv_transfer.slab_capacity(grown, cfg) == 48
+
+
+def test_codec_composes_per_page(small_rt):
+    """encode(slab) sliced per page == encode(per-page slices): the
+    int8 per-head-vector scales are sequence-local, so transfer/chunk
+    plans can land pages directly without re-encoding."""
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=64)
+    prompt = (np.arange(30, dtype=np.int32) * 13) % cfg.vocab
+    _, slab = pe.prefill_batch([prompt])[0]
+    slab = kv_transfer.trim_to_pages(slab, 30, PS, cfg=cfg)
+    enc_then_split = kv_transfer.split_pages(
+        kv_compression.encode(slab, cfg, "int8"), PS, cfg=cfg)
+    split_then_enc = [kv_compression.encode(pg, cfg, "int8")
+                      for pg in kv_transfer.split_pages(slab, PS, cfg=cfg)]
+    for a, b in zip(enc_then_split, split_then_enc):
+        la = jax.tree.leaves(a, is_leaf=lambda x: isinstance(
+            x, kv_compression.QuantizedLeaf))
+        lb = jax.tree.leaves(b, is_leaf=lambda x: isinstance(
+            x, kv_compression.QuantizedLeaf))
+        for x, y in zip(la, lb):
+            if isinstance(x, kv_compression.QuantizedLeaf):
+                np.testing.assert_array_equal(np.asarray(x.q),
+                                              np.asarray(y.q))
+                np.testing.assert_array_equal(np.asarray(x.scale),
+                                              np.asarray(y.scale))
+            else:
+                np.testing.assert_array_equal(np.asarray(x),
+                                              np.asarray(y))
+
+
+def test_chunked_paged_admission_matches_plain(small_rt):
+    """install_chunk over pages (period-sliced chunks landing in any
+    order) must equal single-shot paged admission."""
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=64)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab, 19).astype(np.int32)
+    first, slab = pe.prefill_batch([prompt])[0]
+    slab = kv_transfer.trim_to_pages(slab, 19, PS, cfg=cfg)
+    outs = []
+    for chunked in (False, True):
+        eng = DecodeEngine(cfg, params, slots=2, capacity=64, paged=True,
+                           page_size=PS)
+        if chunked:
+            plan = kv_compression.ChunkedTransferPlan.for_cache(slab, 2)
+            chunks = list(zip((p0 for p0, _ in plan.bounds),
+                              plan.split(slab)))
+            eng.admit_chunked(0, first, 19, 4, reversed(chunks))
+        else:
+            eng.admit(0, first, 19, 4, slab)
+        outs.append([eng.step() for _ in range(4)])
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Simulator paged model (no JAX required)
+# ---------------------------------------------------------------------------
+
+
+def _sim_placement():
+    from repro.core import make_plan
+    from repro.core.cluster import memory_skewed_setting
+    from repro.core.cost_model import LLAMA2_70B
+    from repro.core.placement import Placement, ReplicaPlacement
+    cl = memory_skewed_setting()
+    reps = [ReplicaPlacement(0, [2, 3, 4, 5], True,
+                             make_plan([[2, 3, 4, 5]],
+                                       LLAMA2_70B.num_layers, cl), 10.0),
+            ReplicaPlacement(1, [0, 1], False,
+                             make_plan([[0, 1]],
+                                       LLAMA2_70B.num_layers, cl), 10.0)]
+    return cl, LLAMA2_70B, Placement(reps, {(0, 1): 10.0}, 10.0, 600.0)
+
+
+def test_sim_paged_stamps_match_arithmetic():
+    from repro.serving import simulate
+    from repro.serving.request import Request
+    cl, prof, plc = _sim_placement()
+    reqs = [Request(0, 16, 17, 0.0), Request(1, 17, 16, 0.0),
+            Request(2, 31, 2, 0.0), Request(3, 32, 1, 0.0),
+            Request(4, 200, 40, 0.0)]
+    res = simulate(cl, prof, plc, reqs, paged_kv=True, page_size=PS)
+    for r in reqs:
+        assert r.kv_pages_allocated == pages_for_request(r.s_in, r.s_out,
+                                                         PS), r.rid
+    assert res.kv_pages_allocated == sum(
+        pages_for_request(r.s_in, r.s_out, PS) for r in reqs)
+    assert res.page_fragmentation == pytest.approx(
+        1.0 - res.page_utilization)
+
+
+def test_sim_paged_preemption_restarts_and_finishes():
+    from repro.serving import offline_workload, simulate
+    cl, prof, plc = _sim_placement()
+    reqs = offline_workload("HPHD", 48, seed=3)
+    res = simulate(cl, prof, plc, reqs, paged_kv=True, page_size=PS)
+    assert all(r.decode_end is not None for r in reqs)
+    # stamps still accumulate correctly for non-preempted requests
+    for r in reqs:
+        if r.preemptions == 0 and r.s_out > 1:
+            assert r.kv_pages_allocated == pages_for_request(
+                r.s_in, r.s_out, PS)
+        elif r.preemptions:
+            assert r.kv_pages_allocated > pages_for_request(
+                r.s_in, r.s_out, PS) - 1
+    assert res.decode_throughput > 0
+
+
+def test_metric_fields_cover_page_schema():
+    assert "page_utilization" in METRIC_FIELDS
+    assert "page_fragmentation" in METRIC_FIELDS
+    assert "kv_pages_allocated" in METRIC_FIELDS
+
+
+def test_dense_sim_unchanged_without_paged_kv():
+    """paged_kv=False must keep legacy results byte-for-byte."""
+    from repro.serving import offline_workload, simulate
+    cl, prof, plc = _sim_placement()
+    a = simulate(cl, prof, plc, offline_workload("HPLD", 24, seed=1))
+    b = simulate(cl, prof, plc, offline_workload("HPLD", 24, seed=1))
+    assert a.makespan == b.makespan
+    assert a.kv_pages_allocated == 0
+    assert a.page_utilization == 1.0 and a.page_fragmentation == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Review regressions
+# ---------------------------------------------------------------------------
+
+
+def test_sim_preemption_does_not_redecode_redone_tokens():
+    """A §11 recompute charges redone tokens to the prefill; decode
+    must produce each request's s_out exactly once in total."""
+    from repro.core import make_plan
+    from repro.core.cluster import memory_skewed_setting
+    from repro.core.cost_model import LLAMA2_70B
+    from repro.core.placement import Placement, ReplicaPlacement
+    from repro.serving import offline_workload, simulate
+    cl = memory_skewed_setting()
+    # two prefill feeders swamp the memory-starved decode pair, so
+    # resident-growth outruns the pool and preemption fires
+    mk = lambda g: make_plan([g], LLAMA2_70B.num_layers, cl)
+    reps = [ReplicaPlacement(0, [2, 3, 4, 5], True, mk([2, 3, 4, 5]), 10.0),
+            ReplicaPlacement(2, [6, 7, 8, 9], True, mk([6, 7, 8, 9]), 10.0),
+            ReplicaPlacement(1, [0, 1], False, mk([0, 1]), 10.0)]
+    plc = Placement(reps, {(0, 1): 10.0, (2, 1): 10.0}, 20.0, 600.0)
+    reqs = offline_workload("HPHD", 96, seed=3)
+    res = simulate(cl, LLAMA2_70B, plc, reqs, paged_kv=True, page_size=PS)
+    assert sum(r.preemptions for r in reqs) > 0   # the scenario fires
+    assert all(r.decode_end is not None for r in reqs)
+    assert res.decode_tokens == sum(r.s_out for r in reqs)
+
+
+def test_paged_kernel_gate_admits_default_page_size():
+    from repro.kernels import ops
+    q = jnp.zeros((2, 1, 8, 64), jnp.bfloat16)
+    pool16 = jnp.zeros((24, 16, 2, 64), jnp.bfloat16)
+    assert ops.paged_decode_supported(q, pool16)
+    pool9 = jnp.zeros((24, 9, 2, 64), jnp.bfloat16)
+    assert not ops.paged_decode_supported(q, pool9)
+
+
+def test_doomed_admit_does_not_wipe_prefix_radix(small_rt):
+    """When every reclaimable page is aliased by active slots, a
+    too-big admit must fail fast without evicting the radix."""
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=96)
+    # pool of 4 usable pages; one 33-token request holds 3 of them
+    eng = DecodeEngine(cfg, params, slots=3, capacity=96, paged=True,
+                       page_size=PS, num_pages=5, share_prefix_pages=True)
+    rng = np.random.default_rng(13)
+    p0 = rng.integers(0, cfg.vocab, 33).astype(np.int32)
+    first, slab = pe.prefill_batch([p0])[0]
+    eng.admit(0, first, 33, 4,
+              kv_transfer.trim_to_pages(slab, 33, PS, cfg=cfg), tokens=p0)
+    nodes_before = eng.prefix_pages.num_nodes
+    assert nodes_before > 0
+    # the slab's pages are all aliased by slot 0 -> nothing reclaimable
+    assert not eng.can_admit(40)
+    p1 = rng.integers(0, cfg.vocab, 40).astype(np.int32)
+    first1, slab1 = pe.prefill_batch([p1])[0]
+    with pytest.raises(OutOfPagesError):
+        eng.admit(1, first1, 40, 4,
+                  kv_transfer.trim_to_pages(slab1, 40, PS, cfg=cfg),
+                  tokens=p1)
+    assert eng.prefix_pages.num_nodes == nodes_before   # radix intact
+
+
+def test_reservation_handoff_ships_only_unshared_blocks(small_rt):
+    """Coordinator paged handoff with pool sharing: identical tokens,
+    strictly fewer physical bytes on the wire (including the fully
+    page-aligned prompt that ships an empty slab)."""
+    cfg, params = small_rt
+    prefix = (np.arange(32, dtype=np.int32) * 7) % cfg.vocab
+
+    def mk():
+        r = np.random.default_rng(12)
+        reqs = []
+        for i, tail_len in enumerate((7, 0, 5)):   # 0 = aligned prompt
+            tail = r.integers(0, cfg.vocab, tail_len).astype(np.int32)
+            reqs.append(ServeRequest(i, np.concatenate([prefix, tail]), 5))
+        return reqs
+
+    base_coord = Coordinator(cfg, params, num_decode_engines=1,
+                             slots_per_engine=3, capacity=64, paged=True,
+                             page_size=PS)
+    base = base_coord.serve(mk())
+    shared_coord = Coordinator(cfg, params, num_decode_engines=1,
+                               slots_per_engine=3, capacity=64,
+                               paged=True, page_size=PS,
+                               prefix_cache_bytes=64e6)
+    shared = shared_coord.serve(mk())
+    for a, b in zip(base, shared):
+        assert a.tokens == b.tokens
+    s0 = base_coord._active_session
+    s1 = shared_coord._active_session
+    assert s1.kv_physical_bytes_raw < s0.kv_physical_bytes_raw
+    assert shared_coord.decode_engines[0].pool.stats.shares > 0
