@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test unit serve-smoke bench bench-drift bench-serving bench-prefix \
-	bench-kvstream bench-paged bench-smoke lint
+	bench-kvstream bench-paged bench-router bench-smoke lint
 
 # Tier-1 verify: the whole test suite (stop at first failure), then the
 # serving smoke run through the real session API on the reduced arch.
@@ -15,7 +15,9 @@ unit:
 # End-to-end smoke: event-driven ServeSession on the reduced arch with
 # Poisson arrivals + streaming (DESIGN.md §8), then a shared-prefix
 # trace through the radix prefix caches with cache-aware routing (§9),
-# then the int8+chunked KV-handoff codec end to end (§10).
+# then the int8+chunked KV-handoff codec end to end (§10), then the
+# §12 router fleet — 2 replicas, one killed mid-trace; the launcher
+# exits non-zero unless failover re-dispatch actually fired.
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --requests 4 --prompt-len 12 \
 		--max-new 6 --decode-engines 2 --rate-rps 8
@@ -28,6 +30,8 @@ serve-smoke:
 	$(PYTHON) -m repro.launch.serve --requests 8 --prompt-len 18 \
 		--max-new 6 --decode-engines 2 --slots 4 --rate-rps 8 \
 		--paged --page-size 16
+	$(PYTHON) -m repro.launch.serve --replicas 2 --requests 8 \
+		--max-new 5 --kill-replica
 
 # All paper benchmarks (figures/tables) + the beyond-paper ones.
 bench:
@@ -53,11 +57,16 @@ bench-kvstream:
 bench-paged:
 	$(PYTHON) -m benchmarks.run paged
 
-# CI-sized benchmark smoke: paged + kvstream + prefix at toy sizes;
-# every module writes BENCH_<name>.json (gitignored) AND mirrors it
-# into benchmarks/artifacts/ (tracked — the perf trajectory).
+# Router tier: SLO-aware vs round-robin under replica failure + the
+# sim-vs-runtime counter-parity contract (§12).
+bench-router:
+	$(PYTHON) -m benchmarks.run router
+
+# CI-sized benchmark smoke: paged + kvstream + prefix + router at toy
+# sizes; every module writes BENCH_<name>.json (gitignored) AND mirrors
+# it into benchmarks/artifacts/ (tracked — the perf trajectory).
 bench-smoke:
-	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run paged kvstream prefix
+	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run paged kvstream prefix router
 
 # Byte-compile everything — catches syntax/indentation errors without
 # needing a linter wheel in the image.

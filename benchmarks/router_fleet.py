@@ -1,0 +1,162 @@
+"""Router tier: SLO-aware routing vs round-robin under replica failure.
+
+Beyond-paper benchmark (DESIGN.md §12). HexGen-2 places one
+disaggregated fleet; real traffic adds replicas, priority classes, and
+replicas dying mid-serve. The §12 ``Router`` fronts N replicas with a
+bounded priority/aging admission queue, sticky prefix-aware dispatch,
+cancellation, and failover re-dispatch.
+
+Two parts:
+
+  1. Scheduling domain: the same seeded mixed-priority trace (three
+     classes — interactive/standard/batch — with per-class SLOs and
+     shared system prompts), 2 replicas, one KILLED mid-trace, driven
+     under ``policy="slo"`` and ``policy="rr"`` (FIFO + round-robin).
+     SLO-aware routing must attain >= 1.2x the round-robin baseline's
+     stated-SLO attainment — the acceptance check.
+  2. Cross-domain parity: the same trace driven through the REAL
+     runtime (2 Coordinators on a reduced arch behind the same Router)
+     and through ``simulate_fleet``. The admitted/rejected/cancelled/
+     redispatched counters and the per-class cache hit rates must
+     agree EXACTLY — the §12 parity contract.
+
+Run:  PYTHONPATH=src python -m benchmarks.router_fleet
+      (or python -m benchmarks.run router)
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Tuple
+
+from repro.serving import mixed_priority_workload, simulate_fleet
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+#: mixed-priority fleet trace: arrivals outpace the (half-dead) fleet
+#: so the admission queue backs up and discipline matters
+TRACE = (dict(n=60, rate_rps=60.0, seed=3, slo_s=(1.5, 6.0, 60.0))
+         if SMOKE else
+         dict(n=120, rate_rps=60.0, seed=3, slo_s=(1.5, 6.0, 60.0)))
+FLEET = dict(num_replicas=2, slots_per_replica=2, max_prefill_batch=2,
+             capacity=128, dt=0.05, queue_capacity=96, age_every=40)
+KILL_STEP = 20 if SMOKE else 40
+
+
+def _fleet_pair() -> List[Tuple[str, float, str]]:
+    rows = []
+    results = {}
+    for policy in ("slo", "rr"):
+        t0 = time.perf_counter()
+        res = simulate_fleet(mixed_priority_workload(**TRACE),
+                             policy=policy, failures={KILL_STEP: 1},
+                             **FLEET)
+        us = (time.perf_counter() - t0) * 1e6
+        results[policy] = res
+        cls = " ".join(f"c{c}={v:.2f}" for c, v in
+                       sorted(res.slo_attainment_by_class.items()))
+        rows.append((f"router.{policy}.2rep_kill1", us,
+                     f"slo={res.slo_attainment_stated:.3f} {cls} "
+                     f"admitted={res.counters['admitted']} "
+                     f"rejected={res.counters['rejected']} "
+                     f"redispatched={res.counters['redispatched']}"))
+    slo, rr = results["slo"], results["rr"]
+    gain = (slo.slo_attainment_stated
+            / max(rr.slo_attainment_stated, 1e-9))
+    ok = gain >= 1.2
+    rows.append(("router.slo_vs_rr", 0.0,
+                 f"attainment_gain={gain:.2f}x "
+                 f"({slo.slo_attainment_stated:.3f} vs "
+                 f"{rr.slo_attainment_stated:.3f}) "
+                 f"{'PASS' if ok else 'FAIL'}"))
+    if not ok:
+        raise AssertionError(
+            "SLO-aware routing must attain >= 1.2x round-robin on the "
+            f"mixed-priority failure trace: {gain:.2f}x "
+            f"({slo.slo_attainment_stated:.3f} vs "
+            f"{rr.slo_attainment_stated:.3f})")
+    return rows
+
+
+# -- cross-domain counter parity --------------------------------------------
+
+PARITY_TRACE = dict(n=12, rate_rps=100.0, seed=7, system_lens=(8, 6, 4),
+                    user_lens=(4, 6, 8), out_lens=(3, 5, 8))
+PARITY_FLEET = dict(slots=2, max_prefill_batch=2, capacity=96,
+                    queue_capacity=8, age_every=8)
+PARITY_KILL = {2: 1}
+
+
+def _runtime_fleet(reqs):
+    import jax
+    from repro.configs import ARCHS
+    from repro.models import init_params
+    from repro.serving import (Coordinator, CoordinatorReplica, Router,
+                               StepClock)
+
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    clock = StepClock()    # virtual clock: lifecycle stamps match the sim
+    reps = [CoordinatorReplica(
+        Coordinator(cfg, params, num_decode_engines=1,
+                    slots_per_engine=PARITY_FLEET["slots"],
+                    capacity=PARITY_FLEET["capacity"],
+                    num_prefill_engines=1,
+                    prefix_cache_bytes=float("inf")),
+        max_prefill_batch=PARITY_FLEET["max_prefill_batch"], clock=clock)
+        for _ in range(2)]
+    router = Router(reps, queue_capacity=PARITY_FLEET["queue_capacity"],
+                    age_every=PARITY_FLEET["age_every"], policy="slo",
+                    clock=clock)
+    metrics = router.run_trace(reqs, dt=0.05, failures=PARITY_KILL)
+    return router.counters, metrics
+
+
+def _parity_trace(vocab: int):
+    return mixed_priority_workload(vocab=vocab, **PARITY_TRACE)
+
+
+def _cross_domain() -> List[Tuple[str, float, str]]:
+    from repro.configs import ARCHS
+    vocab = min(ARCHS["qwen3-1.7b"].reduced().vocab, 256)
+
+    t0 = time.perf_counter()
+    sim = simulate_fleet(_parity_trace(vocab), num_replicas=2,
+                         slots_per_replica=PARITY_FLEET["slots"],
+                         max_prefill_batch=PARITY_FLEET["max_prefill_batch"],
+                         capacity=PARITY_FLEET["capacity"], dt=0.05,
+                         queue_capacity=PARITY_FLEET["queue_capacity"],
+                         age_every=PARITY_FLEET["age_every"], policy="slo",
+                         failures=PARITY_KILL)
+    sim_us = (time.perf_counter() - t0) * 1e6
+
+    t0 = time.perf_counter()
+    rt_counters, rt = _runtime_fleet(_parity_trace(vocab))
+    rt_us = (time.perf_counter() - t0) * 1e6
+
+    counters_ok = rt_counters == sim.counters
+    hits_ok = rt.cache_hit_rate_by_class == sim.cache_hit_rate_by_class
+    rows = [
+        ("router.sim_fleet.2rep_kill1", sim_us,
+         " ".join(f"{k}={v}" for k, v in sorted(sim.counters.items()))),
+        ("router.runtime_fleet.qwen3-1.7b-reduced", rt_us,
+         " ".join(f"{k}={v}" for k, v in sorted(rt_counters.items()))),
+        ("router.sim_vs_runtime", 0.0,
+         f"counters_exact={counters_ok} hit_by_class_exact={hits_ok} "
+         f"{'PASS' if counters_ok and hits_ok else 'FAIL'}"),
+    ]
+    if not (counters_ok and hits_ok):
+        raise AssertionError(
+            "sim and runtime routers must agree exactly on the same "
+            f"trace: counters {sim.counters} vs {rt_counters}, hit rates "
+            f"{sim.cache_hit_rate_by_class} vs {rt.cache_hit_rate_by_class}")
+    return rows
+
+
+def run() -> List[Tuple[str, float, str]]:
+    return _fleet_pair() + _cross_domain()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -13,10 +13,10 @@ PRs (the artifacts are .gitignored; diff them out-of-band).
 Usage:  PYTHONPATH=src python -m benchmarks.run [module ...]
         modules default to all; names: fig6, fig8, fig9, fig10,
         table3, table4, table5, roofline, drift, serving, prefix,
-        kvstream, paged
+        kvstream, paged, router
 
 ``REPRO_BENCH_SMOKE=1`` shrinks the modules that support it (kvstream,
-prefix, paged) to CI-smoke sizes (``make bench-smoke``), and
+prefix, paged, router) to CI-smoke sizes (``make bench-smoke``), and
 additionally mirrors each artifact into ``benchmarks/artifacts/`` —
 the TRACKED perf-trajectory record (full-size artifacts in the
 working directory stay gitignored).
@@ -49,6 +49,7 @@ MODULES = {
     "prefix": "benchmarks.prefix_reuse",
     "kvstream": "benchmarks.kv_streaming",
     "paged": "benchmarks.paged_decode",
+    "router": "benchmarks.router_fleet",
 }
 
 

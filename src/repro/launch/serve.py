@@ -39,6 +39,63 @@ from repro.serving import Coordinator, ServeRequest
 from repro.serving.workload import PREFIX_TRACES, prefix_trace
 
 
+def _serve_fleet(cfg, params, args) -> None:
+    """Multi-replica serving behind the §12 ``Router``: a mixed-
+    priority trace (interactive/standard/batch with per-class SLOs and
+    shared system prompts) dispatched across ``--replicas`` runtime
+    coordinators with priority/aging admission and sticky prefix-aware
+    routing; ``--kill-replica`` kills the last replica mid-trace and
+    the in-flight requests complete elsewhere via failover
+    re-dispatch."""
+    from repro.serving import (Coordinator, CoordinatorReplica,
+                               RequestState, Router, StepClock,
+                               mixed_priority_workload)
+
+    trace = mixed_priority_workload(
+        args.requests,
+        rate_rps=args.rate_rps if args.rate_rps > 0 else 20.0,
+        seed=args.seed, vocab=min(cfg.vocab, 512),
+        system_lens=(12, 8, 6), user_lens=(4, 6, 8),
+        out_lens=tuple(min(o, args.max_new) for o in (3, 5, 8)))
+    capacity = max(r.s_in for r in trace) + args.max_new + 8
+    clock = StepClock()    # virtual: lifecycle stamps are step-indexed
+    reps = [CoordinatorReplica(
+        Coordinator(cfg, params, num_decode_engines=1,
+                    slots_per_engine=args.slots, capacity=capacity,
+                    num_prefill_engines=1,
+                    prefix_cache_bytes=args.prefix_cache_mb * 1e6),
+        max_prefill_batch=args.prefill_batch, clock=clock)
+        for _ in range(args.replicas)]
+    router = Router(reps, queue_capacity=max(16, 2 * args.requests),
+                    age_every=8, policy="slo", clock=clock)
+    # kill replica 0: sticky prefix routing concentrates early work
+    # there, so the failover path genuinely has requests to move
+    failures = {2: 0} if args.kill_replica else None
+    t0 = time.perf_counter()
+    m = router.run_trace(trace, dt=0.05, failures=failures)
+    dt = time.perf_counter() - t0
+    c = router.counters
+    done = sum(1 for _, _, life in router.results()
+               if life.phase is RequestState.DONE)
+    print(f"[serve] router fleet: {args.replicas} replicas"
+          f"{' (1 killed mid-trace)' if args.kill_replica else ''}, "
+          f"{len(trace)} requests, {done} completed in {dt:.1f}s "
+          "incl. compile")
+    print(f"[serve] counters: admitted={c['admitted']} "
+          f"rejected={c['rejected']} cancelled={c['cancelled']} "
+          f"redispatched={c['redispatched']}")
+    print("[serve] slo_attainment_stated="
+          f"{m.slo_attainment_stated:.3f} "
+          + " ".join(f"class{k}={v:.2f}" for k, v in
+                     sorted(m.slo_attainment_by_class.items())))
+    print("[serve] cache hit by class: "
+          + " ".join(f"class{k}={v:.3f}" for k, v in
+                     sorted(m.cache_hit_rate_by_class.items())))
+    if args.kill_replica and c["redispatched"] == 0:
+        raise SystemExit("[serve] --kill-replica exercised no failover "
+                         "re-dispatches (raise --requests or --rate-rps)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b", choices=ASSIGNED)
@@ -79,6 +136,13 @@ def main() -> None:
     ap.add_argument("--prefix-cache-mb", type=float, default=256.0,
                     help="per-engine prefix-cache byte budget (MB); KV "
                          "slabs beyond it are LRU-evicted")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve a mixed-priority trace behind the §12 "
+                         "Router over N replica coordinators (priority/"
+                         "aging admission, sticky prefix-aware dispatch)")
+    ap.add_argument("--kill-replica", action="store_true",
+                    help="with --replicas: kill a replica mid-trace to "
+                         "exercise §12 failover re-dispatch")
     ap.add_argument("--stream", action="store_true",
                     help="print each token as it is generated")
     ap.add_argument("--full", action="store_true",
@@ -92,6 +156,10 @@ def main() -> None:
     print(f"[serve] arch={cfg.name} layers={cfg.num_layers} "
           f"d_model={cfg.d_model} backend={jax.default_backend()}")
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    if args.replicas > 1:
+        _serve_fleet(cfg, params, args)
+        return
 
     rng = np.random.default_rng(args.seed)
     extra = {}

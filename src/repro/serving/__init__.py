@@ -2,7 +2,8 @@
 (scheduling domain), workload generators, and the shared request
 lifecycle + metrics schema both domains report (DESIGN.md §8)."""
 from repro.serving.request import (IllegalTransition, Phase, Request,
-                                   RequestState, TRANSITIONS)
+                                   RequestState, TERMINAL_STATES,
+                                   TRANSITIONS)
 from repro.serving.metrics import METRIC_FIELDS, ServeMetrics
 from repro.serving.prefix_cache import (CacheStats, MatchResult, PrefixCache,
                                         route_score)
@@ -12,14 +13,21 @@ from repro.serving.workload import (PREFIX_TRACES, TracePhase,
                                     multi_turn_workload, observed_workload,
                                     offline_workload, online_workload,
                                     prefix_trace,
+                                    mixed_priority_workload,
                                     shared_system_prompt_workload,
                                     WORKLOAD_DISTS)
-from repro.serving.simulator import (OnlineSimResult, RescheduleEvent,
+from repro.serving.simulator import (FleetResult, OnlineSimResult,
+                                     RescheduleEvent, SimReplica,
                                      SimResult, simulate, simulate_colocated,
+                                     simulate_fleet,
                                      simulate_online, slo_baselines)
 from repro.serving.engine import DecodeEngine, PrefillEngine, Slot
 from repro.serving.coordinator import (Coordinator, PollStatus, ServeRequest,
                                        ServeResult, ServeSession)
+from repro.serving.router import (AdmissionQueue, AdmissionRejected,
+                                  CoordinatorReplica,
+                                  PRIORITY_BATCH, PRIORITY_INTERACTIVE,
+                                  PRIORITY_STANDARD, Router, StepClock)
 from repro.serving import kv_compression, kv_transfer
 from repro.serving.kv_compression import (CODECS, ChunkedTransferPlan,
                                           KVCodec, QuantizedLeaf, get_codec)
@@ -29,16 +37,23 @@ from repro.serving.paging import (BlockTable, NoFreeSlotError,
                                   shareable_pages)
 
 __all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
+           "TERMINAL_STATES",
            "TRANSITIONS", "METRIC_FIELDS", "ServeMetrics", "CacheStats",
            "MatchResult", "PrefixCache", "route_score", "PREFIX_TRACES",
            "TracePhase", "drifting_workload", "fewshot_agentic_workload",
+           "mixed_priority_workload",
            "multi_turn_workload", "observed_workload", "offline_workload",
            "online_workload", "prefix_trace",
            "shared_system_prompt_workload", "WORKLOAD_DISTS",
-           "OnlineSimResult", "RescheduleEvent", "SimResult", "simulate",
-           "simulate_colocated", "simulate_online", "slo_baselines",
+           "FleetResult", "OnlineSimResult", "RescheduleEvent",
+           "SimReplica", "SimResult", "simulate",
+           "simulate_colocated", "simulate_fleet", "simulate_online",
+           "slo_baselines",
            "DecodeEngine", "PrefillEngine", "Slot", "Coordinator",
            "PollStatus", "ServeRequest", "ServeResult", "ServeSession",
+           "AdmissionQueue", "AdmissionRejected", "CoordinatorReplica",
+           "PRIORITY_BATCH", "PRIORITY_INTERACTIVE", "PRIORITY_STANDARD",
+           "Router", "StepClock",
            "kv_transfer", "kv_compression", "CODECS", "ChunkedTransferPlan",
            "KVCodec", "QuantizedLeaf", "get_codec",
            "BlockTable", "NoFreeSlotError", "OutOfPagesError", "PagePool",

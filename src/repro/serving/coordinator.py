@@ -61,6 +61,10 @@ class ServeRequest:
     prompt: np.ndarray            # [S] int32
     max_new_tokens: int
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: skip prefix-cache lookup AND insertion for this request (§12
+    #: failover re-dispatches set it: their folded prompts contain
+    #: generated tokens that would pollute the radix trees)
+    no_cache: bool = False
 
 
 @dataclasses.dataclass
@@ -126,6 +130,10 @@ class ServeSession:
         self._order: List[int] = []
         self._queue: collections.deque = collections.deque()    # QUEUED rids
         self._handoff: collections.deque = collections.deque()  # KV_TRANSFER
+        #: §12 cancellations requested from inside a streaming callback
+        #: while the request was mid-prefill; honoured at the end of the
+        #: running micro-batch, before its KV ships
+        self._cancel_requested: set = set()
         self._unfinished = 0
         self._decode_tokens = 0
         self._makespan = 0.0
@@ -141,14 +149,22 @@ class ServeSession:
 
     # -- submission -----------------------------------------------------
     def submit(self, req: ServeRequest, arrival_time: Optional[float] = None,
-               on_token: Optional[TokenCallback] = None) -> int:
+               on_token: Optional[TokenCallback] = None,
+               life: Optional[Request] = None) -> int:
         """Enqueue a request (non-blocking). ``arrival_time`` defaults
-        to the session clock's now; TTFT/latency measure from it."""
+        to the session clock's now; TTFT/latency measure from it.
+        ``life`` lets the §12 router hand in an EXISTING lifecycle
+        record (its arrival/priority/failover stamps preserved) instead
+        of creating a fresh one."""
         assert req.rid not in self._entries, f"duplicate rid {req.rid}"
-        arrival = self.now() if arrival_time is None else arrival_time
-        life = Request(rid=req.rid, s_in=len(req.prompt),
-                       s_out=req.max_new_tokens, arrival=arrival,
-                       tokens=tuple(int(t) for t in req.prompt))
+        if life is None:
+            arrival = self.now() if arrival_time is None else arrival_time
+            life = Request(rid=req.rid, s_in=len(req.prompt),
+                           s_out=req.max_new_tokens, arrival=arrival,
+                           tokens=tuple(int(t) for t in req.prompt))
+        else:
+            assert life.phase is RequestState.QUEUED, \
+                f"rid {req.rid}: submitted life must be QUEUED"
         self._entries[req.rid] = _Entry(req=req, life=life, tokens=[],
                                         on_token=on_token,
                                         orig_prompt=np.asarray(req.prompt,
@@ -213,6 +229,10 @@ class ServeSession:
             first, cache, cached = outs[e.req.rid]
             e.life.cached_len = cached
             self._emit(e, first, finished=e.req.max_new_tokens <= 1)
+            if e.req.rid in self._cancel_requested:
+                self._cancel_requested.discard(e.req.rid)
+                self._cancel_entry(e)     # PREFILLING → CANCELLED
+                continue
             if e.req.max_new_tokens <= 1:
                 self._finish(e)       # PREFILLING → DONE (no KV ships)
                 continue
@@ -248,7 +268,8 @@ class ServeSession:
                 m = matches.get(e.req.rid)
                 cached = 0
                 if (m is not None and m.payload is not None
-                        and eng.supports_prefix_reuse and not e.req.extra):
+                        and eng.supports_prefix_reuse and not e.req.extra
+                        and not e.req.no_cache):
                     cached = min(m.length, len(e.req.prompt) - 1)
                     if (cached < 1 or kv_transfer.slab_capacity(
                             m.payload, coord.cfg) < len(e.req.prompt)):
@@ -267,7 +288,7 @@ class ServeSession:
                     out[e.req.rid] = (tok, cache, 0)
             for e in routed[idx]:
                 if (cache_obj is not None and eng.supports_prefix_reuse
-                        and not e.req.extra):
+                        and not e.req.extra and not e.req.no_cache):
                     slab = out[e.req.rid][1]
                     cache_obj.insert(
                         tuple(int(t) for t in e.req.prompt), payload=slab,
@@ -408,6 +429,62 @@ class ServeSession:
                 self._recompute(eng.preempted.pop(0), eng)
                 progressed = True
         return progressed
+
+    # -- cancellation & failover (DESIGN.md §12) ------------------------
+    def _cancel_entry(self, e: _Entry) -> None:
+        e.life.advance(RequestState.CANCELLED, self.now())
+        e.cache = None
+        self._unfinished -= 1
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request at whatever lifecycle stage it is in,
+        reclaiming what that stage holds: QUEUED leaves the prefill
+        queue; PREFILLING (only observable from inside a streaming
+        callback, mid micro-batch) is honoured at the end of the
+        running batch before any KV ships; KV_TRANSFER drops the
+        pending handoff slab; DECODING releases the decode slot (paged
+        engines return its pages to the pool, and the page stamp folds
+        into the lifecycle record). Returns False when the request is
+        unknown or already terminal."""
+        e = self._entries.get(rid)
+        if e is None or e.life.is_terminal:
+            return False
+        phase = e.life.phase
+        if phase is RequestState.QUEUED:
+            self._queue.remove(rid)
+            self._cancel_entry(e)
+            return True
+        if phase is RequestState.PREFILLING:
+            self._cancel_requested.add(rid)
+            return True
+        if phase is RequestState.KV_TRANSFER:
+            self._handoff.remove(rid)
+            self._cancel_entry(e)
+            return True
+        for eng in self.coord.decode_engines:      # DECODING
+            if eng.cancel(rid):
+                e.life.kv_pages_allocated += eng.pop_page_stamp(rid)
+                self._cancel_entry(e)
+                return True
+        return False
+
+    def drain_in_flight(self) -> List[Request]:
+        """§12 failover: hand every non-terminal request's lifecycle
+        record back to the router and abandon the pipeline state. The
+        replica is dead — its engines, slots, and any KV they hold are
+        unreachable, so nothing is released here; the router restarts
+        each request from its (token-folded) prompt elsewhere."""
+        out = []
+        for rid in self._order:
+            e = self._entries[rid]
+            if not e.life.is_terminal:
+                out.append(e.life)
+                e.cache = None
+                self._unfinished -= 1
+        self._queue.clear()
+        self._handoff.clear()
+        self._cancel_requested.clear()
+        return out
 
     # -- driving --------------------------------------------------------
     def step(self) -> bool:

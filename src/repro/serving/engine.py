@@ -582,6 +582,17 @@ class DecodeEngine:
         held — the runtime side of the §11 page-count parity stamp."""
         return self._page_stamps.pop(rid, 0)
 
+    def cancel(self, rid: int) -> bool:
+        """§12 client cancellation mid-decode: release ``rid``'s slot
+        (paged: its pages return to the pool; the page stamp is left
+        for ``pop_page_stamp``). Returns False when no active slot
+        holds ``rid``."""
+        for i, s in enumerate(self.slots):
+            if s.active and s.rid == rid:
+                self._release_slot(i)
+                return True
+        return False
+
     def _preempt_youngest(self) -> int:
         """Release the most recently admitted active slot for recompute
         (vLLM-style page-exhaustion preemption: the latest request

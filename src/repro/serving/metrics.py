@@ -15,7 +15,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.serving.request import Request
+from repro.serving.request import Request, RequestState
 
 #: The shared runtime/simulator metrics schema. Every name is a
 #: property (or method, for slo_attainment) on ServeMetrics and on
@@ -35,6 +35,13 @@ from repro.serving.request import Request
 #: allocator), so page counts, pool utilization, and internal
 #: fragmentation are directly comparable — and must agree EXACTLY on
 #: the same trace.
+#: The final block is the router tier (DESIGN.md §12): admission /
+#: cancellation / failover counters and per-priority-class breakdowns.
+#: Both domains drive the SAME ``Router`` over replica handles, so the
+#: counters are derived from identical lifecycle records and must agree
+#: EXACTLY on the same trace. The ``*_by_class`` fields are dicts keyed
+#: by priority class — part of the schema contract but deliberately NOT
+#: in ``summary()`` (summary values must stay finite scalars).
 METRIC_FIELDS = ("decode_throughput", "avg_latency", "p99_latency",
                  "avg_ttft", "p99_ttft", "avg_tpot", "slo_attainment",
                  "cache_hit_rate", "reused_tokens",
@@ -42,7 +49,11 @@ METRIC_FIELDS = ("decode_throughput", "avg_latency", "p99_latency",
                  "kv_bytes_shipped", "kv_compression_ratio",
                  "transfer_overlap_frac",
                  "kv_pages_allocated", "page_utilization",
-                 "page_fragmentation")
+                 "page_fragmentation",
+                 "admitted", "rejected", "cancelled", "redispatched",
+                 "slo_attainment_stated",
+                 "avg_ttft_by_class", "slo_attainment_by_class",
+                 "cache_hit_rate_by_class")
 
 
 @dataclasses.dataclass
@@ -152,6 +163,85 @@ class ServeMetrics:
         capacity (0.0 on a dense run)."""
         return 1.0 - self.page_utilization
 
+    # -- router-tier fields (DESIGN.md §12) -----------------------------
+    @property
+    def rejected(self) -> int:
+        """Requests refused at admission (queue overflow)."""
+        return sum(1 for r in self.requests
+                   if r.phase is RequestState.REJECTED)
+
+    @property
+    def cancelled(self) -> int:
+        """Requests cancelled by the client at some lifecycle stage."""
+        return sum(1 for r in self.requests
+                   if r.phase is RequestState.CANCELLED)
+
+    @property
+    def admitted(self) -> int:
+        """Requests that entered (and stayed in) the pipeline. The three
+        counters partition the trace: admitted + rejected + cancelled ==
+        submitted — the §12 conservation invariant."""
+        return len(self.requests) - self.rejected - self.cancelled
+
+    @property
+    def redispatched(self) -> int:
+        """Total §12 failover re-dispatches (a request surviving two
+        replica deaths counts twice)."""
+        return int(sum(r.redispatches for r in self.requests))
+
+    def _classes(self) -> Dict[int, List[Request]]:
+        by: Dict[int, List[Request]] = {}
+        for r in self.requests:
+            by.setdefault(r.priority, []).append(r)
+        return by
+
+    @property
+    def avg_ttft_by_class(self) -> Dict[int, float]:
+        """Mean TTFT per priority class (classes with no finished
+        request report inf — they never saw a first token)."""
+        out = {}
+        for cls, rs in self._classes().items():
+            vals = [r.ttft for r in rs if r.ttft is not None]
+            out[cls] = float(np.mean(vals)) if vals else float("inf")
+        return out
+
+    @property
+    def slo_attainment_by_class(self) -> Dict[int, float]:
+        """Fraction of each class's stated-SLO requests that finished
+        within their own ``slo_target_s``. Rejected/cancelled requests
+        count as misses (latency None) — admission control can't buy
+        attainment by shedding. Classes with no stated SLO are omitted."""
+        out = {}
+        for cls, rs in self._classes().items():
+            stated = [r for r in rs if r.slo_target_s is not None]
+            if not stated:
+                continue
+            ok = sum(1 for r in stated if r.latency is not None
+                     and r.latency <= r.slo_target_s)
+            out[cls] = ok / len(stated)
+        return out
+
+    @property
+    def slo_attainment_stated(self) -> float:
+        """Overall attainment over requests with a stated per-request
+        SLO (1.0 when the trace states none)."""
+        stated = [r for r in self.requests if r.slo_target_s is not None]
+        if not stated:
+            return 1.0
+        ok = sum(1 for r in stated if r.latency is not None
+                 and r.latency <= r.slo_target_s)
+        return ok / len(stated)
+
+    @property
+    def cache_hit_rate_by_class(self) -> Dict[int, float]:
+        """Token-level prefix-cache hit rate per priority class."""
+        out = {}
+        for cls, rs in self._classes().items():
+            total = sum(r.s_in for r in rs)
+            out[cls] = (sum(r.cached_len for r in rs) / total
+                        if total else 0.0)
+        return out
+
     def slo_attainment(self, slo_per_request: Dict[int, float],
                        scale: float) -> float:
         ok = sum(1 for r in self.requests
@@ -176,7 +266,12 @@ class ServeMetrics:
                "transfer_overlap_frac": self.transfer_overlap_frac,
                "kv_pages_allocated": float(self.kv_pages_allocated),
                "page_utilization": self.page_utilization,
-               "page_fragmentation": self.page_fragmentation}
+               "page_fragmentation": self.page_fragmentation,
+               "admitted": float(self.admitted),
+               "rejected": float(self.rejected),
+               "cancelled": float(self.cancelled),
+               "redispatched": float(self.redispatched),
+               "slo_attainment_stated": self.slo_attainment_stated}
         if slo is not None:
             out["slo_attainment"] = self.slo_attainment(slo, slo_scale)
         return out

@@ -353,5 +353,10 @@ def route_score(hit_ratio: float, load: float, min_load: float,
     ``min_load`` the fleet minimum; with no cache hits anywhere the rule
     reduces exactly to least-normalized-load dispatch (the pre-§9 rule).
     ``cache_alpha`` is how many multiples of the fleet-relative load
-    imbalance one full prefix hit is worth."""
+    imbalance one full prefix hit is worth.
+
+    Callers comparing scores across replicas MUST break exact ties by
+    the lowest replica index (stable order) — the §12 determinism rule
+    all three scorers (coordinator, simulator, router) follow, pinned
+    by the tie-break regression test."""
     return cache_alpha * hit_ratio - (load / max(min_load, 1e-12) - 1.0)

@@ -26,6 +26,12 @@ class RequestState(enum.Enum):
     KV_TRANSFER = "kv_transfer"
     DECODING = "decoding"
     DONE = "done"
+    #: refused at admission (router queue overflow, DESIGN.md §12) —
+    #: the request never entered the pipeline
+    REJECTED = "rejected"
+    #: cancelled by the client at some lifecycle stage (§12); resources
+    #: it held (decode pages, prefix pins) were reclaimed on the edge
+    CANCELLED = "cancelled"
 
 
 # Backwards-compatible alias (pre-PR-2 name).
@@ -34,13 +40,25 @@ Phase = RequestState
 
 #: Legal lifecycle edges. PREFILLING → DONE covers single-token requests
 #: (the first token is produced by prefill itself; no KV ever ships).
+#: REJECTED is reachable only from QUEUED (admission happens before any
+#: work); CANCELLED is reachable from every non-terminal state.
 TRANSITIONS = {
-    RequestState.QUEUED: (RequestState.PREFILLING,),
-    RequestState.PREFILLING: (RequestState.KV_TRANSFER, RequestState.DONE),
-    RequestState.KV_TRANSFER: (RequestState.DECODING,),
-    RequestState.DECODING: (RequestState.DONE,),
+    RequestState.QUEUED: (RequestState.PREFILLING, RequestState.REJECTED,
+                          RequestState.CANCELLED),
+    RequestState.PREFILLING: (RequestState.KV_TRANSFER, RequestState.DONE,
+                              RequestState.CANCELLED),
+    RequestState.KV_TRANSFER: (RequestState.DECODING,
+                               RequestState.CANCELLED),
+    RequestState.DECODING: (RequestState.DONE, RequestState.CANCELLED),
     RequestState.DONE: (),
+    RequestState.REJECTED: (),
+    RequestState.CANCELLED: (),
 }
+
+#: States a request can never leave. ``restart`` (the §7/§11/§12
+#: requeue back-edge) refuses all of them.
+TERMINAL_STATES = frozenset(
+    (RequestState.DONE, RequestState.REJECTED, RequestState.CANCELLED))
 
 
 class IllegalTransition(RuntimeError):
@@ -105,6 +123,17 @@ class Request:
     kv_page_size: int = 0
     #: §11 preemptions this request survived (page-exhaustion recompute)
     preemptions: int = 0
+    # -- router-tier descriptors (DESIGN.md §12) ------------------------
+    #: priority class: 0 = interactive (most urgent), larger = less
+    #: urgent. The router's admission queue orders on this (with aging).
+    priority: int = 0
+    #: end-to-end latency target in seconds; None = no stated SLO.
+    #: ``ServeMetrics.slo_attainment_stated`` scores only stated SLOs.
+    slo_target_s: Optional[float] = None
+    #: §12 failovers this request survived (replica died mid-flight and
+    #: the router re-dispatched it elsewhere, emitted tokens folded
+    #: into the prompt)
+    redispatches: int = 0
 
     # -- lifecycle ------------------------------------------------------
     def advance(self, state: RequestState, t: float) -> "Request":
@@ -115,6 +144,8 @@ class Request:
                 f"req {self.rid}: {self.phase.value} -> {state.value}")
         if state is RequestState.PREFILLING:
             self.prefill_start = t
+        elif state in (RequestState.REJECTED, RequestState.CANCELLED):
+            pass    # no timestamp: latency/ttft stay None (never served)
         elif state is RequestState.KV_TRANSFER:
             self.prefill_end = t
         elif state is RequestState.DECODING:
@@ -130,8 +161,9 @@ class Request:
     def restart(self) -> "Request":
         """Requeue after a placement swap: queued/mid-prefill work starts
         over on the new prefill replicas (prefill is stateless)."""
-        if self.phase is RequestState.DONE:
-            raise IllegalTransition(f"req {self.rid}: restart after DONE")
+        if self.phase in TERMINAL_STATES:
+            raise IllegalTransition(
+                f"req {self.rid}: restart after {self.phase.value}")
         self.phase = RequestState.QUEUED
         self.prefill_start = None
         self.prefill_end = None
@@ -143,6 +175,10 @@ class Request:
         self.kv_serialized_s = 0.0
         self.kv_overlap_s = 0.0
         return self
+
+    @property
+    def is_terminal(self) -> bool:
+        return self.phase in TERMINAL_STATES
 
     # -- derived metrics ------------------------------------------------
     @property

@@ -1,0 +1,525 @@
+"""Production router tier (DESIGN.md §12): priority/SLO-aware routing,
+cancellation, and failover over N replicas.
+
+One ``Router`` fronts a fleet of replica handles — each a full
+disaggregated cluster (prefill engines + KV handoff + decode engines).
+The SAME Router implementation drives both domains:
+
+  * runtime: ``CoordinatorReplica`` wraps a ``Coordinator`` and its
+    long-lived ``ServeSession`` (real JAX execution);
+  * scheduling: ``simulator.SimReplica`` mirrors the session's
+    three-stage step pipeline over a virtual ``StepClock``.
+
+Parity is by construction: every router decision — admission,
+priority/aging pop order, dispatch target, failover re-dispatch,
+cancellation — is a pure function of router step indices and replica
+queue occupancy, never of wall-clock time. Driving the same seeded
+trace through either replica kind therefore yields EXACTLY the same
+``admitted/rejected/cancelled/redispatched`` counters and per-class
+cache hit rates (the §12 parity contract, pinned by tests).
+
+Queue discipline: the bounded admission queue orders on
+``(effective_priority, submission_seq)`` where effective priority ages
+toward 0 by one class every ``age_every`` router steps — so batch
+work behind a flood of interactive traffic is delayed by a bounded
+number of steps, never starved. Overflow raises the typed
+``AdmissionRejected`` (the request's lifecycle records REJECTED; it is
+never silently dropped).
+
+Failover protocol: ``kill(idx)`` marks a replica dead and drains its
+non-terminal requests. Each is re-dispatched through the §11
+recompute-from-prompt path: lifecycle ``restart()`` (preserving the
+§9/§10 stamps that reflect real work done), emitted tokens folded into
+the prompt, the remaining token budget recomputed, and the entry
+re-enqueued with its ORIGINAL seq/enqueue-step so FIFO-within-class
+and the aging bound survive the failure. Tokens already streamed stay
+streamed — the router's canonical per-request stream is append-only,
+which is what makes "no loss, no duplication" testable. Re-dispatched
+requests bypass the prefix caches in both domains (their folded
+prompts contain generated tokens; caching them would pollute the radix
+trees and their hit accounting).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
+
+import numpy as np
+
+from repro.serving.prefix_cache import route_score
+from repro.serving.request import Request, RequestState
+
+#: Conventional priority classes (smaller = more urgent). Any int works.
+PRIORITY_INTERACTIVE = 0
+PRIORITY_STANDARD = 1
+PRIORITY_BATCH = 2
+
+
+class AdmissionRejected(RuntimeError):
+    """Typed admission-control refusal: the bounded queue is full."""
+
+    def __init__(self, rid: int, queue_len: int, capacity: int):
+        super().__init__(
+            f"admission queue full ({queue_len}/{capacity}): "
+            f"request {rid} rejected")
+        self.rid = rid
+        self.queue_len = queue_len
+        self.capacity = capacity
+
+
+class StepClock:
+    """Virtual clock for the scheduling domain: ``run_trace`` sets it to
+    ``step * dt`` each router step, so simulated lifecycle stamps are a
+    deterministic function of step indices."""
+
+    def __init__(self):
+        self.value = 0.0
+
+    def __call__(self) -> float:
+        return self.value
+
+
+@dataclasses.dataclass
+class _QEntry:
+    life: Request
+    seq: int              # admission order (never reassigned on failover)
+    enqueue_step: int     # router step of FIRST admission (aging base)
+
+
+class AdmissionQueue:
+    """Bounded priority queue with aging (DESIGN.md §12).
+
+    Pop order is ``(effective_priority, seq)`` where::
+
+        effective_priority(step) =
+            max(0, priority - (step - enqueue_step) // age_every)
+
+    — strict priority order between classes, FIFO within a class, and
+    every waiting request climbs one class per ``age_every`` router
+    steps, so low-priority work is delayed by a BOUNDED number of
+    steps: if a request of class p dispatches while one of class q < p
+    still waits, the dispatched one must have waited at least
+    ``age_every * (p - q)`` steps (the aging bound the property tests
+    pin). ``push`` raises the typed ``AdmissionRejected`` at capacity;
+    ``force=True`` bypasses the bound for failover re-admission
+    (already-admitted work cannot be retroactively rejected).
+    """
+
+    def __init__(self, capacity: int = 64, age_every: int = 8):
+        self.capacity = int(capacity)
+        self.age_every = max(1, int(age_every))
+        self._entries: List[_QEntry] = []
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def effective_priority(self, entry: _QEntry, step: int) -> int:
+        waited = max(0, step - entry.enqueue_step)
+        return max(0, entry.life.priority - waited // self.age_every)
+
+    def push(self, entry: _QEntry, force: bool = False) -> None:
+        if not force and len(self._entries) >= self.capacity:
+            raise AdmissionRejected(entry.life.rid, len(self._entries),
+                                    self.capacity)
+        self._entries.append(entry)
+
+    def pop(self, step: int) -> _QEntry:
+        i = min(range(len(self._entries)),
+                key=lambda j: (self.effective_priority(self._entries[j],
+                                                      step),
+                               self._entries[j].seq))
+        return self._entries.pop(i)
+
+    def pop_fifo(self) -> _QEntry:
+        """Admission-order pop, ignoring priority — the round-robin
+        baseline's discipline."""
+        i = min(range(len(self._entries)),
+                key=lambda j: self._entries[j].seq)
+        return self._entries.pop(i)
+
+    def remove(self, rid: int) -> Optional[_QEntry]:
+        for i, e in enumerate(self._entries):
+            if e.life.rid == rid:
+                return self._entries.pop(i)
+        return None
+
+    def rids(self) -> List[int]:
+        return [e.life.rid for e in self._entries]
+
+
+#: Streaming callback: (rid, token, finished).
+TokenCallback = Callable[[int, int, bool], None]
+
+
+@dataclasses.dataclass
+class _RouterEntry:
+    life: Request
+    prompt: Optional[Tuple[int, ...]]   # original prompt tokens
+    max_new: int                        # original token budget
+    seq: int
+    submit_step: int
+    on_token: Optional[TokenCallback] = None
+    replica: Optional[int] = None       # current home (None while queued)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+
+class Router:
+    """Fronts N replica handles with admission control, priority/SLO-
+    aware dispatch, cancellation, and failover (DESIGN.md §12).
+
+    A replica handle is duck-typed — ``CoordinatorReplica`` (runtime)
+    and ``simulator.SimReplica`` (scheduling domain) both provide::
+
+        alive: bool
+        max_inflight: int                      # dispatch window
+        matched_len(tokens) -> int             # best prefix-cache match
+        submit(life, prompt, max_new, *, on_token, no_cache, start_index)
+        step() -> bool
+        cancel(rid) -> bool
+        drain_in_flight() -> List[Request]     # failover handoff
+
+    ``policy`` picks the dispatch rule: ``"slo"`` pops the priority/
+    aging queue and routes by the §9 ``route_score`` (matched-prefix
+    ratio vs normalized flow-weighted load; exact score ties break to
+    the LOWEST replica index — deterministic, seed-reproducible);
+    ``"rr"`` is the FIFO/round-robin baseline the benchmark beats.
+    """
+
+    def __init__(self, replicas: Sequence[Any], *,
+                 queue_capacity: int = 64, age_every: int = 8,
+                 policy: str = "slo", cache_alpha: float = 2.0,
+                 route_weights: Optional[Sequence[float]] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        assert policy in ("slo", "rr"), policy
+        self.replicas = list(replicas)
+        n = len(self.replicas)
+        assert n > 0, "router needs at least one replica"
+        self.policy = policy
+        self.cache_alpha = cache_alpha
+        self.queue = AdmissionQueue(queue_capacity, age_every)
+        self._clock = clock or time.perf_counter
+        self._virtual = clock if isinstance(clock, StepClock) else None
+        self._t0 = 0.0 if self._virtual is not None else self._clock()
+        w = list(route_weights or [1.0] * n)
+        assert len(w) == n
+        self._weights = np.asarray(w, float) / sum(w)
+        self._routed = np.zeros(n)
+        self._inflight = [0] * n
+        self._entries: Dict[int, _RouterEntry] = {}
+        self._order: List[int] = []
+        self._active: set = set()           # rids dispatched, not terminal
+        self._seq = 0
+        self._rr = 0
+        self._step_idx = 0
+        self._decode_tokens = 0
+        self._makespan = 0.0
+        #: (rid, priority, submit_step, dispatch_step, replica,
+        #:  redispatch) rows — the property tests' window into ordering
+        self.dispatch_log: List[Dict[str, int]] = []
+
+    # -- clock ----------------------------------------------------------
+    def now(self) -> float:
+        return self._clock() - self._t0
+
+    @property
+    def step_index(self) -> int:
+        return self._step_idx
+
+    # -- admission ------------------------------------------------------
+    def submit(self, life: Request,
+               on_token: Optional[TokenCallback] = None) -> int:
+        """Admit ``life`` into the bounded queue. Raises the typed
+        ``AdmissionRejected`` on overflow — the record is stamped
+        REJECTED first, so rejected traffic still shows up in metrics
+        (nothing is silently dropped). ``life.arrival`` is re-stamped
+        to the router clock: queueing delay counts against TTFT/SLO."""
+        rid = life.rid
+        assert rid not in self._entries, f"duplicate rid {rid}"
+        life.arrival = self.now()
+        prompt = (tuple(int(t) for t in life.tokens)
+                  if life.tokens is not None else None)
+        entry = _RouterEntry(life=life, prompt=prompt, max_new=life.s_out,
+                             seq=self._seq, submit_step=self._step_idx,
+                             on_token=on_token)
+        self._seq += 1
+        self._entries[rid] = entry
+        self._order.append(rid)
+        if len(self.queue) >= self.queue.capacity:
+            life.advance(RequestState.REJECTED, self.now())
+            raise AdmissionRejected(rid, len(self.queue),
+                                    self.queue.capacity)
+        self.queue.push(_QEntry(life, entry.seq, entry.submit_step))
+        return rid
+
+    # -- cancellation ---------------------------------------------------
+    def cancel(self, rid: int) -> bool:
+        """Cancel at any lifecycle stage. Queued requests leave the
+        admission queue; dispatched ones are cancelled inside their
+        replica (which reclaims decode pages / prefix pins / queue
+        slots on the stage-specific edge). Returns False when the
+        request is unknown or already terminal."""
+        entry = self._entries.get(rid)
+        if entry is None or entry.life.is_terminal:
+            return False
+        qe = self.queue.remove(rid)
+        if qe is not None:
+            entry.life.advance(RequestState.CANCELLED, self.now())
+            return True
+        idx = entry.replica
+        if idx is None or not self.replicas[idx].alive:
+            return False
+        if self.replicas[idx].cancel(rid):
+            self._inflight[idx] -= 1
+            self._active.discard(rid)
+            return True
+        return False
+
+    # -- failover -------------------------------------------------------
+    def kill(self, idx: int) -> List[int]:
+        """Mark replica ``idx`` dead and re-dispatch its in-flight
+        requests (§12 failover). Returns the re-queued rids."""
+        rep = self.replicas[idx]
+        if not rep.alive:
+            return []
+        rep.alive = False
+        moved = []
+        for life in rep.drain_in_flight():
+            entry = self._entries[life.rid]
+            self._inflight[idx] -= 1
+            self._active.discard(life.rid)
+            self._redispatch(entry)
+            moved.append(life.rid)
+        return moved
+
+    def _redispatch(self, entry: _RouterEntry) -> None:
+        """§11 recompute-from-prompt across replicas: restart the
+        lifecycle (preserving §9/§10 stamps — that work really
+        happened), fold the already-emitted tokens into the prompt,
+        and re-enqueue with the ORIGINAL seq/enqueue-step so queue
+        ordering guarantees survive the failure. The dead replica's
+        page stamps are unreachable (its allocator died with it)."""
+        life = entry.life
+        snap = (life.kv_bytes_raw, life.kv_bytes_wire,
+                life.kv_serialized_s, life.kv_overlap_s, life.cached_len)
+        life.restart()
+        (life.kv_bytes_raw, life.kv_bytes_wire, life.kv_serialized_s,
+         life.kv_overlap_s, life.cached_len) = snap
+        life.redispatches += 1
+        entry.replica = None
+        self.queue.push(_QEntry(life, entry.seq, entry.submit_step),
+                        force=True)
+
+    # -- dispatch -------------------------------------------------------
+    def _candidates(self) -> List[int]:
+        return [i for i, rep in enumerate(self.replicas)
+                if rep.alive and self._inflight[i] < rep.max_inflight]
+
+    def _pick_replica(self, entry: _RouterEntry,
+                      cands: List[int]) -> int:
+        if self.policy == "rr":
+            idx = cands[self._rr % len(cands)]
+            self._rr += 1
+            return idx
+        base = (self._routed + 1) / np.maximum(self._weights, 1e-9)
+        lo = float(min(base[i] for i in cands))
+        cur = self._current_prompt(entry)
+        no_cache = entry.life.redispatches > 0
+        scores = {}
+        for i in cands:
+            hit = 0.0
+            if cur is not None and not no_cache:
+                hit = self.replicas[i].matched_len(cur) / max(len(cur), 1)
+            scores[i] = route_score(hit, float(base[i]), lo,
+                                    self.cache_alpha)
+        # exact ties break to the lowest replica index (deterministic)
+        return max(cands, key=lambda i: (scores[i], -i))
+
+    def _current_prompt(self, entry: _RouterEntry
+                        ) -> Optional[Tuple[int, ...]]:
+        if entry.prompt is None:
+            return None
+        return entry.prompt + tuple(entry.tokens)
+
+    def _make_cb(self, entry: _RouterEntry) -> TokenCallback:
+        def cb(rid: int, tok: int, fin: bool) -> None:
+            entry.tokens.append(int(tok))
+            self._decode_tokens += 1
+            if entry.on_token is not None:
+                entry.on_token(rid, tok, fin)
+        return cb
+
+    def _dispatch(self) -> bool:
+        did = False
+        while len(self.queue):
+            cands = self._candidates()
+            if not cands:
+                break
+            qe = (self.queue.pop(self._step_idx) if self.policy == "slo"
+                  else self.queue.pop_fifo())
+            entry = self._entries[qe.life.rid]
+            idx = self._pick_replica(entry, cands)
+            self._routed[idx] += 1
+            prompt = self._current_prompt(entry)
+            start = len(entry.tokens)
+            self.replicas[idx].submit(
+                entry.life, prompt, entry.max_new - start,
+                on_token=self._make_cb(entry),
+                no_cache=entry.life.redispatches > 0,
+                start_index=start)
+            entry.replica = idx
+            self._inflight[idx] += 1
+            self._active.add(entry.life.rid)
+            self.dispatch_log.append(dict(
+                rid=entry.life.rid, priority=entry.life.priority,
+                submit_step=qe.enqueue_step,
+                dispatch_step=self._step_idx, replica=idx,
+                redispatch=entry.life.redispatches))
+            did = True
+        return did
+
+    # -- driving --------------------------------------------------------
+    def step(self) -> bool:
+        """One router step: dispatch from the queue, step every alive
+        replica with work, collect finished requests. Returns whether
+        anything progressed."""
+        progressed = self._dispatch()
+        for i, rep in enumerate(self.replicas):
+            if rep.alive and self._inflight[i] > 0:
+                progressed = bool(rep.step()) or progressed
+        for rid in [r for r in self._active
+                    if self._entries[r].life.is_terminal]:
+            entry = self._entries[rid]
+            self._active.discard(rid)
+            self._inflight[entry.replica] -= 1
+            if entry.life.phase is RequestState.DONE:
+                # canonical total across failover re-dispatches (a
+                # replica's own count restarts from the folded prompt)
+                entry.life.tokens_out = len(entry.tokens)
+            if entry.life.decode_end is not None:
+                self._makespan = max(self._makespan, entry.life.decode_end)
+        self._step_idx += 1
+        return progressed
+
+    @property
+    def unfinished(self) -> int:
+        return len(self._active) + len(self.queue)
+
+    def run_trace(self, trace: Sequence[Request], dt: float = 0.05,
+                  failures: Optional[Dict[int, Any]] = None,
+                  cancels: Optional[Dict[int, Sequence[int]]] = None,
+                  on_token: Optional[TokenCallback] = None,
+                  max_steps: int = 200_000) -> "ServeMetrics":
+        """Drive a full trace to completion: at router step k (time
+        ``k * dt``) apply scheduled replica failures (``failures``:
+        {step: replica_idx or [idx, ...]}), submit every request whose
+        ``arrival <= k * dt`` (admission overflow records REJECTED and
+        moves on), apply scheduled cancellations (``cancels``:
+        {step: [rid, ...]}), then ``step()``. Arrival pacing is in
+        STEPS, identically in both domains — the parity contract."""
+        failures = failures or {}
+        cancels = cancels or {}
+        pending = collections.deque(sorted(trace, key=lambda r: r.arrival))
+        idle = 0
+        while pending or self.unfinished:
+            s = self._step_idx
+            if self._virtual is not None:
+                self._virtual.value = s * dt
+            kills = failures.get(s, ())
+            for idx in ([kills] if isinstance(kills, int) else kills):
+                self.kill(idx)
+            while pending and pending[0].arrival <= s * dt + 1e-9:
+                try:
+                    self.submit(pending.popleft(), on_token=on_token)
+                except AdmissionRejected:
+                    pass                      # recorded as REJECTED
+            for rid in cancels.get(s, ()):
+                self.cancel(rid)
+            progressed = self.step()
+            if not pending and self.unfinished and not progressed:
+                if not any(rep.alive for rep in self.replicas):
+                    raise RuntimeError(
+                        f"router: every replica is dead with "
+                        f"{self.unfinished} requests unfinished")
+                idle += 1
+                if idle > 1000:
+                    raise RuntimeError(
+                        f"router stalled: {self.unfinished} unfinished, "
+                        "no progress in 1000 steps")
+            else:
+                idle = 0
+            if self._step_idx > max_steps:
+                raise RuntimeError("router: max_steps exceeded")
+        return self.metrics()
+
+    # -- results --------------------------------------------------------
+    def tokens(self, rid: int) -> List[int]:
+        """The canonical (append-only) token stream for ``rid`` —
+        survives failover re-dispatch intact."""
+        return list(self._entries[rid].tokens)
+
+    def results(self) -> List[Tuple[int, List[int], Request]]:
+        """(rid, tokens, lifecycle) in submission order."""
+        return [(rid, list(self._entries[rid].tokens),
+                 self._entries[rid].life) for rid in self._order]
+
+    def metrics(self) -> "ServeMetrics":
+        from repro.serving.metrics import ServeMetrics
+        return ServeMetrics(
+            requests=[self._entries[rid].life for rid in self._order],
+            makespan=self._makespan, decode_tokens=self._decode_tokens)
+
+    @property
+    def counters(self) -> Dict[str, int]:
+        """The §12 conservation counters, derived from the lifecycle
+        records (admitted + rejected + cancelled == submitted)."""
+        m = self.metrics()
+        return {"admitted": m.admitted, "rejected": m.rejected,
+                "cancelled": m.cancelled, "redispatched": m.redispatched}
+
+
+class CoordinatorReplica:
+    """Runtime replica handle: one ``Coordinator`` plus one long-lived
+    ``ServeSession`` driven by the router's shared clock. The dispatch
+    window (``max_inflight``) is the replica's total decode slots plus
+    its prefill micro-batch — enough to keep every stage fed without
+    letting the router bury a replica in queued work it can't start
+    (queue depth belongs to the router, where priorities exist)."""
+
+    def __init__(self, coord: Any, max_prefill_batch: int = 4,
+                 clock: Optional[Callable[[], float]] = None):
+        self.coord = coord
+        self.session = coord.session(max_prefill_batch=max_prefill_batch,
+                                     clock=clock)
+        self.alive = True
+
+    @property
+    def max_inflight(self) -> int:
+        return (sum(e.num_slots for e in self.coord.decode_engines)
+                + self.session.max_prefill_batch)
+
+    def matched_len(self, tokens: Sequence[int]) -> int:
+        caches = self.coord.prefix_caches
+        if not caches:
+            return 0
+        return max(c.matched_len(tokens) for c in caches)
+
+    def submit(self, life: Request, prompt: Sequence[int], max_new: int,
+               *, on_token: Optional[TokenCallback] = None,
+               no_cache: bool = False, start_index: int = 0) -> None:
+        from repro.serving.coordinator import ServeRequest
+        assert prompt is not None, \
+            "runtime replicas need prompt token content"
+        req = ServeRequest(life.rid, np.asarray(prompt, np.int32),
+                           max_new, no_cache=no_cache)
+        self.session.submit(req, on_token=on_token, life=life)
+
+    def step(self) -> bool:
+        return self.session.step()
+
+    def cancel(self, rid: int) -> bool:
+        return self.session.cancel(rid)
+
+    def drain_in_flight(self) -> List[Request]:
+        return self.session.drain_in_flight()

@@ -270,7 +270,10 @@ class _DisaggSim:
                    if cache is not None else 0.0)
             return route_score(hit, base[g], lo, self.cache_alpha)
 
-        return min(self.prefill, key=lambda g: (-score(g), base[g], g))
+        # exact score ties break to the LOWEST group id (stable replica-
+        # index order), matching the §12 router's rule — routing is
+        # seed-reproducible and identical across domains
+        return min(self.prefill, key=lambda g: (-score(g), g))
 
     def pick_decode(self, p: int) -> int:
         opts = self.route_weight[p]
@@ -892,3 +895,226 @@ def simulate_colocated(cluster: ClusterSpec, profile: ModelProfile,
             srv.active = still
             kick(t, si)
     return SimResult(requests, makespan, decode_tokens)
+
+
+# ---------------------------------------------------------------------------
+# Fleet tier (DESIGN.md §12): N replicas behind the shared Router
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class _SimSlot:
+    life: Request
+    prompt_len: int
+    max_new: int
+    on_token: Optional[Callable[[int, int, bool], None]]
+    start: int                # token index of the next emission
+    emitted: int = 0
+    length: int = 0           # KV positions held (prompt + emitted - ...)
+
+
+class SimReplica:
+    """Scheduling-domain replica handle for the §12 ``Router``.
+
+    Mirrors ``ServeSession``'s three-stage step pipeline EXACTLY in
+    step structure — prefill micro-batch (bounded by free decode
+    slots), handoff admission, one decode token per active slot per
+    step — and mirrors the runtime's prefix-cache discipline on the
+    same radix tree (payloads are the slab CAPACITY ints the runtime's
+    real slabs report, so the hit-gating arithmetic is identical).
+    Driving the same trace through ``Router`` over N of these or N
+    ``CoordinatorReplica``s therefore produces the same admission/
+    dispatch/failover decisions at the same step indices: the parity
+    contract ``simulate_fleet`` vs the runtime router is tested under.
+
+    Lifecycle timestamps come from the router's virtual ``StepClock``;
+    emitted tokens are synthetic sequential indices (``start_index``
+    onward) so stream conservation is testable across failover."""
+
+    def __init__(self, num_slots: int = 4, max_prefill_batch: int = 4,
+                 capacity: int = 128, prefix_caching: bool = True,
+                 cache_bytes: Optional[float] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        self.alive = True
+        self.num_slots = int(num_slots)
+        self.max_prefill_batch = max(1, int(max_prefill_batch))
+        self.capacity = int(capacity)
+        self.cache = (PrefixCache(cache_bytes) if prefix_caching else None)
+        self._clock = clock or (lambda: 0.0)
+        self._queue: List[int] = []
+        self._handoff: List[int] = []
+        self._active: List[_SimSlot] = []
+        self._slots: Dict[int, _SimSlot] = {}
+        self._no_cache: Dict[int, bool] = {}
+        self._prompts: Dict[int, Optional[Tuple[int, ...]]] = {}
+
+    # -- router protocol -------------------------------------------------
+    @property
+    def max_inflight(self) -> int:
+        return self.num_slots + self.max_prefill_batch
+
+    def now(self) -> float:
+        return self._clock()
+
+    def matched_len(self, tokens) -> int:
+        if self.cache is None or tokens is None:
+            return 0
+        return self.cache.matched_len(tokens)
+
+    def submit(self, life: Request, prompt, max_new: int, *,
+               on_token=None, no_cache: bool = False,
+               start_index: int = 0) -> None:
+        assert life.phase is RequestState.QUEUED
+        prompt = tuple(int(t) for t in prompt) if prompt is not None else None
+        plen = len(prompt) if prompt is not None else life.s_in + start_index
+        self._slots[life.rid] = _SimSlot(life, plen, max_new, on_token,
+                                         start_index)
+        self._prompts[life.rid] = prompt
+        self._no_cache[life.rid] = no_cache
+        self._queue.append(life.rid)
+
+    def step(self) -> bool:
+        a = self._step_prefill()
+        b = self._step_handoff()
+        c = self._step_decode()
+        return a or b or c
+
+    def cancel(self, rid: int) -> bool:
+        s = self._slots.get(rid)
+        if s is None or s.life.is_terminal:
+            return False
+        if rid in self._queue:
+            self._queue.remove(rid)
+        elif rid in self._handoff:
+            self._handoff.remove(rid)
+        elif s in self._active:
+            self._active.remove(s)
+        else:
+            return False
+        s.life.advance(RequestState.CANCELLED, self.now())
+        return True
+
+    def drain_in_flight(self) -> List[Request]:
+        out = [s.life for s in self._slots.values()
+               if not s.life.is_terminal]
+        self._queue.clear()
+        self._handoff.clear()
+        self._active.clear()
+        return out
+
+    # -- pipeline stages (mirror ServeSession's) -------------------------
+    def _emit(self, s: _SimSlot, finished: bool) -> None:
+        tok = s.start + s.emitted        # synthetic, sequential
+        s.emitted += 1
+        if s.on_token is not None:
+            s.on_token(s.life.rid, tok, finished)
+
+    def _finish(self, s: _SimSlot) -> None:
+        s.life.advance(RequestState.DONE, self.now())
+        s.life.tokens_out = s.start + s.emitted
+
+    def _step_prefill(self) -> bool:
+        if not self._queue:
+            return False
+        take = min(self.max_prefill_batch, len(self._queue),
+                   self.num_slots - len(self._handoff))
+        if take <= 0:
+            return False
+        batch = [self._slots[self._queue.pop(0)] for _ in range(take)]
+        t = self.now()
+        for s in batch:
+            s.life.advance(RequestState.PREFILLING, t)
+        # match all BEFORE any insert — exactly _route_and_prefill's
+        # order, so in-batch prompts never hit each other's fresh slabs
+        for s in batch:
+            cached = 0
+            prompt = self._prompts[s.life.rid]
+            if (self.cache is not None and prompt is not None
+                    and not self._no_cache[s.life.rid]):
+                m = self.cache.match(prompt)
+                if m.payload is not None:
+                    cached = min(m.length, len(prompt) - 1)
+                    if cached < 1 or m.payload < len(prompt):
+                        cached = 0     # slab can't seat the full prompt
+            s.life.cached_len = cached
+        for s in batch:
+            prompt = self._prompts[s.life.rid]
+            if (self.cache is not None and prompt is not None
+                    and not self._no_cache[s.life.rid]):
+                # payload = slab capacity (what the runtime's real slab
+                # reports via kv_transfer.slab_capacity)
+                self.cache.insert(prompt, payload=self.capacity)
+        for s in batch:
+            self._emit(s, finished=s.max_new <= 1)
+            if s.max_new <= 1:
+                self._finish(s)
+                continue
+            s.life.advance(RequestState.KV_TRANSFER, t)
+            self._handoff.append(s.life.rid)
+        return True
+
+    def _step_handoff(self) -> bool:
+        progressed = False
+        while self._handoff and len(self._active) < self.num_slots:
+            s = self._slots[self._handoff.pop(0)]
+            s.length = s.prompt_len + 1
+            s.life.decode_group = 0
+            s.life.advance(RequestState.DECODING, self.now())
+            self._active.append(s)
+            progressed = True
+        return progressed
+
+    def _step_decode(self) -> bool:
+        progressed = False
+        for s in list(self._active):
+            s.length += 1
+            finished = (s.emitted + 1 >= s.max_new
+                        or s.length >= self.capacity)
+            self._emit(s, finished)
+            if finished:
+                self._active.remove(s)
+                self._finish(s)
+            progressed = True
+        return progressed
+
+
+@dataclasses.dataclass
+class FleetResult(SimResult):
+    """``simulate_fleet`` result: the shared schema plus the router's
+    §12 conservation counters and dispatch log (for the property
+    tests' ordering/aging assertions)."""
+    counters: Dict[str, int] = dataclasses.field(default_factory=dict)
+    dispatch_log: List[Dict[str, int]] = dataclasses.field(
+        default_factory=list)
+
+
+def simulate_fleet(requests: List[Request], num_replicas: int = 2,
+                   slots_per_replica: int = 4, max_prefill_batch: int = 4,
+                   capacity: int = 128, dt: float = 0.05,
+                   queue_capacity: int = 64, age_every: int = 8,
+                   policy: str = "slo", prefix_caching: bool = True,
+                   cache_alpha: float = 2.0,
+                   route_weights=None,
+                   failures: Optional[Dict[int, int]] = None,
+                   cancels: Optional[Dict[int, List[int]]] = None
+                   ) -> FleetResult:
+    """Scheduling-domain fleet serve (DESIGN.md §12): the SAME
+    ``Router`` the runtime uses, over ``SimReplica`` handles on a
+    virtual step clock. ``failures`` maps router step -> replica index
+    to kill; ``cancels`` maps router step -> rids to cancel."""
+    from repro.serving.router import Router, StepClock
+    clock = StepClock()
+    reps = [SimReplica(num_slots=slots_per_replica,
+                       max_prefill_batch=max_prefill_batch,
+                       capacity=capacity, prefix_caching=prefix_caching,
+                       clock=clock)
+            for _ in range(num_replicas)]
+    router = Router(reps, queue_capacity=queue_capacity,
+                    age_every=age_every, policy=policy,
+                    cache_alpha=cache_alpha, route_weights=route_weights,
+                    clock=clock)
+    m = router.run_trace(requests, dt=dt, failures=failures,
+                         cancels=cancels)
+    return FleetResult(m.requests, m.makespan, m.decode_tokens,
+                       counters=dict(router.counters),
+                       dispatch_log=list(router.dispatch_log))

@@ -291,3 +291,47 @@ def observed_workload(requests: Sequence[Request],
     s_out = int(np.mean([r.s_out for r in requests]))
     return Workload(name, s_in=max(s_in, 1), s_out=max(s_out, 1),
                     prefill_batch=prefill_batch)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-priority traffic (DESIGN.md §12): the router tier's input
+# ---------------------------------------------------------------------------
+
+#: (name, slo multiplier of the interactive target, default class mix)
+PRIORITY_CLASS_NAMES = {0: "interactive", 1: "standard", 2: "batch"}
+
+
+def mixed_priority_workload(n: int, rate_rps: float, seed: int = 0,
+                            vocab: int = 512,
+                            class_weights: Sequence[float] = (0.5, 0.3, 0.2),
+                            system_lens: Sequence[int] = (24, 16, 8),
+                            user_lens: Sequence[int] = (6, 10, 18),
+                            out_lens: Sequence[int] = (6, 12, 40),
+                            slo_s: Sequence[float] = (2.0, 8.0, 30.0)
+                            ) -> List[Request]:
+    """Three-class mixed traffic for the §12 router: interactive
+    (priority 0 — frequent, short, tight SLO), standard, and batch
+    (long outputs, loose SLO). Each class opens with its OWN shared
+    system prompt (so prefix reuse and sticky routing have something to
+    bite on, and per-class hit rates are meaningful) followed by a
+    unique tail. Poisson arrivals at ``rate_rps`` overall."""
+    rng = np.random.default_rng(seed)
+    ncls = len(class_weights)
+    w = np.asarray(class_weights, float)
+    w = w / w.sum()
+    systems = [_tok(rng, system_lens[c], vocab) for c in range(ncls)]
+    seen = [False] * ncls
+    arrivals = np.cumsum(rng.exponential(1.0 / max(rate_rps, 1e-9), size=n))
+    reqs = []
+    for i in range(n):
+        c = int(rng.choice(ncls, p=w))
+        ulen = max(1, int(rng.poisson(user_lens[c])))
+        olen = max(1, int(rng.poisson(out_lens[c])))
+        prompt = systems[c] + _tok(rng, ulen, vocab)
+        reqs.append(Request(rid=i, s_in=len(prompt), s_out=olen,
+                            arrival=float(arrivals[i]),
+                            tokens=tuple(prompt), prefix_id=c,
+                            shared_len=system_lens[c] if seen[c] else 0,
+                            priority=c, slo_target_s=float(slo_s[c])))
+        seen[c] = True
+    return reqs

@@ -1,0 +1,306 @@
+"""Router tier (DESIGN.md §12): admission queue discipline, fault
+injection / failover re-dispatch, cancellation at every lifecycle
+stage, sim-vs-runtime counter parity, and the route-score tie-break
+determinism rule."""
+import collections
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import init_params
+from repro.serving import (AdmissionQueue, AdmissionRejected, Coordinator,
+                           CoordinatorReplica, DecodeEngine, METRIC_FIELDS,
+                           PrefillEngine, Request, RequestState, Router,
+                           ServeRequest, SimReplica, StepClock, kv_transfer,
+                           mixed_priority_workload, simulate_fleet)
+from repro.serving.router import _QEntry
+
+KEY = jax.random.PRNGKey(12)
+PS = 16
+
+
+def _qe(rid, priority, seq, step=0):
+    return _QEntry(Request(rid=rid, s_in=1, s_out=1, arrival=0.0,
+                           priority=priority), seq, step)
+
+
+# ---------------------------------------------------------------------------
+# Admission queue discipline
+# ---------------------------------------------------------------------------
+
+
+def test_queue_priority_between_classes_fifo_within():
+    q = AdmissionQueue(capacity=8, age_every=10 ** 9)
+    q.push(_qe(0, 2, 0))
+    q.push(_qe(1, 0, 1))
+    q.push(_qe(2, 0, 2))
+    q.push(_qe(3, 1, 3))
+    assert [q.pop(0).life.rid for _ in range(4)] == [1, 2, 3, 0]
+
+
+def test_queue_overflow_raises_typed_error():
+    q = AdmissionQueue(capacity=2)
+    q.push(_qe(0, 0, 0))
+    q.push(_qe(1, 0, 1))
+    with pytest.raises(AdmissionRejected) as ei:
+        q.push(_qe(2, 0, 2))
+    assert (ei.value.rid, ei.value.queue_len, ei.value.capacity) == (2, 2, 2)
+    # failover re-admission bypasses the bound: admitted work cannot be
+    # retroactively rejected
+    q.push(_qe(3, 0, 3), force=True)
+    assert len(q) == 3
+
+
+def test_queue_aging_promotes_stale_batch_work():
+    q = AdmissionQueue(capacity=8, age_every=4)
+    q.push(_qe(0, 2, 0, step=0))       # batch, waiting since step 0
+    q.push(_qe(1, 0, 1, step=7))       # fresh interactive
+    # one step before full promotion the interactive one still wins
+    assert q.pop(7).life.rid == 1
+    q.push(_qe(1, 0, 1, step=7))
+    # at step 8 the batch entry has aged to class 0 and its older seq
+    # breaks the tie — bounded delay, not starvation
+    assert q.pop(8).life.rid == 0
+
+
+def test_queue_pop_fifo_ignores_priority():
+    q = AdmissionQueue(capacity=8)
+    q.push(_qe(0, 2, 0))
+    q.push(_qe(1, 0, 1))
+    assert q.pop_fifo().life.rid == 0
+
+
+def test_queue_remove():
+    q = AdmissionQueue(capacity=8)
+    q.push(_qe(0, 0, 0))
+    assert q.remove(0).life.rid == 0
+    assert q.remove(0) is None
+    assert len(q) == 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduling-domain fleet: failover, cancellation, overflow, tie-break
+# ---------------------------------------------------------------------------
+
+
+def _sim_router(num_replicas=2, num_slots=2, mpb=2, prefix_caching=False,
+                **kw):
+    clock = StepClock()
+    reps = [SimReplica(num_slots=num_slots, max_prefill_batch=mpb,
+                       capacity=64, prefix_caching=prefix_caching,
+                       clock=clock) for _ in range(num_replicas)]
+    return Router(reps, clock=clock, **kw)
+
+
+def _flat_trace(n, s_out=6):
+    return [Request(rid=i, s_in=8, s_out=s_out, arrival=0.0,
+                    priority=i % 3) for i in range(n)]
+
+
+def test_kill_replica_mid_trace_completes_everything():
+    """Fault injection: a replica dies with a full complement of
+    in-flight work; every request still finishes elsewhere with its
+    stream intact — no token loss, no duplication."""
+    router = _sim_router()
+    streams = collections.defaultdict(list)
+    m = router.run_trace(_flat_trace(8), failures={2: 1},
+                         on_token=lambda rid, t, fin:
+                         streams[rid].append(int(t)))
+    assert not router.replicas[1].alive
+    # replica 1 held 4 of the 8 (load-balanced dispatch), none finished
+    # by step 2 — all of them must have been re-dispatched
+    assert m.redispatched == 4
+    assert router.counters == {"admitted": 8, "rejected": 0,
+                               "cancelled": 0, "redispatched": 4}
+    for rid, toks, life in router.results():
+        assert life.phase is RequestState.DONE
+        # synthetic sim tokens are sequential indices: exactly-once
+        # delivery across the failover is directly visible
+        assert toks == list(range(life.s_out))
+        assert streams[rid] == toks          # stream == result ordering
+        assert life.tokens_out == life.s_out
+
+
+def test_cancellation_in_sim_fleet_conserves():
+    router = _sim_router(num_replicas=1, num_slots=1, mpb=1)
+    # rid 0 is DECODING after step 0; rid 4 still queued in the router
+    m = router.run_trace(_flat_trace(5), cancels={1: [0, 4]})
+    by_phase = collections.Counter(r.phase for r in m.requests)
+    assert by_phase[RequestState.CANCELLED] == 2
+    assert by_phase[RequestState.DONE] == 3
+    assert m.admitted + m.rejected + m.cancelled == 5
+    assert m.cancelled == 2 and m.rejected == 0
+    for r in m.requests:                 # cancelled: never "served"
+        if r.phase is RequestState.CANCELLED:
+            assert r.latency is None and r.decode_end is None
+
+
+def test_admission_overflow_records_rejected():
+    router = _sim_router(num_replicas=1, num_slots=1, mpb=1,
+                         queue_capacity=2)
+    trace = _flat_trace(5, s_out=3)
+    for life in trace[:2]:
+        router.submit(life)
+    for life in trace[2:]:
+        with pytest.raises(AdmissionRejected):
+            router.submit(life)
+        assert life.phase is RequestState.REJECTED
+    while router.unfinished:
+        router.step()
+    m = router.metrics()
+    assert m.admitted + m.rejected + m.cancelled == 5
+    assert (m.admitted, m.rejected) == (2, 3)
+    s = m.summary()
+    assert all(np.isfinite(v) for v in s.values())
+
+
+def test_route_score_ties_break_to_lowest_replica_index():
+    """§12 determinism regression: with identical scores everywhere
+    (no caches, equal weights, equal load) dispatch must walk the
+    replicas in stable index order, never by dict/set iteration."""
+    router = _sim_router(num_replicas=3)
+    for life in _flat_trace(3, s_out=2):
+        router.submit(life)
+    router.step()
+    assert [row["replica"] for row in router.dispatch_log] == [0, 1, 2]
+
+
+def test_fleet_result_carries_metric_schema():
+    res = simulate_fleet(mixed_priority_workload(n=6, rate_rps=50.0,
+                                                 seed=1),
+                         num_replicas=2, slots_per_replica=2,
+                         max_prefill_batch=2, capacity=64)
+    for f in METRIC_FIELDS:
+        assert hasattr(res, f), f
+    assert isinstance(res.avg_ttft_by_class, dict)
+    assert isinstance(res.slo_attainment_by_class, dict)
+    assert isinstance(res.cache_hit_rate_by_class, dict)
+    assert all(np.isfinite(v) for v in res.summary().values())
+
+
+# ---------------------------------------------------------------------------
+# Runtime domain: real engines behind the same Router
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_rt():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    return cfg, init_params(KEY, cfg)
+
+
+def _rt_trace(cfg, n=10):
+    return mixed_priority_workload(n=n, rate_rps=100.0, seed=7,
+                                   vocab=min(cfg.vocab, 256),
+                                   system_lens=(8, 6, 4),
+                                   user_lens=(4, 6, 8), out_lens=(3, 5, 8))
+
+
+def _rt_router(cfg, params, **kw):
+    clock = StepClock()
+    reps = [CoordinatorReplica(
+        Coordinator(cfg, params, num_decode_engines=1, slots_per_engine=2,
+                    capacity=96, num_prefill_engines=1,
+                    prefix_cache_bytes=float("inf")),
+        max_prefill_batch=2, clock=clock) for _ in range(2)]
+    return Router(reps, queue_capacity=8, age_every=8, clock=clock, **kw)
+
+
+def test_runtime_failover_no_token_loss(small_rt):
+    """Kill the replica sticky routing loaded first, mid-trace: every
+    in-flight request completes on the survivor via recompute-from-
+    prompt, streamed tokens match the final results exactly, and every
+    request produces its full budget."""
+    cfg, params = small_rt
+    router = _rt_router(cfg, params)
+    streams = collections.defaultdict(list)
+    m = router.run_trace(_rt_trace(cfg), dt=0.05, failures={2: 0},
+                         on_token=lambda rid, t, fin:
+                         streams[rid].append(int(t)))
+    assert m.redispatched >= 1
+    assert router.counters["admitted"] == 10
+    assert router.counters["rejected"] == 0
+    for rid, toks, life in router.results():
+        assert life.phase is RequestState.DONE
+        assert streams[rid] == toks          # no loss, no duplication
+        assert len(toks) == life.s_out == life.tokens_out
+        if life.redispatches:
+            assert life.cached_len == 0      # folded prompts bypass cache
+
+
+def test_sim_runtime_counter_parity(small_rt):
+    """§12 parity contract: the SAME seeded trace through SimReplicas
+    and through real Coordinators must agree EXACTLY — counters,
+    per-class hit rates, and (both on the virtual step clock) even the
+    per-class TTFTs."""
+    cfg, params = small_rt
+    sim = simulate_fleet(_rt_trace(cfg), num_replicas=2,
+                         slots_per_replica=2, max_prefill_batch=2,
+                         capacity=96, dt=0.05, queue_capacity=8,
+                         age_every=8, failures={2: 1})
+    router = _rt_router(cfg, params)
+    rt = router.run_trace(_rt_trace(cfg), dt=0.05, failures={2: 1})
+    assert router.counters == sim.counters
+    assert rt.cache_hit_rate_by_class == sim.cache_hit_rate_by_class
+    assert rt.avg_ttft_by_class == sim.avg_ttft_by_class
+    assert rt.slo_attainment_by_class == sim.slo_attainment_by_class
+
+
+def test_cancellation_reclaims_pages_at_every_stage(small_rt):
+    """Cancel one request at each lifecycle stage on a paged replica:
+    each stage's edge reclaims what it holds, and the page pool ends
+    back at its baseline."""
+    cfg, params = small_rt
+    coord = Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=1, capacity=64, paged=True,
+                        page_size=PS)
+    eng = coord.decode_engines[0]
+    baseline = eng.pool.free_pages
+    sess = coord.session(max_prefill_batch=4)
+    rng = np.random.default_rng(3)
+
+    def cb(rid, tok, fin):
+        if rid == 2:                   # §12: cancel from inside the
+            sess.cancel(2)             # stream, mid-prefill-batch
+
+    for i in range(4):
+        prompt = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+        sess.submit(ServeRequest(i, prompt, 6),
+                    on_token=cb if i == 2 else None)
+    assert sess.cancel(3)                          # QUEUED
+    sess.step()    # rid 0 -> DECODING (the only slot); 1, 2 queued
+    sess.step()    # rid 1 -> KV_TRANSFER (slot busy)
+    lives = {r.lifecycle.rid: r.lifecycle for r in sess.results()}
+    assert lives[1].phase is RequestState.KV_TRANSFER
+    assert sess.cancel(1)                          # KV_TRANSFER
+    assert lives[0].phase is RequestState.DECODING
+    assert sess.cancel(0)                          # DECODING
+    assert lives[0].kv_pages_allocated > 0         # stamp folded in
+    sess.step()    # rid 2 prefills; its callback cancels it in-batch
+    for rid in range(4):
+        assert lives[rid].phase is RequestState.CANCELLED, rid
+        assert not sess.cancel(rid)                # terminal: no-op
+    assert eng.pool.free_pages == baseline
+    m = sess.metrics()
+    assert m.cancelled == 4
+    assert m.admitted + m.rejected + m.cancelled == 4
+
+
+def test_decode_engine_cancel(small_rt):
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=64)
+    eng = DecodeEngine(cfg, params, slots=2, capacity=64, paged=True,
+                       page_size=PS)
+    free0 = eng.pool.free_pages
+    prompt = np.arange(20, dtype=np.int32) % cfg.vocab
+    first, slab = pe.prefill_batch([prompt])[0]
+    eng.admit(0, first, 20, 4,
+              kv_transfer.trim_to_pages(slab, 20, PS, cfg=cfg))
+    assert eng.pool.free_pages < free0
+    assert eng.cancel(0)
+    assert eng.pool.free_pages == free0            # pages reclaimed
+    assert eng.pop_page_stamp(0) > 0               # stamp preserved
+    assert not eng.cancel(0)                       # already released
+    assert not eng.cancel(99)                      # unknown rid

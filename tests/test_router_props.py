@@ -1,0 +1,169 @@
+"""Property tests for the §12 router tier (hypothesis): admission-queue
+conservation and ordering laws, the aging bound, fleet-level request
+conservation under failures, and METRIC_FIELDS schema parity."""
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.serving import (AdmissionQueue, AdmissionRejected,  # noqa: E402
+                           METRIC_FIELDS, Request, RequestState,
+                           mixed_priority_workload, simulate_fleet)
+from repro.serving.metrics import ServeMetrics  # noqa: E402
+from repro.serving.router import _QEntry  # noqa: E402
+
+
+def _qe(rid, priority, seq, step=0):
+    return _QEntry(Request(rid=rid, s_in=1, s_out=1, arrival=0.0,
+                           priority=priority), seq, step)
+
+
+# ---------------------------------------------------------------------------
+# Queue-level laws
+# ---------------------------------------------------------------------------
+
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("push"), st.integers(0, 3)),     # priority
+        st.tuples(st.just("pop"), st.integers(0, 100)),    # step
+        st.tuples(st.just("remove"), st.integers(0, 40)),  # rid
+    ),
+    max_size=60)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 16), ops)
+def test_queue_conservation_under_random_ops(capacity, age_every, script):
+    """pushed == popped + removed + len(queue); overflow is the typed
+    error and never mutates the queue."""
+    q = AdmissionQueue(capacity=capacity, age_every=age_every)
+    pushed = popped = removed = 0
+    for op, arg in script:
+        if op == "push":
+            before = len(q)
+            try:
+                q.push(_qe(pushed, arg, pushed))
+                pushed += 1
+            except AdmissionRejected:
+                assert before == capacity == len(q)
+        elif op == "pop":
+            if len(q):
+                q.pop(arg)
+                popped += 1
+        else:
+            if q.remove(arg) is not None:
+                removed += 1
+    assert pushed == popped + removed + len(q)
+    assert set(q.rids()) <= set(range(pushed))
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=20))
+def test_queue_fifo_within_class_without_aging(priorities):
+    """With aging off, pops are strict priority order between classes
+    and seq (FIFO) order within a class."""
+    q = AdmissionQueue(capacity=len(priorities), age_every=10 ** 9)
+    for seq, p in enumerate(priorities):
+        q.push(_qe(seq, p, seq))
+    out = [q.pop(0) for _ in range(len(priorities))]
+    keys = [(e.life.priority, e.seq) for e in out]
+    assert keys == sorted(keys)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=2, max_size=16),
+       st.integers(1, 10),
+       st.lists(st.integers(0, 60), min_size=1, max_size=16))
+def test_queue_aging_bound(priorities, age_every, steps):
+    """The §12 starvation bound: whenever an entry of class p pops
+    while one of class q < p still waits, the popped one has waited at
+    least ``age_every * (p - q)`` steps."""
+    q = AdmissionQueue(capacity=len(priorities), age_every=age_every)
+    for seq, p in enumerate(priorities):
+        q.push(_qe(seq, p, seq, step=0))
+    for s in sorted(steps):
+        if not len(q):
+            break
+        e = q.pop(s)
+        waited = s - e.enqueue_step
+        for rid in q.rids():
+            other = next(x for x in q._entries if x.life.rid == rid)
+            if other.life.priority < e.life.priority:
+                assert waited >= age_every * (e.life.priority
+                                              - other.life.priority)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-level laws (scheduling domain — pure python, fast)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 20), st.integers(0, 5), st.integers(2, 64),
+       st.booleans())
+def test_fleet_conservation_and_completion(n, seed, queue_capacity, kill):
+    """admitted + rejected + cancelled == submitted, on any trace,
+    with or without a replica failure; every admitted request ends
+    DONE with its full token budget."""
+    failures = {1: 1} if kill else None
+    res = simulate_fleet(
+        mixed_priority_workload(n=n, rate_rps=80.0, seed=seed),
+        num_replicas=2, slots_per_replica=1, max_prefill_batch=1,
+        capacity=256, queue_capacity=queue_capacity, failures=failures)
+    c = res.counters
+    assert c["admitted"] + c["rejected"] + c["cancelled"] == n
+    assert c["cancelled"] == 0
+    done = [r for r in res.requests if r.phase is RequestState.DONE]
+    assert len(done) == c["admitted"]
+    for r in done:
+        assert r.tokens_out == r.s_out
+    for r in res.requests:
+        if r.phase is RequestState.REJECTED:
+            assert r.latency is None
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(2, 12))
+def test_fleet_dispatch_log_fifo_within_class(age_every, n):
+    """First dispatches within one priority class leave the queue in
+    admission order, whatever the aging rate (aging reorders BETWEEN
+    classes only)."""
+    res = simulate_fleet(
+        mixed_priority_workload(n=n, rate_rps=200.0, seed=2),
+        num_replicas=2, slots_per_replica=1, max_prefill_batch=1,
+        capacity=256, age_every=age_every)
+    by_class = {}
+    for row in res.dispatch_log:
+        if row["redispatch"]:
+            continue
+        by_class.setdefault(row["priority"], []).append(row["rid"])
+    for rids in by_class.values():
+        assert rids == sorted(rids)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 4))
+def test_metric_fields_schema_parity(seed):
+    """Every METRIC_FIELDS name resolves on both result types, the
+    by-class fields are dicts keyed by the trace's priority classes,
+    and summary() stays finite-scalar-only."""
+    reqs = mixed_priority_workload(n=8, rate_rps=100.0, seed=seed)
+    res = simulate_fleet(reqs, num_replicas=2, slots_per_replica=2,
+                         max_prefill_batch=2, capacity=256)
+    bare = ServeMetrics(requests=list(res.requests),
+                        makespan=res.makespan,
+                        decode_tokens=res.decode_tokens)
+    classes = {r.priority for r in reqs}
+    for obj in (res, bare):
+        for f in METRIC_FIELDS:
+            assert hasattr(obj, f), f
+        assert set(obj.avg_ttft_by_class) <= classes
+        assert set(obj.slo_attainment_by_class) <= classes
+        assert set(obj.cache_hit_rate_by_class) <= classes
+        s = obj.summary()
+        assert all(isinstance(v, float) and np.isfinite(v)
+                   for v in s.values())
+    assert res.summary() == bare.summary()
