@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test unit serve-smoke bench bench-drift bench-serving bench-prefix \
-	bench-kvstream bench-paged bench-router bench-smoke lint
+	bench-kvstream bench-paged bench-router bench-elastic bench-smoke lint
 
 # Tier-1 verify: the whole test suite (stop at first failure), then the
 # serving smoke run through the real session API on the reduced arch.
@@ -16,8 +16,10 @@ unit:
 # Poisson arrivals + streaming (DESIGN.md §8), then a shared-prefix
 # trace through the radix prefix caches with cache-aware routing (§9),
 # then the int8+chunked KV-handoff codec end to end (§10), then the
-# §12 router fleet — 2 replicas, one killed mid-trace; the launcher
-# exits non-zero unless failover re-dispatch actually fired.
+# §12 router fleet — 2 replicas, one killed mid-trace (the launcher
+# exits non-zero unless failover re-dispatch actually fired), then the
+# §13 elastic fleet — autoscaling on a surge trace (exits non-zero
+# unless a scale-up fires during the burst).
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --requests 4 --prompt-len 12 \
 		--max-new 6 --decode-engines 2 --rate-rps 8
@@ -32,6 +34,8 @@ serve-smoke:
 		--paged --page-size 16
 	$(PYTHON) -m repro.launch.serve --replicas 2 --requests 8 \
 		--max-new 5 --kill-replica
+	$(PYTHON) -m repro.launch.serve --requests 12 --max-new 5 \
+		--rate-rps 40 --prefill-batch 2 --autoscale --surge-trace
 
 # All paper benchmarks (figures/tables) + the beyond-paper ones.
 bench:
@@ -62,11 +66,16 @@ bench-paged:
 bench-router:
 	$(PYTHON) -m benchmarks.run router
 
-# CI-sized benchmark smoke: paged + kvstream + prefix + router at toy
-# sizes; every module writes BENCH_<name>.json (gitignored) AND mirrors
-# it into benchmarks/artifacts/ (tracked — the perf trajectory).
+# Elastic fleet: scale-to-demand vs static sizings on a surge trace,
+# capacity-drift max-flow re-solve, sim-vs-runtime parity (§13).
+bench-elastic:
+	$(PYTHON) -m benchmarks.run elastic
+
+# CI-sized benchmark smoke: paged + kvstream + prefix + router + elastic
+# at toy sizes; every module writes BENCH_<name>.json (gitignored) AND
+# mirrors it into benchmarks/artifacts/ (tracked — the perf trajectory).
 bench-smoke:
-	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run paged kvstream prefix router
+	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run paged kvstream prefix router elastic
 
 # Byte-compile everything — catches syntax/indentation errors without
 # needing a linter wheel in the image.

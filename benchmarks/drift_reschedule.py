@@ -8,9 +8,16 @@ WorkloadMonitor and warm-start-reschedules (phase-3 refinement from the
 current partition) when it drifts, paying the KV-drain cost at each
 placement swap.
 
+The monitor runs the production-faithful ``estimator="ewma"`` path
+(DESIGN.md §13): output lengths are LEARNED from completions streamed
+off the simulator's DONE edges, not read from the oracle at arrival —
+drift detection pays the real one-mean-latency lag and still has to
+clear the gate.
+
 Reports decode throughput, SLO attainment (same static-placement SLO
-base for both runs), and the swap log. Online must be >= static on both
-headline metrics — the acceptance check for the rescheduling subsystem.
+base for both runs), and the swap log. Online must beat static 1.2x on
+decode throughput without giving up SLO attainment — the acceptance
+check for the rescheduling subsystem.
 
 Run:  PYTHONPATH=src python -m benchmarks.drift_reschedule
       (or python -m benchmarks.run drift)
@@ -60,7 +67,7 @@ def run() -> List[Tuple[str, float, str]]:
     t0 = time.perf_counter()
     reqs_o = _trace(rate_a, seed=3)
     monitor = WorkloadMonitor(wl0, window=64, threshold=0.3,
-                              min_observations=32)
+                              min_observations=32, estimator="ewma")
 
     def rescheduler(wl):
         return reschedule(cl, LLAMA2_70B, sched0, wl,
@@ -80,17 +87,16 @@ def run() -> List[Tuple[str, float, str]]:
                  f"avg_lat={on.avg_latency:.1f}s {swaps}"))
 
     speedup = on.decode_throughput / max(stat.decode_throughput, 1e-9)
-    ok = (on.decode_throughput >= stat.decode_throughput
-          and att_o >= att_s)
+    ok = speedup >= 1.2 and att_o >= att_s
     rows.append(("drift.online_vs_static", 0.0,
                  f"thpt_ratio={speedup:.2f}x "
                  f"slo_delta={att_o - att_s:+.3f} "
                  f"{'PASS' if ok else 'FAIL'}"))
     if not ok:
         raise AssertionError(
-            "online rescheduling must be >= static placement: "
+            "online rescheduling (ewma estimator) must beat static 1.2x: "
             f"thpt {on.decode_throughput:.0f} vs {stat.decode_throughput:.0f}"
-            f" tok/s, slo {att_o:.3f} vs {att_s:.3f}")
+            f" tok/s ({speedup:.2f}x), slo {att_o:.3f} vs {att_s:.3f}")
     return rows
 
 

@@ -1,0 +1,254 @@
+"""Elastic fleet: scale-to-demand vs static fleets on a surge trace.
+
+Beyond-paper benchmark (DESIGN.md §13). HexGen-2 schedules a FIXED
+device pool; real deployments rent and release machines. The §13
+``FleetController`` provisions, warms (weight-load time priced by the
+cost model against each device type's host link), joins, and drains
+replicas to track demand, re-solving max-flow when capacity drifts.
+
+Three parts:
+
+  1. Scale-to-demand: a quiet → 4x burst → quiet mixed-priority trace
+     served by (a) a static fleet sized for the quiet phase, (b) a
+     static fleet sized for the burst peak, and (c) the elastic
+     controller starting from the small fleet. Elastic must attain
+     >= 1.2x static-small's stated-SLO attainment while spending FEWER
+     replica-steps than static-peak — better SLOs per machine-step
+     than either sizing, the acceptance check.
+  2. Capacity-drift re-solve: solve hetero1, join 4xA100 via
+     ``grow_cluster``, re-solve with ``reschedule_capacity``. The
+     joining devices must get typed (prefill/decode) and the φ→δ
+     route set must SHIFT (not just grow a row) without losing flow.
+  3. Cross-domain parity: the same seeded burst through SimReplicas
+     and through REAL Coordinators (reduced arch), both under
+     FleetControllers with the same spec. Scale events, per-state
+     replica-step totals, and conservation counters must agree
+     EXACTLY — the §13 parity contract.
+
+Run:  PYTHONPATH=src python -m benchmarks.elastic_fleet
+      (or python -m benchmarks.run elastic)
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Tuple
+
+from repro.core import (LLAMA2_70B, WORKLOADS, WorkloadMonitor,
+                        grow_cluster, reschedule_capacity, schedule,
+                        warmup_steps)
+from repro.core.cluster import A100, PAPER_SETTINGS
+from repro.serving import (FleetSpec, mixed_priority_workload,
+                           simulate_fleet, surge_workload)
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+DT = 0.05
+#: quiet → burst → quiet; the burst outruns one replica's dispatch
+#: capacity, the quiet phases idle a peak-sized fleet
+TRACE = (dict(n=160, rate_rps=3.0, seed=3, surge=4.0) if SMOKE
+         else dict(n=240, rate_rps=3.0, seed=3, surge=4.0))
+SMALL, PEAK = 1, 4
+
+#: warm-up priced by the cost model: LLAMA2-70B sharded over a 4xA100
+#: pod, weights staged over the A100 host link (~72 steps at dt=50ms
+#: unsharded; /4 sharded)
+WARMUP_STEPS = warmup_steps(LLAMA2_70B, A100, DT, parallel=4)
+
+SPEC = FleetSpec(min_replicas=SMALL, max_replicas=PEAK,
+                 provision_steps=4, warmup_steps=WARMUP_STEPS,
+                 cold_window_steps=6, queue_high=1.0, queue_low=0.25,
+                 sustain_steps=3, cooldown_steps=10, hysteresis_steps=40)
+FLEET = dict(slots_per_replica=4, max_prefill_batch=4, capacity=128,
+             dt=DT, queue_capacity=96)
+
+
+def _attainment_per_kstep(res) -> float:
+    return (res.slo_attainment_stated
+            / max(sum(res.replica_steps_by_state.values()), 1) * 1000)
+
+
+def _scale_to_demand() -> List[Tuple[str, float, str]]:
+    rows = []
+    results = {}
+    for name, reps, spec in (("static_small", SMALL, None),
+                             ("static_peak", PEAK, None),
+                             ("elastic", SMALL, SPEC)):
+        t0 = time.perf_counter()
+        monitor = (WorkloadMonitor(WORKLOADS["LPLD"], estimator="ewma")
+                   if spec is not None else None)
+        res = simulate_fleet(surge_workload(**TRACE), num_replicas=reps,
+                             autoscale=spec, monitor=monitor, **FLEET)
+        us = (time.perf_counter() - t0) * 1e6
+        results[name] = res
+        steps = sum(res.replica_steps_by_state.values())
+        rows.append((f"elastic.{name}.surge", us,
+                     f"slo={res.slo_attainment_stated:.3f} "
+                     f"replica_steps={steps} "
+                     f"slo_per_kstep={_attainment_per_kstep(res):.3f} "
+                     f"ups={res.scale_up_events} "
+                     f"downs={res.scale_down_events} "
+                     f"warm_pen={res.warmup_ttft_penalty_s:.2f}s"))
+    small, peak, el = (results["static_small"], results["static_peak"],
+                       results["elastic"])
+    gain = (el.slo_attainment_stated
+            / max(small.slo_attainment_stated, 1e-9))
+    el_steps = sum(el.replica_steps_by_state.values())
+    peak_steps = sum(peak.replica_steps_by_state.values())
+    ok = (gain >= 1.2 and el_steps < peak_steps
+          and el.scale_up_events >= 1 and el.scale_down_events >= 1)
+    rows.append(("elastic.vs_static", 0.0,
+                 f"attainment_gain={gain:.2f}x_vs_small "
+                 f"steps={el_steps}_vs_peak={peak_steps} "
+                 f"warmup_steps={WARMUP_STEPS} "
+                 f"{'PASS' if ok else 'FAIL'}"))
+    if not ok:
+        raise AssertionError(
+            "scale-to-demand must attain >= 1.2x static-small at fewer "
+            f"replica-steps than static-peak: gain {gain:.2f}x, steps "
+            f"{el_steps} vs {peak_steps}, ups={el.scale_up_events} "
+            f"downs={el.scale_down_events}")
+    return rows
+
+
+# -- capacity-drift max-flow re-solve ----------------------------------------
+
+REFINE_ITERS = 4 if SMOKE else 8
+
+
+def _capacity_resolve() -> List[Tuple[str, float, str]]:
+    cl = PAPER_SETTINGS["hetero1"]()
+    wl = WORKLOADS["LPHD"]
+    t0 = time.perf_counter()
+    base = schedule(cl, LLAMA2_70B, wl, max_refine_iters=REFINE_ITERS)
+    base_us = (time.perf_counter() - t0) * 1e6
+    grown, new = grow_cluster(cl, [("A100", 4)])
+    t0 = time.perf_counter()
+    cap = reschedule_capacity(grown, LLAMA2_70B, base, wl, new,
+                              max_refine_iters=REFINE_ITERS)
+    cap_us = (time.perf_counter() - t0) * 1e6
+    new_groups = [i for i, g in enumerate(cap.partition.groups)
+                  if set(g) & set(new)]
+    typing = {("prefill" if cap.partition.is_prefill[i] else "decode")
+              for i in new_groups}
+    shifted = dict(base.placement.kv_routes) != dict(cap.placement.kv_routes)
+    flow_ratio = cap.placement.max_flow / max(base.placement.max_flow, 1e-9)
+    ok = shifted and flow_ratio >= 1.0 and bool(typing)
+    rows = [
+        ("elastic.schedule.hetero1", base_us,
+         f"max_flow={base.placement.max_flow:.0f} "
+         f"groups={len(base.partition.groups)}"),
+        ("elastic.resolve.hetero1+4xA100", cap_us,
+         f"max_flow={cap.placement.max_flow:.0f} "
+         f"groups={len(cap.partition.groups)} "
+         f"joined_typed_as={'+'.join(sorted(typing))} "
+         f"routes_shifted={shifted}"),
+        ("elastic.capacity_resolve", 0.0,
+         f"flow_gain={flow_ratio:.2f}x {'PASS' if ok else 'FAIL'}"),
+    ]
+    if not ok:
+        raise AssertionError(
+            "a capacity join must re-type the new devices, shift the "
+            f"kv routes, and not lose flow: shifted={shifted} "
+            f"flow {base.placement.max_flow:.0f} -> "
+            f"{cap.placement.max_flow:.0f}")
+    return rows
+
+
+# -- cross-domain parity of controller decisions -----------------------------
+
+PARITY_TRACE = dict(n=10, rate_rps=100.0, seed=7, system_lens=(8, 6, 4),
+                    user_lens=(4, 6, 8), out_lens=(3, 5, 8))
+PARITY_SPEC = FleetSpec(min_replicas=1, max_replicas=2, provision_steps=2,
+                        warmup_steps=3, cold_window_steps=4,
+                        queue_high=0.5, sustain_steps=2, cooldown_steps=4,
+                        hysteresis_steps=8)
+PARITY_FLEET = dict(slots=2, max_prefill_batch=2, capacity=96,
+                    queue_capacity=8)
+
+
+def _runtime_elastic(reqs):
+    import jax
+    from repro.configs import ARCHS
+    from repro.models import init_params
+    from repro.serving import (Coordinator, CoordinatorReplica,
+                               FleetController, Router, StepClock)
+
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    clock = StepClock()    # virtual clock: lifecycle stamps match the sim
+
+    def factory(_slot):
+        return CoordinatorReplica(
+            Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=PARITY_FLEET["slots"],
+                        capacity=PARITY_FLEET["capacity"],
+                        num_prefill_engines=1,
+                        prefix_cache_bytes=float("inf")),
+            max_prefill_batch=PARITY_FLEET["max_prefill_batch"],
+            clock=clock)
+
+    router = Router([factory(0)],
+                    queue_capacity=PARITY_FLEET["queue_capacity"],
+                    policy="slo", clock=clock)
+    ctrl = FleetController(router, factory, PARITY_SPEC, dt=DT)
+    metrics = ctrl.run_trace(reqs)
+    return ctrl, router, metrics
+
+
+def _parity_trace(vocab: int):
+    return mixed_priority_workload(vocab=vocab, **PARITY_TRACE)
+
+
+def _cross_domain() -> List[Tuple[str, float, str]]:
+    from repro.configs import ARCHS
+    vocab = min(ARCHS["qwen3-1.7b"].reduced().vocab, 256)
+
+    t0 = time.perf_counter()
+    sim = simulate_fleet(_parity_trace(vocab), num_replicas=1,
+                         slots_per_replica=PARITY_FLEET["slots"],
+                         max_prefill_batch=PARITY_FLEET["max_prefill_batch"],
+                         capacity=PARITY_FLEET["capacity"], dt=DT,
+                         queue_capacity=PARITY_FLEET["queue_capacity"],
+                         policy="slo", autoscale=PARITY_SPEC)
+    sim_us = (time.perf_counter() - t0) * 1e6
+
+    t0 = time.perf_counter()
+    ctrl, router, rt = _runtime_elastic(_parity_trace(vocab))
+    rt_us = (time.perf_counter() - t0) * 1e6
+
+    rt_events = [(e.step, e.kind, e.replica) for e in ctrl.events]
+    events_ok = rt_events == sim.scale_events
+    steps_ok = dict(ctrl.replica_steps_by_state) == \
+        sim.replica_steps_by_state
+    counters_ok = router.counters == sim.counters
+    ok = events_ok and steps_ok and counters_ok
+    rows = [
+        ("elastic.sim_fleet.burst", sim_us,
+         f"events={len(sim.scale_events)} "
+         + " ".join(f"{k}={v}" for k, v in sorted(sim.counters.items()))),
+        ("elastic.runtime_fleet.qwen3-1.7b-reduced", rt_us,
+         f"events={len(rt_events)} "
+         + " ".join(f"{k}={v}" for k, v in sorted(router.counters.items()))),
+        ("elastic.sim_vs_runtime", 0.0,
+         f"scale_events_exact={events_ok} "
+         f"replica_steps_exact={steps_ok} counters_exact={counters_ok} "
+         f"{'PASS' if ok else 'FAIL'}"),
+    ]
+    if not ok:
+        raise AssertionError(
+            "sim and runtime fleet controllers must agree exactly on "
+            f"the same trace: events {sim.scale_events} vs {rt_events}, "
+            f"steps {sim.replica_steps_by_state} vs "
+            f"{dict(ctrl.replica_steps_by_state)}, counters "
+            f"{sim.counters} vs {router.counters}")
+    return rows
+
+
+def run() -> List[Tuple[str, float, str]]:
+    return _scale_to_demand() + _capacity_resolve() + _cross_domain()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

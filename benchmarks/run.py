@@ -13,10 +13,10 @@ PRs (the artifacts are .gitignored; diff them out-of-band).
 Usage:  PYTHONPATH=src python -m benchmarks.run [module ...]
         modules default to all; names: fig6, fig8, fig9, fig10,
         table3, table4, table5, roofline, drift, serving, prefix,
-        kvstream, paged, router
+        kvstream, paged, router, elastic
 
 ``REPRO_BENCH_SMOKE=1`` shrinks the modules that support it (kvstream,
-prefix, paged, router) to CI-smoke sizes (``make bench-smoke``), and
+prefix, paged, router, elastic) to CI-smoke sizes (``make bench-smoke``), and
 additionally mirrors each artifact into ``benchmarks/artifacts/`` —
 the TRACKED perf-trajectory record (full-size artifacts in the
 working directory stay gitignored).
@@ -50,6 +50,7 @@ MODULES = {
     "kvstream": "benchmarks.kv_streaming",
     "paged": "benchmarks.paged_decode",
     "router": "benchmarks.router_fleet",
+    "elastic": "benchmarks.elastic_fleet",
 }
 
 

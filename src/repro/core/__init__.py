@@ -8,7 +8,7 @@ Public API:
     Placement                                      — scheduler output
 """
 from repro.core.cluster import (ClusterSpec, Device, GPUType, GPU_TYPES,
-                                PAPER_SETTINGS, build_cluster)
+                                PAPER_SETTINGS, build_cluster, grow_cluster)
 from repro.core.cost_model import (B_TYPE, HPHD, HPLD, LLAMA2_70B, LPHD, LPLD,
                                    OPT_30B, PAGE_SIZE, ModelProfile,
                                    ParallelPlan, Workload, WORKLOADS,
@@ -19,7 +19,8 @@ from repro.core.cost_model import (B_TYPE, HPHD, HPLD, LLAMA2_70B, LPHD, LPLD,
                                    max_decode_batch_paged, plan_fits_memory,
                                    prefill_capacity, prefill_latency,
                                    prefix_bytes_per_token,
-                                   prefix_cache_budget)
+                                   prefix_cache_budget, warmup_steps,
+                                   weight_load_time)
 from repro.core.flowgraph import DEFAULT_PERIOD, solve_flow
 from repro.core.maxflow import FlowNetwork, FlowResult
 from repro.core.partition import (GroupPartition, initial_partition,
@@ -28,13 +29,14 @@ from repro.core.partition import (GroupPartition, initial_partition,
 from repro.core.placement import Placement, ReplicaPlacement
 from repro.core.refine import RefineTrace, iterative_refinement
 from repro.core.scheduler import (ScheduleResult, WorkloadMonitor,
-                                  reschedule, schedule)
+                                  reschedule, reschedule_capacity, schedule)
 from repro.core.baselines import (colocated_throughput, distserve_schedule,
                                   genetic_schedule, random_swap_schedule)
 
 __all__ = [
     "ClusterSpec", "Device", "GPUType", "GPU_TYPES", "PAPER_SETTINGS",
-    "build_cluster", "B_TYPE", "ModelProfile", "ParallelPlan", "Workload",
+    "build_cluster", "grow_cluster",
+    "B_TYPE", "ModelProfile", "ParallelPlan", "Workload",
     "WORKLOADS", "HPLD", "HPHD", "LPHD", "LPLD", "OPT_30B", "LLAMA2_70B",
     "decode_capacity", "decode_latency", "decode_page_budget",
     "dense_slot_capacity", "kv_page_bytes", "kv_transfer_time", "make_plan",
@@ -45,7 +47,8 @@ __all__ = [
     "FlowResult", "GroupPartition", "initial_partition", "kernighan_lin",
     "num_groups", "spectral_partition", "Placement", "ReplicaPlacement",
     "RefineTrace", "iterative_refinement", "ScheduleResult", "schedule",
-    "WorkloadMonitor", "reschedule",
+    "WorkloadMonitor", "reschedule", "reschedule_capacity",
+    "warmup_steps", "weight_load_time",
     "colocated_throughput", "distserve_schedule", "genetic_schedule",
     "random_swap_schedule",
 ]

@@ -27,16 +27,26 @@ class GPUType:
     hbm_bandwidth: float  # bytes/s
     memory: float         # bytes
     price_per_hour: float
+    #: effective disk/host -> device weight-staging bandwidth (bytes/s):
+    #: min(NVMe stripe, PCIe link) for the host class this GPU ships in.
+    #: Prices replica warm-up (model weights over this link) in the
+    #: elastic-fleet cost model — heterogeneous on purpose: an H100 box
+    #: stages weights 4x faster than a commodity A6000 box.
+    host_bandwidth: float = 16e9
 
     @property
     def memory_gb(self) -> float:
         return self.memory / 2**30
 
 
-H100 = GPUType("H100", 989e12, 3.35e12, 80 * 2**30, 3.69)
-A100 = GPUType("A100", 312e12, 2.03e12, 80 * 2**30, 1.89)
-L40 = GPUType("L40", 181e12, 0.864e12, 48 * 2**30, 1.14)
-A6000 = GPUType("A6000", 155e12, 0.768e12, 48 * 2**30, 0.79)
+H100 = GPUType("H100", 989e12, 3.35e12, 80 * 2**30, 3.69,
+               host_bandwidth=64e9)    # PCIe5 x16-class host
+A100 = GPUType("A100", 312e12, 2.03e12, 80 * 2**30, 1.89,
+               host_bandwidth=32e9)    # PCIe4 x16-class host
+L40 = GPUType("L40", 181e12, 0.864e12, 48 * 2**30, 1.14,
+              host_bandwidth=16e9)     # PCIe4, NVMe-bound commodity host
+A6000 = GPUType("A6000", 155e12, 0.768e12, 48 * 2**30, 0.79,
+                host_bandwidth=16e9)
 
 GPU_TYPES: Dict[str, GPUType] = {g.name: g for g in (H100, A100, L40, A6000)}
 
@@ -152,6 +162,55 @@ def build_cluster(
             bw[i, j] = bw[j, i] = b
             lat[i, j] = lat[j, i] = l
     return ClusterSpec(devices, bw, lat, name=name)
+
+
+def grow_cluster(
+    cluster: ClusterSpec,
+    node_specs: Sequence[Tuple[str, int]],
+    name: Optional[str] = None,
+    slow_nodes: Optional[Sequence[int]] = None,
+) -> Tuple[ClusterSpec, List[int]]:
+    """Capacity drift: return a NEW ClusterSpec with ``node_specs``
+    appended as fresh physical nodes, plus the new device indices.
+
+    Existing devices keep their indices and their pairwise link matrix
+    verbatim (including any hand-tuned skew, e.g. ``kv_skewed_setting``)
+    — only the new rows/columns are filled from the link classes. This
+    is the scheduling-domain view of a replica JOINING the fleet: the
+    elastic controller re-solves max-flow over the grown graph so the
+    new devices get typed as prefill or decode (DESIGN.md §13).
+
+    ``slow_nodes`` lists NEW node ids (``max existing node + 1 + k``)
+    reached only over the cross-datacenter tier — late capacity often
+    arrives far away.
+    """
+    m = cluster.num_devices
+    devices = list(cluster.devices)
+    next_node = max((d.node for d in devices), default=-1) + 1
+    new_idx: List[int] = []
+    for k, (gname, count) in enumerate(node_specs):
+        for _ in range(count):
+            d = Device(len(devices), GPU_TYPES[gname], next_node + k)
+            devices.append(d)
+            new_idx.append(d.index)
+    n = len(devices)
+    bw = np.zeros((n, n))
+    lat = np.zeros((n, n))
+    bw[:m, :m] = cluster.bandwidth
+    lat[:m, :m] = cluster.latency
+    slow = set(slow_nodes or [])
+    for i in range(n):
+        for j in range(max(i + 1, m), n):
+            di, dj = devices[i], devices[j]
+            if di.node != dj.node and (di.node in slow or dj.node in slow):
+                b, l = LINK_ETH_SLOW
+            else:
+                b, l = _link_for(di, dj)
+            bw[i, j] = bw[j, i] = b
+            lat[i, j] = lat[j, i] = l
+    grown = ClusterSpec(devices, bw, lat,
+                        name=name or f"{cluster.name}+join")
+    return grown, new_idx
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ All units SI (seconds, bytes, FLOP). ``B_TYPE`` = 2 (fp16/bf16).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -445,6 +446,50 @@ def max_decode_batch(cluster: ClusterSpec, profile: ModelProfile,
         else:
             hi = mid - 1
     return lo
+
+
+# ---------------------------------------------------------------------------
+# Replica warm-up pricing (DESIGN.md §13): a replica JOINING the fleet
+# must stage the model's weights from disk/host storage onto its
+# devices before it can serve — bytes-of-params over the device type's
+# host link, the elastic controller's WARMING latency.
+# ---------------------------------------------------------------------------
+
+#: Achievable fraction of the peak host/disk link while staging weights
+#: (filesystem + driver overhead; same spirit as NET_EFFICIENCY).
+HOST_LINK_EFFICIENCY = 0.70
+
+
+def weight_load_time(profile: ModelProfile, gpus,
+                     parallel: Optional[int] = None) -> float:
+    """Seconds to stage ``profile``'s weights onto one replica.
+
+    ``gpus`` is the replica's device types (a ``cluster.GPUType`` or a
+    sequence of them). Each device pulls its own ``1/N`` parameter
+    shard concurrently over its host/disk link
+    (``GPUType.host_bandwidth`` × HOST_LINK_EFFICIENCY), so the
+    SLOWEST host link binds — on heterogeneous fleets an A6000 pod
+    warms up ~4x slower than an H100 pod for the same model.
+    ``parallel`` overrides the shard count (e.g. a single GPUType
+    standing in for a TP×PP pod of that type)."""
+    if not isinstance(gpus, (list, tuple)):
+        gpus = [gpus]
+    assert gpus, "weight_load_time needs at least one device type"
+    n = parallel if parallel is not None else len(gpus)
+    shard = profile.total_param_bytes / max(1, int(n))
+    return max(shard / (g.host_bandwidth * HOST_LINK_EFFICIENCY)
+               for g in gpus)
+
+
+def warmup_steps(profile: ModelProfile, gpus, dt: float,
+                 parallel: Optional[int] = None) -> int:
+    """``weight_load_time`` quantized to router steps on the shared
+    StepClock (DESIGN.md §13) — the number of WARMING steps a joining
+    replica pays before it can go LIVE. Always at least 1: a join is
+    never free."""
+    assert dt > 0
+    return max(1, int(math.ceil(
+        weight_load_time(profile, gpus, parallel=parallel) / dt)))
 
 
 # ---------------------------------------------------------------------------

@@ -103,32 +103,126 @@ class WorkloadMonitor:
     absolute log-ratio of the two means vs. the baseline — symmetric in
     growth/shrink, so a 2x longer prompt and a 2x shorter prompt drift
     equally. ``drifted()`` fires once ``min_observations`` requests have
-    been seen and drift exceeds ``threshold`` (0.3 ≈ a 35% shift)."""
+    been seen and drift exceeds ``threshold`` (0.3 ≈ a 35% shift).
+
+    Output lengths are not knowable at arrival. ``estimator`` picks what
+    the monitor records as s_out when it only gets an arrival:
+
+      * ``"oracle"`` (legacy default) — the request's true ``s_out``,
+        the detection-lag-free upper bound the early drift benchmarks
+        used;
+      * ``"ewma"`` — an exponentially-weighted moving average of the
+        output lengths of *completed* requests (fed via
+        ``observe_completion``), seeded from the baseline. Detection
+        now lags reality by roughly one mean request latency — the
+        production-faithful signal (DESIGN.md §13).
+
+    The monitor doubles as the elastic fleet's demand signal: it
+    timestamps arrivals per priority class (``arrival_rate`` /
+    ``rates_by_class``) and scores completed stated-SLO requests
+    (``recent_slo_attainment``) — queue depth, arrival rates, and SLO
+    attainment are what the FleetController's scale-to-demand policy
+    reads."""
 
     def __init__(self, baseline: Workload, window: int = 64,
-                 threshold: float = 0.3, min_observations: int = 32):
+                 threshold: float = 0.3, min_observations: int = 32,
+                 estimator: str = "oracle", ewma_alpha: float = 0.25,
+                 rate_window: int = 256):
         assert window > 0 and min_observations > 0
+        assert estimator in ("oracle", "ewma"), estimator
+        assert 0.0 < ewma_alpha <= 1.0
         self.baseline = baseline
         self.threshold = threshold
         self.min_observations = min_observations
+        self.estimator = estimator
+        self.ewma_alpha = ewma_alpha
         self._s_in: collections.deque = collections.deque(maxlen=window)
         self._s_out: collections.deque = collections.deque(maxlen=window)
+        self._ewma_out: Optional[float] = None
+        self.completions = 0
+        #: (step, priority) per observed arrival — the demand signal
+        self._arrivals: collections.deque = collections.deque(
+            maxlen=rate_window)
+        #: 1/0 per completed stated-SLO request (met/missed)
+        self._slo_hits: collections.deque = collections.deque(maxlen=window)
 
     @property
     def n(self) -> int:
         return len(self._s_in)
 
-    def observe(self, s_in, s_out: Optional[int] = None) -> None:
-        """Record one served request.
+    @property
+    def estimated_s_out(self) -> float:
+        """Current output-length estimate: the completion EWMA, falling
+        back to the baseline before any completion has been seen."""
+        if self._ewma_out is None:
+            return float(self.baseline.s_out)
+        return self._ewma_out
+
+    def observe(self, s_in, s_out: Optional[int] = None,
+                step: Optional[int] = None) -> None:
+        """Record one ARRIVING request.
 
         Accepts either a lifecycle ``repro.serving.Request`` (the shared
         serving type, DESIGN.md §8) or raw ``(s_in, s_out)`` token
-        counts."""
+        counts. Under ``estimator="ewma"`` the recorded output length is
+        the completion EWMA, not the oracle value — explicit
+        ``(s_in, s_out)`` pairs are always taken verbatim (the caller
+        measured them). ``step`` timestamps the arrival for the
+        per-class rate signal."""
+        priority = 0
         if s_out is None:
             req = s_in
-            s_in, s_out = req.s_in, req.s_out
+            s_in = req.s_in
+            priority = getattr(req, "priority", 0)
+            s_out = (self.estimated_s_out if self.estimator == "ewma"
+                     else req.s_out)
         self._s_in.append(max(int(s_in), 1))
-        self._s_out.append(max(int(s_out), 1))
+        self._s_out.append(max(int(round(s_out)), 1))
+        if step is not None:
+            self._arrivals.append((int(step), int(priority)))
+
+    def observe_completion(self, req) -> None:
+        """Record one COMPLETED request: fold its realized output length
+        into the EWMA estimate and score its stated SLO (if any). This
+        is the only place the ``"ewma"`` estimator learns real output
+        lengths — wire it to the serving layer's DONE edge."""
+        realized = req.s_out if req.tokens_out is None else req.tokens_out
+        realized = max(int(realized), 1)
+        if self._ewma_out is None:
+            self._ewma_out = float(realized)
+        else:
+            a = self.ewma_alpha
+            self._ewma_out = (1.0 - a) * self._ewma_out + a * realized
+        self.completions += 1
+        if req.slo_target_s is not None:
+            met = (req.latency is not None
+                   and req.latency <= req.slo_target_s)
+            self._slo_hits.append(1 if met else 0)
+
+    # -- demand signal (DESIGN.md §13) ----------------------------------
+    def arrival_rate(self, step: int, window_steps: int = 32) -> float:
+        """Observed arrivals per router step over the trailing window."""
+        lo = step - window_steps
+        hits = sum(1 for s, _ in self._arrivals if lo < s <= step)
+        return hits / max(1, window_steps)
+
+    def rates_by_class(self, step: int,
+                       window_steps: int = 32) -> dict:
+        """Per-priority-class arrivals per step over the trailing
+        window (the signal the aging-rate derivation reads)."""
+        lo = step - window_steps
+        by: dict = {}
+        for s, p in self._arrivals:
+            if lo < s <= step:
+                by[p] = by.get(p, 0) + 1
+        return {p: c / max(1, window_steps) for p, c in by.items()}
+
+    def recent_slo_attainment(self) -> Optional[float]:
+        """Attainment over the trailing window of completed stated-SLO
+        requests; None until anything stated has completed."""
+        if not self._slo_hits:
+            return None
+        return sum(self._slo_hits) / len(self._slo_hits)
 
     def drift(self) -> float:
         """Max |log(observed mean / baseline)| over prompt and output."""
@@ -189,3 +283,61 @@ def reschedule(cluster: ClusterSpec, profile: ModelProfile,
         paged_kv=paged_kv, page_size=page_size)
     return ScheduleResult(res.placement, rpart, res, trace,
                           time.perf_counter() - t0)
+
+
+def reschedule_capacity(cluster: ClusterSpec, profile: ModelProfile,
+                        prev: ScheduleResult, wl: Workload,
+                        new_devices: Sequence[int],
+                        period: Optional[float] = None,
+                        max_refine_iters: int = 12,
+                        guided: bool = True,
+                        seed: int = 0,
+                        on_step: Optional[Callable[[RefineTrace], None]] = None,
+                        kv_compression_ratio: float = 1.0,
+                        paged_kv: bool = False,
+                        page_size: int = PAGE_SIZE,
+                        ) -> ScheduleResult:
+    """Warm-start rescheduling for CAPACITY drift (DESIGN.md §13) —
+    §7's trigger extended from the workload changing to the FLEET
+    changing: devices joined, so the flow network itself grew.
+
+    ``cluster`` is the GROWN spec (e.g. from ``cluster.grow_cluster``)
+    and ``new_devices`` its fresh device indices; ``prev`` is the
+    schedule solved on the old spec (its partition's device indices are
+    preserved by construction). The joining devices are seeded as one
+    new group, tried BOTH as a prefill and as a decode group — the new
+    capacity gets *typed* by whichever max-flow is larger — and phase-3
+    refinement then re-balances the whole φ→δ assignment around them,
+    so the ``kv_routes`` of the returned placement genuinely shift, not
+    just grow a row."""
+    t0 = time.perf_counter()
+    if period is None:
+        period = prev.placement.period
+    new = sorted(int(d) for d in new_devices)
+    assert new, "reschedule_capacity needs at least one joining device"
+    covered = {d for g in prev.partition.groups for d in g}
+    assert covered.isdisjoint(new), \
+        "joining devices are already in the previous partition"
+    best: Optional[ScheduleResult] = None
+    for as_prefill in (True, False):
+        part = GroupPartition(
+            [list(g) for g in prev.partition.groups] + [list(new)],
+            list(prev.partition.is_prefill) + [as_prefill])
+        try:
+            part.validate(cluster.num_devices)
+        except AssertionError:
+            continue
+        rpart, res, trace = iterative_refinement(
+            cluster, profile, part, wl, period,
+            max_iters=max_refine_iters, guided=guided, seed=seed,
+            on_step=on_step, kv_compression_ratio=kv_compression_ratio,
+            paged_kv=paged_kv, page_size=page_size)
+        cand = ScheduleResult(res.placement, rpart, res, trace,
+                              time.perf_counter() - t0)
+        if best is None or cand.placement.max_flow > best.placement.max_flow:
+            best = cand
+    if best is None:
+        raise RuntimeError(
+            f"reschedule_capacity: no feasible typing for joining "
+            f"devices {new} on {cluster.name}")
+    return dataclasses.replace(best, elapsed_s=time.perf_counter() - t0)

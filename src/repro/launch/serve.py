@@ -23,6 +23,12 @@ and reports hit-rate metrics alongside the usual schema.
 
 ``--kv-codec`` selects the §10 KV-handoff wire format (none / int8 /
 int8-chunked) and reports shipped bytes + compression ratio.
+
+``--autoscale`` (optionally with ``--surge-trace``) serves behind the
+§13 elastic ``FleetController``: the fleet starts at one replica and
+provisions/warms/joins more as the burst builds, reporting scale
+events and per-state replica-steps; exits non-zero if no scale-up
+fires.
 """
 from __future__ import annotations
 
@@ -46,39 +52,64 @@ def _serve_fleet(cfg, params, args) -> None:
     coordinators with priority/aging admission and sticky prefix-aware
     routing; ``--kill-replica`` kills the last replica mid-trace and
     the in-flight requests complete elsewhere via failover
-    re-dispatch."""
+    re-dispatch. ``--autoscale`` puts the §13 ``FleetController`` on
+    top — the fleet starts at one replica and provisions/warms/joins
+    more as demand builds (pair with ``--surge-trace`` for a quiet →
+    burst → quiet arrival pattern); the launcher exits non-zero if the
+    burst triggers no scale-up."""
     from repro.serving import (Coordinator, CoordinatorReplica,
-                               RequestState, Router, StepClock,
-                               mixed_priority_workload)
+                               FleetController, FleetSpec, RequestState,
+                               Router, StepClock, mixed_priority_workload,
+                               surge_workload)
 
-    trace = mixed_priority_workload(
-        args.requests,
-        rate_rps=args.rate_rps if args.rate_rps > 0 else 20.0,
-        seed=args.seed, vocab=min(cfg.vocab, 512),
-        system_lens=(12, 8, 6), user_lens=(4, 6, 8),
-        out_lens=tuple(min(o, args.max_new) for o in (3, 5, 8)))
+    out_lens = tuple(min(o, args.max_new) for o in (3, 5, 8))
+    rate = args.rate_rps if args.rate_rps > 0 else 20.0
+    trace_kw = dict(rate_rps=rate, seed=args.seed,
+                    vocab=min(cfg.vocab, 512), system_lens=(12, 8, 6),
+                    user_lens=(4, 6, 8), out_lens=out_lens)
+    if args.surge_trace:
+        trace = surge_workload(args.requests, surge=6.0, **trace_kw)
+    else:
+        trace = mixed_priority_workload(args.requests, **trace_kw)
     capacity = max(r.s_in for r in trace) + args.max_new + 8
     clock = StepClock()    # virtual: lifecycle stamps are step-indexed
-    reps = [CoordinatorReplica(
-        Coordinator(cfg, params, num_decode_engines=1,
-                    slots_per_engine=args.slots, capacity=capacity,
-                    num_prefill_engines=1,
-                    prefix_cache_bytes=args.prefix_cache_mb * 1e6),
-        max_prefill_batch=args.prefill_batch, clock=clock)
-        for _ in range(args.replicas)]
-    router = Router(reps, queue_capacity=max(16, 2 * args.requests),
-                    age_every=8, policy="slo", clock=clock)
+
+    def make_replica(_slot: int) -> "CoordinatorReplica":
+        return CoordinatorReplica(
+            Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=args.slots, capacity=capacity,
+                        num_prefill_engines=1,
+                        prefix_cache_bytes=args.prefix_cache_mb * 1e6),
+            max_prefill_batch=args.prefill_batch, clock=clock)
+
+    seed_reps = 1 if args.autoscale else args.replicas
+    router = Router([make_replica(i) for i in range(seed_reps)],
+                    queue_capacity=max(16, 2 * args.requests),
+                    age_every="auto", policy="slo", clock=clock)
+    ctrl = None
+    if args.autoscale:
+        spec = FleetSpec(min_replicas=1,
+                         max_replicas=max(2, args.replicas),
+                         provision_steps=2, warmup_steps=3,
+                         cold_window_steps=4, queue_high=0.5,
+                         sustain_steps=2, cooldown_steps=4,
+                         hysteresis_steps=8)
+        ctrl = FleetController(router, make_replica, spec, dt=0.05)
     # kill replica 0: sticky prefix routing concentrates early work
     # there, so the failover path genuinely has requests to move
     failures = {2: 0} if args.kill_replica else None
     t0 = time.perf_counter()
-    m = router.run_trace(trace, dt=0.05, failures=failures)
+    if ctrl is not None:
+        m = ctrl.run_trace(trace, failures=failures)
+    else:
+        m = router.run_trace(trace, dt=0.05, failures=failures)
     dt = time.perf_counter() - t0
     c = router.counters
     done = sum(1 for _, _, life in router.results()
                if life.phase is RequestState.DONE)
-    print(f"[serve] router fleet: {args.replicas} replicas"
-          f"{' (1 killed mid-trace)' if args.kill_replica else ''}, "
+    print(f"[serve] router fleet: {seed_reps} replicas"
+          f"{' (1 killed mid-trace)' if args.kill_replica else ''}"
+          f"{' + autoscale' if ctrl is not None else ''}, "
           f"{len(trace)} requests, {done} completed in {dt:.1f}s "
           "incl. compile")
     print(f"[serve] counters: admitted={c['admitted']} "
@@ -91,9 +122,21 @@ def _serve_fleet(cfg, params, args) -> None:
     print("[serve] cache hit by class: "
           + " ".join(f"class{k}={v:.3f}" for k, v in
                      sorted(m.cache_hit_rate_by_class.items())))
+    if ctrl is not None:
+        print("[serve] scale events: "
+              + (" ".join(f"{e.kind}@{e.step}(r{e.replica})"
+                          for e in ctrl.events) or "none"))
+        print(f"[serve] replica-steps by state: "
+              + " ".join(f"{k}={v}" for k, v in
+                         sorted(ctrl.replica_steps_by_state.items()))
+              + f" warm_pen={m.warmup_ttft_penalty_s:.2f}s")
     if args.kill_replica and c["redispatched"] == 0:
         raise SystemExit("[serve] --kill-replica exercised no failover "
                          "re-dispatches (raise --requests or --rate-rps)")
+    if ctrl is not None and m.scale_up_events == 0:
+        raise SystemExit("[serve] --autoscale fired no scale-up during "
+                         "the trace (raise --requests or --rate-rps, or "
+                         "pass --surge-trace)")
 
 
 def main() -> None:
@@ -143,6 +186,15 @@ def main() -> None:
     ap.add_argument("--kill-replica", action="store_true",
                     help="with --replicas: kill a replica mid-trace to "
                          "exercise §12 failover re-dispatch")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic fleet (DESIGN.md §13): start at one "
+                         "replica behind the FleetController and "
+                         "provision/warm/join more as demand builds; "
+                         "exits non-zero if no scale-up fires")
+    ap.add_argument("--surge-trace", action="store_true",
+                    help="with --autoscale: quiet → 6x burst → quiet "
+                         "arrival pattern instead of a flat Poisson "
+                         "trace")
     ap.add_argument("--stream", action="store_true",
                     help="print each token as it is generated")
     ap.add_argument("--full", action="store_true",
@@ -157,7 +209,7 @@ def main() -> None:
           f"d_model={cfg.d_model} backend={jax.default_backend()}")
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
 
-    if args.replicas > 1:
+    if args.replicas > 1 or args.autoscale:
         _serve_fleet(cfg, params, args)
         return
 

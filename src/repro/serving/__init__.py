@@ -15,7 +15,10 @@ from repro.serving.workload import (PREFIX_TRACES, TracePhase,
                                     prefix_trace,
                                     mixed_priority_workload,
                                     shared_system_prompt_workload,
+                                    surge_workload,
                                     WORKLOAD_DISTS)
+from repro.serving.fleet import (FleetController, FleetSpec, ReplicaState,
+                                 ScaleEvent)
 from repro.serving.simulator import (FleetResult, OnlineSimResult,
                                      RescheduleEvent, SimReplica,
                                      SimResult, simulate, simulate_colocated,
@@ -25,7 +28,7 @@ from repro.serving.engine import DecodeEngine, PrefillEngine, Slot
 from repro.serving.coordinator import (Coordinator, PollStatus, ServeRequest,
                                        ServeResult, ServeSession)
 from repro.serving.router import (AdmissionQueue, AdmissionRejected,
-                                  CoordinatorReplica,
+                                  CoordinatorReplica, FleetExhausted,
                                   PRIORITY_BATCH, PRIORITY_INTERACTIVE,
                                   PRIORITY_STANDARD, Router, StepClock)
 from repro.serving import kv_compression, kv_transfer
@@ -44,7 +47,9 @@ __all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
            "mixed_priority_workload",
            "multi_turn_workload", "observed_workload", "offline_workload",
            "online_workload", "prefix_trace",
-           "shared_system_prompt_workload", "WORKLOAD_DISTS",
+           "shared_system_prompt_workload", "surge_workload",
+           "WORKLOAD_DISTS",
+           "FleetController", "FleetSpec", "ReplicaState", "ScaleEvent",
            "FleetResult", "OnlineSimResult", "RescheduleEvent",
            "SimReplica", "SimResult", "simulate",
            "simulate_colocated", "simulate_fleet", "simulate_online",
@@ -52,6 +57,7 @@ __all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
            "DecodeEngine", "PrefillEngine", "Slot", "Coordinator",
            "PollStatus", "ServeRequest", "ServeResult", "ServeSession",
            "AdmissionQueue", "AdmissionRejected", "CoordinatorReplica",
+           "FleetExhausted",
            "PRIORITY_BATCH", "PRIORITY_INTERACTIVE", "PRIORITY_STANDARD",
            "Router", "StepClock",
            "kv_transfer", "kv_compression", "CODECS", "ChunkedTransferPlan",

@@ -125,7 +125,11 @@ class ServeSession:
         self.max_prefill_batch = max(1, max_prefill_batch)
         self.inline_prefill = inline_prefill
         self._clock = clock or time.perf_counter
-        self._t0 = self._clock()
+        # an injected clock (the router's shared StepClock) is already
+        # absolute trace time — don't rebase, or a session opened by a
+        # mid-trace replica join (§13 spawn) would stamp lifecycles
+        # offset by its spawn time and break sim/runtime parity
+        self._t0 = 0.0 if clock is not None else self._clock()
         self._entries: Dict[int, _Entry] = {}
         self._order: List[int] = []
         self._queue: collections.deque = collections.deque()    # QUEUED rids

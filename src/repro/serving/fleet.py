@@ -1,0 +1,368 @@
+"""Elastic fleet controller (DESIGN.md §13): capacity ARRIVING.
+
+The §12 ``Router`` survives replicas dying; this subsystem is the other
+half — replicas joining, warming up, and the fleet growing/shrinking to
+track demand. One ``FleetController`` sits above the Router and owns
+replica LIFECYCLE::
+
+    PROVISIONING -> WARMING -> LIVE -> DRAINING -> DEAD
+
+* PROVISIONING — a machine is being acquired (fixed step count).
+* WARMING — the model's weights stage from disk/host storage onto the
+  replica's devices: ``cost_model.weight_load_time`` prices it as
+  bytes-of-params over the device type's host link
+  (``GPUType.host_bandwidth``), quantized to router steps by
+  ``cost_model.warmup_steps``. Heterogeneity is real here: an A6000
+  pod warms ~4x slower than an H100 pod for the same model.
+* LIVE — the replica joined the router (``Router.spawn``) and takes
+  dispatches. For the first ``cold_window_steps`` it is cold (compile /
+  empty caches): requests dispatched into the window get a
+  ``warmup_penalty_s`` stamp — the TTFT cost of serving from a
+  just-joined replica, surfaced as ``ServeMetrics.warmup_ttft_penalty_s``.
+* DRAINING — graceful retirement via ``Router.drain``: no new work,
+  in-flight completes, the router marks it dead.
+
+Scale-to-demand reads the ``WorkloadMonitor`` demand signal — queue
+depth against live dispatch capacity, per-class arrival rates, and
+recent stated-SLO attainment — with THREE dampers so the fleet doesn't
+flap: a signal must SUSTAIN for ``sustain_steps`` consecutive steps, any
+two scale decisions are ``cooldown_steps`` apart, and no scale-up fires
+within ``hysteresis_steps`` of a scale-down (the bound the property
+tests pin).
+
+Capacity drift re-solves max-flow (§7's workload-drift trigger extended):
+when a replica joins or leaves, the optional ``resolver`` callback runs
+— typically a closure over ``core.scheduler.reschedule_capacity``, which
+seeds the joining devices as a new group, tries them as prefill AND as
+decode, and lets refinement shift the whole φ→δ assignment. Whatever
+per-replica weights the resolver returns feed straight back into
+dispatch via ``Router.set_route_weights``.
+
+Parity is by construction, exactly as in §12: every controller decision
+is a pure function of router step indices and router/monitor state that
+is itself step-deterministic. Driving the same seeded surge trace over
+``SimReplica``s or real ``CoordinatorReplica``s yields EXACTLY the same
+scale events, per-state replica-step totals, and counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.serving.request import Request, RequestState
+
+
+class ReplicaState(enum.Enum):
+    PROVISIONING = "provisioning"
+    WARMING = "warming"
+    LIVE = "live"
+    DRAINING = "draining"
+    DEAD = "dead"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleEvent:
+    """One controller decision or lifecycle transition, step-stamped."""
+    step: int
+    kind: str        # scale_up | scale_down | live | dead | resolve
+    replica: int     # fleet slot id (stable across the replica's life)
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Elastic policy knobs. All step counts are router steps on the
+    shared clock — the same numbers mean the same thing in both
+    domains. Price ``warmup_steps`` with ``cost_model.warmup_steps``
+    (weight bytes over the device type's host link) rather than
+    guessing."""
+    min_replicas: int = 1
+    max_replicas: int = 4
+    #: machine-acquisition steps before weight staging starts
+    provision_steps: int = 4
+    #: WARMING steps (weight load priced by the cost model)
+    warmup_steps: int = 8
+    #: post-LIVE steps during which dispatches pay a cold-start stamp
+    cold_window_steps: int = 0
+    #: scale up when queue depth exceeds this multiple of live capacity
+    queue_high: float = 1.0
+    #: scale down when in-flight fits this fraction of the SHRUNK fleet
+    queue_low: float = 0.25
+    #: optional second up-trigger: recent stated-SLO attainment floor
+    slo_floor: Optional[float] = None
+    #: a pressure signal must hold this many consecutive steps
+    sustain_steps: int = 4
+    #: minimum steps between any two scale decisions
+    cooldown_steps: int = 16
+    #: no scale-up within this many steps of a scale-down (anti-flap)
+    hysteresis_steps: int = 32
+
+
+@dataclasses.dataclass
+class _ReplicaRecord:
+    slot: int
+    state: ReplicaState
+    state_since: int
+    router_idx: Optional[int] = None
+    #: step the replica went LIVE via spawn; None for the seed fleet
+    #: (already warm at step 0 — no cold window)
+    live_step: Optional[int] = None
+
+
+#: resolver(controller, event) -> optional per-replica route weights
+Resolver = Callable[["FleetController", ScaleEvent],
+                    Optional[Sequence[float]]]
+
+
+class FleetController:
+    """Drives replica lifecycle and scale-to-demand above a ``Router``.
+
+    ``replica_factory(slot)`` builds a fresh replica handle when slot
+    ``slot`` goes LIVE — a ``SimReplica`` closure in the scheduling
+    domain, a ``CoordinatorReplica`` closure in the runtime. That
+    factory is the ONLY domain-specific part; everything the controller
+    decides is step arithmetic, so both domains agree exactly.
+
+    The controller registers itself on the router: ``capacity_hook``
+    (a kill while capacity is joining parks instead of raising
+    ``FleetExhausted``), ``on_submit`` (feeds the monitor's demand
+    signal), and ``on_dispatch`` (stamps cold-window penalties).
+    """
+
+    def __init__(self, router: Any,
+                 replica_factory: Callable[[int], Any],
+                 spec: FleetSpec = FleetSpec(), *,
+                 dt: float = 0.05,
+                 monitor: Optional[Any] = None,
+                 resolver: Optional[Resolver] = None):
+        assert spec.min_replicas >= 1
+        assert spec.max_replicas >= spec.min_replicas
+        self.router = router
+        self.factory = replica_factory
+        self.spec = spec
+        self.dt = float(dt)
+        self.monitor = monitor
+        self.resolver = resolver
+        self.events: List[ScaleEvent] = []
+        self.resolves = 0
+        self.replica_steps_by_state: Dict[str, int] = {}
+        self.records: List[_ReplicaRecord] = [
+            _ReplicaRecord(slot=i, state=ReplicaState.LIVE, state_since=0,
+                           router_idx=i)
+            for i in range(len(router.replicas))]
+        self._by_router_idx: Dict[int, _ReplicaRecord] = {
+            r.router_idx: r for r in self.records}
+        self._up_pressure = 0
+        self._down_pressure = 0
+        self._last_scale = -10 ** 9
+        self._last_down = -10 ** 9
+        self._completed: set = set()
+        router.capacity_hook = self._capacity_pending
+        router.on_dispatch = self._on_dispatch
+        if monitor is not None:
+            router.on_submit = self._on_submit
+
+    # -- router hooks ---------------------------------------------------
+    def _capacity_pending(self) -> bool:
+        return any(r.state in (ReplicaState.PROVISIONING,
+                               ReplicaState.WARMING)
+                   for r in self.records)
+
+    def _on_submit(self, life: Request, step: int) -> None:
+        self.monitor.observe(life, step=step)
+
+    def _on_dispatch(self, life: Request, idx: int, step: int) -> None:
+        rec = self._by_router_idx.get(idx)
+        if rec is None or rec.live_step is None:
+            return
+        cold_until = rec.live_step + self.spec.cold_window_steps
+        if step < cold_until:
+            # remaining cold steps, in shared-clock seconds: a pure
+            # function of step indices — identical in both domains
+            life.warmup_penalty_s += (cold_until - step) * self.dt
+
+    # -- event helpers --------------------------------------------------
+    def _emit(self, step: int, kind: str, slot: int,
+              reason: str = "") -> None:
+        self.events.append(ScaleEvent(step, kind, slot, reason))
+
+    def _resolve(self, step: int, event: ScaleEvent) -> None:
+        """Capacity drift: re-solve max-flow over the changed fleet
+        graph and feed the solved flow shares back into dispatch."""
+        if self.resolver is None:
+            return
+        weights = self.resolver(self, event)
+        self.resolves += 1
+        self._emit(step, "resolve", event.replica, reason=event.kind)
+        if weights is not None:
+            self.router.set_route_weights(weights)
+
+    # -- lifecycle ------------------------------------------------------
+    def _advance(self, step: int) -> None:
+        for rec in self.records:
+            if (rec.state is ReplicaState.PROVISIONING
+                    and step - rec.state_since >= self.spec.provision_steps):
+                rec.state = ReplicaState.WARMING
+                rec.state_since = step
+            if (rec.state is ReplicaState.WARMING
+                    and step - rec.state_since >= self.spec.warmup_steps):
+                handle = self.factory(rec.slot)
+                rec.router_idx = self.router.spawn(handle)
+                self._by_router_idx[rec.router_idx] = rec
+                rec.state = ReplicaState.LIVE
+                rec.state_since = step
+                rec.live_step = step
+                self._emit(step, "live", rec.slot)
+                self._resolve(step, self.events[-1])
+            if (rec.state in (ReplicaState.LIVE, ReplicaState.DRAINING)
+                    and rec.router_idx is not None
+                    and not self.router.replicas[rec.router_idx].alive):
+                # drain completed — or an external kill took it down
+                rec.state = ReplicaState.DEAD
+                rec.state_since = step
+                self._emit(step, "dead", rec.slot)
+                self._resolve(step, self.events[-1])
+
+    # -- scale-to-demand policy -----------------------------------------
+    def _live(self) -> List[_ReplicaRecord]:
+        return [r for r in self.records if r.state is ReplicaState.LIVE]
+
+    def _policy(self, step: int) -> None:
+        spec = self.spec
+        live = self._live()
+        joining = sum(1 for r in self.records
+                      if r.state in (ReplicaState.PROVISIONING,
+                                     ReplicaState.WARMING))
+        non_dead = sum(1 for r in self.records
+                       if r.state is not ReplicaState.DEAD)
+        cap = sum(self.router.replicas[r.router_idx].max_inflight
+                  for r in live)
+        q = len(self.router.queue)
+        infl = sum(self.router._inflight[r.router_idx] for r in live)
+
+        # fleet repair: below the floor (external kills), join capacity
+        # immediately — dampers exist to stop flapping, not healing
+        if (len(live) + joining < spec.min_replicas
+                and non_dead < spec.max_replicas):
+            self._scale_up(step, reason="repair")
+            return
+
+        up = q > spec.queue_high * max(cap, 1)
+        if (not up and self.monitor is not None
+                and spec.slo_floor is not None):
+            att = self.monitor.recent_slo_attainment()
+            up = att is not None and att < spec.slo_floor
+        self._up_pressure = self._up_pressure + 1 if up else 0
+
+        down = False
+        cand = self._drain_candidate(live)
+        if cand is not None and q == 0 and len(live) + joining > spec.min_replicas:
+            rest = cap - self.router.replicas[cand.router_idx].max_inflight
+            down = rest > 0 and infl <= spec.queue_low * rest
+        self._down_pressure = self._down_pressure + 1 if down else 0
+
+        settled = step - self._last_scale >= spec.cooldown_steps
+        if (self._up_pressure >= spec.sustain_steps and settled
+                and joining == 0 and non_dead < spec.max_replicas
+                and step - self._last_down >= spec.hysteresis_steps):
+            self._scale_up(step, reason=f"queue={q} cap={cap}")
+        elif self._down_pressure >= spec.sustain_steps and settled:
+            self._scale_down(step, cand,
+                             reason=f"inflight={infl} cap={cap}")
+
+    def _drain_candidate(self,
+                         live: List[_ReplicaRecord]
+                         ) -> Optional[_ReplicaRecord]:
+        """Least-loaded live replica; exact ties retire the NEWEST slot
+        (deterministic, and the seed fleet outlives the surge capacity)."""
+        if not live:
+            return None
+        return min(live, key=lambda r: (self.router._inflight[r.router_idx],
+                                        -r.slot))
+
+    def _scale_up(self, step: int, reason: str = "") -> None:
+        rec = _ReplicaRecord(slot=len(self.records),
+                             state=ReplicaState.PROVISIONING,
+                             state_since=step)
+        self.records.append(rec)
+        self._emit(step, "scale_up", rec.slot, reason=reason)
+        self._last_scale = step
+        self._up_pressure = 0
+        self._down_pressure = 0
+
+    def _scale_down(self, step: int, rec: _ReplicaRecord,
+                    reason: str = "") -> None:
+        self.router.drain(rec.router_idx)
+        rec.state = ReplicaState.DRAINING
+        rec.state_since = step
+        self._emit(step, "scale_down", rec.slot, reason=reason)
+        self._last_scale = step
+        self._last_down = step
+        self._up_pressure = 0
+        self._down_pressure = 0
+
+    # -- accounting -----------------------------------------------------
+    def _account(self, step: int) -> None:
+        for rec in self.records:
+            if rec.state is not ReplicaState.DEAD:
+                key = rec.state.value
+                self.replica_steps_by_state[key] = (
+                    self.replica_steps_by_state.get(key, 0) + 1)
+        if self.monitor is None:
+            return
+        for rid, entry in self.router._entries.items():
+            life = entry.life
+            if life.phase is RequestState.DONE and rid not in self._completed:
+                self._completed.add(rid)
+                self.monitor.observe_completion(life)
+
+    # -- control point (Router.run_trace's on_step) ---------------------
+    def on_step(self, step: int) -> None:
+        """One control tick, called after this step's arrivals land and
+        before the router dispatches: advance lifecycles (a WARMING
+        replica may go LIVE and join dispatch THIS step), evaluate
+        scale-to-demand, accumulate per-state replica-steps."""
+        self._advance(step)
+        self._policy(step)
+        self._account(step)
+
+    # -- driving / results ----------------------------------------------
+    @property
+    def scale_up_events(self) -> int:
+        return sum(1 for e in self.events if e.kind == "scale_up")
+
+    @property
+    def scale_down_events(self) -> int:
+        return sum(1 for e in self.events if e.kind == "scale_down")
+
+    @property
+    def replica_steps_total(self) -> int:
+        """The fleet-cost denominator: every step a replica existed in
+        any non-dead state is a machine you were paying for."""
+        return sum(self.replica_steps_by_state.values())
+
+    def states(self) -> Dict[int, str]:
+        return {r.slot: r.state.value for r in self.records}
+
+    def run_trace(self, trace: Sequence[Request],
+                  failures: Optional[Dict[int, Any]] = None,
+                  cancels: Optional[Dict[int, Sequence[int]]] = None,
+                  on_token: Optional[Callable] = None,
+                  max_steps: int = 200_000):
+        """Drive a full trace through the router with this controller's
+        control tick wired in; returns elastic ``ServeMetrics``."""
+        self.router.run_trace(trace, dt=self.dt, failures=failures,
+                              cancels=cancels, on_token=on_token,
+                              on_step=self.on_step, max_steps=max_steps)
+        return self.metrics()
+
+    def metrics(self):
+        from repro.serving.metrics import ServeMetrics
+        base = self.router.metrics()
+        return ServeMetrics(
+            requests=base.requests, makespan=base.makespan,
+            decode_tokens=base.decode_tokens,
+            scale_up_events=self.scale_up_events,
+            scale_down_events=self.scale_down_events,
+            replica_steps_by_state=dict(self.replica_steps_by_state))

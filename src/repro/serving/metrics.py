@@ -35,6 +35,11 @@ from repro.serving.request import Request, RequestState
 #: allocator), so page counts, pool utilization, and internal
 #: fragmentation are directly comparable — and must agree EXACTLY on
 #: the same trace.
+#: The elastic-fleet block (DESIGN.md §13): scale events and per-state
+#: replica-step totals are filled by the FleetController (dataclass
+#: fields, 0/{} on a static fleet); ``warmup_ttft_penalty_s`` derives
+#: from per-request ``warmup_penalty_s`` stamps. ``replica_steps_by_state``
+#: is dict-valued and, like ``*_by_class``, NOT in ``summary()``.
 #: The final block is the router tier (DESIGN.md §12): admission /
 #: cancellation / failover counters and per-priority-class breakdowns.
 #: Both domains drive the SAME ``Router`` over replica handles, so the
@@ -53,7 +58,9 @@ METRIC_FIELDS = ("decode_throughput", "avg_latency", "p99_latency",
                  "admitted", "rejected", "cancelled", "redispatched",
                  "slo_attainment_stated",
                  "avg_ttft_by_class", "slo_attainment_by_class",
-                 "cache_hit_rate_by_class")
+                 "cache_hit_rate_by_class",
+                 "scale_up_events", "scale_down_events",
+                 "warmup_ttft_penalty_s", "replica_steps_by_state")
 
 
 @dataclasses.dataclass
@@ -61,6 +68,17 @@ class ServeMetrics:
     requests: List[Request]
     makespan: float
     decode_tokens: int
+    # -- elastic-fleet fields (DESIGN.md §13; 0/{} on static fleets;
+    # keyword-only so subclasses keep their positional signatures) -----
+    #: scale DECISIONS the controller took (not lifecycle transitions:
+    #: a scale-up that is still WARMING at trace end counts)
+    scale_up_events: int = dataclasses.field(default=0, kw_only=True)
+    scale_down_events: int = dataclasses.field(default=0, kw_only=True)
+    #: replica-steps spent in each lifecycle state, keyed by state name
+    #: ("provisioning"/"warming"/"live"/"draining") — the fleet's cost
+    #: denominator: every non-dead replica-step is a machine you pay for
+    replica_steps_by_state: Dict[str, int] = dataclasses.field(
+        default_factory=dict, kw_only=True)
 
     @property
     def decode_throughput(self) -> float:
@@ -189,6 +207,14 @@ class ServeMetrics:
         replica deaths counts twice)."""
         return int(sum(r.redispatches for r in self.requests))
 
+    # -- elastic-fleet fields (DESIGN.md §13) ---------------------------
+    @property
+    def warmup_ttft_penalty_s(self) -> float:
+        """Total cold-start TTFT cost across requests dispatched to a
+        just-joined replica inside its cold window (0.0 on a static
+        fleet or when no dispatch landed cold)."""
+        return float(sum(r.warmup_penalty_s for r in self.requests))
+
     def _classes(self) -> Dict[int, List[Request]]:
         by: Dict[int, List[Request]] = {}
         for r in self.requests:
@@ -271,7 +297,10 @@ class ServeMetrics:
                "rejected": float(self.rejected),
                "cancelled": float(self.cancelled),
                "redispatched": float(self.redispatched),
-               "slo_attainment_stated": self.slo_attainment_stated}
+               "slo_attainment_stated": self.slo_attainment_stated,
+               "scale_up_events": float(self.scale_up_events),
+               "scale_down_events": float(self.scale_down_events),
+               "warmup_ttft_penalty_s": self.warmup_ttft_penalty_s}
         if slo is not None:
             out["slo_attainment"] = self.slo_attainment(slo, slo_scale)
         return out

@@ -134,6 +134,13 @@ class Request:
     #: the router re-dispatched it elsewhere, emitted tokens folded
     #: into the prompt)
     redispatches: int = 0
+    # -- elastic-fleet accounting (DESIGN.md §13) -----------------------
+    #: cold-start TTFT cost attributed to this request: it was
+    #: dispatched to a replica inside its post-LIVE cold window, so its
+    #: first token paid compile/cache warm-up the steady-state fleet
+    #: doesn't. Stamped by the FleetController's dispatch hook as a
+    #: pure function of step indices — identical in both domains.
+    warmup_penalty_s: float = 0.0
 
     # -- lifecycle ------------------------------------------------------
     def advance(self, state: RequestState, t: float) -> "Request":

@@ -69,6 +69,23 @@ class AdmissionRejected(RuntimeError):
         self.capacity = capacity
 
 
+class FleetExhausted(RuntimeError):
+    """Typed refusal to take the fleet's LAST live replica out of
+    service (DESIGN.md §13): ``kill()``/``drain()`` would strand the
+    pending work with nowhere to (re-)dispatch and no capacity
+    provisioning or warming behind it. An elastic controller registers
+    ``Router.capacity_hook`` — while a join is in flight, the same kill
+    PARKS the drained requests in the admission queue instead (they
+    dispatch when the joining replica goes LIVE)."""
+
+    def __init__(self, idx: int, unfinished: int):
+        super().__init__(
+            f"replica {idx} is the last live replica and {unfinished} "
+            f"requests are pending with no capacity joining")
+        self.idx = idx
+        self.unfinished = unfinished
+
+
 class StepClock:
     """Virtual clock for the scheduling domain: ``run_trace`` sets it to
     ``step * dt`` each router step, so simulated lifecycle stamps are a
@@ -105,15 +122,55 @@ class AdmissionQueue:
     pin). ``push`` raises the typed ``AdmissionRejected`` at capacity;
     ``force=True`` bypasses the bound for failover re-admission
     (already-admitted work cannot be retroactively rejected).
+
+    ``age_every="auto"`` derives the aging rate from observed per-class
+    arrival rates instead of a fixed parameter (DESIGN.md §13): a
+    waiting request should climb one class per arrival of traffic that
+    can OVERTAKE it (any strictly more urgent class), so the queue
+    ahead of a low-priority request cannot grow without bound —
+    promotion keeps pace with overtaking pressure. Concretely::
+
+        age_every = clamp(round(1 / rate_hi), 1, auto_cap)
+
+    where ``rate_hi`` is arrivals-per-step of classes more urgent than
+    the least urgent observed class, over the trailing arrival window
+    (``observe_arrival`` feeds it; the router calls it on every
+    submit). The starvation bound is UNCHANGED: it holds with the
+    ``age_every`` in effect at pop time, because effective priorities
+    at one pop are all computed under the same rate.
     """
 
-    def __init__(self, capacity: int = 64, age_every: int = 8):
+    def __init__(self, capacity: int = 64, age_every=8,
+                 rate_window: int = 128, auto_cap: int = 64):
         self.capacity = int(capacity)
-        self.age_every = max(1, int(age_every))
+        self.auto = age_every == "auto"
+        self.auto_cap = max(1, int(auto_cap))
+        self.age_every = (8 if self.auto else max(1, int(age_every)))
+        self._arrivals: collections.deque = collections.deque(
+            maxlen=rate_window)
         self._entries: List[_QEntry] = []
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    def observe_arrival(self, priority: int, step: int) -> None:
+        """Feed one arrival (admitted OR rejected — both are pressure)
+        to the auto-aging derivation. No-op at a fixed rate."""
+        if not self.auto:
+            return
+        self._arrivals.append((int(step), int(priority)))
+        self.age_every = self._derived_age_every()
+
+    def _derived_age_every(self) -> int:
+        if len(self._arrivals) < 2:
+            return self.age_every
+        pmax = max(p for _, p in self._arrivals)
+        steps = [s for s, p in self._arrivals if p < pmax]
+        span = self._arrivals[-1][0] - self._arrivals[0][0]
+        if not steps or span <= 0:
+            return self.auto_cap      # nothing can overtake: age slowly
+        rate_hi = len(steps) / span
+        return min(self.auto_cap, max(1, int(round(1.0 / rate_hi))))
 
     def effective_priority(self, entry: _QEntry, step: int) -> int:
         waited = max(0, step - entry.enqueue_step)
@@ -204,9 +261,20 @@ class Router:
         self._t0 = 0.0 if self._virtual is not None else self._clock()
         w = list(route_weights or [1.0] * n)
         assert len(w) == n
+        self._weights_raw = [float(x) for x in w]
         self._weights = np.asarray(w, float) / sum(w)
         self._routed = np.zeros(n)
         self._inflight = [0] * n
+        #: replicas accepting no NEW work while their in-flight finishes
+        self._draining: set = set()
+        #: elastic-fleet hooks (DESIGN.md §13). ``capacity_hook`` answers
+        #: "is capacity provisioning/warming?" — consulted before
+        #: declaring the fleet exhausted; ``on_submit``/``on_dispatch``
+        #: let a FleetController observe demand and stamp cold-window
+        #: penalties without owning the drive loop.
+        self.capacity_hook: Optional[Callable[[], bool]] = None
+        self.on_submit: Optional[Callable[[Request, int], None]] = None
+        self.on_dispatch: Optional[Callable[[Request, int, int], None]] = None
         self._entries: Dict[int, _RouterEntry] = {}
         self._order: List[int] = []
         self._active: set = set()           # rids dispatched, not terminal
@@ -246,6 +314,9 @@ class Router:
         self._seq += 1
         self._entries[rid] = entry
         self._order.append(rid)
+        self.queue.observe_arrival(life.priority, self._step_idx)
+        if self.on_submit is not None:
+            self.on_submit(life, self._step_idx)
         if len(self.queue) >= self.queue.capacity:
             life.advance(RequestState.REJECTED, self.now())
             raise AdmissionRejected(rid, len(self.queue),
@@ -276,14 +347,74 @@ class Router:
             return True
         return False
 
+    # -- fleet membership (DESIGN.md §13) -------------------------------
+    def _capacity_pending(self) -> bool:
+        return bool(self.capacity_hook is not None and self.capacity_hook())
+
+    def spawn(self, replica: Any, weight: float = 1.0) -> int:
+        """A new replica JOINS the fleet (the arriving half ``kill()``
+        is the departing half of): append its handle, extend the
+        routing state, and return its index. The replica starts cold —
+        empty prefix cache, zero in-flight — and is immediately a
+        dispatch candidate; lifecycle gating (PROVISIONING/WARMING
+        delays, cold-window penalties) belongs to the FleetController,
+        which only calls spawn once the replica is LIVE."""
+        assert replica.alive, "spawned replica must be alive"
+        self.replicas.append(replica)
+        self._weights_raw.append(float(weight))
+        self._weights = (np.asarray(self._weights_raw, float)
+                         / sum(self._weights_raw))
+        self._routed = np.append(self._routed, 0.0)
+        self._inflight.append(0)
+        return len(self.replicas) - 1
+
+    def drain(self, idx: int) -> None:
+        """Gracefully retire replica ``idx`` — ``kill()`` without the
+        data loss: no NEW dispatches, in-flight requests run to
+        completion, and ``step()`` marks it dead once its last request
+        finishes. Raises ``FleetExhausted`` when ``idx`` is the last
+        live undraining replica and no capacity is joining (queued work
+        would wait forever)."""
+        rep = self.replicas[idx]
+        if not rep.alive or idx in self._draining:
+            return
+        others = any(r.alive and j not in self._draining
+                     for j, r in enumerate(self.replicas) if j != idx)
+        if (not others and self.unfinished > 0
+                and not self._capacity_pending()):
+            raise FleetExhausted(idx, self.unfinished)
+        self._draining.add(idx)
+
+    def set_route_weights(self, weights: Sequence[float]) -> None:
+        """Adopt new per-replica flow weights (the §13 capacity-drift
+        re-solve feeds the solved φ→δ flow shares back into dispatch)."""
+        w = [float(x) for x in weights]
+        assert len(w) == len(self.replicas) and sum(w) > 0
+        self._weights_raw = w
+        self._weights = np.asarray(w, float) / sum(w)
+
     # -- failover -------------------------------------------------------
-    def kill(self, idx: int) -> List[int]:
+    def kill(self, idx: int, park: bool = False) -> List[int]:
         """Mark replica ``idx`` dead and re-dispatch its in-flight
-        requests (§12 failover). Returns the re-queued rids."""
+        requests (§12 failover). Returns the re-queued rids.
+
+        Killing the LAST live replica while work is pending raises the
+        typed ``FleetExhausted`` — unless capacity is provisioning/
+        warming behind it (``capacity_hook``) or ``park=True``, in
+        which case the drained requests are parked in the admission
+        queue until a replica is LIVE again."""
         rep = self.replicas[idx]
         if not rep.alive:
             return []
+        # a DRAINING survivor doesn't count: it takes no new dispatches,
+        # so work re-queued off the killed replica would strand anyway
+        others = any(r.alive and j not in self._draining
+                     for j, r in enumerate(self.replicas) if j != idx)
+        if (not others and not park and self.unfinished > 0
+                and not self._capacity_pending()):
+            raise FleetExhausted(idx, self.unfinished)
         rep.alive = False
+        self._draining.discard(idx)
         moved = []
         for life in rep.drain_in_flight():
             entry = self._entries[life.rid]
@@ -314,7 +445,8 @@ class Router:
     # -- dispatch -------------------------------------------------------
     def _candidates(self) -> List[int]:
         return [i for i, rep in enumerate(self.replicas)
-                if rep.alive and self._inflight[i] < rep.max_inflight]
+                if rep.alive and i not in self._draining
+                and self._inflight[i] < rep.max_inflight]
 
     def _pick_replica(self, entry: _RouterEntry,
                       cands: List[int]) -> int:
@@ -371,6 +503,8 @@ class Router:
             entry.replica = idx
             self._inflight[idx] += 1
             self._active.add(entry.life.rid)
+            if self.on_dispatch is not None:
+                self.on_dispatch(entry.life, idx, self._step_idx)
             self.dispatch_log.append(dict(
                 rid=entry.life.rid, priority=entry.life.priority,
                 submit_step=qe.enqueue_step,
@@ -399,6 +533,10 @@ class Router:
                 entry.life.tokens_out = len(entry.tokens)
             if entry.life.decode_end is not None:
                 self._makespan = max(self._makespan, entry.life.decode_end)
+        for i in list(self._draining):       # graceful-retire completion
+            if self._inflight[i] == 0:
+                self.replicas[i].alive = False
+                self._draining.discard(i)
         self._step_idx += 1
         return progressed
 
@@ -410,14 +548,17 @@ class Router:
                   failures: Optional[Dict[int, Any]] = None,
                   cancels: Optional[Dict[int, Sequence[int]]] = None,
                   on_token: Optional[TokenCallback] = None,
+                  on_step: Optional[Callable[[int], None]] = None,
                   max_steps: int = 200_000) -> "ServeMetrics":
         """Drive a full trace to completion: at router step k (time
         ``k * dt``) apply scheduled replica failures (``failures``:
         {step: replica_idx or [idx, ...]}), submit every request whose
         ``arrival <= k * dt`` (admission overflow records REJECTED and
         moves on), apply scheduled cancellations (``cancels``:
-        {step: [rid, ...]}), then ``step()``. Arrival pacing is in
-        STEPS, identically in both domains — the parity contract."""
+        {step: [rid, ...]}), call ``on_step(k)`` (the FleetController's
+        control point — it sees this step's arrivals, before dispatch),
+        then ``step()``. Arrival pacing is in STEPS, identically in
+        both domains — the parity contract."""
         failures = failures or {}
         cancels = cancels or {}
         pending = collections.deque(sorted(trace, key=lambda r: r.arrival))
@@ -428,7 +569,12 @@ class Router:
                 self._virtual.value = s * dt
             kills = failures.get(s, ())
             for idx in ([kills] if isinstance(kills, int) else kills):
-                self.kill(idx)
+                # with an elastic controller attached (capacity_hook
+                # registered), a crash of the last replica PARKS the
+                # drained work — the controller's repair policy will
+                # provision a replacement (§13); bare fleets still get
+                # the typed FleetExhausted
+                self.kill(idx, park=self.capacity_hook is not None)
             while pending and pending[0].arrival <= s * dt + 1e-9:
                 try:
                     self.submit(pending.popleft(), on_token=on_token)
@@ -436,9 +582,12 @@ class Router:
                     pass                      # recorded as REJECTED
             for rid in cancels.get(s, ()):
                 self.cancel(rid)
+            if on_step is not None:
+                on_step(s)
             progressed = self.step()
             if not pending and self.unfinished and not progressed:
-                if not any(rep.alive for rep in self.replicas):
+                if (not any(rep.alive for rep in self.replicas)
+                        and not self._capacity_pending()):
                     raise RuntimeError(
                         f"router: every replica is dead with "
                         f"{self.unfinished} requests unfinished")

@@ -178,6 +178,11 @@ class _DisaggSim:
         # transfer resolves its source plan via its own epoch's map
         self.decode_reps_by_epoch: Dict[int, Dict[int, ReplicaPlacement]] = {}
         self.migrate_link: Dict[Tuple[int, int], float] = {}
+        #: optional completion tap: called as ``on_done(t, req)`` at
+        #: every DONE edge — how ``simulate_online`` feeds realized
+        #: output lengths to a WorkloadMonitor's EWMA estimator with
+        #: detection-lag-faithful timing (§13)
+        self.on_done: Optional[Callable[[float, Request], None]] = None
         self.feasible = self._install(placement)
         if self.feasible:
             self._record_epoch_reps()
@@ -529,6 +534,8 @@ class _DisaggSim:
             srv.busy = False
             self.decode_tokens += req.s_out
             req.advance(RequestState.DONE, t)
+            if self.on_done is not None:
+                self.on_done(t, req)
             self.start_prefill(t, srv)
             return
         req.advance(RequestState.KV_TRANSFER, t)
@@ -635,6 +642,8 @@ class _DisaggSim:
                     srv.pool.release(pages)
                     req.kv_pages_allocated += len(pages)
                 req.advance(RequestState.DONE, t)
+                if self.on_done is not None:
+                    self.on_done(t, req)
             else:
                 still.append((req, rem))
         srv.active = still
@@ -741,12 +750,13 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
     ``max_reschedules`` swaps, spaced ``min_gap_s`` apart, are applied;
     each pays the KV-drain cost described in the module docstring.
 
-    The monitor observes each request's true output length at arrival —
-    an oracle simplification consistent with the rest of the simulator
-    (service times also use true lengths). A production monitor only
-    learns s_out at completion, so real drift detection lags by roughly
-    one mean request latency; treat the benchmark numbers as the
-    detection-lag-free upper bound."""
+    What the monitor sees depends on its estimator (DESIGN.md §13): the
+    legacy ``estimator="oracle"`` observes each request's true output
+    length at arrival (the detection-lag-free upper bound), while
+    ``estimator="ewma"`` observes only the prompt at arrival and learns
+    output lengths from the simulator's DONE edges — realized
+    completions, with the same detection lag a production monitor
+    pays."""
     sim = _DisaggSim(cluster, profile, placement, chunk_tokens,
                      typical_context, prefix_caching=prefix_caching,
                      cache_alpha=cache_alpha,
@@ -756,6 +766,8 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
     if not sim.feasible:
         return OnlineSimResult(requests, float("inf"), 0, [])
     state = {"last": -float("inf")}
+    if monitor is not None and hasattr(monitor, "observe_completion"):
+        sim.on_done = lambda t, req: monitor.observe_completion(req)
 
     def hook(t: float, req: Request) -> None:
         if monitor is None or rescheduler is None:
@@ -1086,35 +1098,74 @@ class FleetResult(SimResult):
     counters: Dict[str, int] = dataclasses.field(default_factory=dict)
     dispatch_log: List[Dict[str, int]] = dataclasses.field(
         default_factory=list)
+    #: §13 elastic runs: the controller's full (step, kind, replica)
+    #: event stream — the parity benchmark asserts it matches the
+    #: runtime's exactly on the same seeded trace
+    scale_events: List[Tuple[int, str, int]] = dataclasses.field(
+        default_factory=list)
 
 
 def simulate_fleet(requests: List[Request], num_replicas: int = 2,
                    slots_per_replica: int = 4, max_prefill_batch: int = 4,
                    capacity: int = 128, dt: float = 0.05,
-                   queue_capacity: int = 64, age_every: int = 8,
+                   queue_capacity: int = 64, age_every=8,
                    policy: str = "slo", prefix_caching: bool = True,
                    cache_alpha: float = 2.0,
                    route_weights=None,
                    failures: Optional[Dict[int, int]] = None,
-                   cancels: Optional[Dict[int, List[int]]] = None
+                   cancels: Optional[Dict[int, List[int]]] = None,
+                   autoscale=None, monitor=None, resolver=None
                    ) -> FleetResult:
     """Scheduling-domain fleet serve (DESIGN.md §12): the SAME
     ``Router`` the runtime uses, over ``SimReplica`` handles on a
     virtual step clock. ``failures`` maps router step -> replica index
-    to kill; ``cancels`` maps router step -> rids to cancel."""
+    to kill; ``cancels`` maps router step -> rids to cancel.
+
+    ``autoscale`` (DESIGN.md §13) is a ``fleet.FleetSpec``: the run is
+    driven through a ``FleetController`` instead of the bare router —
+    ``num_replicas`` becomes the warm seed fleet and the controller
+    provisions/warms/drains ``SimReplica``s to track demand. Scale
+    events and per-state replica-steps land on the result; an optional
+    ``monitor`` (WorkloadMonitor) feeds the demand signal and a
+    ``resolver`` re-solves max-flow on joins/leaves. Static runs fill
+    ``replica_steps_by_state`` too (alive replicas per step), so
+    replica-step cost is comparable across policies."""
     from repro.serving.router import Router, StepClock
     clock = StepClock()
-    reps = [SimReplica(num_slots=slots_per_replica,
-                       max_prefill_batch=max_prefill_batch,
-                       capacity=capacity, prefix_caching=prefix_caching,
-                       clock=clock)
-            for _ in range(num_replicas)]
+
+    def make_replica(_slot: int) -> SimReplica:
+        return SimReplica(num_slots=slots_per_replica,
+                          max_prefill_batch=max_prefill_batch,
+                          capacity=capacity, prefix_caching=prefix_caching,
+                          clock=clock)
+
+    reps = [make_replica(i) for i in range(num_replicas)]
     router = Router(reps, queue_capacity=queue_capacity,
                     age_every=age_every, policy=policy,
                     cache_alpha=cache_alpha, route_weights=route_weights,
                     clock=clock)
+    if autoscale is not None:
+        from repro.serving.fleet import FleetController
+        ctrl = FleetController(router, make_replica, autoscale, dt=dt,
+                               monitor=monitor, resolver=resolver)
+        em = ctrl.run_trace(requests, failures=failures, cancels=cancels)
+        return FleetResult(em.requests, em.makespan, em.decode_tokens,
+                           counters=dict(router.counters),
+                           dispatch_log=list(router.dispatch_log),
+                           scale_events=[(e.step, e.kind, e.replica)
+                                         for e in ctrl.events],
+                           scale_up_events=em.scale_up_events,
+                           scale_down_events=em.scale_down_events,
+                           replica_steps_by_state=dict(
+                               em.replica_steps_by_state))
+    live_steps = {"live": 0}
+
+    def _tick(_step: int) -> None:
+        live_steps["live"] += sum(1 for r in router.replicas if r.alive)
+
     m = router.run_trace(requests, dt=dt, failures=failures,
-                         cancels=cancels)
+                         cancels=cancels, on_step=_tick)
     return FleetResult(m.requests, m.makespan, m.decode_tokens,
                        counters=dict(router.counters),
-                       dispatch_log=list(router.dispatch_log))
+                       dispatch_log=list(router.dispatch_log),
+                       replica_steps_by_state=dict(live_steps))

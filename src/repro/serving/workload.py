@@ -335,3 +335,51 @@ def mixed_priority_workload(n: int, rate_rps: float, seed: int = 0,
                             priority=c, slo_target_s=float(slo_s[c])))
         seen[c] = True
     return reqs
+
+
+def surge_workload(n: int, rate_rps: float, seed: int = 0,
+                   surge: float = 4.0,
+                   phases: Sequence[float] = (0.30, 0.40, 0.30),
+                   vocab: int = 512,
+                   class_weights: Sequence[float] = (0.5, 0.3, 0.2),
+                   system_lens: Sequence[int] = (24, 16, 8),
+                   user_lens: Sequence[int] = (6, 10, 18),
+                   out_lens: Sequence[int] = (6, 12, 40),
+                   slo_s: Sequence[float] = (2.0, 8.0, 30.0)
+                   ) -> List[Request]:
+    """Quiet → burst → quiet traffic for the §13 elastic fleet: the
+    same three priority classes as ``mixed_priority_workload``, but the
+    Poisson arrival rate steps ``rate_rps`` → ``surge * rate_rps`` →
+    ``rate_rps`` across the three ``phases`` (fractions of ``n``).
+    A static fleet sized for the quiet phases drowns in the burst; one
+    sized for the burst idles ~60% of its replica-steps — the gap
+    scale-to-demand closes."""
+    rng = np.random.default_rng(seed)
+    ncls = len(class_weights)
+    w = np.asarray(class_weights, float)
+    w = w / w.sum()
+    ph = np.asarray(phases, float)
+    ph = ph / ph.sum()
+    counts = [int(round(p * n)) for p in ph]
+    counts[-1] = n - sum(counts[:-1])
+    rates = (rate_rps, surge * rate_rps, rate_rps)
+    systems = [_tok(rng, system_lens[c], vocab) for c in range(ncls)]
+    seen = [False] * ncls
+    reqs: List[Request] = []
+    t = 0.0
+    i = 0
+    for cnt, rate in zip(counts, rates):
+        for _ in range(cnt):
+            t += float(rng.exponential(1.0 / max(rate, 1e-9)))
+            c = int(rng.choice(ncls, p=w))
+            ulen = max(1, int(rng.poisson(user_lens[c])))
+            olen = max(1, int(rng.poisson(out_lens[c])))
+            prompt = systems[c] + _tok(rng, ulen, vocab)
+            reqs.append(Request(rid=i, s_in=len(prompt), s_out=olen,
+                                arrival=t,
+                                tokens=tuple(prompt), prefix_id=c,
+                                shared_len=system_lens[c] if seen[c] else 0,
+                                priority=c, slo_target_s=float(slo_s[c])))
+            seen[c] = True
+            i += 1
+    return reqs

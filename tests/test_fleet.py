@@ -1,0 +1,429 @@
+"""Elastic fleet tier (DESIGN.md §13): replica lifecycle and warm-up
+pricing, scale-to-demand with hysteresis, the last-replica
+``FleetExhausted`` guard, auto-derived aging rate, the EWMA demand
+estimator, capacity-drift max-flow re-solve, and exact sim-vs-runtime
+parity of the controller's decisions."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (LLAMA2_70B, WORKLOADS, WorkloadMonitor,
+                        grow_cluster, reschedule_capacity, schedule,
+                        warmup_steps, weight_load_time)
+from repro.core.cluster import A100, A6000, H100, PAPER_SETTINGS
+from repro.models import init_params
+from repro.serving import (Coordinator, CoordinatorReplica, FleetController,
+                           FleetExhausted, FleetSpec, ReplicaState, Request,
+                           Router, SimReplica, StepClock,
+                           mixed_priority_workload, simulate_fleet,
+                           surge_workload)
+from repro.serving.metrics import METRIC_FIELDS, ServeMetrics
+from repro.serving.router import AdmissionQueue, _QEntry
+
+KEY = jax.random.PRNGKey(5)
+
+SPEC = FleetSpec(min_replicas=1, max_replicas=4, provision_steps=4,
+                 warmup_steps=8, cold_window_steps=6, queue_high=1.0,
+                 queue_low=0.25, sustain_steps=3, cooldown_steps=10,
+                 hysteresis_steps=40)
+
+
+def _surge(n=160, seed=3):
+    return surge_workload(n, 3.0, seed=seed)
+
+
+def _flat(n, s_out=4):
+    return [Request(rid=i, s_in=4, s_out=s_out, arrival=0.0)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Warm-up pricing (cost model) and cluster growth
+# ---------------------------------------------------------------------------
+
+
+def test_weight_load_time_orders_by_host_link():
+    """The §13 warm-up price is bytes-of-params over the device's host
+    link: faster links warm faster, sharding divides the load."""
+    t = {g.name: weight_load_time(LLAMA2_70B, g)
+         for g in (H100, A100, A6000)}
+    assert t["H100"] < t["A100"] < t["A6000"]
+    assert weight_load_time(LLAMA2_70B, A100, parallel=4) == \
+        pytest.approx(t["A100"] / 4)
+    # a mixed pod warms at its SLOWEST link (tensor shards rendezvous)
+    assert weight_load_time(LLAMA2_70B, [H100, A6000]) == \
+        pytest.approx(weight_load_time(LLAMA2_70B, [A6000, A6000]))
+
+
+def test_warmup_steps_quantizes_up_and_never_zero():
+    s = warmup_steps(LLAMA2_70B, A100, dt=0.05)
+    assert s >= 1 and s * 0.05 >= weight_load_time(LLAMA2_70B, A100)
+    # even an instant load costs one router step
+    assert warmup_steps(LLAMA2_70B, H100, dt=1e9) == 1
+
+
+def test_grow_cluster_preserves_existing_devices():
+    cl = PAPER_SETTINGS["hetero1"]()
+    grown, new = grow_cluster(cl, [("A100", 2)])
+    assert grown.num_devices == cl.num_devices + 2
+    assert new == [cl.num_devices, cl.num_devices + 1]
+    for i in range(cl.num_devices):
+        assert grown.devices[i].gpu.name == cl.devices[i].gpu.name
+        for j in range(cl.num_devices):
+            assert grown.bandwidth[i][j] == cl.bandwidth[i][j]
+    for d in new:
+        assert grown.devices[d].gpu.name == "A100"
+
+
+def test_reschedule_capacity_resolves_and_shifts_routes():
+    """A replica join re-solves max-flow: the joining devices get typed
+    (prefill or decode) and the φ→δ route set genuinely shifts."""
+    cl = PAPER_SETTINGS["hetero1"]()
+    wl = WORKLOADS["LPHD"]
+    base = schedule(cl, LLAMA2_70B, wl, max_refine_iters=2)
+    grown, new = grow_cluster(cl, [("A100", 4)])
+    cap = reschedule_capacity(grown, LLAMA2_70B, base, wl, new,
+                              max_refine_iters=2)
+    assert cap.placement.max_flow > 0
+    assert len(cap.partition.groups) > len(base.partition.groups)
+    covered = sorted(d for g in cap.partition.groups for d in g)
+    assert covered == list(range(grown.num_devices))
+    assert dict(cap.placement.kv_routes) != dict(base.placement.kv_routes)
+    with pytest.raises(AssertionError):
+        # joining devices must be NEW capacity, not already-placed ones
+        reschedule_capacity(grown, LLAMA2_70B, base, wl, [0, 1],
+                            max_refine_iters=2)
+
+
+# ---------------------------------------------------------------------------
+# Last-replica guard (Router.kill / Router.drain)
+# ---------------------------------------------------------------------------
+
+
+def _one_replica_router(**kw):
+    clock = StepClock()
+    rep = SimReplica(num_slots=2, max_prefill_batch=2, clock=clock)
+    return Router([rep], queue_capacity=8, clock=clock, **kw), clock
+
+
+def test_kill_last_live_replica_raises_fleet_exhausted():
+    router, _ = _one_replica_router()
+    for life in _flat(2):
+        router.submit(life)
+    with pytest.raises(FleetExhausted) as ei:
+        router.kill(0)
+    assert (ei.value.idx, ei.value.unfinished) == (0, 2)
+    assert router.replicas[0].alive          # refused, nothing changed
+    while router.unfinished:
+        router.step()
+    router.kill(0)                           # idle fleet: retirement is fine
+
+
+def test_drain_last_live_replica_raises_fleet_exhausted():
+    router, _ = _one_replica_router()
+    router.submit(_flat(1)[0])
+    with pytest.raises(FleetExhausted):
+        router.drain(0)
+
+
+def test_kill_last_replica_parks_when_capacity_joining():
+    """With a join in flight (capacity_hook), killing the last replica
+    parks the drained work in the queue; it completes once the new
+    replica spawns — full conservation across the gap."""
+    router, clock = _one_replica_router()
+    router.capacity_hook = lambda: True
+    for life in _flat(4):
+        router.submit(life)
+    router.step()
+    moved = router.kill(0)
+    assert moved                             # in-flight work was parked
+    assert router.unfinished == 4
+    router.spawn(SimReplica(num_slots=2, max_prefill_batch=2, clock=clock))
+    while router.unfinished:
+        router.step()
+    assert router.counters["admitted"] == 4
+    assert all(life.phase.value == "done"
+               for _, _, life in router.results())
+
+
+# ---------------------------------------------------------------------------
+# Auto-derived aging rate (satellite of §13)
+# ---------------------------------------------------------------------------
+
+
+def test_auto_age_every_tracks_overtaking_rate():
+    q = AdmissionQueue(capacity=64, age_every="auto")
+    assert q.age_every == 8                  # default until observed
+    # 2 interactive arrivals per step for 16 steps -> rate_hi = 2,
+    # promotion every step
+    for s in range(16):
+        q.observe_arrival(0, s)
+        q.observe_arrival(0, s)
+        q.observe_arrival(2, s)
+    assert q.age_every == 1
+    # sparse urgent traffic: one interactive every 8 steps -> ~8
+    q2 = AdmissionQueue(capacity=64, age_every="auto")
+    for s in range(0, 128, 8):
+        q2.observe_arrival(0, s)
+        q2.observe_arrival(2, s + 1)
+    assert 6 <= q2.age_every <= 10
+    # nothing can overtake a single class: age as slowly as allowed
+    q3 = AdmissionQueue(capacity=64, age_every="auto", auto_cap=64)
+    for s in range(32):
+        q3.observe_arrival(1, s)
+    assert q3.age_every == 64
+
+
+def test_auto_aging_preserves_starvation_bound():
+    """The §12 provable bound, re-checked under a DERIVED rate: if a
+    class-p entry pops while class-q (q < p) still waits, the popped
+    one waited >= age_every * (p - q) with the rate in effect at pop
+    time."""
+    q = AdmissionQueue(capacity=512, age_every="auto")
+    seq = 0
+    q.observe_arrival(2, 0)
+    q.push(_QEntry(Request(rid=0, s_in=1, s_out=1, arrival=0.0,
+                           priority=2), seq, 0))
+    seq += 1
+    rid = 1
+    for step in range(1, 40):
+        q.observe_arrival(0, step)
+        q.push(_QEntry(Request(rid=rid, s_in=1, s_out=1, arrival=0.0,
+                               priority=0), seq, step))
+        rid += 1
+        seq += 1
+        e = q.pop(step)
+        if e.life.priority == 2:
+            waited = step - e.enqueue_step
+            assert waited >= q.age_every * 2
+            break
+    else:
+        pytest.fail("aged batch entry never popped")
+
+
+# ---------------------------------------------------------------------------
+# EWMA completion-time estimator (satellite of §13)
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, s_out, tokens_out=None, latency=None, slo=None):
+    r = Request(rid=rid, s_in=8, s_out=s_out, arrival=0.0,
+                priority=0, slo_target_s=slo)
+    r.tokens_out = tokens_out
+    if latency is not None:
+        r.decode_end = latency
+    return r
+
+
+def test_ewma_estimator_learns_from_completions():
+    mon = WorkloadMonitor(WORKLOADS["LPLD"], estimator="ewma",
+                          ewma_alpha=0.5)
+    assert mon.estimated_s_out == WORKLOADS["LPLD"].s_out
+    mon.observe_completion(_req(0, s_out=40, tokens_out=40))
+    assert mon.estimated_s_out == 40
+    mon.observe_completion(_req(1, s_out=99, tokens_out=20))
+    assert mon.estimated_s_out == pytest.approx(30.0)   # truncation counts
+    # arrivals under "ewma" record the ESTIMATE, not the oracle length
+    mon.observe(_req(2, s_out=10 ** 6))
+    assert max(mon._s_out) < 100
+
+
+def test_oracle_estimator_still_reads_arrival_lengths():
+    mon = WorkloadMonitor(WORKLOADS["LPLD"])
+    mon.observe(_req(0, s_out=123))
+    assert 123 in mon._s_out
+
+
+def test_monitor_demand_signals():
+    mon = WorkloadMonitor(WORKLOADS["LPLD"], estimator="ewma")
+    for s in range(32):
+        mon.observe(_req(s, s_out=8), step=s)
+        if s % 4 == 0:
+            mon.observe(Request(rid=100 + s, s_in=4, s_out=4, arrival=0.0,
+                                priority=2), step=s)
+    assert mon.arrival_rate(31, window_steps=16) > 1.0
+    rates = mon.rates_by_class(31, window_steps=16)
+    assert rates[0] > rates[2] > 0
+    assert mon.recent_slo_attainment() is None
+    mon.observe_completion(_req(0, s_out=8, tokens_out=8, latency=1.0,
+                                slo=2.0))
+    mon.observe_completion(_req(1, s_out=8, tokens_out=8, latency=9.0,
+                                slo=2.0))
+    assert mon.recent_slo_attainment() == 0.5
+
+
+# ---------------------------------------------------------------------------
+# FleetController: lifecycle, scale-to-demand, hysteresis, accounting
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_scales_up_through_lifecycle_and_back_down():
+    res = simulate_fleet(_surge(), num_replicas=1, dt=0.05, autoscale=SPEC)
+    assert res.scale_up_events >= 1 and res.scale_down_events >= 1
+    by_kind = {}
+    for step, kind, rep in res.scale_events:
+        by_kind.setdefault((rep, kind), step)
+    up = by_kind[(1, "scale_up")]
+    live = by_kind[(1, "live")]
+    # PROVISIONING then WARMING complete before the replica joins
+    assert live - up >= SPEC.provision_steps + SPEC.warmup_steps
+    assert by_kind[(1, "scale_down")] > live
+    assert by_kind[(1, "dead")] > by_kind[(1, "scale_down")]
+    st = res.replica_steps_by_state
+    assert st["provisioning"] >= SPEC.provision_steps
+    assert st["warming"] >= SPEC.warmup_steps
+    assert st["live"] > st["warming"]
+    assert all(r.phase.value == "done" for r in res.requests)
+
+
+def test_elastic_beats_static_small_at_fraction_of_peak_cost():
+    small = simulate_fleet(_surge(), num_replicas=1, dt=0.05)
+    peak = simulate_fleet(_surge(), num_replicas=4, dt=0.05)
+    el = simulate_fleet(_surge(), num_replicas=1, dt=0.05, autoscale=SPEC)
+    assert el.slo_attainment_stated > small.slo_attainment_stated
+    assert (sum(el.replica_steps_by_state.values())
+            < sum(peak.replica_steps_by_state.values()))
+
+
+def test_hysteresis_no_scale_up_shadowing_a_scale_down():
+    res = simulate_fleet(_surge(), num_replicas=1, dt=0.05, autoscale=SPEC)
+    downs = [s for s, k, _ in res.scale_events if k == "scale_down"]
+    ups = [s for s, k, _ in res.scale_events if k == "scale_up"]
+    for d in downs:
+        assert not any(d < u < d + SPEC.hysteresis_steps for u in ups)
+
+
+def test_cold_window_stamps_warmup_ttft_penalty():
+    el = simulate_fleet(_surge(), num_replicas=1, dt=0.05, autoscale=SPEC)
+    cold = [r for r in el.requests if r.warmup_penalty_s > 0]
+    assert cold, "burst dispatches into the cold window must be stamped"
+    assert el.warmup_ttft_penalty_s == pytest.approx(
+        sum(r.warmup_penalty_s for r in el.requests))
+    assert max(r.warmup_penalty_s for r in cold) <= \
+        SPEC.cold_window_steps * 0.05 + 1e-9
+    nocold = simulate_fleet(
+        _surge(), num_replicas=1, dt=0.05,
+        autoscale=FleetSpec(**{**SPEC.__dict__, "cold_window_steps": 0}))
+    assert nocold.warmup_ttft_penalty_s == 0.0
+
+
+def test_elastic_run_is_deterministic():
+    a = simulate_fleet(_surge(), num_replicas=1, dt=0.05, autoscale=SPEC)
+    b = simulate_fleet(_surge(), num_replicas=1, dt=0.05, autoscale=SPEC)
+    assert a.scale_events == b.scale_events
+    assert a.replica_steps_by_state == b.replica_steps_by_state
+    assert a.summary() == b.summary()
+
+
+def test_fleet_repairs_to_min_replicas_after_external_kill():
+    """Failover meets elasticity: the seed replica dies mid-trace; the
+    controller re-provisions to the min_replicas floor (bypassing
+    dampers — healing is not flapping) and the trace completes."""
+    spec = FleetSpec(min_replicas=1, max_replicas=2, provision_steps=2,
+                     warmup_steps=3, sustain_steps=10 ** 6,
+                     cooldown_steps=10 ** 6, hysteresis_steps=10 ** 6)
+    trace = mixed_priority_workload(n=12, rate_rps=30.0, seed=2)
+    res = simulate_fleet(trace, num_replicas=1, dt=0.05, autoscale=spec,
+                         failures={3: 0})
+    kinds = [k for _, k, _ in res.scale_events]
+    assert "scale_up" in kinds and "live" in kinds and "dead" in kinds
+    assert all(r.phase.value == "done" for r in res.requests)
+    assert any(r.redispatches for r in res.requests)
+
+
+def test_monitor_slo_floor_triggers_scale_up():
+    """The WorkloadMonitor's attainment signal is a second up-trigger:
+    even with queue_high unreachable, missed stated SLOs scale the
+    fleet."""
+    spec = FleetSpec(min_replicas=1, max_replicas=3, provision_steps=2,
+                     warmup_steps=3, queue_high=10 ** 9, slo_floor=0.95,
+                     sustain_steps=3, cooldown_steps=8,
+                     hysteresis_steps=16)
+    mon = WorkloadMonitor(WORKLOADS["LPLD"], estimator="ewma")
+    res = simulate_fleet(_surge(), num_replicas=1, dt=0.05, autoscale=spec,
+                         monitor=mon)
+    assert res.scale_up_events >= 1
+    assert mon.completions > 0
+
+
+# ---------------------------------------------------------------------------
+# Metrics schema (§8 contract extended by §13)
+# ---------------------------------------------------------------------------
+
+
+def test_metric_fields_cover_elastic_and_static_fleets():
+    el = simulate_fleet(_surge(60, seed=5), num_replicas=1, dt=0.05,
+                        autoscale=SPEC)
+    static = simulate_fleet(_surge(60, seed=5), num_replicas=2, dt=0.05)
+    for res in (el, static):
+        for f in METRIC_FIELDS:
+            assert hasattr(res, f), f
+        assert all(np.isfinite(v) for v in res.summary().values())
+    # static fleets still report their replica-step cost denominator
+    assert static.replica_steps_by_state["live"] > 0
+    # on a static fleet the elastic scalars are exactly the bare
+    # ServeMetrics defaults — summary parity with the §8 schema
+    bare = ServeMetrics(static.requests, static.makespan,
+                        static.decode_tokens)
+    assert static.summary() == bare.summary()
+
+
+# ---------------------------------------------------------------------------
+# Sim-vs-runtime parity of controller decisions (the §13 contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_rt():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    return cfg, init_params(KEY, cfg)
+
+
+def test_sim_runtime_elastic_parity(small_rt):
+    """The same seeded burst through SimReplicas and through real
+    Coordinators, both under FleetControllers with the same spec: scale
+    events, per-state replica-step totals, and conservation counters
+    must agree EXACTLY."""
+    cfg, params = small_rt
+    spec = FleetSpec(min_replicas=1, max_replicas=2, provision_steps=2,
+                     warmup_steps=3, cold_window_steps=4, queue_high=0.5,
+                     sustain_steps=2, cooldown_steps=4, hysteresis_steps=8)
+
+    def trace():
+        return mixed_priority_workload(n=10, rate_rps=100.0, seed=7,
+                                       vocab=min(cfg.vocab, 256),
+                                       system_lens=(8, 6, 4),
+                                       user_lens=(4, 6, 8),
+                                       out_lens=(3, 5, 8))
+
+    sim = simulate_fleet(trace(), num_replicas=1, slots_per_replica=2,
+                         max_prefill_batch=2, capacity=96, dt=0.05,
+                         queue_capacity=8, autoscale=spec)
+    assert sim.scale_up_events >= 1      # the burst must exercise §13
+
+    clock = StepClock()
+
+    def factory(_slot):
+        return CoordinatorReplica(
+            Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=2, capacity=96,
+                        num_prefill_engines=1,
+                        prefix_cache_bytes=float("inf")),
+            max_prefill_batch=2, clock=clock)
+
+    router = Router([factory(0)], queue_capacity=8, clock=clock)
+    ctrl = FleetController(router, factory, spec, dt=0.05)
+    rt = ctrl.run_trace(trace())
+
+    assert [(e.step, e.kind, e.replica) for e in ctrl.events] == \
+        sim.scale_events
+    assert dict(ctrl.replica_steps_by_state) == sim.replica_steps_by_state
+    assert router.counters == sim.counters
+    assert rt.warmup_ttft_penalty_s == sim.warmup_ttft_penalty_s
+    # both on the shared virtual clock: per-class timing agrees too
+    # (kv_bytes are excluded — SimReplica doesn't model the runtime's
+    # intra-replica handoff bytes, same as the §12 parity test)
+    assert rt.avg_ttft_by_class == sim.avg_ttft_by_class
+    assert rt.slo_attainment_by_class == sim.slo_attainment_by_class
+    assert rt.makespan == sim.makespan

@@ -1,0 +1,172 @@
+"""Property tests for the §13 elastic fleet tier (hypothesis): request
+conservation under arbitrary join/drain/kill interleavings, the
+hysteresis bound on controller decisions, and METRIC_FIELDS schema
+parity for elastic results."""
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.serving import (FleetExhausted, FleetSpec, METRIC_FIELDS,  # noqa: E402
+                           Request, RequestState, Router, SimReplica,
+                           StepClock, simulate_fleet, surge_workload)
+from repro.serving.metrics import ServeMetrics  # noqa: E402
+
+
+def _rep(clock):
+    return SimReplica(num_slots=2, max_prefill_batch=2, clock=clock)
+
+
+# ---------------------------------------------------------------------------
+# Conservation across join / drain / kill interleavings
+# ---------------------------------------------------------------------------
+
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.integers(1, 4)),   # burst size
+        st.tuples(st.just("spawn"), st.just(0)),
+        st.tuples(st.just("drain"), st.integers(0, 7)),    # replica idx
+        st.tuples(st.just("kill"), st.integers(0, 7)),
+        st.tuples(st.just("step"), st.integers(1, 6)),     # step count
+    ),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops, st.integers(1, 3))
+def test_conservation_under_join_drain_kill_interleavings(script, seed_reps):
+    """Whatever interleaving of joins, graceful drains, and crash
+    kills the fleet suffers, no admitted request is ever lost: at the
+    end, admitted == done + still-in-system, and every completed
+    request carries its full token budget. ``FleetExhausted`` refusals
+    leave the router state intact."""
+    clock = StepClock()
+    router = Router([_rep(clock) for _ in range(seed_reps)],
+                    queue_capacity=256, clock=clock)
+    rid = 0
+    for op, arg in script:
+        if op == "submit":
+            for _ in range(arg):
+                router.submit(Request(rid=rid, s_in=3, s_out=3,
+                                      arrival=clock()))
+                rid += 1
+        elif op == "spawn":
+            router.spawn(_rep(clock))
+        elif op in ("drain", "kill"):
+            idx = arg % len(router.replicas)
+            before = ([r.alive for r in router.replicas],
+                      router.unfinished)
+            try:
+                if op == "drain":
+                    router.drain(idx)
+                else:
+                    router.kill(idx)
+            except FleetExhausted:
+                after = ([r.alive for r in router.replicas],
+                         router.unfinished)
+                assert before == after       # refusal mutates nothing
+        else:
+            for _ in range(arg):
+                clock.value += 0.05
+                router.step()
+    # drive to quiescence (spawn capacity if no dispatchable replica —
+    # alive-and-undraining — remains)
+    if router.unfinished and not any(
+            r.alive and i not in router._draining
+            for i, r in enumerate(router.replicas)):
+        router.spawn(_rep(clock))
+    guard = 0
+    while router.unfinished:
+        clock.value += 0.05
+        router.step()
+        guard += 1
+        assert guard < 10_000
+    c = router.counters
+    assert c["admitted"] + c["rejected"] == rid
+    done = [life for _, _, life in router.results()
+            if life.phase is RequestState.DONE]
+    assert len(done) == c["admitted"]
+    for life in done:
+        assert life.tokens_out == life.s_out
+
+
+# ---------------------------------------------------------------------------
+# Hysteresis bound on controller decisions
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 6), st.integers(4, 40), st.integers(2, 10),
+       st.floats(2.0, 8.0))
+def test_hysteresis_and_damper_bounds(seed, hysteresis, cooldown, surge):
+    """On any surge trace and damper setting: (a) no scale-up fires
+    within ``hysteresis_steps`` after a scale-down, (b) consecutive
+    scale decisions are at least ``cooldown_steps`` apart, (c) at most
+    one join is in flight at a time, and (d) the fleet never exceeds
+    ``max_replicas`` concurrent non-dead replicas."""
+    spec = FleetSpec(min_replicas=1, max_replicas=4, provision_steps=3,
+                     warmup_steps=5, sustain_steps=2,
+                     cooldown_steps=cooldown, hysteresis_steps=hysteresis)
+    res = simulate_fleet(surge_workload(80, 3.0, seed=seed, surge=surge),
+                         num_replicas=1, dt=0.05, autoscale=spec)
+    decisions = [(s, k) for s, k, _ in res.scale_events
+                 if k in ("scale_up", "scale_down")]
+    for (s1, _), (s2, _) in zip(decisions, decisions[1:]):
+        assert s2 - s1 >= cooldown
+    downs = [s for s, k in decisions if k == "scale_down"]
+    ups = [s for s, k in decisions if k == "scale_up"]
+    for d in downs:
+        assert not any(d < u < d + hysteresis for u in ups)
+    # joins are serialized and bounded by max_replicas
+    alive = 1
+    joining = 0
+    for s, k, _ in res.scale_events:
+        if k == "scale_up":
+            assert joining == 0
+            joining += 1
+        elif k == "live":
+            joining -= 1
+            alive += 1
+        elif k == "dead":
+            alive -= 1
+        assert alive + joining <= spec.max_replicas
+
+
+# ---------------------------------------------------------------------------
+# Schema parity for elastic results
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 4))
+def test_metric_fields_schema_parity_elastic(seed):
+    """Every METRIC_FIELDS name resolves on elastic FleetResults and on
+    bare ServeMetrics; summary() stays finite-scalar-only; the scale
+    scalars agree with the event stream; per-state replica-steps are
+    positive and account for every controller state seen."""
+    spec = FleetSpec(min_replicas=1, max_replicas=3, provision_steps=3,
+                     warmup_steps=4, cold_window_steps=3, sustain_steps=2,
+                     cooldown_steps=6, hysteresis_steps=12)
+    res = simulate_fleet(surge_workload(60, 3.0, seed=seed),
+                         num_replicas=1, dt=0.05, autoscale=spec)
+    bare = ServeMetrics(requests=list(res.requests), makespan=res.makespan,
+                        decode_tokens=res.decode_tokens)
+    for obj in (res, bare):
+        for f in METRIC_FIELDS:
+            assert hasattr(obj, f), f
+        s = obj.summary()
+        assert all(isinstance(v, float) and np.isfinite(v)
+                   for v in s.values())
+    assert res.scale_up_events == \
+        sum(1 for _, k, _ in res.scale_events if k == "scale_up")
+    assert res.scale_down_events == \
+        sum(1 for _, k, _ in res.scale_events if k == "scale_down")
+    assert all(isinstance(k, str) and v > 0
+               for k, v in res.replica_steps_by_state.items())
+    states = {k for _, k, _ in res.scale_events}
+    if "scale_up" in states:
+        assert {"provisioning", "warming"} <= \
+            set(res.replica_steps_by_state)
