@@ -17,9 +17,12 @@ unit:
 # trace through the radix prefix caches with cache-aware routing (§9),
 # then the int8+chunked KV-handoff codec end to end (§10), then the
 # §12 router fleet — 2 replicas, one killed mid-trace (the launcher
-# exits non-zero unless failover re-dispatch actually fired), then the
-# §13 elastic fleet — autoscaling on a surge trace (exits non-zero
-# unless a scale-up fires during the burst).
+# exits non-zero unless failover re-dispatch actually fired; this leg
+# also writes and schema-validates the §14 Chrome trace + Prometheus
+# snapshot via --trace-out/--metrics-out, exiting non-zero on a
+# malformed or empty trace), then the §13 elastic fleet — autoscaling
+# on a surge trace (exits non-zero unless a scale-up fires during the
+# burst).
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --requests 4 --prompt-len 12 \
 		--max-new 6 --decode-engines 2 --rate-rps 8
@@ -33,7 +36,8 @@ serve-smoke:
 		--max-new 6 --decode-engines 2 --slots 4 --rate-rps 8 \
 		--paged --page-size 16
 	$(PYTHON) -m repro.launch.serve --replicas 2 --requests 8 \
-		--max-new 5 --kill-replica
+		--max-new 5 --kill-replica --trace-out serve_trace.json \
+		--metrics-out serve_metrics.prom
 	$(PYTHON) -m repro.launch.serve --requests 12 --max-new 5 \
 		--rate-rps 40 --prefill-batch 2 --autoscale --surge-trace
 

@@ -40,6 +40,9 @@ from repro.core import (LLAMA2_70B, WORKLOADS, WorkloadMonitor,
 from repro.core.cluster import A100, PAPER_SETTINGS
 from repro.serving import (FleetSpec, mixed_priority_workload,
                            simulate_fleet, surge_workload)
+from repro.serving.telemetry import span_stream
+
+from benchmarks.router_fleet import breakdown_rows
 
 SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
@@ -89,6 +92,8 @@ def _scale_to_demand() -> List[Tuple[str, float, str]]:
                      f"ups={res.scale_up_events} "
                      f"downs={res.scale_down_events} "
                      f"warm_pen={res.warmup_ttft_penalty_s:.2f}s"))
+        if name == "elastic":
+            rows.extend(breakdown_rows("elastic", res))
     small, peak, el = (results["static_small"], results["static_peak"],
                        results["elastic"])
     gain = (el.slo_attainment_stated
@@ -222,7 +227,11 @@ def _cross_domain() -> List[Tuple[str, float, str]]:
     steps_ok = dict(ctrl.replica_steps_by_state) == \
         sim.replica_steps_by_state
     counters_ok = router.counters == sim.counters
-    ok = events_ok and steps_ok and counters_ok
+    # §14 parity contract: derived span streams bitwise-identical
+    sim_spans = span_stream(sim.requests, sim.dispatch_log)
+    rt_spans = span_stream(rt.requests, router.dispatch_log)
+    spans_ok = sim_spans == rt_spans
+    ok = events_ok and steps_ok and counters_ok and spans_ok
     rows = [
         ("elastic.sim_fleet.burst", sim_us,
          f"events={len(sim.scale_events)} "
@@ -233,15 +242,17 @@ def _cross_domain() -> List[Tuple[str, float, str]]:
         ("elastic.sim_vs_runtime", 0.0,
          f"scale_events_exact={events_ok} "
          f"replica_steps_exact={steps_ok} counters_exact={counters_ok} "
+         f"spans_exact={spans_ok} n_spans={len(sim_spans)} "
          f"{'PASS' if ok else 'FAIL'}"),
     ]
+    rows.extend(breakdown_rows("elastic.runtime", rt))
     if not ok:
         raise AssertionError(
             "sim and runtime fleet controllers must agree exactly on "
             f"the same trace: events {sim.scale_events} vs {rt_events}, "
             f"steps {sim.replica_steps_by_state} vs "
             f"{dict(ctrl.replica_steps_by_state)}, counters "
-            f"{sim.counters} vs {router.counters}")
+            f"{sim.counters} vs {router.counters}, spans_exact={spans_ok}")
     return rows
 
 

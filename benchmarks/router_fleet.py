@@ -30,6 +30,7 @@ import time
 from typing import List, Tuple
 
 from repro.serving import mixed_priority_workload, simulate_fleet
+from repro.serving.telemetry import span_stream
 
 SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
@@ -41,6 +42,25 @@ TRACE = (dict(n=60, rate_rps=60.0, seed=3, slo_s=(1.5, 6.0, 60.0))
 FLEET = dict(num_replicas=2, slots_per_replica=2, max_prefill_batch=2,
              capacity=128, dt=0.05, queue_capacity=96, age_every=40)
 KILL_STEP = 20 if SMOKE else 40
+
+
+def breakdown_rows(prefix: str, metrics) -> List[Tuple[str, float, str]]:
+    """§14 TTFT attribution report: per-class mean fractions of TTFT
+    spent in each pipeline stage. Also asserts the per-request
+    fractions partition TTFT exactly (sum to 1 within 1e-9)."""
+    for req in metrics.requests:
+        fr = req.ttft_fractions()
+        if fr is None:
+            continue
+        s = sum(fr.values())
+        if abs(s - 1.0) > 1e-9:
+            raise AssertionError(
+                f"ttft fractions must sum to 1.0: rid={req.rid} sum={s!r}")
+    rows = []
+    for cls, frac in sorted(metrics.ttft_breakdown.items()):
+        rows.append((f"{prefix}.ttft_breakdown.c{cls}", 0.0,
+                     " ".join(f"{k}={v:.3f}" for k, v in frac.items())))
+    return rows
 
 
 def _fleet_pair() -> List[Tuple[str, float, str]]:
@@ -60,6 +80,7 @@ def _fleet_pair() -> List[Tuple[str, float, str]]:
                      f"admitted={res.counters['admitted']} "
                      f"rejected={res.counters['rejected']} "
                      f"redispatched={res.counters['redispatched']}"))
+        rows.extend(breakdown_rows(f"router.{policy}", res))
     slo, rr = results["slo"], results["rr"]
     gain = (slo.slo_attainment_stated
             / max(rr.slo_attainment_stated, 1e-9))
@@ -109,7 +130,7 @@ def _runtime_fleet(reqs):
                     age_every=PARITY_FLEET["age_every"], policy="slo",
                     clock=clock)
     metrics = router.run_trace(reqs, dt=0.05, failures=PARITY_KILL)
-    return router.counters, metrics
+    return router.counters, metrics, list(router.dispatch_log)
 
 
 def _parity_trace(vocab: int):
@@ -131,11 +152,17 @@ def _cross_domain() -> List[Tuple[str, float, str]]:
     sim_us = (time.perf_counter() - t0) * 1e6
 
     t0 = time.perf_counter()
-    rt_counters, rt = _runtime_fleet(_parity_trace(vocab))
+    rt_counters, rt, rt_log = _runtime_fleet(_parity_trace(vocab))
     rt_us = (time.perf_counter() - t0) * 1e6
 
     counters_ok = rt_counters == sim.counters
     hits_ok = rt.cache_hit_rate_by_class == sim.cache_hit_rate_by_class
+    # §14 parity contract: the derived span streams (event types,
+    # per-request ordering, step-quantized durations) must be
+    # bitwise-identical across domains on the same seeded trace
+    sim_spans = span_stream(sim.requests, sim.dispatch_log)
+    rt_spans = span_stream(rt.requests, rt_log)
+    spans_ok = sim_spans == rt_spans
     rows = [
         ("router.sim_fleet.2rep_kill1", sim_us,
          " ".join(f"{k}={v}" for k, v in sorted(sim.counters.items()))),
@@ -143,13 +170,16 @@ def _cross_domain() -> List[Tuple[str, float, str]]:
          " ".join(f"{k}={v}" for k, v in sorted(rt_counters.items()))),
         ("router.sim_vs_runtime", 0.0,
          f"counters_exact={counters_ok} hit_by_class_exact={hits_ok} "
-         f"{'PASS' if counters_ok and hits_ok else 'FAIL'}"),
+         f"spans_exact={spans_ok} n_spans={len(sim_spans)} "
+         f"{'PASS' if counters_ok and hits_ok and spans_ok else 'FAIL'}"),
     ]
-    if not (counters_ok and hits_ok):
+    rows.extend(breakdown_rows("router.runtime", rt))
+    if not (counters_ok and hits_ok and spans_ok):
         raise AssertionError(
             "sim and runtime routers must agree exactly on the same "
             f"trace: counters {sim.counters} vs {rt_counters}, hit rates "
-            f"{sim.cache_hit_rate_by_class} vs {rt.cache_hit_rate_by_class}")
+            f"{sim.cache_hit_rate_by_class} vs {rt.cache_hit_rate_by_class}, "
+            f"spans_exact={spans_ok}")
     return rows
 
 

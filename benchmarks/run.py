@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import datetime
 import json
+import math
 import os
 import platform
 import subprocess
@@ -52,6 +53,20 @@ MODULES = {
     "router": "benchmarks.router_fleet",
     "elastic": "benchmarks.elastic_fleet",
 }
+
+
+def json_safe(obj):
+    """Recursively replace non-finite floats with ``None``: JSON has no
+    ``Infinity``/``NaN``, and ``ServeMetrics`` aggregates are ``inf``
+    for a class that never finished — ``json.dump`` would emit the
+    non-standard ``Infinity`` literal strict parsers reject."""
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, dict):
+        return {k: json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_safe(v) for v in obj]
+    return obj
 
 
 def _git_sha() -> str:
@@ -82,6 +97,7 @@ def write_artifact(name: str, rows: List[Tuple[str, float, str]],
         "rows": [{"name": n, "us_per_call": us, "derived": derived}
                  for n, us, derived in rows],
     }
+    artifact = json_safe(artifact)
     paths = [f"BENCH_{name}.json"]
     if artifact["config"]["smoke"]:
         # the tracked perf-trajectory record: smoke runs are CI-sized
@@ -93,7 +109,9 @@ def write_artifact(name: str, rows: List[Tuple[str, float, str]],
     for path in paths:
         try:
             with open(path, "w") as f:
-                json.dump(artifact, f, indent=2)
+                # allow_nan=False pins the sanitization: a non-finite
+                # value reaching here is a bug, not an "Infinity" token
+                json.dump(artifact, f, indent=2, allow_nan=False)
                 f.write("\n")
         except OSError as e:  # pragma: no cover — read-only checkouts
             print(f"{name}.ARTIFACT_SKIPPED,0.0,{e}", file=sys.stderr)

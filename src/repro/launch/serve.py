@@ -41,8 +41,48 @@ import numpy as np
 
 from repro.configs import ASSIGNED, get_config
 from repro.models import init_params
-from repro.serving import Coordinator, ServeRequest
+from repro.serving import Coordinator, ServeRequest, TraceRecorder
+from repro.serving.telemetry import (chrome_trace, dump_chrome_trace,
+                                     prometheus_text, validate_chrome_trace)
 from repro.serving.workload import PREFIX_TRACES, prefix_trace
+
+
+def _maybe_recorder(args):
+    """One shared §14 event bus when any observability output is
+    requested; None otherwise (telemetry stays zero-cost)."""
+    return TraceRecorder() if (args.trace_out or args.metrics_out) else None
+
+
+def _write_observability(args, m, recorder, *, dispatch_log=(),
+                         scale_events=(), gauges=None, dt=0.05,
+                         label="repro-serve") -> None:
+    """Export the run's telemetry: ``--trace-out`` writes Chrome
+    trace-event JSON and VALIDATES it against the schema (the launcher
+    exits non-zero on a malformed or empty trace — the CI smoke leg's
+    contract); ``--metrics-out`` writes a Prometheus text-exposition
+    snapshot of the shared metrics schema + live-window gauges."""
+    if args.trace_out:
+        trace = chrome_trace(m.requests, dispatch_log=dispatch_log,
+                             scale_events=scale_events, recorder=recorder,
+                             dt=dt, label=label)
+        errors = validate_chrome_trace(trace)
+        if errors:
+            raise SystemExit("[serve] --trace-out produced an invalid "
+                             "Chrome trace: " + "; ".join(errors[:5]))
+        dump_chrome_trace(args.trace_out, trace)
+        print(f"[serve] trace: {len(trace['traceEvents'])} events -> "
+              f"{args.trace_out} (load in Perfetto / chrome://tracing)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(prometheus_text(m, gauges))
+        print(f"[serve] metrics snapshot -> {args.metrics_out}")
+
+
+def _print_breakdown(m) -> None:
+    """The §14 TTFT attribution report, one line per priority class."""
+    for cls, frac in sorted(m.ttft_breakdown.items()):
+        print(f"[serve] ttft breakdown class{cls}: "
+              + " ".join(f"{k}={v:.3f}" for k, v in frac.items()))
 
 
 def _serve_fleet(cfg, params, args) -> None:
@@ -83,9 +123,11 @@ def _serve_fleet(cfg, params, args) -> None:
             max_prefill_batch=args.prefill_batch, clock=clock)
 
     seed_reps = 1 if args.autoscale else args.replicas
+    recorder = _maybe_recorder(args)
     router = Router([make_replica(i) for i in range(seed_reps)],
                     queue_capacity=max(16, 2 * args.requests),
-                    age_every="auto", policy="slo", clock=clock)
+                    age_every="auto", policy="slo", clock=clock,
+                    telemetry=recorder)
     ctrl = None
     if args.autoscale:
         spec = FleetSpec(min_replicas=1,
@@ -122,6 +164,12 @@ def _serve_fleet(cfg, params, args) -> None:
     print("[serve] cache hit by class: "
           + " ".join(f"class{k}={v:.3f}" for k, v in
                      sorted(m.cache_hit_rate_by_class.items())))
+    _print_breakdown(m)
+    _write_observability(
+        args, m, recorder, dispatch_log=router.dispatch_log,
+        scale_events=(ctrl.events if ctrl is not None else ()),
+        gauges=router.gauges, dt=0.05,
+        label=f"repro-serve-fleet-{cfg.name}")
     if ctrl is not None:
         print("[serve] scale events: "
               + (" ".join(f"{e.kind}@{e.step}(r{e.replica})"
@@ -195,6 +243,17 @@ def main() -> None:
                     help="with --autoscale: quiet → 6x burst → quiet "
                          "arrival pattern instead of a flat Poisson "
                          "trace")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's §14 span trace as Chrome "
+                         "trace-event JSON (Perfetto-loadable; one track "
+                         "per replica/engine, flow arrows across the "
+                         "φ→δ handoff); the launcher validates the "
+                         "emitted trace and exits non-zero if it is "
+                         "malformed or empty")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text-exposition snapshot of "
+                         "the shared metrics schema + TTFT attribution + "
+                         "live-window gauges")
     ap.add_argument("--stream", action="store_true",
                     help="print each token as it is generated")
     ap.add_argument("--full", action="store_true",
@@ -262,7 +321,9 @@ def main() -> None:
         if args.stream:
             print(f"  [stream] req {rid}: {tok}{' <done>' if fin else ''}")
 
-    sess = coord.session(max_prefill_batch=args.prefill_batch)
+    recorder = _maybe_recorder(args)
+    sess = coord.session(max_prefill_batch=args.prefill_batch,
+                         telemetry=recorder)
     pending = collections.deque(
         (float(arrivals[i]), r) for i, r in enumerate(reqs))
     t0 = time.perf_counter()
@@ -309,6 +370,9 @@ def main() -> None:
               f"shipped={m.kv_bytes_shipped:.0f}B "
               f"ratio={m.kv_compression_ratio:.2f} "
               f"measured_slab_ratio={slab_ratio:.2f}")
+    _print_breakdown(m)
+    _write_observability(args, m, recorder,
+                         label=f"repro-serve-{cfg.name}")
 
 
 if __name__ == "__main__":

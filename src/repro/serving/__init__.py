@@ -3,7 +3,11 @@
 lifecycle + metrics schema both domains report (DESIGN.md §8)."""
 from repro.serving.request import (IllegalTransition, Phase, Request,
                                    RequestState, TERMINAL_STATES,
-                                   TRANSITIONS)
+                                   TRANSITIONS, TTFT_BUCKETS)
+from repro.serving.telemetry import (Span, TelemetryEvent, TraceRecorder,
+                                     WindowedGauges, chrome_trace,
+                                     prometheus_text, request_spans,
+                                     span_stream, validate_chrome_trace)
 from repro.serving.metrics import METRIC_FIELDS, ServeMetrics
 from repro.serving.prefix_cache import (CacheStats, MatchResult, PrefixCache,
                                         route_score)
@@ -40,7 +44,10 @@ from repro.serving.paging import (BlockTable, NoFreeSlotError,
                                   shareable_pages)
 
 __all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
-           "TERMINAL_STATES",
+           "TERMINAL_STATES", "TTFT_BUCKETS",
+           "Span", "TelemetryEvent", "TraceRecorder", "WindowedGauges",
+           "chrome_trace", "prometheus_text", "request_spans",
+           "span_stream", "validate_chrome_trace",
            "TRANSITIONS", "METRIC_FIELDS", "ServeMetrics", "CacheStats",
            "MatchResult", "PrefixCache", "route_score", "PREFIX_TRACES",
            "TracePhase", "drifting_workload", "fewshot_agentic_workload",

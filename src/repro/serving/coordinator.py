@@ -120,10 +120,16 @@ class ServeSession:
     def __init__(self, coord: "Coordinator",
                  max_prefill_batch: int = 4,
                  inline_prefill: bool = False,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 telemetry=None):
         self.coord = coord
         self.max_prefill_batch = max(1, max_prefill_batch)
         self.inline_prefill = inline_prefill
+        #: §14 event bus (``telemetry.TraceRecorder`` or None): stage
+        #: events (prefill micro-batches, per-chunk KV installs,
+        #: preemptions) and per-engine utilization series. Optional —
+        #: None keeps every path byte-identical to the untraced run.
+        self.telemetry = telemetry
         self._clock = clock or time.perf_counter
         # an injected clock (the router's shared StepClock) is already
         # absolute trace time — don't rebase, or a session opened by a
@@ -214,7 +220,7 @@ class ServeSession:
             if take <= 0:
                 return False
         batch = [self._entries[self._queue.popleft()] for _ in range(take)]
-        t = self.now()
+        t = t_batch = self.now()
         for e in batch:
             e.life.advance(RequestState.PREFILLING, t)
         if self.inline_prefill:
@@ -229,6 +235,9 @@ class ServeSession:
         else:
             outs = self._route_and_prefill(batch)
         t = self.now()
+        if self.telemetry is not None:
+            self.telemetry.emit("prefill_batch", t_batch, track="session",
+                                dur=t - t_batch, batch=len(batch))
         for e in batch:
             first, cache, cached = outs[e.req.rid]
             e.life.cached_len = cached
@@ -356,6 +365,9 @@ class ServeSession:
                         kv_transfer.transfer(chunk)))
                         for (p0, _), chunk in zip(plan.bounds,
                                                   plan.split(encoded)))
+                    if self.telemetry is not None:
+                        landing = self._traced_landing(landing, e.req.rid,
+                                                       eng_idx)
                     eng.admit_chunked(e.req.rid, e.first, len(e.req.prompt),
                                       e.req.max_new_tokens, landing,
                                       tokens=tokens, reservation=resv)
@@ -391,8 +403,21 @@ class ServeSession:
             e.cache = None
             e.life.decode_group = eng_idx
             e.life.advance(RequestState.DECODING, self.now())
+            if self.telemetry is not None:
+                self.telemetry.emit("handoff", t0,
+                                    track=f"engine:{eng_idx}",
+                                    rid=e.req.rid, dur=self.now() - t0)
             progressed = True
         return progressed
+
+    def _traced_landing(self, landing, rid: int, eng_idx: int):
+        """Wrap a chunked-handoff landing stream so each layer-group
+        chunk install lands on the §14 bus as it happens."""
+        for ci, (p0, chunk) in enumerate(landing):
+            self.telemetry.emit("kv_chunk", self.now(),
+                                track=f"engine:{eng_idx}", rid=rid,
+                                chunk=ci, pos0=int(p0))
+            yield p0, chunk
 
     def _recompute(self, rid: int, eng: DecodeEngine) -> None:
         """Re-queue a page-preempted request for recompute (§11): its
@@ -406,6 +431,11 @@ class ServeSession:
         life = e.life
         life.kv_pages_allocated += eng.pop_page_stamp(rid)
         life.preemptions += 1
+        if self.telemetry is not None:
+            eng_idx = self.coord.decode_engines.index(eng)
+            self.telemetry.emit("preempt", self.now(),
+                                track=f"engine:{eng_idx}", rid=rid,
+                                preemptions=life.preemptions)
         snap = (life.kv_bytes_raw, life.kv_bytes_wire,
                 life.kv_serialized_s, life.kv_overlap_s, life.cached_len)
         life.restart()
@@ -498,7 +528,29 @@ class ServeSession:
         a = self._step_prefill()
         b = self._step_handoff()
         c = self._step_decode()
+        if self.telemetry is not None:
+            self._sample_gauges()
         return a or b or c
+
+    def _sample_gauges(self) -> None:
+        """One §14 utilization sample per session step: admission/
+        handoff backlog depths, per-engine slot and page occupancy,
+        per-prefill-engine prefix-cache fill."""
+        t = self.now()
+        rec = self.telemetry
+        rec.gauge("prefill_queue", t, len(self._queue), track="session")
+        rec.gauge("handoff_backlog", t, len(self._handoff),
+                  track="session")
+        for j, eng in enumerate(self.coord.decode_engines):
+            u = eng.util()
+            rec.gauge("active_slots", t, u["active_slots"],
+                      track=f"engine:{j}")
+            if "free_pages" in u:
+                rec.gauge("free_pages", t, u["free_pages"],
+                          track=f"engine:{j}")
+        for j, cache in enumerate(self.coord.prefix_caches or ()):
+            rec.gauge("prefix_cache_occupancy", t, cache.occupancy,
+                      track=f"prefill:{j}")
 
     @property
     def unfinished(self) -> int:

@@ -258,6 +258,17 @@ class DecodeEngine:
     def free_pages(self) -> int:
         return self.pool.free_pages if self.paged else 0
 
+    def util(self) -> Dict[str, int]:
+        """§14 utilization snapshot for the telemetry gauges: active vs
+        total decode slots, and (paged engines) free vs total pool
+        pages — the page-occupancy time series."""
+        out = {"active_slots": sum(1 for s in self.slots if s.active),
+               "num_slots": self.num_slots}
+        if self.paged:
+            out["free_pages"] = self.pool.free_pages
+            out["num_pages"] = self.pool.num_pages
+        return out
+
     def _reclaimable_slab_pages(self) -> int:
         """Pages slab eviction would ACTUALLY free: evictable-leaf slab
         pages whose only reference is the slab itself (a page an active

@@ -181,11 +181,19 @@ class FleetController:
             # remaining cold steps, in shared-clock seconds: a pure
             # function of step indices — identical in both domains
             life.warmup_penalty_s += (cold_until - step) * self.dt
+            if self.router.telemetry is not None:
+                self.router.telemetry.emit(
+                    "cold_window", step * self.dt,
+                    track=f"replica:{rec.router_idx}", rid=life.rid,
+                    penalty_s=(cold_until - step) * self.dt)
 
     # -- event helpers --------------------------------------------------
     def _emit(self, step: int, kind: str, slot: int,
               reason: str = "") -> None:
         self.events.append(ScaleEvent(step, kind, slot, reason))
+        if self.router.telemetry is not None:
+            self.router.telemetry.emit(kind, step * self.dt, slot=slot,
+                                       reason=reason)
 
     def _resolve(self, step: int, event: ScaleEvent) -> None:
         """Capacity drift: re-solve max-flow over the changed fleet
@@ -249,9 +257,14 @@ class FleetController:
             return
 
         up = q > spec.queue_high * max(cap, 1)
-        if (not up and self.monitor is not None
-                and spec.slo_floor is not None):
-            att = self.monitor.recent_slo_attainment()
+        if not up and spec.slo_floor is not None:
+            # demand signal for the SLO trigger: a WorkloadMonitor when
+            # wired, else the router's §14 rolling window — the gauges
+            # are fed at the shared terminal sweep, so this fallback
+            # stays a pure function of step indices (parity-exact)
+            att = (self.monitor.recent_slo_attainment()
+                   if self.monitor is not None
+                   else self.router.gauges.slo_attainment())
             up = att is not None and att < spec.slo_floor
         self._up_pressure = self._up_pressure + 1 if up else 0
 

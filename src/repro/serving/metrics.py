@@ -47,8 +47,15 @@ from repro.serving.request import Request, RequestState
 #: EXACTLY on the same trace. The ``*_by_class`` fields are dicts keyed
 #: by priority class — part of the schema contract but deliberately NOT
 #: in ``summary()`` (summary values must stay finite scalars).
-METRIC_FIELDS = ("decode_throughput", "avg_latency", "p99_latency",
-                 "avg_ttft", "p99_ttft", "avg_tpot", "slo_attainment",
+#: §14 telemetry adds the medians (``p50_*`` — what dashboards alert
+#: on; p99-only hides the bimodality cold windows introduce) and
+#: ``ttft_breakdown``, the per-priority-class TTFT attribution report
+#: (dict-valued, so NOT in ``summary()``; fractions per request sum to
+#: exactly 1.0 — see ``Request.ttft_fractions``).
+METRIC_FIELDS = ("decode_throughput", "avg_latency", "p50_latency",
+                 "p99_latency",
+                 "avg_ttft", "p50_ttft", "p99_ttft",
+                 "avg_tpot", "slo_attainment",
                  "cache_hit_rate", "reused_tokens",
                  "prefill_tokens_computed",
                  "kv_bytes_shipped", "kv_compression_ratio",
@@ -60,7 +67,8 @@ METRIC_FIELDS = ("decode_throughput", "avg_latency", "p99_latency",
                  "avg_ttft_by_class", "slo_attainment_by_class",
                  "cache_hit_rate_by_class",
                  "scale_up_events", "scale_down_events",
-                 "warmup_ttft_penalty_s", "replica_steps_by_state")
+                 "warmup_ttft_penalty_s", "replica_steps_by_state",
+                 "ttft_breakdown")
 
 
 @dataclasses.dataclass
@@ -95,12 +103,20 @@ class ServeMetrics:
         return self._stat("latency", np.mean)
 
     @property
+    def p50_latency(self) -> float:
+        return self._stat("latency", lambda v: np.percentile(v, 50))
+
+    @property
     def p99_latency(self) -> float:
         return self._stat("latency", lambda v: np.percentile(v, 99))
 
     @property
     def avg_ttft(self) -> float:
         return self._stat("ttft", np.mean)
+
+    @property
+    def p50_ttft(self) -> float:
+        return self._stat("ttft", lambda v: np.percentile(v, 50))
 
     @property
     def p99_ttft(self) -> float:
@@ -268,6 +284,26 @@ class ServeMetrics:
                         if total else 0.0)
         return out
 
+    # -- telemetry fields (DESIGN.md §14) -------------------------------
+    @property
+    def ttft_breakdown(self) -> Dict[int, Dict[str, float]]:
+        """The TTFT attribution report: mean fraction of TTFT spent in
+        each ``TTFT_BUCKETS`` bucket (queue / prefill / transfer /
+        warmup / decode_first), per priority class, over requests that
+        produced a first token. Every contributing request's fractions
+        sum to exactly 1.0 (``Request.ttft_fractions``), so each
+        class's means do too. Classes that never served are omitted."""
+        from repro.serving.request import TTFT_BUCKETS
+        out: Dict[int, Dict[str, float]] = {}
+        for cls, rs in self._classes().items():
+            fracs = [f for f in (r.ttft_fractions() for r in rs)
+                     if f is not None]
+            if not fracs:
+                continue
+            out[cls] = {k: float(np.mean([f[k] for f in fracs]))
+                        for k in TTFT_BUCKETS}
+        return out
+
     def slo_attainment(self, slo_per_request: Dict[int, float],
                        scale: float) -> float:
         ok = sum(1 for r in self.requests
@@ -280,8 +316,10 @@ class ServeMetrics:
         """The schema as one flat dict (benchmark/report rows)."""
         out = {"decode_throughput": self.decode_throughput,
                "avg_latency": self.avg_latency,
+               "p50_latency": self.p50_latency,
                "p99_latency": self.p99_latency,
                "avg_ttft": self.avg_ttft,
+               "p50_ttft": self.p50_ttft,
                "p99_ttft": self.p99_ttft,
                "avg_tpot": self.avg_tpot,
                "cache_hit_rate": self.cache_hit_rate,

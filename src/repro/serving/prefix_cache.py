@@ -339,6 +339,15 @@ class PrefixCache:
     def hit_rate(self) -> float:
         return self.stats.hits / max(self.stats.lookups, 1)
 
+    @property
+    def occupancy(self) -> float:
+        """Budget fill fraction in [0, 1] — the §14 telemetry gauge.
+        Unbounded caches (capacity inf) report 0.0: there is no budget
+        to fill, and a non-finite gauge would poison the time series."""
+        if self.capacity_bytes == float("inf"):
+            return 0.0
+        return min(self.used_bytes / max(self.capacity_bytes, 1e-12), 1.0)
+
 
 # ---------------------------------------------------------------------------
 # Cache-aware routing score (mirrors vLLM production-stack's KV router)

@@ -65,6 +65,19 @@ class IllegalTransition(RuntimeError):
     pass
 
 
+#: TTFT attribution buckets (DESIGN.md §14), in report order. Each
+#: served request's time-to-first-token partitions EXACTLY into these:
+#: ``queue`` (admission wait, the remainder after everything
+#: accountable), ``prefill`` (compute between prefill_start and
+#: prefill_end), ``transfer`` (redo-exposed serialized KV shipping a
+#: preempted/redispatched request paid before its final prefill),
+#: ``warmup`` (§13 cold-window penalty), and ``decode_first`` (first
+#: emission deferred past handoff — structurally 0.0 in the current
+#: pipeline, where prefill itself emits the first token; reserved for
+#: async-handoff engines).
+TTFT_BUCKETS = ("queue", "prefill", "transfer", "warmup", "decode_first")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -210,6 +223,49 @@ class Request:
         if n <= 1:
             return 0.0
         return (self.decode_end - self.prefill_end) / (n - 1)
+
+    def ttft_attribution(self) -> Optional[dict]:
+        """Where this request's TTFT went, in seconds per
+        ``TTFT_BUCKETS`` bucket — an EXACT partition (buckets sum to
+        ``ttft`` to the float) derived purely from lifecycle stamps,
+        so both domains report identical attributions on a shared
+        clock. None until the first token exists.
+
+        The final attempt's prefill compute is read off the stamps;
+        warm-up and redo-exposed transfer are carved out of the
+        remaining wait (clamped — they can never exceed what was
+        actually waited); queue takes the exact remainder, which is
+        what makes the fractions sum to 1.0 without epsilon games."""
+        if self.prefill_end is None or self.prefill_start is None:
+            return None
+        total = self.ttft
+        prefill = min(max(self.prefill_end - self.prefill_start, 0.0), total)
+        rest = total - prefill
+        warmup = min(self.warmup_penalty_s, rest)
+        rest -= warmup
+        transfer = 0.0
+        if self.preemptions or self.redispatches:
+            # KV this request shipped before a preemption was thrown
+            # away and re-done — serialized (non-overlapped) stream
+            # time it paid inside its pre-first-token wait
+            transfer = min(max(self.kv_serialized_s - self.kv_overlap_s,
+                               0.0), rest)
+            rest -= transfer
+        return {"queue": rest, "prefill": prefill, "transfer": transfer,
+                "warmup": warmup, "decode_first": 0.0}
+
+    def ttft_fractions(self) -> Optional[dict]:
+        """``ttft_attribution`` normalized to fractions summing to
+        exactly 1.0; a zero-TTFT request (arrival and first token on
+        the same virtual step) attributes fully to ``queue``."""
+        att = self.ttft_attribution()
+        if att is None:
+            return None
+        total = sum(att.values())
+        if total <= 0.0:
+            return {k: (1.0 if k == "queue" else 0.0)
+                    for k in TTFT_BUCKETS}
+        return {k: v / total for k, v in att.items()}
 
     @property
     def is_heavy_prefill(self) -> bool:

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.serving.prefix_cache import route_score
 from repro.serving.request import Request, RequestState
+from repro.serving.telemetry import TraceRecorder, WindowedGauges
 
 #: Conventional priority classes (smaller = more urgent). Any int works.
 PRIORITY_INTERACTIVE = 0
@@ -248,7 +249,9 @@ class Router:
                  queue_capacity: int = 64, age_every: int = 8,
                  policy: str = "slo", cache_alpha: float = 2.0,
                  route_weights: Optional[Sequence[float]] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 gauge_window: int = 64,
+                 telemetry: Optional[TraceRecorder] = None):
         assert policy in ("slo", "rr"), policy
         self.replicas = list(replicas)
         n = len(self.replicas)
@@ -286,6 +289,12 @@ class Router:
         #: (rid, priority, submit_step, dispatch_step, replica,
         #:  redispatch) rows — the property tests' window into ordering
         self.dispatch_log: List[Dict[str, int]] = []
+        #: §14 telemetry: rolling-window live gauges fed at the terminal
+        #: sweep (both domains drive this same code, so the windows are
+        #: parity-exact), and an optional event bus for stage events /
+        #: utilization series (None = zero overhead)
+        self.gauges = WindowedGauges(gauge_window)
+        self.telemetry = telemetry
 
     # -- clock ----------------------------------------------------------
     def now(self) -> float:
@@ -319,6 +328,9 @@ class Router:
             self.on_submit(life, self._step_idx)
         if len(self.queue) >= self.queue.capacity:
             life.advance(RequestState.REJECTED, self.now())
+            if self.telemetry is not None:
+                self.telemetry.emit("reject", self.now(), rid=rid,
+                                    queue_len=len(self.queue))
             raise AdmissionRejected(rid, len(self.queue),
                                     self.queue.capacity)
         self.queue.push(_QEntry(life, entry.seq, entry.submit_step))
@@ -415,6 +427,9 @@ class Router:
             raise FleetExhausted(idx, self.unfinished)
         rep.alive = False
         self._draining.discard(idx)
+        if self.telemetry is not None:
+            self.telemetry.emit("kill", self.now(), track=f"replica:{idx}",
+                                inflight=self._inflight[idx])
         moved = []
         for life in rep.drain_in_flight():
             entry = self._entries[life.rid]
@@ -510,6 +525,13 @@ class Router:
                 submit_step=qe.enqueue_step,
                 dispatch_step=self._step_idx, replica=idx,
                 redispatch=entry.life.redispatches))
+            if self.telemetry is not None:
+                kind = ("redispatch" if entry.life.redispatches
+                        else "dispatch")
+                self.telemetry.emit(kind, self.now(),
+                                    track=f"replica:{idx}",
+                                    rid=entry.life.rid,
+                                    step=self._step_idx)
             did = True
         return did
 
@@ -533,10 +555,21 @@ class Router:
                 entry.life.tokens_out = len(entry.tokens)
             if entry.life.decode_end is not None:
                 self._makespan = max(self._makespan, entry.life.decode_end)
+            # §14: feed the live window at the terminal edge — shared
+            # router code, so both domains observe identical sequences
+            self.gauges.observe(entry.life, self._step_idx)
         for i in list(self._draining):       # graceful-retire completion
             if self._inflight[i] == 0:
                 self.replicas[i].alive = False
                 self._draining.discard(i)
+        self.gauges.advance(self._step_idx)
+        if self.telemetry is not None:
+            t = self.now()
+            self.telemetry.gauge("queue_depth", t, len(self.queue))
+            for i, rep in enumerate(self.replicas):
+                if rep.alive:
+                    self.telemetry.gauge("inflight", t, self._inflight[i],
+                                         track=f"replica:{i}")
         self._step_idx += 1
         return progressed
 
@@ -637,10 +670,11 @@ class CoordinatorReplica:
     (queue depth belongs to the router, where priorities exist)."""
 
     def __init__(self, coord: Any, max_prefill_batch: int = 4,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 telemetry: Optional[TraceRecorder] = None):
         self.coord = coord
         self.session = coord.session(max_prefill_batch=max_prefill_batch,
-                                     clock=clock)
+                                     clock=clock, telemetry=telemetry)
         self.alive = True
 
     @property

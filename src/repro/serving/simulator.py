@@ -142,9 +142,13 @@ class _DisaggSim:
                  cache_alpha: float = 2.0,
                  prefix_budget_fraction: float = 0.5,
                  kv_codec=None, paged_kv: bool = False,
-                 page_size: int = PAGE_SIZE):
+                 page_size: int = PAGE_SIZE, telemetry=None):
         self.cluster = cluster
         self.profile = profile
+        #: §14 event bus (``telemetry.TraceRecorder`` or None): the
+        #: scheduling domain's stage events and utilization series —
+        #: per-group queue depth / decode batch / page occupancy
+        self.telemetry = telemetry
         self.chunk_tokens = chunk_tokens
         self.typical_context = typical_context
         self.prefix_caching = prefix_caching
@@ -315,6 +319,12 @@ class _DisaggSim:
         redo = self.recompute_tokens.get(req.rid, 0)
         lat = prefill_latency(self.cluster, self.profile, srv.replica.plan,
                               1, req.s_in + redo, cached_len=req.cached_len)
+        if self.telemetry is not None:
+            gid = srv.replica.group_id
+            self.telemetry.emit("prefill", t, track=f"prefill:{gid}",
+                                rid=req.rid, dur=lat)
+            self.telemetry.gauge("prefill_queue", t, len(srv.queue),
+                                 track=f"prefill:{gid}")
         self.push(t + lat, "prefill_done",
                   (self.epoch, srv.replica.group_id, req))
 
@@ -348,6 +358,10 @@ class _DisaggSim:
         srv.pool.release(pages)
         req.kv_pages_allocated += len(pages)
         req.preemptions += 1
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                "preempt", t, track=f"decode:{srv.replica.group_id}",
+                rid=req.rid, preemptions=req.preemptions)
         self.recompute_tokens[req.rid] = req.s_out - rem
         pin = self._pins.pop(req.rid, None)
         if pin is not None:
@@ -407,6 +421,13 @@ class _DisaggSim:
                            for r, rem in srv.active]))
         step = decode_step_latency(self.cluster, self.profile,
                                    srv.replica.plan, batch, max(ctx, 1))
+        if self.telemetry is not None:
+            gid = srv.replica.group_id
+            self.telemetry.gauge("decode_batch", t, batch,
+                                 track=f"decode:{gid}")
+            if srv.pool is not None:
+                self.telemetry.gauge("free_pages", t, srv.pool.free_pages,
+                                     track=f"decode:{gid}")
         self.push(t + self.chunk_tokens * step, "round_done",
                   (self.epoch, srv.replica.group_id))
 
@@ -692,7 +713,7 @@ def simulate(cluster: ClusterSpec, profile: ModelProfile,
              cache_alpha: float = 2.0,
              prefix_budget_fraction: float = 0.5,
              kv_codec=None, paged_kv: bool = False,
-             page_size: int = PAGE_SIZE) -> SimResult:
+             page_size: int = PAGE_SIZE, telemetry=None) -> SimResult:
     """Deterministic: dispatch is load-corrected flow-proportional, so
     the same placement and trace always produce the same result.
 
@@ -721,7 +742,7 @@ def simulate(cluster: ClusterSpec, profile: ModelProfile,
                      cache_alpha=cache_alpha,
                      prefix_budget_fraction=prefix_budget_fraction,
                      kv_codec=kv_codec, paged_kv=paged_kv,
-                     page_size=page_size)
+                     page_size=page_size, telemetry=telemetry)
     if not sim.feasible:
         return SimResult(requests, float("inf"), 0)
     sim.run(requests)
@@ -740,7 +761,8 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
                     cache_alpha: float = 2.0,
                     prefix_budget_fraction: float = 0.5,
                     kv_codec=None, paged_kv: bool = False,
-                    page_size: int = PAGE_SIZE) -> OnlineSimResult:
+                    page_size: int = PAGE_SIZE,
+                    telemetry=None) -> OnlineSimResult:
     """Simulate with online workload-drift rescheduling.
 
     ``monitor`` is a ``repro.core.scheduler.WorkloadMonitor`` (or any
@@ -762,7 +784,7 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
                      cache_alpha=cache_alpha,
                      prefix_budget_fraction=prefix_budget_fraction,
                      kv_codec=kv_codec, paged_kv=paged_kv,
-                     page_size=page_size)
+                     page_size=page_size, telemetry=telemetry)
     if not sim.feasible:
         return OnlineSimResult(requests, float("inf"), 0, [])
     state = {"last": -float("inf")}
@@ -1114,8 +1136,8 @@ def simulate_fleet(requests: List[Request], num_replicas: int = 2,
                    route_weights=None,
                    failures: Optional[Dict[int, int]] = None,
                    cancels: Optional[Dict[int, List[int]]] = None,
-                   autoscale=None, monitor=None, resolver=None
-                   ) -> FleetResult:
+                   autoscale=None, monitor=None, resolver=None,
+                   telemetry=None) -> FleetResult:
     """Scheduling-domain fleet serve (DESIGN.md §12): the SAME
     ``Router`` the runtime uses, over ``SimReplica`` handles on a
     virtual step clock. ``failures`` maps router step -> replica index
@@ -1143,7 +1165,7 @@ def simulate_fleet(requests: List[Request], num_replicas: int = 2,
     router = Router(reps, queue_capacity=queue_capacity,
                     age_every=age_every, policy=policy,
                     cache_alpha=cache_alpha, route_weights=route_weights,
-                    clock=clock)
+                    clock=clock, telemetry=telemetry)
     if autoscale is not None:
         from repro.serving.fleet import FleetController
         ctrl = FleetController(router, make_replica, autoscale, dt=dt,

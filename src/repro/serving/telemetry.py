@@ -1,0 +1,513 @@
+"""End-to-end serving telemetry (DESIGN.md §14).
+
+Three layers, all optional and zero-cost when unused:
+
+1. **Span timelines** — ``request_spans``/``span_stream`` derive a
+   per-request stage timeline (queue → prefill → KV transfer → decode,
+   plus §10 serialized/overlap sub-spans and §12 dispatch/redispatch
+   markers) as a *pure function* of the §8 lifecycle stamps and the
+   router's dispatch log. Because both domains stamp those records
+   identically on a shared ``StepClock`` (the §12/§13 parity
+   contracts), the derived span streams are bitwise-identical across
+   simulator and runtime on the same seeded trace — the new parity
+   surface this module adds.
+
+2. **Live event bus** — ``TraceRecorder`` collects domain-flavored
+   stage events (prefill micro-batches, per-chunk KV installs,
+   preemptions, scale transitions) and utilization time series
+   (admission-queue depth, active decode slots, page-pool occupancy)
+   emitted by the Router / ServeSession / SimReplica paths as they
+   run. These enrich the exported trace but are deliberately *outside*
+   the parity surface: each domain reports its own machinery.
+
+3. **Rolling-window gauges** — ``WindowedGauges`` maintains windowed
+   TTFT/TPOT/SLO-attainment/hit-rate over recent completions so the
+   Router and FleetController can consume *observed* windows (the §13
+   ``slo_floor`` trigger falls back to these when no WorkloadMonitor
+   is wired) instead of end-of-run aggregates.
+
+Exports: ``chrome_trace`` renders everything as Chrome trace-event
+JSON (Perfetto-loadable: one track per replica/engine, flow arrows
+following each request across the φ→δ handoff), ``prometheus_text``
+renders a text-exposition snapshot, and ``validate_chrome_trace``
+checks an emitted trace against the trace-event schema (the serve
+smoke's ``--trace-out`` leg exits non-zero on violations).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from collections import deque
+from typing import (Any, Deque, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
+
+from repro.serving.request import Request, RequestState, TTFT_BUCKETS
+
+__all__ = [
+    "Span", "TelemetryEvent", "TraceRecorder", "WindowedGauges",
+    "request_spans", "span_stream", "chrome_trace", "prometheus_text",
+    "validate_chrome_trace", "TTFT_BUCKETS",
+]
+
+
+# ---------------------------------------------------------------------------
+# Span derivation (the parity surface)
+# ---------------------------------------------------------------------------
+
+#: canonical pipeline order; also the Perfetto lane (tid) per stage
+SPAN_LANES: Dict[str, int] = {
+    "queue": 0, "prefill": 1, "transfer": 2, "transfer:wire": 2,
+    "transfer:overlap": 2, "decode": 3, "rejected": 4, "cancelled": 4,
+    "dispatch": 4, "redispatch": 4,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Span:
+    """One stage interval of one request, in trace seconds."""
+    rid: int
+    name: str
+    start: float
+    end: float
+    args: Tuple[Tuple[str, Any], ...] = ()
+
+    @property
+    def dur(self) -> float:
+        return self.end - self.start
+
+
+def request_spans(req: Request) -> List[Span]:
+    """Derive the stage timeline of one request from its §8 lifecycle
+    stamps. Pure: same stamps → same spans, which is what makes the
+    sim-vs-runtime span streams comparable bit-for-bit.
+
+    A DONE multi-token request yields exactly
+    ``queue → prefill → transfer → decode`` (plus §10
+    ``transfer:wire``/``transfer:overlap`` sub-spans when KV actually
+    shipped); a single-token request collapses transfer/decode to
+    zero-length spans at prefill end (§8's PREFILLING→DONE shortcut
+    stamps all three ends at the same instant). REJECTED and CANCELLED
+    requests yield a terminal marker after whatever stages they
+    completed."""
+    out: List[Span] = []
+    if req.phase is RequestState.REJECTED:
+        return [Span(req.rid, "rejected", req.arrival, req.arrival)]
+    if req.prefill_start is None:
+        if req.phase is RequestState.CANCELLED:
+            return [Span(req.rid, "cancelled", req.arrival, req.arrival)]
+        return out                       # still QUEUED at trace end
+    out.append(Span(req.rid, "queue", req.arrival, req.prefill_start))
+    last = req.prefill_start
+    if req.prefill_end is not None:
+        out.append(Span(req.rid, "prefill", req.prefill_start,
+                        req.prefill_end,
+                        args=(("cached_len", req.cached_len),)))
+        last = req.prefill_end
+    if req.transfer_end is not None and req.prefill_end is not None:
+        args: Tuple[Tuple[str, Any], ...] = ()
+        if req.kv_bytes_wire:
+            args = (("kv_bytes_wire", req.kv_bytes_wire),)
+        out.append(Span(req.rid, "transfer", req.prefill_end,
+                        req.transfer_end, args=args))
+        # §10 sub-spans: serialized stream vs the part hidden under
+        # prefill compute — derived from the same stamps both domains
+        # accumulate via kv_compression, so they agree exactly too
+        if req.kv_serialized_s > 0.0:
+            out.append(Span(req.rid, "transfer:wire", req.prefill_end,
+                            req.prefill_end + req.kv_serialized_s))
+        if req.kv_overlap_s > 0.0:
+            out.append(Span(req.rid, "transfer:overlap", req.prefill_end,
+                            req.prefill_end + req.kv_overlap_s))
+        last = req.transfer_end
+    if req.decode_end is not None and req.transfer_end is not None:
+        out.append(Span(req.rid, "decode", req.transfer_end,
+                        req.decode_end,
+                        args=(("tokens_out", req.tokens_out),)))
+        last = req.decode_end
+    if req.phase is RequestState.CANCELLED:
+        out.append(Span(req.rid, "cancelled", last, last))
+    return out
+
+
+def span_stream(requests: Iterable[Request],
+                dispatch_log: Sequence[Dict[str, int]] = (),
+                ndigits: int = 9) -> List[Tuple[int, str, float, float]]:
+    """Canonical ordered span stream for parity comparison:
+    ``(rid, name, start, dur)`` rounded to ``ndigits``, grouped by rid
+    in rid order — lifecycle spans in pipeline order, then §12
+    dispatch/redispatch markers in dispatch-step order (marker times
+    are *step indices*, already integral in both domains). Two runs
+    that made identical decisions at identical steps produce equal
+    streams; any divergence shows up as a first differing tuple."""
+    markers: Dict[int, List[Tuple[int, str, float, float]]] = {}
+    for row in dispatch_log:
+        kind = "redispatch" if row.get("redispatch") else "dispatch"
+        markers.setdefault(int(row["rid"]), []).append(
+            (int(row["rid"]), kind, float(row["dispatch_step"]), 0.0))
+    out: List[Tuple[int, str, float, float]] = []
+    for req in sorted(requests, key=lambda r: r.rid):
+        for sp in request_spans(req):
+            out.append((sp.rid, sp.name, round(sp.start, ndigits),
+                        round(sp.dur, ndigits)))
+        out.extend(sorted(markers.get(req.rid, ()), key=lambda m: m[2]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Live event bus
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryEvent:
+    """One bus event: an instant (``dur == 0``) or a stage interval."""
+    ts: float
+    kind: str
+    track: str
+    rid: Optional[int] = None
+    dur: float = 0.0
+    args: Tuple[Tuple[str, Any], ...] = ()
+
+
+class TraceRecorder:
+    """Structured event bus both domains drive.
+
+    ``emit`` records stage events (kv chunk installs, preemptions,
+    scale transitions); ``gauge`` appends to a named per-track time
+    series (queue depth, active slots, free pages). Everything is
+    in-memory and append-only; ``chrome_trace`` turns it into counter
+    tracks and instant events."""
+
+    def __init__(self) -> None:
+        self.events: List[TelemetryEvent] = []
+        #: (track, name) -> [(ts, value)]
+        self.series: Dict[Tuple[str, str], List[Tuple[float, float]]] = {}
+
+    def emit(self, kind: str, ts: float, *, track: str = "router",
+             rid: Optional[int] = None, dur: float = 0.0,
+             **args: Any) -> None:
+        self.events.append(TelemetryEvent(
+            ts=float(ts), kind=kind, track=track, rid=rid, dur=float(dur),
+            args=tuple(sorted(args.items()))))
+
+    def gauge(self, name: str, ts: float, value: float,
+              track: str = "router") -> None:
+        self.series.setdefault((track, name), []).append(
+            (float(ts), float(value)))
+
+    def clear(self) -> None:
+        self.events.clear()
+        self.series.clear()
+
+
+# ---------------------------------------------------------------------------
+# Rolling-window live gauges
+# ---------------------------------------------------------------------------
+
+
+class WindowedGauges:
+    """Windowed TTFT/TPOT/SLO-attainment/hit-rate over the last
+    ``window_steps`` router steps' completions — the *observed* signal
+    scale/route policies consume (§13 ``slo_floor`` reads
+    ``slo_attainment()`` when no WorkloadMonitor is wired). Driven at
+    the router's terminal sweep, so both domains observe identical
+    sequences on the same seeded trace."""
+
+    def __init__(self, window_steps: int = 64) -> None:
+        self.window_steps = int(window_steps)
+        #: (step, ttft, tpot, slo_ok, s_in, cached_len)
+        self._done: Deque[Tuple[int, float, float, Optional[bool],
+                                int, int]] = deque()
+        self._step = 0
+
+    def observe(self, life: Request, step: int) -> None:
+        self._step = max(self._step, int(step))
+        if life.phase is not RequestState.DONE:
+            return
+        slo_ok: Optional[bool] = None
+        if life.slo_target_s is not None and life.latency is not None:
+            # judged on end-to-end latency, same as the §8 schema's
+            # slo_attainment_stated — the floor trigger and the final
+            # report must not disagree about what an SLO miss is
+            slo_ok = life.latency <= life.slo_target_s
+        self._done.append((int(step), life.ttft or 0.0, life.tpot or 0.0,
+                           slo_ok, life.s_in, life.cached_len))
+        self._trim()
+
+    def advance(self, step: int) -> None:
+        self._step = max(self._step, int(step))
+        self._trim()
+
+    def _trim(self) -> None:
+        lo = self._step - self.window_steps
+        while self._done and self._done[0][0] < lo:
+            self._done.popleft()
+
+    def count(self) -> int:
+        return len(self._done)
+
+    def ttft(self) -> Optional[float]:
+        if not self._done:
+            return None
+        return sum(d[1] for d in self._done) / len(self._done)
+
+    def tpot(self) -> Optional[float]:
+        if not self._done:
+            return None
+        return sum(d[2] for d in self._done) / len(self._done)
+
+    def slo_attainment(self) -> Optional[float]:
+        judged = [d[3] for d in self._done if d[3] is not None]
+        if not judged:
+            return None
+        return sum(1 for ok in judged if ok) / len(judged)
+
+    def hit_rate(self) -> Optional[float]:
+        toks = sum(d[4] for d in self._done)
+        if toks <= 0:
+            return None
+        return sum(d[5] for d in self._done) / toks
+
+    def snapshot(self) -> Dict[str, float]:
+        out: Dict[str, float] = {"window_completions": float(len(self._done))}
+        for name, fn in (("window_ttft", self.ttft),
+                         ("window_tpot", self.tpot),
+                         ("window_slo_attainment", self.slo_attainment),
+                         ("window_hit_rate", self.hit_rate)):
+            v = fn()
+            if v is not None:
+                out[name] = float(v)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event export (Perfetto-loadable)
+# ---------------------------------------------------------------------------
+
+_US = 1e6          # trace seconds -> trace-event microseconds
+_ROUTER_PID = 0
+
+
+def _track_pid(track: str) -> int:
+    """Map a bus track name onto a trace process id: the router is pid
+    0; ``replica:i`` tracks are pid i+1; session-local tracks
+    (``engine:j``, ``prefill:j``, ``session``) live under pid 1 (the
+    single-coordinator case)."""
+    if track.startswith("replica:"):
+        return int(track.split(":", 1)[1]) + 1
+    if track == "router":
+        return _ROUTER_PID
+    return 1
+
+
+def _span_events(req: Request, pid: int) -> List[Dict[str, Any]]:
+    evs: List[Dict[str, Any]] = []
+    for sp in request_spans(req):
+        args = dict(sp.args)
+        args["rid"] = sp.rid
+        evs.append({"name": sp.name, "cat": "lifecycle", "ph": "X",
+                    "ts": sp.start * _US, "dur": max(sp.dur, 0.0) * _US,
+                    "pid": pid, "tid": SPAN_LANES.get(sp.name, 4),
+                    "args": args})
+    return evs
+
+
+def chrome_trace(requests: Iterable[Request], *,
+                 dispatch_log: Sequence[Dict[str, int]] = (),
+                 scale_events: Sequence[Any] = (),
+                 recorder: Optional[TraceRecorder] = None,
+                 dt: float = 0.05,
+                 label: str = "repro-serve") -> Dict[str, Any]:
+    """Render lifecycle spans + bus events as a Chrome trace-event
+    JSON object (load in Perfetto / chrome://tracing).
+
+    Layout: one trace *process* per replica (pid = replica index + 1)
+    with the router on pid 0; within a process, one *thread* lane per
+    pipeline stage (queue/prefill/transfer/decode). Each multi-token
+    request carries a flow arrow (``s``/``f`` pair keyed by rid) from
+    its prefill end to its decode start — the φ→δ KV handoff — so
+    selecting a request in Perfetto walks it across engines.
+    ``scale_events`` accepts §13 ``(step, kind, replica)`` tuples or
+    ``ScaleEvent`` objects; their instants land on the router track."""
+    reqs = sorted(requests, key=lambda r: r.rid)
+    home: Dict[int, int] = {}
+    for row in dispatch_log:
+        home[int(row["rid"])] = int(row["replica"])
+
+    events: List[Dict[str, Any]] = []
+    pids = {_ROUTER_PID}
+    for req in reqs:
+        pid = home.get(req.rid, (req.decode_group or 0)) + 1
+        pids.add(pid)
+        events.extend(_span_events(req, pid))
+        if (req.phase is RequestState.DONE and req.prefill_end is not None
+                and req.transfer_end is not None and req.s_out > 1):
+            flow = {"name": "kv_handoff", "cat": "flow", "id": req.rid,
+                    "pid": pid}
+            events.append(dict(flow, ph="s", tid=SPAN_LANES["prefill"],
+                               ts=req.prefill_end * _US))
+            events.append(dict(flow, ph="f", bp="e",
+                               tid=SPAN_LANES["decode"],
+                               ts=req.transfer_end * _US))
+    for ev in scale_events:
+        step, kind, replica = (
+            (ev.step, ev.kind, ev.replica) if hasattr(ev, "step") else ev)
+        events.append({"name": kind, "cat": "fleet", "ph": "i", "s": "p",
+                       "ts": step * dt * _US, "pid": _ROUTER_PID, "tid": 5,
+                       "args": {"replica": replica, "step": step}})
+    if recorder is not None:
+        for tev in recorder.events:
+            pid = _track_pid(tev.track)
+            pids.add(pid)
+            args = dict(tev.args)
+            if tev.rid is not None:
+                args["rid"] = tev.rid
+            base = {"name": tev.kind, "cat": "bus", "ts": tev.ts * _US,
+                    "pid": pid, "tid": 6, "args": args}
+            if tev.dur > 0.0:
+                events.append(dict(base, ph="X", dur=tev.dur * _US))
+            else:
+                events.append(dict(base, ph="i", s="t"))
+        for (track, name), pts in sorted(recorder.series.items()):
+            pid = _track_pid(track)
+            pids.add(pid)
+            for ts, val in pts:
+                events.append({"name": f"{track}/{name}", "cat": "util",
+                               "ph": "C", "ts": ts * _US, "pid": pid,
+                               "tid": 0, "args": {name: val}})
+    meta: List[Dict[str, Any]] = []
+    for pid in sorted(pids):
+        pname = "router" if pid == _ROUTER_PID else f"replica:{pid - 1}"
+        meta.append({"name": "process_name", "ph": "M", "pid": pid,
+                     "tid": 0, "args": {"name": pname}})
+        for lane, tid in (("queue", 0), ("prefill", 1), ("transfer", 2),
+                          ("decode", 3), ("events", 4), ("fleet", 5),
+                          ("bus", 6)):
+            meta.append({"name": "thread_name", "ph": "M", "pid": pid,
+                         "tid": tid, "args": {"name": lane}})
+    events.sort(key=lambda e: (e.get("ts", 0.0), e["pid"], e.get("tid", 0)))
+    return {"traceEvents": meta + events, "displayTimeUnit": "ms",
+            "otherData": {"label": label}}
+
+
+_KNOWN_PH = {"B", "E", "X", "i", "I", "C", "s", "t", "f", "M", "b", "e",
+             "n", "P"}
+
+
+def validate_chrome_trace(obj: Any) -> List[str]:
+    """Validate an object against the Chrome trace-event schema (the
+    subset ``chrome_trace`` emits plus the common phases). Returns a
+    list of human-readable violations — empty means loadable. The
+    serve launcher exits non-zero on any violation (or an empty
+    trace), which is what the CI smoke leg asserts."""
+    errs: List[str] = []
+    if isinstance(obj, dict):
+        events = obj.get("traceEvents")
+        if not isinstance(events, list):
+            return ["traceEvents: missing or not a list"]
+    elif isinstance(obj, list):
+        events = obj
+    else:
+        return ["trace must be a JSON object or array"]
+    if not events:
+        return ["trace is empty"]
+    flows: Dict[Any, List[str]] = {}
+    n_real = 0
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if not isinstance(ph, str) or ph not in _KNOWN_PH:
+            errs.append(f"{where}: bad phase {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str):
+            errs.append(f"{where}: missing name")
+        if not isinstance(ev.get("pid"), int):
+            errs.append(f"{where}: missing integer pid")
+        if ph == "M":
+            continue
+        n_real += 1
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts):
+            errs.append(f"{where}: missing finite ts")
+        if ph == "X":
+            dur = ev.get("dur")
+            if (not isinstance(dur, (int, float))
+                    or not math.isfinite(dur) or dur < 0):
+                errs.append(f"{where}: X event needs dur >= 0")
+        if ph == "C":
+            args = ev.get("args")
+            if (not isinstance(args, dict) or not args or not all(
+                    isinstance(v, (int, float)) and math.isfinite(v)
+                    for v in args.values())):
+                errs.append(f"{where}: C event needs numeric args")
+        if ph in ("s", "t", "f"):
+            if "id" not in ev:
+                errs.append(f"{where}: flow event needs id")
+            else:
+                flows.setdefault(ev["id"], []).append(ph)
+    for fid, phs in sorted(flows.items(), key=lambda kv: str(kv[0])):
+        if ("s" in phs) != ("f" in phs):
+            errs.append(f"flow id {fid!r}: unmatched start/finish "
+                        f"({''.join(sorted(phs))})")
+    if n_real == 0:
+        errs.append("trace has only metadata events")
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+
+def _prom_value(v: float) -> str:
+    if math.isnan(v):
+        return "NaN"
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v))
+
+
+def prometheus_text(metrics: Any, gauges: Optional[WindowedGauges] = None,
+                    prefix: str = "repro") -> str:
+    """Render a ``ServeMetrics`` summary (+ optional live-window
+    snapshot + per-class TTFT attribution) in Prometheus text
+    exposition format. Non-finite aggregates (a class that never
+    finished) render as ``+Inf`` — valid in the exposition format,
+    unlike JSON."""
+    lines: List[str] = []
+
+    def sample(name: str, value: float, labels: str = "",
+               help_: str = "") -> None:
+        full = f"{prefix}_{name}"
+        if help_:
+            lines.append(f"# HELP {full} {help_}")
+            lines.append(f"# TYPE {full} gauge")
+        lines.append(f"{full}{labels} {_prom_value(float(value))}")
+
+    for key, val in sorted(metrics.summary().items()):
+        sample(key, val, help_=f"ServeMetrics.{key}")
+    breakdown = getattr(metrics, "ttft_breakdown", None)
+    if breakdown:
+        first = True
+        for cls in sorted(breakdown):
+            for bucket in TTFT_BUCKETS:
+                sample("ttft_fraction",
+                       breakdown[cls].get(bucket, 0.0),
+                       labels=f'{{class="{cls}",bucket="{bucket}"}}',
+                       help_=("mean TTFT attribution fraction per "
+                              "priority class" if first else ""))
+                first = False
+    if gauges is not None:
+        for key, val in sorted(gauges.snapshot().items()):
+            sample(key, val, help_=f"rolling window: {key}")
+    return "\n".join(lines) + "\n"
+
+
+def dump_chrome_trace(path: str, trace: Dict[str, Any]) -> None:
+    """Write a trace object as strict JSON (no ``Infinity``/``NaN``)."""
+    with open(path, "w") as f:
+        json.dump(trace, f, indent=1, allow_nan=False)

@@ -1,0 +1,439 @@
+"""Serving telemetry tier (DESIGN.md §14): span derivation from
+lifecycle stamps, TTFT attribution as an exact partition, rolling
+window gauges, Chrome trace-event export + schema validation,
+Prometheus text exposition, strict-JSON benchmark artifacts, and the
+sim-vs-runtime span-stream parity contract on a seeded trace with a
+mid-trace kill and an autoscale join."""
+import json
+import math
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))     # benchmarks.* (namespace pkg)
+
+from repro.configs import ARCHS
+from repro.models import init_params
+from repro.serving import (Coordinator, CoordinatorReplica, FleetController,
+                           FleetSpec, Request, RequestState, Router,
+                           StepClock, TTFT_BUCKETS, TraceRecorder,
+                           WindowedGauges, chrome_trace,
+                           mixed_priority_workload, prometheus_text,
+                           request_spans, simulate_fleet, span_stream,
+                           validate_chrome_trace)
+from repro.serving.metrics import METRIC_FIELDS, ServeMetrics
+
+KEY = jax.random.PRNGKey(5)
+
+
+def _done_request(rid=0, *, arrival=0.0, ps=0.1, pe=0.3, te=0.4, de=0.9,
+                  s_in=8, s_out=4, **kw) -> Request:
+    req = Request(rid=rid, s_in=s_in, s_out=s_out, arrival=arrival, **kw)
+    req.advance(RequestState.PREFILLING, ps)
+    req.advance(RequestState.KV_TRANSFER, pe)
+    req.advance(RequestState.DECODING, te)
+    req.advance(RequestState.DONE, de)
+    return req
+
+
+# ---------------------------------------------------------------------------
+# Span derivation (pure function of lifecycle stamps)
+# ---------------------------------------------------------------------------
+
+
+def test_request_spans_done_pipeline_order():
+    req = _done_request()
+    names = [sp.name for sp in request_spans(req)]
+    assert names == ["queue", "prefill", "transfer", "decode"]
+    spans = {sp.name: sp for sp in request_spans(req)}
+    assert spans["queue"].start == 0.0 and spans["queue"].end == 0.1
+    assert spans["prefill"].dur == pytest.approx(0.2)
+    assert spans["decode"].end == 0.9
+    # stages tile the lifetime: each starts where the previous ended
+    assert spans["prefill"].start == spans["queue"].end
+    assert spans["transfer"].start == spans["prefill"].end
+    assert spans["decode"].start == spans["transfer"].end
+
+
+def test_request_spans_kv_subspans_when_kv_shipped():
+    req = _done_request()
+    req.kv_serialized_s = 0.05
+    req.kv_overlap_s = 0.03
+    names = [sp.name for sp in request_spans(req)]
+    assert names == ["queue", "prefill", "transfer", "transfer:wire",
+                     "transfer:overlap", "decode"]
+    wire = next(sp for sp in request_spans(req)
+                if sp.name == "transfer:wire")
+    assert wire.dur == pytest.approx(0.05)
+
+
+def test_request_spans_terminal_markers():
+    rej = Request(rid=1, s_in=4, s_out=2, arrival=0.5)
+    rej.advance(RequestState.REJECTED, 0.5)
+    assert [(s.name, s.start, s.dur) for s in request_spans(rej)] == \
+        [("rejected", 0.5, 0.0)]
+    # cancelled before any dispatch: instant marker at arrival
+    can = Request(rid=2, s_in=4, s_out=2, arrival=0.2)
+    can.advance(RequestState.CANCELLED, 0.7)
+    assert [(s.name, s.start) for s in request_spans(can)] == \
+        [("cancelled", 0.2)]
+    # cancelled mid-pipeline: completed stages then the marker
+    mid = Request(rid=3, s_in=4, s_out=2, arrival=0.0)
+    mid.advance(RequestState.PREFILLING, 0.1)
+    mid.advance(RequestState.KV_TRANSFER, 0.3)
+    mid.advance(RequestState.CANCELLED, 0.6)
+    assert [s.name for s in request_spans(mid)] == \
+        ["queue", "prefill", "cancelled"]
+    # still queued at trace end: no spans at all
+    assert request_spans(Request(rid=4, s_in=4, s_out=2, arrival=0.0)) == []
+
+
+def test_span_stream_orders_by_rid_then_pipeline_then_markers():
+    reqs = [_done_request(rid=1, arrival=1.0, ps=1.1, pe=1.3, te=1.4,
+                          de=1.9),
+            _done_request(rid=0)]
+    log = [{"rid": 1, "replica": 0, "dispatch_step": 22},
+           {"rid": 0, "replica": 1, "dispatch_step": 2},
+           {"rid": 1, "replica": 1, "dispatch_step": 25, "redispatch": 1}]
+    stream = span_stream(reqs, log)
+    rids = [t[0] for t in stream]
+    assert rids == sorted(rids)
+    r1 = [t for t in stream if t[0] == 1]
+    assert [t[1] for t in r1] == ["queue", "prefill", "transfer", "decode",
+                                  "dispatch", "redispatch"]
+    assert r1[-2][2] == 22.0 and r1[-1][2] == 25.0    # step-ordered
+
+
+# ---------------------------------------------------------------------------
+# TTFT attribution: an exact partition of time-to-first-token
+# ---------------------------------------------------------------------------
+
+
+def test_ttft_attribution_partitions_exactly():
+    req = _done_request()          # ttft = 0.3: queue 0.1 + prefill 0.2
+    att = req.ttft_attribution()
+    assert att == {"queue": pytest.approx(0.1),
+                   "prefill": pytest.approx(0.2), "transfer": 0.0,
+                   "warmup": 0.0, "decode_first": 0.0}
+    assert sum(att.values()) == pytest.approx(req.ttft, abs=0)
+    fr = req.ttft_fractions()
+    assert sum(fr.values()) == pytest.approx(1.0, abs=1e-9)
+    assert set(fr) == set(TTFT_BUCKETS)
+
+
+def test_ttft_attribution_warmup_clamped_to_wait():
+    req = _done_request()          # only 0.1s of non-prefill wait
+    req.warmup_penalty_s = 5.0     # stamped penalty exceeds the wait
+    att = req.ttft_attribution()
+    assert att["warmup"] == pytest.approx(0.1)
+    assert att["queue"] == 0.0
+    assert sum(att.values()) == pytest.approx(req.ttft, abs=0)
+
+
+def test_ttft_attribution_transfer_only_after_redo():
+    base = dict(ps=0.5, pe=0.6)    # 0.5s queue-ish wait, 0.1 prefill
+    clean = _done_request(**base)
+    clean.kv_serialized_s = 0.2    # shipped KV but never re-did work
+    assert clean.ttft_attribution()["transfer"] == 0.0
+    redone = _done_request(**base)
+    redone.kv_serialized_s = 0.2
+    redone.kv_overlap_s = 0.05
+    redone.preemptions = 1
+    att = redone.ttft_attribution()
+    assert att["transfer"] == pytest.approx(0.15)
+    assert sum(att.values()) == pytest.approx(redone.ttft, abs=0)
+
+
+def test_ttft_attribution_edge_cases():
+    # unserved request: no attribution
+    assert Request(rid=0, s_in=4, s_out=2, arrival=0.0) \
+        .ttft_attribution() is None
+    # zero-TTFT (same virtual step): all queue, fractions still sum to 1
+    req = _done_request(arrival=0.1, ps=0.1, pe=0.1, te=0.1, de=0.1)
+    assert req.ttft == 0.0
+    fr = req.ttft_fractions()
+    assert fr["queue"] == 1.0 and sum(fr.values()) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Metrics schema: p50s + ttft_breakdown (satellite of §14)
+# ---------------------------------------------------------------------------
+
+
+def test_p50_fields_in_schema_and_summary():
+    assert "p50_ttft" in METRIC_FIELDS and "p50_latency" in METRIC_FIELDS
+    assert "ttft_breakdown" in METRIC_FIELDS
+    reqs = [_done_request(rid=i, de=0.9 + 0.1 * i) for i in range(5)]
+    m = ServeMetrics(reqs, makespan=2.0, decode_tokens=20)
+    s = m.summary()
+    assert s["p50_ttft"] == pytest.approx(0.3)
+    assert s["p50_latency"] == pytest.approx(1.1)   # median of .9..1.3
+    assert s["p50_latency"] <= s["p99_latency"]
+    # every summary value is a finite scalar; dict-valued fields
+    # (ttft_breakdown et al.) stay OUT of the flat summary
+    assert "ttft_breakdown" not in s
+    assert all(isinstance(v, (int, float)) and math.isfinite(v)
+               for v in s.values())
+
+
+def test_ttft_breakdown_groups_by_priority_class():
+    reqs = [_done_request(rid=0, priority=0),
+            _done_request(rid=1, priority=0, ps=0.2),
+            _done_request(rid=2, priority=2)]
+    m = ServeMetrics(reqs, makespan=1.0, decode_tokens=12)
+    bd = m.ttft_breakdown
+    assert set(bd) == {0, 2}
+    for cls, frac in bd.items():
+        assert set(frac) == set(TTFT_BUCKETS)
+        assert sum(frac.values()) == pytest.approx(1.0, abs=1e-9)
+    # unserved-only class contributes nothing
+    m2 = ServeMetrics([Request(rid=9, s_in=4, s_out=2, arrival=0.0,
+                               priority=1)], makespan=1.0, decode_tokens=0)
+    assert m2.ttft_breakdown == {}
+
+
+# ---------------------------------------------------------------------------
+# Benchmark artifacts are strict JSON (satellite: non-finite -> null)
+# ---------------------------------------------------------------------------
+
+
+def _reject_constants(name):
+    raise AssertionError(f"non-standard JSON constant in artifact: {name}")
+
+
+def test_artifact_json_never_emits_infinity(tmp_path, monkeypatch):
+    from benchmarks.run import json_safe, write_artifact
+    monkeypatch.delenv("REPRO_BENCH_SMOKE", raising=False)
+    monkeypatch.chdir(tmp_path)
+    rows = [("m.inf", float("inf"), "avg_ttft=inf"),
+            ("m.nan", float("nan"), "ok"),
+            ("m.fine", 12.5, "ok")]
+    write_artifact("teltest", rows, elapsed_s=float("inf"))
+    text = (tmp_path / "BENCH_teltest.json").read_text()
+    # strict parse: Infinity/NaN literals are rejected outright
+    art = json.loads(text, parse_constant=_reject_constants)
+    assert art["rows"][0]["us_per_call"] is None
+    assert art["rows"][1]["us_per_call"] is None
+    assert art["rows"][2]["us_per_call"] == 12.5
+    assert art["elapsed_s"] is None
+    # the sanitizer itself recurses through containers
+    assert json_safe({"a": [float("-inf"), (float("nan"), 1)]}) == \
+        {"a": [None, [None, 1]]}
+
+
+def test_artifact_dump_pins_allow_nan(monkeypatch, tmp_path):
+    """If a non-finite value ever slips past the sanitizer, the dump
+    must raise rather than emit an ``Infinity`` token."""
+    import benchmarks.run as bench_run
+    monkeypatch.delenv("REPRO_BENCH_SMOKE", raising=False)
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(bench_run, "json_safe", lambda obj: obj)
+    with pytest.raises(ValueError):
+        bench_run.write_artifact("telraw", [("m", float("inf"), "x")], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Rolling-window gauges
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_gauges_trim_and_snapshot():
+    g = WindowedGauges(window_steps=10)
+    early = _done_request(rid=0, slo_target_s=1.0)
+    late = _done_request(rid=1, ps=0.2, slo_target_s=0.1)   # missed SLO
+    late.cached_len = 4
+    g.observe(early, 0)
+    g.observe(late, 8)
+    assert g.count() == 2
+    assert g.slo_attainment() == pytest.approx(0.5)
+    assert g.hit_rate() == pytest.approx(4 / 16)
+    snap = g.snapshot()
+    assert snap["window_completions"] == 2.0
+    assert snap["window_ttft"] == pytest.approx(0.3)   # both ttft=0.3
+    g.advance(11)          # step 0 falls out of the 10-step window
+    assert g.count() == 1
+    assert g.slo_attainment() == 0.0
+    g.advance(40)
+    assert g.count() == 0 and g.ttft() is None
+    assert g.snapshot() == {"window_completions": 0.0}
+
+
+def test_windowed_gauges_ignore_non_done():
+    g = WindowedGauges()
+    g.observe(Request(rid=0, s_in=4, s_out=2, arrival=0.0), 3)
+    rej = Request(rid=1, s_in=4, s_out=2, arrival=0.0)
+    rej.advance(RequestState.REJECTED, 0.0)
+    g.observe(rej, 3)
+    assert g.count() == 0 and g.slo_attainment() is None
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export + schema validator + Prometheus exposition
+# ---------------------------------------------------------------------------
+
+
+def _sim_with_recorder():
+    rec = TraceRecorder()
+    res = simulate_fleet(
+        mixed_priority_workload(n=12, rate_rps=100.0, seed=7),
+        num_replicas=2, slots_per_replica=2, max_prefill_batch=2,
+        capacity=96, dt=0.05, queue_capacity=8, failures={3: 1},
+        telemetry=rec)
+    return res, rec
+
+
+def test_chrome_trace_is_valid_and_flows_pair(tmp_path):
+    res, rec = _sim_with_recorder()
+    trace = chrome_trace(res.requests, dispatch_log=res.dispatch_log,
+                         scale_events=res.scale_events, recorder=rec,
+                         label="unit")
+    assert validate_chrome_trace(trace) == []
+    evs = trace["traceEvents"]
+    # one track per replica: process metadata for router + replicas
+    pnames = {e["args"]["name"] for e in evs if e["name"] == "process_name"}
+    assert "router" in pnames and "replica:0" in pnames
+    # φ→δ flow arrows pair start/finish per rid
+    starts = {e["id"] for e in evs if e.get("ph") == "s"}
+    finishes = {e["id"] for e in evs if e.get("ph") == "f"}
+    assert starts and starts == finishes
+    # the live bus contributed counter samples (queue depth etc.)
+    assert any(e.get("ph") == "C" for e in evs)
+    # round-trips through strict JSON
+    from repro.serving.telemetry import dump_chrome_trace
+    path = tmp_path / "trace.json"
+    dump_chrome_trace(str(path), trace)
+    assert validate_chrome_trace(json.loads(path.read_text())) == []
+
+
+def test_validator_rejects_malformed_traces():
+    assert validate_chrome_trace([]) == ["trace is empty"]
+    assert validate_chrome_trace(42) == \
+        ["trace must be a JSON object or array"]
+    assert validate_chrome_trace({"foo": 1}) == \
+        ["traceEvents: missing or not a list"]
+    ok = {"name": "x", "ph": "X", "ts": 0.0, "dur": 1.0, "pid": 0}
+    assert validate_chrome_trace([ok]) == []
+    for bad in (dict(ok, ph="Z"),                  # unknown phase
+                dict(ok, dur=-1.0),                # negative duration
+                dict(ok, ts=float("inf")),         # non-finite ts
+                {k: v for k, v in ok.items() if k != "pid"}):
+        assert validate_chrome_trace([ok, bad]), bad
+    # unmatched flow start
+    flow = {"name": "f", "ph": "s", "ts": 0.0, "pid": 0, "id": 7}
+    errs = validate_chrome_trace([ok, flow])
+    assert any("unmatched" in e for e in errs)
+    # metadata-only traces are not loadable timelines
+    meta = {"name": "process_name", "ph": "M", "pid": 0,
+            "args": {"name": "p"}}
+    assert validate_chrome_trace([meta]) == \
+        ["trace has only metadata events"]
+
+
+def test_prometheus_text_exposition():
+    res, _ = _sim_with_recorder()
+    gauges = WindowedGauges()
+    for req in res.requests:
+        gauges.observe(req, 0)
+    text = prometheus_text(res, gauges)
+    assert "# HELP repro_p50_ttft" in text
+    assert "# TYPE repro_p50_ttft gauge" in text
+    for bucket in TTFT_BUCKETS:
+        assert f'bucket="{bucket}"' in text
+    assert 'repro_ttft_fraction{class="0",bucket="queue"}' in text
+    assert "repro_window_completions" in text
+    # non-finite aggregates render as exposition-format infinities
+    class _Inf:
+        def summary(self):
+            return {"avg_ttft": float("inf")}
+    assert "repro_avg_ttft +Inf" in prometheus_text(_Inf())
+
+
+# ---------------------------------------------------------------------------
+# Sim-vs-runtime span parity: kill + autoscale join on one seeded trace
+# (the §14 parity contract; satellite 3)
+# ---------------------------------------------------------------------------
+
+PARITY_SPEC = FleetSpec(min_replicas=1, max_replicas=2, provision_steps=2,
+                        warmup_steps=3, cold_window_steps=4, queue_high=0.5,
+                        sustain_steps=2, cooldown_steps=4,
+                        hysteresis_steps=8)
+PARITY_KILL = {5: 0}
+
+
+@pytest.fixture(scope="module")
+def small_rt():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    return cfg, init_params(KEY, cfg)
+
+
+def test_sim_runtime_span_stream_parity(small_rt):
+    """The same seeded mixed-priority trace — with a mid-trace replica
+    kill AND an autoscale join — through the simulator and through real
+    Coordinators: the derived span streams (event types, per-request
+    ordering, step-quantized durations) must be EXACTLY equal."""
+    cfg, params = small_rt
+
+    def trace():
+        return mixed_priority_workload(n=10, rate_rps=100.0, seed=7,
+                                       vocab=min(cfg.vocab, 256),
+                                       system_lens=(8, 6, 4),
+                                       user_lens=(4, 6, 8),
+                                       out_lens=(3, 5, 8))
+
+    sim = simulate_fleet(trace(), num_replicas=1, slots_per_replica=2,
+                         max_prefill_batch=2, capacity=96, dt=0.05,
+                         queue_capacity=8, autoscale=PARITY_SPEC,
+                         failures=PARITY_KILL)
+    assert sim.scale_up_events >= 1          # the join must happen
+    assert sim.counters["redispatched"] >= 1  # the kill must bite
+
+    clock = StepClock()
+
+    def factory(_slot):
+        return CoordinatorReplica(
+            Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=2, capacity=96,
+                        num_prefill_engines=1,
+                        prefix_cache_bytes=float("inf")),
+            max_prefill_batch=2, clock=clock)
+
+    router = Router([factory(0)], queue_capacity=8, clock=clock)
+    ctrl = FleetController(router, factory, PARITY_SPEC, dt=0.05)
+    rt = ctrl.run_trace(trace(), failures=PARITY_KILL)
+
+    assert [(e.step, e.kind, e.replica) for e in ctrl.events] == \
+        sim.scale_events
+    assert router.counters == sim.counters
+    sim_spans = span_stream(sim.requests, sim.dispatch_log)
+    rt_spans = span_stream(rt.requests, router.dispatch_log)
+    assert len(sim_spans) == len(rt_spans)
+    assert sim_spans == rt_spans              # bitwise span parity
+    # per-class attribution agrees too (same stamps, same arithmetic)
+    assert rt.ttft_breakdown == sim.ttft_breakdown
+    # and every served request's fractions partition to exactly 1
+    for req in rt.requests:
+        fr = req.ttft_fractions()
+        if fr is not None:
+            assert abs(sum(fr.values()) - 1.0) <= 1e-9
+
+
+def test_router_gauges_feed_slo_floor_fallback():
+    """With no WorkloadMonitor wired, the §13 ``slo_floor`` trigger
+    reads the router's rolling-window SLO attainment — both domains
+    feed it at the shared terminal sweep, keeping decisions in the
+    parity surface."""
+    res = simulate_fleet(
+        mixed_priority_workload(n=12, rate_rps=100.0, seed=7,
+                                slo_s=(0.01, 0.01, 0.01)),   # unmeetable
+        num_replicas=1, slots_per_replica=2, max_prefill_batch=2,
+        capacity=96, dt=0.05, queue_capacity=8,
+        autoscale=FleetSpec(min_replicas=1, max_replicas=2,
+                            provision_steps=2, warmup_steps=2,
+                            cold_window_steps=2, queue_high=1e9,
+                            slo_floor=0.99, sustain_steps=1,
+                            cooldown_steps=4, hysteresis_steps=4))
+    # the floor (not queue depth: queue_high is unreachable) triggered
+    assert res.scale_up_events >= 1
