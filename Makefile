@@ -3,7 +3,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test unit serve-smoke bench bench-drift bench-serving bench-prefix \
-	bench-kvstream bench-paged bench-router bench-elastic bench-smoke lint
+	bench-kvstream bench-paged bench-router bench-elastic bench-calib \
+	bench-smoke bench-check lint
 
 # Tier-1 verify: the whole test suite (stop at first failure), then the
 # serving smoke run through the real session API on the reduced arch.
@@ -20,7 +21,9 @@ unit:
 # exits non-zero unless failover re-dispatch actually fired; this leg
 # also writes and schema-validates the §14 Chrome trace + Prometheus
 # snapshot via --trace-out/--metrics-out, exiting non-zero on a
-# malformed or empty trace), then the §13 elastic fleet — autoscaling
+# malformed or empty trace, and serves + one-shot-scrapes the §15
+# /metrics + /healthz endpoint via --metrics-port), then the §13
+# elastic fleet — autoscaling
 # on a surge trace (exits non-zero unless a scale-up fires during the
 # burst).
 serve-smoke:
@@ -37,7 +40,7 @@ serve-smoke:
 		--paged --page-size 16
 	$(PYTHON) -m repro.launch.serve --replicas 2 --requests 8 \
 		--max-new 5 --kill-replica --trace-out serve_trace.json \
-		--metrics-out serve_metrics.prom
+		--metrics-out serve_metrics.prom --metrics-port 19109
 	$(PYTHON) -m repro.launch.serve --requests 12 --max-new 5 \
 		--rate-rps 40 --prefill-batch 2 --autoscale --surge-trace
 
@@ -75,11 +78,24 @@ bench-router:
 bench-elastic:
 	$(PYTHON) -m benchmarks.run elastic
 
+# Cost-model calibration: learn per-surface predicted-vs-observed
+# factors on a fabric 3x slower than believed, calibrated re-solve
+# recovery, miscalibration trigger, sim-vs-runtime parity (§15).
+bench-calib:
+	$(PYTHON) -m benchmarks.run calib
+
 # CI-sized benchmark smoke: paged + kvstream + prefix + router + elastic
-# at toy sizes; every module writes BENCH_<name>.json (gitignored) AND
-# mirrors it into benchmarks/artifacts/ (tracked — the perf trajectory).
+# + calib at toy sizes; every module writes BENCH_<name>.json
+# (gitignored) AND mirrors it into benchmarks/artifacts/ (tracked — the
+# perf trajectory).
 bench-smoke:
-	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run paged kvstream prefix router elastic
+	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run paged kvstream prefix router elastic calib
+
+# Perf-regression gate (§15): fresh working-dir artifacts from a
+# preceding bench run vs the committed benchmarks/artifacts/ baselines,
+# ± REPRO_BENCH_TOL. Non-zero exit on regression.
+bench-check:
+	$(PYTHON) -m benchmarks.run --check
 
 # Byte-compile everything — catches syntax/indentation errors without
 # needing a linter wheel in the image.

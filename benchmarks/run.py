@@ -13,13 +13,23 @@ PRs (the artifacts are .gitignored; diff them out-of-band).
 Usage:  PYTHONPATH=src python -m benchmarks.run [module ...]
         modules default to all; names: fig6, fig8, fig9, fig10,
         table3, table4, table5, roofline, drift, serving, prefix,
-        kvstream, paged, router, elastic
+        kvstream, paged, router, elastic, calib
 
 ``REPRO_BENCH_SMOKE=1`` shrinks the modules that support it (kvstream,
-prefix, paged, router, elastic) to CI-smoke sizes (``make bench-smoke``), and
+prefix, paged, router, elastic, calib) to CI-smoke sizes
+(``make bench-smoke``), and
 additionally mirrors each artifact into ``benchmarks/artifacts/`` —
 the TRACKED perf-trajectory record (full-size artifacts in the
 working directory stay gitignored).
+
+``--check [module ...]`` is the perf-regression gate: it compares the
+fresh ``BENCH_<name>.json`` artifacts in the working directory (from a
+preceding bench run) against the COMMITTED baselines under
+``benchmarks/artifacts/`` (read via ``git show HEAD:...`` so a smoke
+run's mirror can't mask the baseline). A missing row, a derived column
+that flipped to FAIL, or a per-row wall-clock beyond the ± tolerance
+(``REPRO_BENCH_TOL``, default 3.0 → 4x slower fails; timing rows at 0
+are informational and skipped) exits non-zero.
 """
 from __future__ import annotations
 
@@ -52,6 +62,7 @@ MODULES = {
     "paged": "benchmarks.paged_decode",
     "router": "benchmarks.router_fleet",
     "elastic": "benchmarks.elastic_fleet",
+    "calib": "benchmarks.calibration",
 }
 
 
@@ -117,8 +128,76 @@ def write_artifact(name: str, rows: List[Tuple[str, float, str]],
             print(f"{name}.ARTIFACT_SKIPPED,0.0,{e}", file=sys.stderr)
 
 
+def _baseline(name: str):
+    """The COMMITTED baseline artifact for ``name``, or ``None`` if the
+    benchmark has no tracked baseline yet. Read via ``git show`` — a
+    smoke run mirrors fresh artifacts over ``benchmarks/artifacts/``,
+    so the on-disk copy is the candidate, not the baseline."""
+    rel = f"benchmarks/artifacts/BENCH_{name}.json"
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{rel}"], capture_output=True, text=True,
+            timeout=10, check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        return json.loads(out.stdout)
+    except Exception:  # noqa: BLE001 — untracked/new benchmark, no git
+        return None
+
+
+def check(names: List[str]) -> int:
+    """Perf-regression gate (``--check``): fresh working-dir artifacts
+    vs committed baselines. Returns the number of regressions."""
+    tol = float(os.environ.get("REPRO_BENCH_TOL", "3.0"))
+    regressions = 0
+    for name in names:
+        fresh_path = f"BENCH_{name}.json"
+        if not os.path.exists(fresh_path):
+            print(f"check.{name},0.0,MISSING fresh artifact {fresh_path} "
+                  "(run the benchmark first)")
+            regressions += 1
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        base = _baseline(name)
+        if base is None:
+            print(f"check.{name},0.0,SKIP no committed baseline")
+            continue
+        fresh_rows = {r["name"]: r for r in fresh["rows"]}
+        bad = []
+        for row in base["rows"]:
+            got = fresh_rows.get(row["name"])
+            if got is None:
+                bad.append(f"{row['name']}: row disappeared")
+                continue
+            if "FAIL" in str(got.get("derived", "")):
+                bad.append(f"{row['name']}: derived FAIL")
+            b_us, g_us = row.get("us_per_call"), got.get("us_per_call")
+            if (b_us and g_us and b_us > 0.0
+                    and g_us > b_us * (1.0 + tol)):
+                bad.append(f"{row['name']}: {g_us:.0f}us > "
+                           f"{b_us:.0f}us * {1.0 + tol:g}")
+        if bad:
+            regressions += 1
+            print(f"check.{name},0.0,REGRESSION " + "; ".join(bad))
+        else:
+            print(f"check.{name},0.0,OK {len(base['rows'])} rows "
+                  f"tol=+{tol:g}x")
+    return regressions
+
+
 def main() -> None:
-    names = sys.argv[1:] or list(MODULES)
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--check":
+        # default to every module with a committed baseline: the gate
+        # covers exactly what the repo tracks
+        names = argv[1:] or [n for n in MODULES if _baseline(n)]
+        n = check(names)
+        print(f"benchmarks.check,0.0,{len(names)} modules "
+              f"{n} regressions")
+        if n:
+            raise SystemExit(1)
+        return
+    names = argv or list(MODULES)
     t0 = time.perf_counter()
     failures = 0
     for name in names:

@@ -767,3 +767,66 @@ def decode_capacity(cluster: ClusterSpec, profile: ModelProfile,
         return 0.0
     lat = decode_latency(cluster, profile, plan, b, wl.s_in, wl.s_out)
     return b * period / lat
+
+
+# ---------------------------------------------------------------------------
+# Cost-model calibration (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+#: Clamp range for calibration factors: one bad observation window must
+#: never zero out (or infinitely inflate) a flowgraph edge.
+CORRECTION_MIN = 0.2
+CORRECTION_MAX = 5.0
+
+#: The calibratable scheduling surfaces, in report order. Each maps to
+#: one analytical predictor above: ``prefill_latency``,
+#: ``decode_step_latency``, ``kv_transfer_time``, ``warmup_steps``.
+CALIBRATION_SURFACES = ("prefill", "decode", "transfer", "warmup")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostCorrections:
+    """Multiplicative calibration factors on the analytical cost model:
+    robust observed/predicted ratios per scheduling surface, learned by
+    ``serving.calibration.CalibrationStore`` from span-derived stage
+    durations.
+
+    A factor > 1 means reality is SLOWER than the model believed. The
+    flow solver applies them by dividing replica edge capacities
+    (prefill/decode) and multiplying the per-request φ→δ KV transfer
+    time (transfer) — a calibrated re-solve then prices the cluster as
+    observed, not as spec'd. ``warmup`` does not enter the flowgraph
+    (warm-up is a §13 fleet-level price, not a steady-state edge); it
+    rescales the controller's priced cold-window penalty instead.
+    """
+    prefill: float = 1.0
+    decode: float = 1.0
+    transfer: float = 1.0
+    warmup: float = 1.0
+
+    @classmethod
+    def from_factors(cls, factors) -> "CostCorrections":
+        """Build from a ``{surface: observed/predicted}`` mapping,
+        clamping each factor to [CORRECTION_MIN, CORRECTION_MAX];
+        missing surfaces stay 1.0 (uncorrected)."""
+        kw = {}
+        for name in CALIBRATION_SURFACES:
+            f = factors.get(name)
+            if f is None or not math.isfinite(f) or f <= 0.0:
+                continue
+            kw[name] = min(max(float(f), CORRECTION_MIN), CORRECTION_MAX)
+        return cls(**kw)
+
+    def as_dict(self) -> dict:
+        return {name: getattr(self, name) for name in CALIBRATION_SURFACES}
+
+    @property
+    def is_identity(self) -> bool:
+        return all(abs(getattr(self, name) - 1.0) < 1e-12
+                   for name in CALIBRATION_SURFACES)
+
+    def max_deviation(self) -> float:
+        """Largest |factor − 1| over all surfaces — the scalar the
+        §15 miscalibration trigger thresholds on."""
+        return max(abs(getattr(self, name) - 1.0)
+                   for name in CALIBRATION_SURFACES)

@@ -17,8 +17,8 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.cluster import ClusterSpec
-from repro.core.cost_model import (ModelProfile, PAGE_SIZE, Workload,
-                                   kv_transfer_time, B_TYPE)
+from repro.core.cost_model import (CostCorrections, ModelProfile, PAGE_SIZE,
+                                   Workload, kv_transfer_time, B_TYPE)
 from repro.core.maxflow import FlowNetwork, FlowResult
 from repro.core.parallel_search import best_decode_plan, best_prefill_plan
 from repro.core.partition import GroupPartition
@@ -51,7 +51,8 @@ def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
                kv_compression_ratio: float = 1.0,
                paged_kv: bool = False,
                page_size: int = PAGE_SIZE,
-               dense_slot_capacity: Optional[int] = None
+               dense_slot_capacity: Optional[int] = None,
+               corrections: Optional[CostCorrections] = None
                ) -> FlowGraphResult:
     """Pick per-replica optimal plans, build the flow network, run
     preflow-push, and assemble a Placement.
@@ -69,7 +70,17 @@ def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
     decode-replica capacity accounting between the §11 page-pool budget
     at real residency and the dense engine's bucketed slab: on a
     memory-skewed cluster the two accountings admit different batch
-    sizes per group and the max-flow assignment shifts with them."""
+    sizes per group and the max-flow assignment shifts with them.
+
+    ``corrections`` (DESIGN.md §15) rescales the graph by learned
+    observed/predicted calibration factors: prefill/decode replica edge
+    capacities are divided by their surface's factor (a group observed
+    2x slower finishes half the requests per period) and the per-request
+    KV transfer time is multiplied by the transfer factor before the
+    φ→δ link capacity is derived — so a calibrated re-solve routes flow
+    through the cluster as OBSERVED, not as spec'd."""
+    if corrections is None:
+        corrections = CostCorrections()
     replicas: List[ReplicaPlacement] = []
     for gid, (group, is_pref) in enumerate(zip(part.groups, part.is_prefill)):
         if is_pref:
@@ -94,7 +105,8 @@ def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
         if r.plan is None or r.capacity <= 0.0:
             continue
         gin, gout = f"g{r.group_id}.in", f"g{r.group_id}.out"
-        add(gin, gout, r.capacity)
+        factor = corrections.prefill if r.is_prefill else corrections.decode
+        add(gin, gout, r.capacity / factor)
         if r.is_prefill:
             add("source", gin, _dispatch_capacity(cluster, r.devices, wl, period))
         else:
@@ -110,6 +122,7 @@ def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
             t_kv = kv_transfer_time(cluster, profile, p.plan, d.plan,
                                     batch=1, s_in=wl.s_in,
                                     compression_ratio=kv_compression_ratio)
+            t_kv *= corrections.transfer
             cap = period / t_kv if t_kv > 0 else float(period * 1e6)
             add(f"g{p.group_id}.out", f"g{d.group_id}.in", cap)
 

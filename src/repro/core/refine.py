@@ -24,7 +24,8 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
-from repro.core.cost_model import PAGE_SIZE, ModelProfile, Workload
+from repro.core.cost_model import (CostCorrections, PAGE_SIZE, ModelProfile,
+                                   Workload)
 from repro.core.flowgraph import (DEFAULT_PERIOD, FlowGraphResult, solve_flow)
 from repro.core.partition import GroupPartition
 
@@ -132,6 +133,7 @@ def iterative_refinement(
     kv_compression_ratio: float = 1.0,
     paged_kv: bool = False,
     page_size: int = PAGE_SIZE,
+    corrections: Optional[CostCorrections] = None,
 ) -> Tuple[GroupPartition, FlowGraphResult, List[RefineTrace]]:
     """Max-flow-guided edge-swap loop. Returns the refined partition, its
     flow result, and the improvement trace.
@@ -143,6 +145,11 @@ def iterative_refinement(
     off the §11 page-pool budget at real residency, so refinement
     chases what a PAGED fleet can actually admit.
 
+    ``corrections`` (DESIGN.md §15) threads learned calibration factors
+    into EVERY solve — the initial one and each candidate's re-score —
+    so the whole refinement walk chases bottlenecks in the cluster as
+    observed, not just the final solve.
+
     ``anneal`` > 0 enables simulated-annealing acceptance (beyond-paper
     extension): a worsening candidate is accepted with probability
     exp(Δ/(T·flow)), T = anneal·(1 − step/max_iters), which lets the
@@ -153,7 +160,8 @@ def iterative_refinement(
     cur_part = part
     cur_res = solve_flow(cluster, profile, part, wl, period,
                          kv_compression_ratio=kv_compression_ratio,
-                         paged_kv=paged_kv, page_size=page_size)
+                         paged_kv=paged_kv, page_size=page_size,
+                         corrections=corrections)
     best_part, best_res = cur_part, cur_res
     trace = [RefineTrace(0, best_res.placement.max_flow, "initial")]
     if on_step:
@@ -167,7 +175,8 @@ def iterative_refinement(
         scored = [(name, cand,
                    solve_flow(cluster, profile, cand, wl, period,
                               kv_compression_ratio=kv_compression_ratio,
-                              paged_kv=paged_kv, page_size=page_size))
+                              paged_kv=paged_kv, page_size=page_size,
+                              corrections=corrections))
                   for name, cand in cands]
         scored.sort(key=lambda t: -t[2].placement.max_flow)
         pick = None

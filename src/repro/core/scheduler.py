@@ -26,7 +26,8 @@ import time
 from typing import Callable, List, Optional, Tuple
 
 from repro.core.cluster import ClusterSpec
-from repro.core.cost_model import PAGE_SIZE, ModelProfile, Workload
+from repro.core.cost_model import (CostCorrections, PAGE_SIZE, ModelProfile,
+                                   Workload)
 from repro.core.flowgraph import DEFAULT_PERIOD, FlowGraphResult, solve_flow
 from repro.core.partition import GroupPartition, initial_partition, num_groups
 from repro.core.placement import Placement
@@ -53,13 +54,16 @@ def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
              kv_compression_ratio: float = 1.0,
              paged_kv: bool = False,
              page_size: int = PAGE_SIZE,
+             corrections: Optional[CostCorrections] = None,
              ) -> ScheduleResult:
     """``kv_compression_ratio`` > 1 prices the φ→δ KV links at the
     serving codec's compressed bytes (DESIGN.md §10), letting the whole
     search co-optimize placement with compression. ``paged_kv`` prices
     decode-group capacities off the §11 page-pool budget at real
     residency instead of dense slabs, letting the search size decode
-    groups for what a paged fleet actually admits."""
+    groups for what a paged fleet actually admits. ``corrections``
+    (DESIGN.md §15) rescales every solve by learned observed/predicted
+    calibration factors."""
     t0 = time.perf_counter()
     k0 = k if k is not None else num_groups(cluster, profile)
     best: Optional[ScheduleResult] = None
@@ -77,7 +81,8 @@ def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
                 max_iters=max_refine_iters, guided=guided, seed=seed,
                 on_step=on_step,
                 kv_compression_ratio=kv_compression_ratio,
-                paged_kv=paged_kv, page_size=page_size)
+                paged_kv=paged_kv, page_size=page_size,
+                corrections=corrections)
             cand = ScheduleResult(res.placement, rpart, res, trace,
                                   time.perf_counter() - t0)
             if best is None or cand.placement.max_flow > best.placement.max_flow:
@@ -145,6 +150,9 @@ class WorkloadMonitor:
             maxlen=rate_window)
         #: 1/0 per completed stated-SLO request (met/missed)
         self._slo_hits: collections.deque = collections.deque(maxlen=window)
+        #: optional §15 ``CalibrationStore`` — lets the monitor double
+        #: as the miscalibration signal the FleetController reads
+        self.calibration = None
 
     @property
     def n(self) -> int:
@@ -224,6 +232,19 @@ class WorkloadMonitor:
             return None
         return sum(self._slo_hits) / len(self._slo_hits)
 
+    # -- calibration signal (DESIGN.md §15) -----------------------------
+    def attach_calibration(self, store) -> None:
+        """Attach a serving-layer ``CalibrationStore`` so miscalibration
+        joins length drift and SLO attainment as a monitor signal."""
+        self.calibration = store
+
+    def miscalibration(self) -> float:
+        """Worst per-surface |observed/predicted EWMA − 1| from the
+        attached store (0.0 when unattached or not yet warmed up)."""
+        if self.calibration is None or not self.calibration.warmed_up:
+            return 0.0
+        return self.calibration.max_error()
+
     def drift(self) -> float:
         """Max |log(observed mean / baseline)| over prompt and output."""
         if not self._s_in:
@@ -262,6 +283,7 @@ def reschedule(cluster: ClusterSpec, profile: ModelProfile,
                kv_compression_ratio: float = 1.0,
                paged_kv: bool = False,
                page_size: int = PAGE_SIZE,
+               corrections: Optional[CostCorrections] = None,
                ) -> ScheduleResult:
     """Warm-start rescheduling for a drifted workload.
 
@@ -270,17 +292,42 @@ def reschedule(cluster: ClusterSpec, profile: ModelProfile,
     partition instead of the full two-phase K/prefill-share sweep.
     Refinement never returns worse than its start, so the result is at
     least the current placement re-planned for ``wl`` — and typically a
-    few device moves / type flips toward the new mix."""
+    few device moves / type flips toward the new mix.
+
+    ``corrections`` (DESIGN.md §15) makes this a CALIBRATED re-solve:
+    every capacity/transfer price in the warm-started search is rescaled
+    by the learned observed/predicted factors, so the refreshed flow
+    assignment routes around links/groups the spec over-promised. A
+    calibration shift can flip which ROLE a group is best at (a group
+    placed for prefill throughput may be worth more as decode capacity
+    once the real interconnect prices in), and swap-move refinement
+    can't cross that ridge from the stale typing — so a corrected
+    re-solve additionally seeds refinement from each single-group role
+    flip, exactly like ``reschedule_capacity`` types joining devices,
+    and keeps the best corrected max-flow."""
     t0 = time.perf_counter()
     if period is None:
         period = prev.placement.period
-    part = GroupPartition([list(g) for g in prev.partition.groups],
-                          list(prev.partition.is_prefill))
-    rpart, res, trace = iterative_refinement(
-        cluster, profile, part, wl, period,
-        max_iters=max_refine_iters, guided=guided, seed=seed,
-        on_step=on_step, kv_compression_ratio=kv_compression_ratio,
-        paged_kv=paged_kv, page_size=page_size)
+    seeds = [GroupPartition([list(g) for g in prev.partition.groups],
+                            list(prev.partition.is_prefill))]
+    if corrections is not None and not corrections.is_identity:
+        roles = list(prev.partition.is_prefill)
+        for i in range(len(roles)):
+            flipped = list(roles)
+            flipped[i] = not flipped[i]
+            if any(flipped) and not all(flipped):
+                seeds.append(GroupPartition(
+                    [list(g) for g in prev.partition.groups], flipped))
+    best = None
+    for part in seeds:
+        rpart, res, trace = iterative_refinement(
+            cluster, profile, part, wl, period,
+            max_iters=max_refine_iters, guided=guided, seed=seed,
+            on_step=on_step, kv_compression_ratio=kv_compression_ratio,
+            paged_kv=paged_kv, page_size=page_size, corrections=corrections)
+        if best is None or res.placement.max_flow > best[1].placement.max_flow:
+            best = (rpart, res, trace)
+    rpart, res, trace = best
     return ScheduleResult(res.placement, rpart, res, trace,
                           time.perf_counter() - t0)
 
@@ -296,6 +343,7 @@ def reschedule_capacity(cluster: ClusterSpec, profile: ModelProfile,
                         kv_compression_ratio: float = 1.0,
                         paged_kv: bool = False,
                         page_size: int = PAGE_SIZE,
+                        corrections: Optional[CostCorrections] = None,
                         ) -> ScheduleResult:
     """Warm-start rescheduling for CAPACITY drift (DESIGN.md §13) —
     §7's trigger extended from the workload changing to the FLEET
@@ -331,7 +379,7 @@ def reschedule_capacity(cluster: ClusterSpec, profile: ModelProfile,
             cluster, profile, part, wl, period,
             max_iters=max_refine_iters, guided=guided, seed=seed,
             on_step=on_step, kv_compression_ratio=kv_compression_ratio,
-            paged_kv=paged_kv, page_size=page_size)
+            paged_kv=paged_kv, page_size=page_size, corrections=corrections)
         cand = ScheduleResult(res.placement, rpart, res, trace,
                               time.perf_counter() - t0)
         if best is None or cand.placement.max_flow > best.placement.max_flow:

@@ -42,15 +42,52 @@ import numpy as np
 from repro.configs import ASSIGNED, get_config
 from repro.models import init_params
 from repro.serving import Coordinator, ServeRequest, TraceRecorder
-from repro.serving.telemetry import (chrome_trace, dump_chrome_trace,
-                                     prometheus_text, validate_chrome_trace)
+from repro.serving.telemetry import (MetricsEndpoint, chrome_trace,
+                                     dump_chrome_trace, prometheus_text,
+                                     validate_chrome_trace)
 from repro.serving.workload import PREFIX_TRACES, prefix_trace
 
 
 def _maybe_recorder(args):
     """One shared §14 event bus when any observability output is
     requested; None otherwise (telemetry stays zero-cost)."""
-    return TraceRecorder() if (args.trace_out or args.metrics_out) else None
+    wanted = args.trace_out or args.metrics_out or args.metrics_port
+    return TraceRecorder() if wanted else None
+
+
+def _maybe_endpoint(args, render):
+    """Start the §15 scrape endpoint when ``--metrics-port`` is set:
+    ``/metrics`` renders a live Prometheus snapshot via ``render``,
+    ``/healthz`` answers ``ok``. Returns the started endpoint or None."""
+    if not args.metrics_port:
+        return None
+    ep = MetricsEndpoint(render, port=args.metrics_port).start()
+    print(f"[serve] metrics endpoint: {ep.url} (+ /healthz)")
+    return ep
+
+
+def _scrape_endpoint(ep) -> None:
+    """One-shot self-scrape before shutdown — the smoke contract for
+    ``--metrics-port``, mirroring ``--trace-out``'s schema check: the
+    launcher exits non-zero unless ``/healthz`` answers ``ok`` and
+    ``/metrics`` serves a non-empty exposition body."""
+    if ep is None:
+        return
+    import urllib.request
+    base = f"http://{ep.host}:{ep.port}"
+    try:
+        with urllib.request.urlopen(f"{base}/healthz", timeout=10) as r:
+            healthy = r.status == 200 and r.read().strip() == b"ok"
+        with urllib.request.urlopen(f"{base}/metrics", timeout=10) as r:
+            body = r.read().decode()
+            served = r.status == 200 and "repro_" in body
+    except Exception as e:  # noqa: BLE001 — report, then fail the smoke
+        raise SystemExit(f"[serve] --metrics-port scrape failed: {e}")
+    if not (healthy and served):
+        raise SystemExit("[serve] --metrics-port scrape returned an "
+                         "unhealthy or empty exposition")
+    print(f"[serve] scraped {base}/metrics: "
+          f"{len(body.splitlines())} exposition lines, /healthz ok")
 
 
 def _write_observability(args, m, recorder, *, dispatch_log=(),
@@ -137,6 +174,9 @@ def _serve_fleet(cfg, params, args) -> None:
                          sustain_steps=2, cooldown_steps=4,
                          hysteresis_steps=8)
         ctrl = FleetController(router, make_replica, spec, dt=0.05)
+    endpoint = _maybe_endpoint(
+        args, lambda: prometheus_text(router.metrics(), router.gauges,
+                                      recorder=recorder))
     # kill replica 0: sticky prefix routing concentrates early work
     # there, so the failover path genuinely has requests to move
     failures = {2: 0} if args.kill_replica else None
@@ -178,6 +218,9 @@ def _serve_fleet(cfg, params, args) -> None:
               + " ".join(f"{k}={v}" for k, v in
                          sorted(ctrl.replica_steps_by_state.items()))
               + f" warm_pen={m.warmup_ttft_penalty_s:.2f}s")
+    _scrape_endpoint(endpoint)
+    if endpoint is not None:
+        endpoint.close()
     if args.kill_replica and c["redispatched"] == 0:
         raise SystemExit("[serve] --kill-replica exercised no failover "
                          "re-dispatches (raise --requests or --rate-rps)")
@@ -254,6 +297,11 @@ def main() -> None:
                     help="write a Prometheus text-exposition snapshot of "
                          "the shared metrics schema + TTFT attribution + "
                          "live-window gauges")
+    ap.add_argument("--metrics-port", type=int, default=0, metavar="PORT",
+                    help="serve a live Prometheus scrape endpoint "
+                         "(/metrics + /healthz, stdlib http.server) on "
+                         "this port for the duration of the run "
+                         "(DESIGN.md §15); 0 = off")
     ap.add_argument("--stream", action="store_true",
                     help="print each token as it is generated")
     ap.add_argument("--full", action="store_true",
@@ -324,6 +372,8 @@ def main() -> None:
     recorder = _maybe_recorder(args)
     sess = coord.session(max_prefill_batch=args.prefill_batch,
                          telemetry=recorder)
+    endpoint = _maybe_endpoint(
+        args, lambda: prometheus_text(sess.metrics(), recorder=recorder))
     pending = collections.deque(
         (float(arrivals[i]), r) for i, r in enumerate(reqs))
     t0 = time.perf_counter()
@@ -373,6 +423,9 @@ def main() -> None:
     _print_breakdown(m)
     _write_observability(args, m, recorder,
                          label=f"repro-serve-{cfg.name}")
+    _scrape_endpoint(endpoint)
+    if endpoint is not None:
+        endpoint.close()
 
 
 if __name__ == "__main__":

@@ -4,14 +4,18 @@ lifecycle + metrics schema both domains report (DESIGN.md §8)."""
 from repro.serving.request import (IllegalTransition, Phase, Request,
                                    RequestState, TERMINAL_STATES,
                                    TRANSITIONS, TTFT_BUCKETS)
-from repro.serving.telemetry import (Span, TelemetryEvent, TraceRecorder,
-                                     WindowedGauges, chrome_trace,
-                                     prometheus_text, request_spans,
-                                     span_stream, validate_chrome_trace)
+from repro.serving.calibration import (CalibrationStore, plan_predictor,
+                                       placement_predictor)
+from repro.serving.telemetry import (MetricsEndpoint, Span, TelemetryEvent,
+                                     TraceRecorder, WindowedGauges,
+                                     chrome_trace, prometheus_text,
+                                     request_spans, span_stream,
+                                     validate_chrome_trace)
 from repro.serving.metrics import METRIC_FIELDS, ServeMetrics
 from repro.serving.prefix_cache import (CacheStats, MatchResult, PrefixCache,
                                         route_score)
 from repro.serving.workload import (PREFIX_TRACES, TracePhase,
+                                    calibration_workload,
                                     drifting_workload,
                                     fewshot_agentic_workload,
                                     multi_turn_workload, observed_workload,
@@ -45,12 +49,15 @@ from repro.serving.paging import (BlockTable, NoFreeSlotError,
 
 __all__ = ["IllegalTransition", "Phase", "Request", "RequestState",
            "TERMINAL_STATES", "TTFT_BUCKETS",
+           "CalibrationStore", "plan_predictor", "placement_predictor",
+           "MetricsEndpoint",
            "Span", "TelemetryEvent", "TraceRecorder", "WindowedGauges",
            "chrome_trace", "prometheus_text", "request_spans",
            "span_stream", "validate_chrome_trace",
            "TRANSITIONS", "METRIC_FIELDS", "ServeMetrics", "CacheStats",
            "MatchResult", "PrefixCache", "route_score", "PREFIX_TRACES",
-           "TracePhase", "drifting_workload", "fewshot_agentic_workload",
+           "TracePhase", "calibration_workload", "drifting_workload",
+           "fewshot_agentic_workload",
            "mixed_priority_workload",
            "multi_turn_workload", "observed_workload", "offline_workload",
            "online_workload", "prefix_trace",

@@ -1,0 +1,306 @@
+"""Cost-model calibration observability (DESIGN.md §15).
+
+The scheduler prices every placement decision off the analytical cost
+model (paper Table 1): prefill latency, per-step decode latency, KV wire
+time, warm-up. Nothing before this module ever checked those predictions
+against what the simulator or runtime actually observed — a miscalibrated
+cluster spec (links slower than spec'd, a throttled GPU) silently
+degrades every max-flow solve and autoscale decision.
+
+``CalibrationStore`` closes the loop:
+
+* **Stamp** (dispatch edge): the cost model's *predicted* per-surface
+  costs are written onto the request (``pred_prefill_s`` /
+  ``pred_decode_step_s`` / ``pred_transfer_s`` / ``pred_warmup_s``) by a
+  pure *predictor* function of (request, routed group). Predictions are
+  made once, at the routing decision, from the cluster spec the
+  scheduler BELIEVED.
+* **Observe** (terminal sweep): observed per-surface costs are derived
+  purely from the §8/§14 lifecycle stamps — the same stamps
+  ``request_spans`` reads — never measured separately. Per
+  (surface, group) the store keeps a robust EWMA of the
+  observed/predicted ratio (each observation clamped before folding, so
+  one outlier can't swing an edge) and of the residual
+  (observed − predicted seconds).
+* **Report**: ``cost_error`` events + per-group ``cost_ratio:{surface}``
+  gauge series on the ``TraceRecorder`` (chrome-trace counter tracks),
+  ``repro_cost_model_error{surface,group}`` in the Prometheus snapshot,
+  and ``corrections()`` — a clamped ``CostCorrections`` the §7 re-solve
+  path threads into every ``solve_flow`` capacity.
+
+Parity: both the stamp (a pure function of identically-constructed
+predictor args) and the observation (a pure function of the
+parity-exact lifecycle stamps) are inside the two-domain contract, so
+two identically-configured stores driven by the simulator and the
+runtime on the same seeded trace end with EXACTLY equal factors — the
+new §15 parity surface, pinned by ``tests/test_calibration.py`` and the
+calibration benchmark's parity leg.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core.cost_model import (CALIBRATION_SURFACES, CostCorrections,
+                                   ModelProfile, decode_step_latency,
+                                   kv_transfer_time, prefill_latency)
+from repro.serving.request import Request, RequestState
+from repro.serving.telemetry import TraceRecorder
+
+__all__ = [
+    "CalibrationStore", "plan_predictor", "placement_predictor",
+    "CALIBRATION_SURFACES",
+]
+
+#: per-observation ratio clamp — the "robust" in robust EWMA: a single
+#: pathological request (zero-length stage, clock quantization) folds
+#: in as at most this far from the running estimate
+_RATIO_LO, _RATIO_HI = 0.05, 20.0
+#: predictions/observations below this are treated as "surface absent"
+#: (single-token requests have no decode cadence, zero-length transfers
+#: no wire time) rather than as a measured zero
+_EPS = 1e-12
+
+
+class _ErrStat:
+    """Running robust error estimate for one (surface, group) cell."""
+
+    __slots__ = ("ratio", "residual", "count")
+
+    def __init__(self) -> None:
+        self.ratio: Optional[float] = None
+        self.residual: Optional[float] = None
+        self.count = 0
+
+    def fold(self, ratio: float, residual: float, alpha: float) -> None:
+        ratio = min(max(ratio, _RATIO_LO), _RATIO_HI)
+        if self.ratio is None:
+            self.ratio, self.residual = ratio, residual
+        else:
+            self.ratio = (1.0 - alpha) * self.ratio + alpha * ratio
+            self.residual = (1.0 - alpha) * self.residual + alpha * residual
+        self.count += 1
+
+
+class CalibrationStore:
+    """Predicted-vs-observed cost attribution per scheduling surface.
+
+    ``predictor(req, group)`` returns the model's predicted seconds for
+    any subset of ``CALIBRATION_SURFACES`` for ``req`` routed to
+    ``group`` (missing/zero surfaces are simply never scored). It must
+    be a PURE function of its arguments — that, plus observations being
+    pure functions of the parity-exact lifecycle stamps, is what makes
+    two stores driven by the two domains agree exactly.
+
+    ``bound`` + ``min_observations`` define the miscalibration trigger
+    signal: ``miscalibrated()`` is True once some warmed-up surface's
+    global |EWMA ratio − 1| exceeds ``bound``. The §13 controller damps
+    this signal exactly like ``slo_floor`` (sustain + cooldown) before
+    firing a calibrated re-solve.
+
+    ``recorder`` (optional, OUTSIDE the parity surface) receives one
+    ``cost_error`` event per scored request plus per-group
+    ``cost_ratio:{surface}`` gauge series that ``chrome_trace`` renders
+    as counter tracks.
+    """
+
+    def __init__(self, predictor: Callable[[Request, int], Dict[str, float]],
+                 *, ewma_alpha: float = 0.25, bound: float = 0.5,
+                 min_observations: int = 8,
+                 recorder: Optional[TraceRecorder] = None):
+        assert 0.0 < ewma_alpha <= 1.0
+        assert bound > 0.0 and min_observations > 0
+        self.predictor = predictor
+        self.ewma_alpha = ewma_alpha
+        self.bound = bound
+        self.min_observations = min_observations
+        self.recorder = recorder
+        #: (surface, group) -> running error stats (group -1 = global,
+        #: the per-surface aggregate ``factors()``/``corrections()`` read)
+        self._stats: Dict[Tuple[str, int], _ErrStat] = {}
+        #: rid -> routed group of the latest stamp (redispatch restamps)
+        self._routed: Dict[int, int] = {}
+        self.stamped = 0
+        self.observations = 0
+
+    # -- dispatch edge --------------------------------------------------
+    def stamp(self, req: Request, group: int) -> None:
+        """Write the model's predicted stage costs onto ``req`` for the
+        routing decision that just sent it to ``group``. Call AFTER any
+        warm-up pricing hook: the predicted warm-up is whatever penalty
+        the controller priced at this dispatch."""
+        pred = self.predictor(req, group)
+        req.pred_prefill_s = float(pred.get("prefill", 0.0))
+        req.pred_decode_step_s = float(pred.get("decode", 0.0))
+        req.pred_transfer_s = float(pred.get("transfer", 0.0))
+        req.pred_warmup_s = float(pred.get("warmup", req.warmup_penalty_s))
+        self._routed[req.rid] = int(group)
+        self.stamped += 1
+
+    # -- terminal sweep -------------------------------------------------
+    def _observed(self, req: Request) -> Dict[str, float]:
+        """Observed per-surface seconds, derived purely from the §8
+        lifecycle stamps (the same stamps ``request_spans`` renders —
+        prefill span, transfer span, decode cadence, warm-up stamp)."""
+        obs: Dict[str, float] = {}
+        if req.prefill_start is not None and req.prefill_end is not None:
+            obs["prefill"] = max(req.prefill_end - req.prefill_start, 0.0)
+        if req.prefill_end is not None and req.transfer_end is not None:
+            obs["transfer"] = max(req.transfer_end - req.prefill_end, 0.0)
+        if req.transfer_end is not None and req.decode_end is not None:
+            n = req.s_out if req.tokens_out is None else req.tokens_out
+            if n > 1:
+                obs["decode"] = max(
+                    req.decode_end - req.transfer_end, 0.0) / (n - 1)
+        obs["warmup"] = req.warmup_penalty_s
+        return obs
+
+    def observe(self, req: Request, ts: float = 0.0) -> None:
+        """Score one TERMINAL request: fold observed/predicted ratios
+        into the per-(surface, group) and global EWMAs. Non-DONE
+        terminals (rejected/cancelled) only clear bookkeeping — they
+        have no complete stage timeline to score."""
+        group = self._routed.pop(req.rid, None)
+        if req.phase is not RequestState.DONE or group is None:
+            return
+        pred = {"prefill": req.pred_prefill_s,
+                "decode": req.pred_decode_step_s,
+                "transfer": req.pred_transfer_s,
+                "warmup": req.pred_warmup_s}
+        obs = self._observed(req)
+        scored: Dict[str, Tuple[float, float]] = {}
+        for surface in CALIBRATION_SURFACES:
+            p, o = pred.get(surface, 0.0), obs.get(surface)
+            if o is None or p <= _EPS or o <= _EPS:
+                continue            # surface absent for this request
+            ratio, residual = o / p, o - p
+            for key in ((surface, group), (surface, -1)):
+                self._stats.setdefault(key, _ErrStat()).fold(
+                    ratio, residual, self.ewma_alpha)
+            scored[surface] = (ratio, residual)
+        if scored:
+            self.observations += 1
+        if self.recorder is not None and scored:
+            args = {f"{s}_ratio": r for s, (r, _) in scored.items()}
+            args.update({f"{s}_residual_s": d
+                         for s, (_, d) in scored.items()})
+            self.recorder.emit("cost_error", ts,
+                               track=f"replica:{group}", rid=req.rid,
+                               **args)
+            for surface, (ratio, _) in scored.items():
+                cell = self._stats[(surface, group)]
+                self.recorder.gauge(f"cost_ratio:{surface}", ts,
+                                    cell.ratio, track=f"replica:{group}")
+
+    # -- reporting ------------------------------------------------------
+    def snapshot(self) -> Dict[Tuple[str, int], Dict[str, float]]:
+        """Per-(surface, group) error state for the Prometheus export:
+        ``{(surface, group): {"ratio", "residual_s", "count"}}``. The
+        global aggregate appears as group ``-1``."""
+        return {key: {"ratio": st.ratio, "residual_s": st.residual,
+                      "count": float(st.count)}
+                for key, st in sorted(self._stats.items())
+                if st.ratio is not None}
+
+    def factors(self) -> Dict[str, float]:
+        """Global per-surface observed/predicted EWMA ratios, restricted
+        to surfaces with at least ``min_observations`` scores (an
+        under-sampled surface must not rescale the flowgraph)."""
+        out: Dict[str, float] = {}
+        for surface in CALIBRATION_SURFACES:
+            st = self._stats.get((surface, -1))
+            if st is not None and st.count >= self.min_observations \
+                    and st.ratio is not None and math.isfinite(st.ratio):
+                out[surface] = st.ratio
+        return out
+
+    def corrections(self) -> CostCorrections:
+        """Clamped multiplicative corrections for a calibrated re-solve
+        (identity for every surface not yet warmed up)."""
+        return CostCorrections.from_factors(self.factors())
+
+    @property
+    def warmed_up(self) -> bool:
+        return bool(self.factors())
+
+    def max_error(self) -> float:
+        """Largest |EWMA ratio − 1| over warmed-up surfaces — the raw
+        miscalibration signal the damped §13 trigger thresholds."""
+        f = self.factors()
+        if not f:
+            return 0.0
+        return max(abs(r - 1.0) for r in f.values())
+
+    def miscalibrated(self) -> bool:
+        return self.max_error() > self.bound
+
+
+# ---------------------------------------------------------------------------
+# Predictors
+# ---------------------------------------------------------------------------
+
+
+def plan_predictor(cluster: Any, profile: ModelProfile,
+                   prefill_plan: Any, decode_plan: Any
+                   ) -> Callable[[Request, int], Dict[str, float]]:
+    """Predictor for the ROUTER domain, where every replica serves the
+    same (prefill plan, decode plan) pair: predicted costs depend only
+    on the request's lengths, so two domains constructing this from the
+    same arguments stamp bit-identical predictions. ``group`` (the
+    replica index) is deliberately unused — it labels the error series,
+    not the prediction."""
+
+    def predict(req: Request, group: int) -> Dict[str, float]:
+        ctx = req.s_in + max(req.s_out, 1) // 2
+        return {
+            "prefill": prefill_latency(cluster, profile, prefill_plan,
+                                       batch=1, s_in=req.s_in),
+            "decode": decode_step_latency(cluster, profile, decode_plan,
+                                          batch=1, context=ctx),
+            "transfer": kv_transfer_time(cluster, profile, prefill_plan,
+                                         decode_plan, batch=1,
+                                         s_in=req.s_in),
+        }
+
+    return predict
+
+
+def placement_predictor(cluster: Any, profile: ModelProfile, placement: Any
+                        ) -> Callable[[Request, int], Dict[str, float]]:
+    """Predictor for the SCHEDULING domain: ``group`` is the placement
+    group id the request was routed to for prefill. The decode leg is
+    predicted at the group's DOMINANT §4 kv_route destination (largest
+    flow share, ties to the lowest id) — a genuine prediction: the
+    dispatcher may route the KV elsewhere, and the error series absorbs
+    the difference. ``cluster`` here is the spec the scheduler BELIEVED
+    when it solved ``placement``; running the fleet on different
+    hardware is exactly the miscalibration this store measures."""
+    by_gid = {r.group_id: r for r in placement.replicas}
+    main_route: Dict[int, int] = {}
+    for (pid, did), f in sorted(placement.kv_routes.items()):
+        best = main_route.get(pid)
+        if best is None or f > placement.kv_routes[(pid, best)]:
+            main_route[pid] = did
+    decode_gids = sorted(r.group_id for r in placement.replicas
+                         if not r.is_prefill and r.plan is not None)
+
+    def predict(req: Request, group: int) -> Dict[str, float]:
+        rep = by_gid.get(group)
+        if rep is None or rep.plan is None:
+            return {}
+        out: Dict[str, float] = {
+            "prefill": prefill_latency(cluster, profile, rep.plan,
+                                       batch=1, s_in=req.s_in)}
+        did = main_route.get(group,
+                             decode_gids[0] if decode_gids else None)
+        dec = by_gid.get(did) if did is not None else None
+        if dec is not None and dec.plan is not None:
+            ctx = req.s_in + max(req.s_out, 1) // 2
+            out["decode"] = decode_step_latency(cluster, profile, dec.plan,
+                                                batch=1, context=ctx)
+            out["transfer"] = kv_transfer_time(cluster, profile, rep.plan,
+                                               dec.plan, batch=1,
+                                               s_in=req.s_in)
+        return out
+
+    return predict

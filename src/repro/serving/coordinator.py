@@ -121,10 +121,16 @@ class ServeSession:
                  max_prefill_batch: int = 4,
                  inline_prefill: bool = False,
                  clock: Optional[Callable[[], float]] = None,
-                 telemetry=None):
+                 telemetry=None,
+                 calibration=None):
         self.coord = coord
         self.max_prefill_batch = max(1, max_prefill_batch)
         self.inline_prefill = inline_prefill
+        #: §15 cost-model calibration (``calibration.CalibrationStore``
+        #: or None): predictions are stamped at submit and scored at the
+        #: DONE edge. When the session is driven through the §12 Router
+        #: the router owns stamping instead — don't wire both.
+        self.calibration = calibration
         #: §14 event bus (``telemetry.TraceRecorder`` or None): stage
         #: events (prefill micro-batches, per-chunk KV installs,
         #: preemptions) and per-engine utilization series. Optional —
@@ -183,6 +189,8 @@ class ServeSession:
         self._order.append(req.rid)
         self._queue.append(req.rid)
         self._unfinished += 1
+        if self.calibration is not None:
+            self.calibration.stamp(life, 0)
         return req.rid
 
     # -- pipeline stages ------------------------------------------------
@@ -198,6 +206,8 @@ class ServeSession:
         e.cache = None
         self._unfinished -= 1
         self._makespan = max(self._makespan, e.life.decode_end)
+        if self.calibration is not None:
+            self.calibration.observe(e.life, self.now())
 
     def _step_prefill(self) -> bool:
         """Run one bounded prefill micro-batch (bucketed/padded, one

@@ -97,6 +97,15 @@ class FleetSpec:
     cooldown_steps: int = 16
     #: no scale-up within this many steps of a scale-down (anti-flap)
     hysteresis_steps: int = 32
+    #: optional §15 miscalibration trigger: once a warmed-up surface's
+    #: |observed/predicted EWMA − 1| exceeds this bound for
+    #: ``sustain_steps`` consecutive steps (damped exactly like
+    #: ``slo_floor``), the controller emits ``recalibrate`` and runs
+    #: the resolver — typically a calibrated ``reschedule`` closing the
+    #: §15 loop. None disables the trigger.
+    miscal_bound: Optional[float] = None
+    #: minimum steps between calibrated re-solves
+    recal_cooldown_steps: int = 64
 
 
 @dataclasses.dataclass
@@ -135,7 +144,8 @@ class FleetController:
                  spec: FleetSpec = FleetSpec(), *,
                  dt: float = 0.05,
                  monitor: Optional[Any] = None,
-                 resolver: Optional[Resolver] = None):
+                 resolver: Optional[Resolver] = None,
+                 calibration: Optional[Any] = None):
         assert spec.min_replicas >= 1
         assert spec.max_replicas >= spec.min_replicas
         self.router = router
@@ -144,8 +154,13 @@ class FleetController:
         self.dt = float(dt)
         self.monitor = monitor
         self.resolver = resolver
+        #: §15 calibration store the miscalibration trigger reads;
+        #: falls back to one attached to the WorkloadMonitor, then to
+        #: the router's own store
+        self.calibration = calibration
         self.events: List[ScaleEvent] = []
         self.resolves = 0
+        self.recalibrations = 0
         self.replica_steps_by_state: Dict[str, int] = {}
         self.records: List[_ReplicaRecord] = [
             _ReplicaRecord(slot=i, state=ReplicaState.LIVE, state_since=0,
@@ -155,8 +170,10 @@ class FleetController:
             r.router_idx: r for r in self.records}
         self._up_pressure = 0
         self._down_pressure = 0
+        self._miscal_pressure = 0
         self._last_scale = -10 ** 9
         self._last_down = -10 ** 9
+        self._last_recal = -10 ** 9
         self._completed: set = set()
         router.capacity_hook = self._capacity_pending
         router.on_dispatch = self._on_dispatch
@@ -284,6 +301,39 @@ class FleetController:
             self._scale_down(step, cand,
                              reason=f"inflight={infl} cap={cap}")
 
+    def _calibration_store(self) -> Optional[Any]:
+        if self.calibration is not None:
+            return self.calibration
+        if self.monitor is not None:
+            store = getattr(self.monitor, "calibration", None)
+            if store is not None:
+                return store
+        return getattr(self.router, "calibration", None)
+
+    def _calibration_policy(self, step: int) -> None:
+        """§15 miscalibration trigger, damped like ``slo_floor``: the
+        cost-model error must exceed ``miscal_bound`` for
+        ``sustain_steps`` consecutive steps, with its own cooldown so a
+        re-solve is not re-fired while the same error persists.  A pure
+        function of the store's EWMA state — parity-exact across the
+        simulator and runtime domains."""
+        spec = self.spec
+        if spec.miscal_bound is None:
+            return
+        store = self._calibration_store()
+        if store is None:
+            return
+        hot = store.warmed_up and store.max_error() > spec.miscal_bound
+        self._miscal_pressure = self._miscal_pressure + 1 if hot else 0
+        if (self._miscal_pressure >= spec.sustain_steps
+                and step - self._last_recal >= spec.recal_cooldown_steps):
+            self._miscal_pressure = 0
+            self._last_recal = step
+            self.recalibrations += 1
+            self._emit(step, "recalibrate", -1,
+                       reason=f"max_error={store.max_error():.3f}")
+            self._resolve(step, self.events[-1])
+
     def _drain_candidate(self,
                          live: List[_ReplicaRecord]
                          ) -> Optional[_ReplicaRecord]:
@@ -338,6 +388,7 @@ class FleetController:
         scale-to-demand, accumulate per-state replica-steps."""
         self._advance(step)
         self._policy(step)
+        self._calibration_policy(step)
         self._account(step)
 
     # -- driving / results ----------------------------------------------

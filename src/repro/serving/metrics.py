@@ -52,6 +52,11 @@ from repro.serving.request import Request, RequestState
 #: ``ttft_breakdown``, the per-priority-class TTFT attribution report
 #: (dict-valued, so NOT in ``summary()``; fractions per request sum to
 #: exactly 1.0 — see ``Request.ttft_fractions``).
+#: §15 calibration adds ``cost_model_error``: per-surface mean
+#: |observed/predicted − 1| derived purely from the ``pred_*`` dispatch
+#: stamps and span-derived lifecycle timestamps, so sim-vs-runtime
+#: reports agree EXACTLY on the same trace (dict-valued, NOT in
+#: ``summary()``; {} when nothing was stamped).
 METRIC_FIELDS = ("decode_throughput", "avg_latency", "p50_latency",
                  "p99_latency",
                  "avg_ttft", "p50_ttft", "p99_ttft",
@@ -68,7 +73,7 @@ METRIC_FIELDS = ("decode_throughput", "avg_latency", "p50_latency",
                  "cache_hit_rate_by_class",
                  "scale_up_events", "scale_down_events",
                  "warmup_ttft_penalty_s", "replica_steps_by_state",
-                 "ttft_breakdown")
+                 "ttft_breakdown", "cost_model_error")
 
 
 @dataclasses.dataclass
@@ -303,6 +308,36 @@ class ServeMetrics:
             out[cls] = {k: float(np.mean([f[k] for f in fracs]))
                         for k in TTFT_BUCKETS}
         return out
+
+    # -- calibration fields (DESIGN.md §15) -----------------------------
+    @property
+    def cost_model_error(self) -> Dict[str, float]:
+        """Per-surface mean |observed/predicted − 1| over DONE requests
+        carrying §15 dispatch stamps (``pred_prefill_s`` etc.), with
+        observations derived from the same span-boundary timestamps the
+        ``CalibrationStore`` reads — a pure function of lifecycle
+        records, so sim-vs-runtime agrees EXACTLY on the same trace.
+        {} when no request was stamped (calibration off)."""
+        eps = 1e-12
+        errs: Dict[str, List[float]] = {}
+        for r in self.requests:
+            if r.phase is not RequestState.DONE or r.prefill_start is None:
+                continue
+            n = r.s_out if r.tokens_out is None else r.tokens_out
+            pairs = (
+                ("prefill", r.pred_prefill_s,
+                 (r.prefill_end or 0.0) - r.prefill_start),
+                ("transfer", r.pred_transfer_s,
+                 (r.transfer_end or 0.0) - (r.prefill_end or 0.0)),
+                ("decode", r.pred_decode_step_s,
+                 ((r.decode_end or 0.0) - (r.transfer_end or 0.0))
+                 / (n - 1) if n > 1 else 0.0),
+                ("warmup", r.pred_warmup_s, r.warmup_penalty_s),
+            )
+            for surface, pred, obs in pairs:
+                if pred > eps and obs > eps:
+                    errs.setdefault(surface, []).append(abs(obs / pred - 1.0))
+        return {k: float(np.mean(v)) for k, v in sorted(errs.items())}
 
     def slo_attainment(self, slo_per_request: Dict[int, float],
                        scale: float) -> float:

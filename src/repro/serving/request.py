@@ -72,9 +72,10 @@ class IllegalTransition(RuntimeError):
 #: prefill_end), ``transfer`` (redo-exposed serialized KV shipping a
 #: preempted/redispatched request paid before its final prefill),
 #: ``warmup`` (§13 cold-window penalty), and ``decode_first`` (first
-#: emission deferred past handoff — structurally 0.0 in the current
-#: pipeline, where prefill itself emits the first token; reserved for
-#: async-handoff engines).
+#: emission deferred past the φ→δ handoff — carved from the
+#: ``decode_first_s`` stamp, which only async-handoff engines set;
+#: 0.0 in the standard pipeline, where prefill itself emits the
+#: first token).
 TTFT_BUCKETS = ("queue", "prefill", "transfer", "warmup", "decode_first")
 
 
@@ -154,6 +155,26 @@ class Request:
     #: doesn't. Stamped by the FleetController's dispatch hook as a
     #: pure function of step indices — identical in both domains.
     warmup_penalty_s: float = 0.0
+    # -- cost-model calibration stamps (DESIGN.md §15) ------------------
+    #: the analytical cost model's PREDICTED per-surface costs for this
+    #: request at the placement it was dispatched to: prefill latency at
+    #: the routed group's plan, per-decode-step latency, serialized KV
+    #: wire time, and the priced warm-up penalty. Stamped by
+    #: ``CalibrationStore.stamp`` at dispatch; 0.0 = never stamped (no
+    #: calibration wired, or the surface doesn't apply). Observed
+    #: counterparts are derived from the lifecycle stamps above, never
+    #: recorded separately.
+    pred_prefill_s: float = 0.0
+    pred_decode_step_s: float = 0.0
+    pred_transfer_s: float = 0.0
+    pred_warmup_s: float = 0.0
+    #: first-token emission deferred past the φ→δ handoff: seconds
+    #: between handoff completion and the engine's first decode
+    #: emission, stamped by async-handoff engines (the deferred
+    #: first-emission fixtures). Feeds the ``decode_first`` TTFT
+    #: bucket; 0.0 in the standard pipeline, where prefill itself
+    #: emits the first token.
+    decode_first_s: float = 0.0
 
     # -- lifecycle ------------------------------------------------------
     def advance(self, state: RequestState, t: float) -> "Request":
@@ -190,10 +211,12 @@ class Request:
         self.transfer_end = None
         self.cached_len = 0      # re-stamped when the new replica prefills
         # restart happens strictly pre-handoff, so no KV ever shipped
+        # and no deferred first emission ever happened
         self.kv_bytes_raw = 0.0
         self.kv_bytes_wire = 0.0
         self.kv_serialized_s = 0.0
         self.kv_overlap_s = 0.0
+        self.decode_first_s = 0.0
         return self
 
     @property
@@ -209,10 +232,12 @@ class Request:
 
     @property
     def ttft(self) -> Optional[float]:
-        """Time to first token (prefill completion)."""
+        """Time to first token: prefill completion, plus any deferred
+        first-emission lag (``decode_first_s``, 0 in the standard
+        pipeline where prefill itself emits the first token)."""
         if self.prefill_end is None:
             return None
-        return self.prefill_end - self.arrival
+        return self.prefill_end - self.arrival + self.decode_first_s
 
     @property
     def tpot(self) -> Optional[float]:
@@ -241,6 +266,8 @@ class Request:
         total = self.ttft
         prefill = min(max(self.prefill_end - self.prefill_start, 0.0), total)
         rest = total - prefill
+        decode_first = min(max(self.decode_first_s, 0.0), rest)
+        rest -= decode_first
         warmup = min(self.warmup_penalty_s, rest)
         rest -= warmup
         transfer = 0.0
@@ -252,7 +279,7 @@ class Request:
                                0.0), rest)
             rest -= transfer
         return {"queue": rest, "prefill": prefill, "transfer": transfer,
-                "warmup": warmup, "decode_first": 0.0}
+                "warmup": warmup, "decode_first": decode_first}
 
     def ttft_fractions(self) -> Optional[dict]:
         """``ttft_attribution`` normalized to fractions summing to

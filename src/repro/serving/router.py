@@ -251,7 +251,8 @@ class Router:
                  route_weights: Optional[Sequence[float]] = None,
                  clock: Optional[Callable[[], float]] = None,
                  gauge_window: int = 64,
-                 telemetry: Optional[TraceRecorder] = None):
+                 telemetry: Optional[TraceRecorder] = None,
+                 calibration=None):
         assert policy in ("slo", "rr"), policy
         self.replicas = list(replicas)
         n = len(self.replicas)
@@ -295,6 +296,12 @@ class Router:
         #: utilization series (None = zero overhead)
         self.gauges = WindowedGauges(gauge_window)
         self.telemetry = telemetry
+        #: §15 cost-model calibration (``CalibrationStore`` or None):
+        #: predicted stage costs stamped at dispatch (after the fleet
+        #: hook priced any warm-up), observed-vs-predicted errors
+        #: scored at the terminal sweep — both on shared router code,
+        #: so two domains' stores agree exactly on the same trace
+        self.calibration = calibration
 
     # -- clock ----------------------------------------------------------
     def now(self) -> float:
@@ -520,6 +527,10 @@ class Router:
             self._active.add(entry.life.rid)
             if self.on_dispatch is not None:
                 self.on_dispatch(entry.life, idx, self._step_idx)
+            if self.calibration is not None:
+                # after on_dispatch: the predicted warm-up is whatever
+                # cold-window penalty the controller just priced
+                self.calibration.stamp(entry.life, idx)
             self.dispatch_log.append(dict(
                 rid=entry.life.rid, priority=entry.life.priority,
                 submit_step=qe.enqueue_step,
@@ -558,6 +569,10 @@ class Router:
             # §14: feed the live window at the terminal edge — shared
             # router code, so both domains observe identical sequences
             self.gauges.observe(entry.life, self._step_idx)
+            # §15: score predicted-vs-observed stage costs on the same
+            # edge (same order ⇒ identical EWMA folds in both domains)
+            if self.calibration is not None:
+                self.calibration.observe(entry.life, self.now())
         for i in list(self._draining):       # graceful-retire completion
             if self._inflight[i] == 0:
                 self.replicas[i].alive = False

@@ -142,13 +142,18 @@ class _DisaggSim:
                  cache_alpha: float = 2.0,
                  prefix_budget_fraction: float = 0.5,
                  kv_codec=None, paged_kv: bool = False,
-                 page_size: int = PAGE_SIZE, telemetry=None):
+                 page_size: int = PAGE_SIZE, telemetry=None,
+                 calibration=None):
         self.cluster = cluster
         self.profile = profile
         #: §14 event bus (``telemetry.TraceRecorder`` or None): the
         #: scheduling domain's stage events and utilization series —
         #: per-group queue depth / decode batch / page occupancy
         self.telemetry = telemetry
+        #: §15 cost-model calibration (``calibration.CalibrationStore``
+        #: or None): stamps predicted stage costs at the prefill routing
+        #: decision and scores observed-vs-predicted at every DONE edge
+        self.calibration = calibration
         self.chunk_tokens = chunk_tokens
         self.typical_context = typical_context
         self.prefix_caching = prefix_caching
@@ -518,6 +523,8 @@ class _DisaggSim:
         gid = self.pick_prefill(req)
         self.dispatched[gid] += 1
         req.prefill_group = gid
+        if self.calibration is not None:
+            self.calibration.stamp(req, gid)
         self.prefill[gid].queue.append(req)
         self.start_prefill(t, self.prefill[gid])
 
@@ -555,6 +562,8 @@ class _DisaggSim:
             srv.busy = False
             self.decode_tokens += req.s_out
             req.advance(RequestState.DONE, t)
+            if self.calibration is not None:
+                self.calibration.observe(req, t)
             if self.on_done is not None:
                 self.on_done(t, req)
             self.start_prefill(t, srv)
@@ -663,6 +672,8 @@ class _DisaggSim:
                     srv.pool.release(pages)
                     req.kv_pages_allocated += len(pages)
                 req.advance(RequestState.DONE, t)
+                if self.calibration is not None:
+                    self.calibration.observe(req, t)
                 if self.on_done is not None:
                     self.on_done(t, req)
             else:
@@ -713,7 +724,8 @@ def simulate(cluster: ClusterSpec, profile: ModelProfile,
              cache_alpha: float = 2.0,
              prefix_budget_fraction: float = 0.5,
              kv_codec=None, paged_kv: bool = False,
-             page_size: int = PAGE_SIZE, telemetry=None) -> SimResult:
+             page_size: int = PAGE_SIZE, telemetry=None,
+             calibration=None) -> SimResult:
     """Deterministic: dispatch is load-corrected flow-proportional, so
     the same placement and trace always produce the same result.
 
@@ -736,13 +748,18 @@ def simulate(cluster: ClusterSpec, profile: ModelProfile,
     while pages fit, per-round growth, reclamation at finish, and
     youngest-first recompute preemption on exhaustion — the same
     allocator arithmetic the runtime engine runs, so page counts agree
-    exactly on the same trace."""
+    exactly on the same trace.
+
+    ``calibration`` (DESIGN.md §15) wires a ``CalibrationStore``:
+    predicted stage costs are stamped at each prefill routing decision
+    and observed-vs-predicted errors scored at every DONE edge."""
     sim = _DisaggSim(cluster, profile, placement, chunk_tokens,
                      typical_context, prefix_caching=prefix_caching,
                      cache_alpha=cache_alpha,
                      prefix_budget_fraction=prefix_budget_fraction,
                      kv_codec=kv_codec, paged_kv=paged_kv,
-                     page_size=page_size, telemetry=telemetry)
+                     page_size=page_size, telemetry=telemetry,
+                     calibration=calibration)
     if not sim.feasible:
         return SimResult(requests, float("inf"), 0)
     sim.run(requests)
@@ -762,7 +779,7 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
                     prefix_budget_fraction: float = 0.5,
                     kv_codec=None, paged_kv: bool = False,
                     page_size: int = PAGE_SIZE,
-                    telemetry=None) -> OnlineSimResult:
+                    telemetry=None, calibration=None) -> OnlineSimResult:
     """Simulate with online workload-drift rescheduling.
 
     ``monitor`` is a ``repro.core.scheduler.WorkloadMonitor`` (or any
@@ -784,7 +801,8 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
                      cache_alpha=cache_alpha,
                      prefix_budget_fraction=prefix_budget_fraction,
                      kv_codec=kv_codec, paged_kv=paged_kv,
-                     page_size=page_size, telemetry=telemetry)
+                     page_size=page_size, telemetry=telemetry,
+                     calibration=calibration)
     if not sim.feasible:
         return OnlineSimResult(requests, float("inf"), 0, [])
     state = {"last": -float("inf")}
@@ -945,6 +963,9 @@ class _SimSlot:
     start: int                # token index of the next emission
     emitted: int = 0
     length: int = 0           # KV positions held (prompt + emitted - ...)
+    #: freshly admitted this step (async-handoff engines skip one
+    #: decode tick before their deferred first emission)
+    fresh: bool = False
 
 
 class SimReplica:
@@ -968,8 +989,14 @@ class SimReplica:
     def __init__(self, num_slots: int = 4, max_prefill_batch: int = 4,
                  capacity: int = 128, prefix_caching: bool = True,
                  cache_bytes: Optional[float] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 defer_first_token: bool = False):
         self.alive = True
+        #: async-handoff mode (DESIGN.md §14 ``decode_first``): prefill
+        #: does NOT emit the first token; the decode stage emits it one
+        #: step after KV admission, stamping ``decode_first_s`` — the
+        #: engine shape the ``decode_first`` TTFT bucket attributes.
+        self.defer_first_token = bool(defer_first_token)
         self.num_slots = int(num_slots)
         self.max_prefill_batch = max(1, int(max_prefill_batch))
         self.capacity = int(capacity)
@@ -1079,10 +1106,14 @@ class SimReplica:
                 # reports via kv_transfer.slab_capacity)
                 self.cache.insert(prompt, payload=self.capacity)
         for s in batch:
-            self._emit(s, finished=s.max_new <= 1)
             if s.max_new <= 1:
+                # single-token request: no handoff exists to defer past,
+                # so even async-handoff engines emit at prefill
+                self._emit(s, finished=True)
                 self._finish(s)
                 continue
+            if not self.defer_first_token:
+                self._emit(s, finished=False)
             s.life.advance(RequestState.KV_TRANSFER, t)
             self._handoff.append(s.life.rid)
         return True
@@ -1094,6 +1125,7 @@ class SimReplica:
             s.length = s.prompt_len + 1
             s.life.decode_group = 0
             s.life.advance(RequestState.DECODING, self.now())
+            s.fresh = True
             self._active.append(s)
             progressed = True
         return progressed
@@ -1101,6 +1133,17 @@ class SimReplica:
     def _step_decode(self) -> bool:
         progressed = False
         for s in list(self._active):
+            if self.defer_first_token and s.fresh:
+                # async handoff: KV finished installing this step; the
+                # deferred first emission happens on the NEXT tick
+                s.fresh = False
+                progressed = True
+                continue
+            if self.defer_first_token and s.emitted == 0:
+                # the deferred first token: attribute the lag past the
+                # handoff to the §14 ``decode_first`` TTFT bucket
+                s.life.decode_first_s = self.now() - (s.life.transfer_end
+                                                      or self.now())
             s.length += 1
             finished = (s.emitted + 1 >= s.max_new
                         or s.length >= self.capacity)
@@ -1137,7 +1180,8 @@ def simulate_fleet(requests: List[Request], num_replicas: int = 2,
                    failures: Optional[Dict[int, int]] = None,
                    cancels: Optional[Dict[int, List[int]]] = None,
                    autoscale=None, monitor=None, resolver=None,
-                   telemetry=None) -> FleetResult:
+                   telemetry=None, calibration=None,
+                   defer_first_token: bool = False) -> FleetResult:
     """Scheduling-domain fleet serve (DESIGN.md §12): the SAME
     ``Router`` the runtime uses, over ``SimReplica`` handles on a
     virtual step clock. ``failures`` maps router step -> replica index
@@ -1151,7 +1195,13 @@ def simulate_fleet(requests: List[Request], num_replicas: int = 2,
     ``monitor`` (WorkloadMonitor) feeds the demand signal and a
     ``resolver`` re-solves max-flow on joins/leaves. Static runs fill
     ``replica_steps_by_state`` too (alive replicas per step), so
-    replica-step cost is comparable across policies."""
+    replica-step cost is comparable across policies.
+
+    ``calibration`` (DESIGN.md §15) wires a ``CalibrationStore``
+    through the router: predicted costs stamped at dispatch, errors
+    scored at the terminal sweep. ``defer_first_token`` builds
+    async-handoff ``SimReplica``s (first emission one step past KV
+    admission), populating the ``decode_first`` TTFT bucket."""
     from repro.serving.router import Router, StepClock
     clock = StepClock()
 
@@ -1159,13 +1209,14 @@ def simulate_fleet(requests: List[Request], num_replicas: int = 2,
         return SimReplica(num_slots=slots_per_replica,
                           max_prefill_batch=max_prefill_batch,
                           capacity=capacity, prefix_caching=prefix_caching,
-                          clock=clock)
+                          clock=clock, defer_first_token=defer_first_token)
 
     reps = [make_replica(i) for i in range(num_replicas)]
     router = Router(reps, queue_capacity=queue_capacity,
                     age_every=age_every, policy=policy,
                     cache_alpha=cache_alpha, route_weights=route_weights,
-                    clock=clock, telemetry=telemetry)
+                    clock=clock, telemetry=telemetry,
+                    calibration=calibration)
     if autoscale is not None:
         from repro.serving.fleet import FleetController
         ctrl = FleetController(router, make_replica, autoscale, dt=dt,

@@ -77,7 +77,18 @@ class Span:
         return self.end - self.start
 
 
-def request_spans(req: Request) -> List[Span]:
+#: open-interval stage name per non-terminal state (DESIGN.md §14):
+#: the span a request was inside when the trace ended.
+_OPEN_STAGE = {
+    RequestState.QUEUED: "queue",
+    RequestState.PREFILLING: "prefill",
+    RequestState.KV_TRANSFER: "transfer",
+    RequestState.DECODING: "decode",
+}
+
+
+def request_spans(req: Request,
+                  trace_end: Optional[float] = None) -> List[Span]:
     """Derive the stage timeline of one request from its §8 lifecycle
     stamps. Pure: same stamps → same spans, which is what makes the
     sim-vs-runtime span streams comparable bit-for-bit.
@@ -89,13 +100,23 @@ def request_spans(req: Request) -> List[Span]:
     zero-length spans at prefill end (§8's PREFILLING→DONE shortcut
     stamps all three ends at the same instant). REJECTED and CANCELLED
     requests yield a terminal marker after whatever stages they
-    completed."""
+    completed.
+
+    ``trace_end`` closes OPEN intervals: a request still in flight when
+    the trace ended emits the stage it was inside as a span closed at
+    ``trace_end`` carrying an ``incomplete`` arg, instead of being
+    silently truncated at its last completed stage. Omitting it (the
+    parity default) keeps in-flight tails out of the stream."""
     out: List[Span] = []
     if req.phase is RequestState.REJECTED:
         return [Span(req.rid, "rejected", req.arrival, req.arrival)]
     if req.prefill_start is None:
         if req.phase is RequestState.CANCELLED:
             return [Span(req.rid, "cancelled", req.arrival, req.arrival)]
+        if trace_end is not None and not req.is_terminal:
+            return [Span(req.rid, "queue", req.arrival,
+                         max(float(trace_end), req.arrival),
+                         args=(("incomplete", True),))]
         return out                       # still QUEUED at trace end
     out.append(Span(req.rid, "queue", req.arrival, req.prefill_start))
     last = req.prefill_start
@@ -127,19 +148,30 @@ def request_spans(req: Request) -> List[Span]:
         last = req.decode_end
     if req.phase is RequestState.CANCELLED:
         out.append(Span(req.rid, "cancelled", last, last))
+    if trace_end is not None and not req.is_terminal:
+        stage = _OPEN_STAGE[req.phase]
+        out.append(Span(req.rid, stage, last,
+                        max(float(trace_end), last),
+                        args=(("incomplete", True),)))
     return out
 
 
 def span_stream(requests: Iterable[Request],
                 dispatch_log: Sequence[Dict[str, int]] = (),
-                ndigits: int = 9) -> List[Tuple[int, str, float, float]]:
+                ndigits: int = 9,
+                trace_end: Optional[float] = None
+                ) -> List[Tuple[int, str, float, float]]:
     """Canonical ordered span stream for parity comparison:
     ``(rid, name, start, dur)`` rounded to ``ndigits``, grouped by rid
     in rid order — lifecycle spans in pipeline order, then §12
     dispatch/redispatch markers in dispatch-step order (marker times
     are *step indices*, already integral in both domains). Two runs
     that made identical decisions at identical steps produce equal
-    streams; any divergence shows up as a first differing tuple."""
+    streams; any divergence shows up as a first differing tuple.
+    ``trace_end`` (optional) closes in-flight requests' open intervals
+    at the final step instead of dropping them — see
+    ``request_spans``; both domains passing the same end time keeps
+    the stream comparable."""
     markers: Dict[int, List[Tuple[int, str, float, float]]] = {}
     for row in dispatch_log:
         kind = "redispatch" if row.get("redispatch") else "dispatch"
@@ -147,7 +179,7 @@ def span_stream(requests: Iterable[Request],
             (int(row["rid"]), kind, float(row["dispatch_step"]), 0.0))
     out: List[Tuple[int, str, float, float]] = []
     for req in sorted(requests, key=lambda r: r.rid):
-        for sp in request_spans(req):
+        for sp in request_spans(req, trace_end=trace_end):
             out.append((sp.rid, sp.name, round(sp.start, ndigits),
                         round(sp.dur, ndigits)))
         out.extend(sorted(markers.get(req.rid, ()), key=lambda m: m[2]))
@@ -170,23 +202,37 @@ class TelemetryEvent:
     args: Tuple[Tuple[str, Any], ...] = ()
 
 
+#: default event-bus ring size: generous for CI traces, bounded for
+#: long-lived serving (the §14 unbounded-growth follow-up)
+DEFAULT_BUS_EVENTS = 65536
+
+
 class TraceRecorder:
     """Structured event bus both domains drive.
 
     ``emit`` records stage events (kv chunk installs, preemptions,
     scale transitions); ``gauge`` appends to a named per-track time
-    series (queue depth, active slots, free pages). Everything is
-    in-memory and append-only; ``chrome_trace`` turns it into counter
-    tracks and instant events."""
+    series (queue depth, active slots, free pages). The event bus is a
+    bounded ring (``max_events``; ``None`` = unbounded): once full, the
+    oldest event is dropped per emit and ``dropped`` counts the
+    evictions — exposed as ``repro_trace_events_dropped`` in the
+    Prometheus snapshot so a truncated trace is visible, never silent.
+    ``chrome_trace`` turns everything retained into counter tracks and
+    instant events."""
 
-    def __init__(self) -> None:
-        self.events: List[TelemetryEvent] = []
+    def __init__(self, max_events: Optional[int] = DEFAULT_BUS_EVENTS) -> None:
+        self.events: Deque[TelemetryEvent] = deque(maxlen=max_events)
+        #: events evicted from the ring since construction (or clear())
+        self.dropped = 0
         #: (track, name) -> [(ts, value)]
         self.series: Dict[Tuple[str, str], List[Tuple[float, float]]] = {}
 
     def emit(self, kind: str, ts: float, *, track: str = "router",
              rid: Optional[int] = None, dur: float = 0.0,
              **args: Any) -> None:
+        if (self.events.maxlen is not None
+                and len(self.events) == self.events.maxlen):
+            self.dropped += 1
         self.events.append(TelemetryEvent(
             ts=float(ts), kind=kind, track=track, rid=rid, dur=float(dur),
             args=tuple(sorted(args.items()))))
@@ -198,6 +244,7 @@ class TraceRecorder:
 
     def clear(self) -> None:
         self.events.clear()
+        self.dropped = 0
         self.series.clear()
 
 
@@ -301,9 +348,10 @@ def _track_pid(track: str) -> int:
     return 1
 
 
-def _span_events(req: Request, pid: int) -> List[Dict[str, Any]]:
+def _span_events(req: Request, pid: int,
+                 trace_end: Optional[float] = None) -> List[Dict[str, Any]]:
     evs: List[Dict[str, Any]] = []
-    for sp in request_spans(req):
+    for sp in request_spans(req, trace_end=trace_end):
         args = dict(sp.args)
         args["rid"] = sp.rid
         evs.append({"name": sp.name, "cat": "lifecycle", "ph": "X",
@@ -318,7 +366,8 @@ def chrome_trace(requests: Iterable[Request], *,
                  scale_events: Sequence[Any] = (),
                  recorder: Optional[TraceRecorder] = None,
                  dt: float = 0.05,
-                 label: str = "repro-serve") -> Dict[str, Any]:
+                 label: str = "repro-serve",
+                 trace_end: Optional[float] = None) -> Dict[str, Any]:
     """Render lifecycle spans + bus events as a Chrome trace-event
     JSON object (load in Perfetto / chrome://tracing).
 
@@ -329,7 +378,9 @@ def chrome_trace(requests: Iterable[Request], *,
     its prefill end to its decode start — the φ→δ KV handoff — so
     selecting a request in Perfetto walks it across engines.
     ``scale_events`` accepts §13 ``(step, kind, replica)`` tuples or
-    ``ScaleEvent`` objects; their instants land on the router track."""
+    ``ScaleEvent`` objects; their instants land on the router track.
+    ``trace_end`` closes open intervals of still-in-flight requests at
+    that time with an ``incomplete`` arg (see ``request_spans``)."""
     reqs = sorted(requests, key=lambda r: r.rid)
     home: Dict[int, int] = {}
     for row in dispatch_log:
@@ -340,7 +391,7 @@ def chrome_trace(requests: Iterable[Request], *,
     for req in reqs:
         pid = home.get(req.rid, (req.decode_group or 0)) + 1
         pids.add(pid)
-        events.extend(_span_events(req, pid))
+        events.extend(_span_events(req, pid, trace_end=trace_end))
         if (req.phase is RequestState.DONE and req.prefill_end is not None
                 and req.transfer_end is not None and req.s_out > 1):
             flow = {"name": "kv_handoff", "cat": "flow", "id": req.rid,
@@ -472,12 +523,21 @@ def _prom_value(v: float) -> str:
 
 
 def prometheus_text(metrics: Any, gauges: Optional[WindowedGauges] = None,
-                    prefix: str = "repro") -> str:
+                    prefix: str = "repro",
+                    calibration: Any = None,
+                    recorder: Optional[TraceRecorder] = None) -> str:
     """Render a ``ServeMetrics`` summary (+ optional live-window
     snapshot + per-class TTFT attribution) in Prometheus text
     exposition format. Non-finite aggregates (a class that never
     finished) render as ``+Inf`` — valid in the exposition format,
-    unlike JSON."""
+    unlike JSON.
+
+    ``calibration`` (a §15 ``CalibrationStore``) adds the
+    ``{prefix}_cost_model_error{{surface,group}}`` series — the robust
+    EWMA observed/predicted ratio per scheduling surface and device
+    group (1.0 = perfectly calibrated). ``recorder`` adds
+    ``{prefix}_trace_events_dropped``, the event-bus ring's eviction
+    count."""
     lines: List[str] = []
 
     def sample(name: str, value: float, labels: str = "",
@@ -504,6 +564,17 @@ def prometheus_text(metrics: Any, gauges: Optional[WindowedGauges] = None,
     if gauges is not None:
         for key, val in sorted(gauges.snapshot().items()):
             sample(key, val, help_=f"rolling window: {key}")
+    if calibration is not None:
+        first = True
+        for (surface, group), stat in sorted(calibration.snapshot().items()):
+            sample("cost_model_error", stat["ratio"],
+                   labels=f'{{surface="{surface}",group="{group}"}}',
+                   help_=("robust EWMA observed/predicted cost ratio "
+                          "per surface and device group" if first else ""))
+            first = False
+    if recorder is not None:
+        sample("trace_events_dropped", recorder.dropped,
+               help_="events evicted from the TraceRecorder ring buffer")
     return "\n".join(lines) + "\n"
 
 
@@ -511,3 +582,69 @@ def dump_chrome_trace(path: str, trace: Dict[str, Any]) -> None:
     """Write a trace object as strict JSON (no ``Infinity``/``NaN``)."""
     with open(path, "w") as f:
         json.dump(trace, f, indent=1, allow_nan=False)
+
+
+class MetricsEndpoint:
+    """Stdlib Prometheus scrape endpoint (DESIGN.md §15).
+
+    Serves ``/metrics`` (whatever the ``render`` callable returns —
+    wire it to ``prometheus_text`` over the live session/router) and
+    ``/healthz`` on a daemon thread; every other path is 404. No
+    third-party dependency — ``http.server`` only. ``port=0`` binds an
+    ephemeral port, exposed as ``.port`` after ``start()``. A render
+    that raises turns into a 500 with the error text, so a scrape
+    can't kill the serving loop."""
+
+    def __init__(self, render, host: str = "127.0.0.1", port: int = 0):
+        self.render = render
+        self.host = host
+        self.port = port
+        self._httpd = None
+        self._thread = None
+
+    def start(self) -> "MetricsEndpoint":
+        import http.server
+        import threading
+        endpoint = self
+
+        class Handler(http.server.BaseHTTPRequestHandler):
+            def do_GET(self):
+                if self.path.split("?", 1)[0] == "/healthz":
+                    body, code = b"ok\n", 200
+                    ctype = "text/plain; charset=utf-8"
+                elif self.path.split("?", 1)[0] == "/metrics":
+                    try:
+                        body = endpoint.render().encode()
+                        code = 200
+                    except Exception as e:  # pragma: no cover - defensive
+                        body, code = f"render failed: {e}\n".encode(), 500
+                    ctype = "text/plain; version=0.0.4; charset=utf-8"
+                else:
+                    body, code = b"not found\n", 404
+                    ctype = "text/plain; charset=utf-8"
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):   # quiet: no per-scrape stderr spam
+                pass
+
+        self._httpd = http.server.ThreadingHTTPServer(
+            (self.host, self.port), Handler)
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="metrics-endpoint", daemon=True)
+        self._thread.start()
+        return self
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def close(self) -> None:
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+            self._httpd = None

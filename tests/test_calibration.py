@@ -1,0 +1,448 @@
+"""Cost-model calibration observability (DESIGN.md §15): the
+predicted-vs-observed store, corrections threading through the flow
+solver and the warm-started re-solve, the damped miscalibration
+trigger, the metrics endpoint, and the sim-vs-runtime parity surface."""
+import json
+import types
+import urllib.request
+
+import pytest
+
+from repro.core import LLAMA2_70B, WORKLOADS, reschedule, schedule
+from repro.core.cluster import kv_skewed_setting
+from repro.core.cost_model import (CALIBRATION_SURFACES, CORRECTION_MAX,
+                                   CORRECTION_MIN, CostCorrections)
+from repro.serving import (CalibrationStore, FleetController, FleetSpec,
+                           MetricsEndpoint, Request, RequestState, Router,
+                           TraceRecorder, calibration_workload,
+                           mixed_priority_workload, prometheus_text,
+                           simulate, simulate_fleet)
+from repro.serving.calibration import (_RATIO_HI, _RATIO_LO,
+                                       placement_predictor, plan_predictor)
+
+
+def _done_request(rid=0, s_in=64, s_out=4, *, prefill=0.5, transfer=0.2,
+                  decode_step=0.1, warmup=0.0):
+    """A DONE request with an exact synthetic stage timeline."""
+    r = Request(rid=rid, s_in=s_in, s_out=s_out, arrival=0.0)
+    t = 1.0
+    r.advance(RequestState.PREFILLING, t)
+    t += prefill
+    r.advance(RequestState.KV_TRANSFER, t)
+    t += transfer
+    r.advance(RequestState.DECODING, t)
+    t += decode_step * (s_out - 1)
+    r.tokens_out = s_out
+    r.warmup_penalty_s = warmup
+    r.advance(RequestState.DONE, t)
+    return r
+
+
+def _const_predictor(**pred):
+    return lambda req, group: dict(pred)
+
+
+# -- store math -------------------------------------------------------------
+
+def test_stamp_then_observe_scores_exact_ratios():
+    store = CalibrationStore(
+        _const_predictor(prefill=0.25, decode=0.05, transfer=0.1),
+        min_observations=1)
+    req = _done_request(prefill=0.5, transfer=0.2, decode_step=0.1)
+    store.stamp(req, group=3)
+    assert req.pred_prefill_s == 0.25 and req.pred_transfer_s == 0.1
+    store.observe(req)
+    f = store.factors()
+    # every surface observed at exactly 2x its prediction
+    assert f == pytest.approx({"prefill": 2.0, "decode": 2.0,
+                               "transfer": 2.0})
+    snap = store.snapshot()
+    # per-group cell AND the global -1 aggregate, same first fold
+    assert snap[("prefill", 3)]["ratio"] == pytest.approx(2.0)
+    assert snap[("prefill", -1)]["ratio"] == pytest.approx(2.0)
+    assert snap[("prefill", 3)]["residual_s"] == pytest.approx(0.25)
+    assert store.observations == 1 and store.stamped == 1
+
+
+def test_ratio_clamped_before_folding():
+    store = CalibrationStore(_const_predictor(prefill=1e-3),
+                             min_observations=1)
+    req = _done_request(prefill=10.0)          # raw ratio 10000x
+    store.stamp(req, 0)
+    store.observe(req)
+    assert store.factors()["prefill"] == pytest.approx(_RATIO_HI)
+    store2 = CalibrationStore(_const_predictor(prefill=100.0),
+                              min_observations=1)
+    req2 = _done_request(rid=1, prefill=0.01)  # raw ratio 1e-4
+    store2.stamp(req2, 0)
+    store2.observe(req2)
+    assert store2.factors()["prefill"] == pytest.approx(_RATIO_LO)
+
+
+def test_min_observations_gates_factors_and_warmup():
+    store = CalibrationStore(_const_predictor(prefill=0.5),
+                             min_observations=3)
+    for i in range(2):
+        req = _done_request(rid=i)
+        store.stamp(req, 0)
+        store.observe(req)
+    assert store.factors() == {} and not store.warmed_up
+    assert store.max_error() == 0.0 and not store.miscalibrated()
+    req = _done_request(rid=2)
+    store.stamp(req, 0)
+    store.observe(req)
+    assert store.warmed_up and "prefill" in store.factors()
+
+
+def test_absent_surfaces_never_scored():
+    # single-token request: no decode cadence; zero warm-up: no warmup
+    store = CalibrationStore(
+        _const_predictor(prefill=0.5, decode=0.1, warmup=0.0),
+        min_observations=1)
+    req = Request(rid=0, s_in=8, s_out=1, arrival=0.0)
+    req.advance(RequestState.PREFILLING, 1.0)
+    req.tokens_out = 1
+    req.advance(RequestState.DONE, 1.5)        # §8 single-token shortcut
+    store.stamp(req, 0)
+    store.observe(req)
+    assert set(store.factors()) == {"prefill"}
+
+
+def test_non_done_terminals_clear_but_do_not_score():
+    store = CalibrationStore(_const_predictor(prefill=0.5),
+                             min_observations=1)
+    req = Request(rid=0, s_in=8, s_out=4, arrival=0.0)
+    store.stamp(req, 0)
+    req.advance(RequestState.CANCELLED, 1.0)
+    store.observe(req)
+    assert store.observations == 0 and store.factors() == {}
+    assert store._routed == {}
+
+
+def test_ewma_folds_toward_new_ratio():
+    store = CalibrationStore(_const_predictor(prefill=0.5),
+                             ewma_alpha=0.5, min_observations=1)
+    for i, obs in enumerate([0.5, 1.0]):       # ratios 1.0 then 2.0
+        req = _done_request(rid=i, prefill=obs)
+        store.stamp(req, 0)
+        store.observe(req)
+    assert store.factors()["prefill"] == pytest.approx(1.5)
+
+
+def test_observe_emits_cost_error_events_and_gauges():
+    rec = TraceRecorder()
+    store = CalibrationStore(_const_predictor(prefill=0.25),
+                             min_observations=1, recorder=rec)
+    req = _done_request(prefill=0.5)
+    store.stamp(req, 2)
+    store.observe(req, ts=7.0)
+    kinds = [e.kind for e in rec.events]
+    assert "cost_error" in kinds
+    err = next(e for e in rec.events if e.kind == "cost_error")
+    assert err.track == "replica:2"
+    assert dict(err.args)["prefill_ratio"] == pytest.approx(2.0)
+    series = rec.series[("replica:2", "cost_ratio:prefill")]
+    assert series == [(7.0, pytest.approx(2.0))]
+
+
+def test_corrections_clamped_identity_and_dict():
+    c = CostCorrections.from_factors(
+        {"prefill": 100.0, "transfer": 1e-6, "decode": 1.3,
+         "warmup": float("nan")})
+    assert c.prefill == CORRECTION_MAX and c.transfer == CORRECTION_MIN
+    assert c.decode == pytest.approx(1.3) and c.warmup == 1.0
+    assert not c.is_identity
+    assert CostCorrections().is_identity
+    assert set(c.as_dict()) == set(CALIBRATION_SURFACES)
+
+
+def test_prometheus_exports_cost_model_error_series():
+    store = CalibrationStore(_const_predictor(prefill=0.25),
+                             min_observations=1)
+    req = _done_request(prefill=0.5)
+    store.stamp(req, 1)
+    store.observe(req)
+    sim = simulate(kv_skewed_setting(0.15), LLAMA2_70B,
+                   schedule(kv_skewed_setting(0.15), LLAMA2_70B,
+                            WORKLOADS["LPLD"], max_refine_iters=2).placement,
+                   calibration_workload(4, rate_rps=4.0))
+    text = prometheus_text(sim, calibration=store)
+    assert 'repro_cost_model_error{surface="prefill",group="1"}' in text
+    assert 'repro_cost_model_error{surface="prefill",group="-1"}' in text
+
+
+# -- corrections through the solver -----------------------------------------
+
+@pytest.fixture(scope="module")
+def believed_sched():
+    cl = kv_skewed_setting(0.15)
+    return cl, schedule(cl, LLAMA2_70B, WORKLOADS["HPLD"],
+                        max_refine_iters=6, seed=0)
+
+
+def test_corrections_reprice_the_solve(believed_sched):
+    cl, sched = believed_sched
+    slow = CostCorrections(prefill=2.0, decode=2.0, transfer=5.0)
+    corrected = schedule(cl, LLAMA2_70B, WORKLOADS["HPLD"],
+                         max_refine_iters=2, seed=0, corrections=slow)
+    base = schedule(cl, LLAMA2_70B, WORKLOADS["HPLD"],
+                    max_refine_iters=2, seed=0)
+    # halved compute + 5x transfer must price strictly less flow
+    assert corrected.placement.max_flow < base.placement.max_flow
+
+
+def test_reschedule_identity_corrections_matches_plain(believed_sched):
+    cl, sched = believed_sched
+    plain = reschedule(cl, LLAMA2_70B, sched, WORKLOADS["HPLD"],
+                       max_refine_iters=2)
+    ident = reschedule(cl, LLAMA2_70B, sched, WORKLOADS["HPLD"],
+                       max_refine_iters=2,
+                       corrections=CostCorrections())
+    assert dict(plain.placement.kv_routes) == dict(ident.placement.kv_routes)
+
+
+def test_calibrated_reschedule_can_flip_group_roles(believed_sched):
+    """The §15 ridge: a strong transfer correction changes WHICH edge
+    binds, flipping the optimal role of a group — reachable only via
+    the role-flip seeds, not via swap refinement from the stale start."""
+    cl, sched = believed_sched
+    store = CalibrationStore(
+        placement_predictor(cl, LLAMA2_70B, sched.placement))
+    simulate(kv_skewed_setting(0.05), LLAMA2_70B, sched.placement,
+             calibration_workload(64, rate_rps=8.0, seed=1, slo_s=2.0),
+             calibration=store)
+    corr = store.corrections()
+    assert corr.transfer > 1.5 and not corr.is_identity
+    cal = reschedule(cl, LLAMA2_70B, sched, WORKLOADS["HPLD"],
+                     corrections=corr, max_refine_iters=12)
+    assert (dict(cal.placement.kv_routes).keys()
+            != dict(sched.placement.kv_routes).keys())
+    flips = sum(a != b for a, b in zip(sched.partition.is_prefill,
+                                       cal.partition.is_prefill))
+    assert flips >= 1
+
+
+# -- the damped miscalibration trigger --------------------------------------
+
+class _FakeStore:
+    def __init__(self, errors):
+        self.errors = list(errors)
+        self.step = -1
+
+    def tick(self):
+        self.step += 1
+
+    @property
+    def warmed_up(self):
+        return True
+
+    def max_error(self):
+        return self.errors[min(self.step, len(self.errors) - 1)]
+
+
+def _stub_controller(spec, store):
+    router = types.SimpleNamespace(replicas=[], telemetry=None,
+                                   calibration=None)
+    return FleetController(router, lambda slot: None, spec,
+                           calibration=store)
+
+
+def test_trigger_needs_sustained_error():
+    spec = FleetSpec(min_replicas=1, max_replicas=1, sustain_steps=3,
+                     miscal_bound=0.5, recal_cooldown_steps=4)
+    store = _FakeStore([2.0, 2.0, 0.0, 2.0, 2.0, 0.0, 2.0])
+    ctrl = _stub_controller(spec, store)
+    for step in range(7):                      # never 3 hot in a row
+        store.tick()
+        ctrl._calibration_policy(step)
+    assert ctrl.recalibrations == 0 and ctrl.events == []
+
+
+def test_trigger_fires_once_then_respects_cooldown():
+    spec = FleetSpec(min_replicas=1, max_replicas=1, sustain_steps=2,
+                     miscal_bound=0.5, recal_cooldown_steps=100)
+    store = _FakeStore([2.0] * 20)
+    ctrl = _stub_controller(spec, store)
+    for step in range(20):                     # always hot
+        store.tick()
+        ctrl._calibration_policy(step)
+    assert ctrl.recalibrations == 1
+    [ev] = ctrl.events
+    assert ev.kind == "recalibrate" and ev.replica == -1
+    assert "max_error=2.000" in ev.reason
+
+
+def test_trigger_refires_after_cooldown_and_resolves():
+    spec = FleetSpec(min_replicas=1, max_replicas=1, sustain_steps=2,
+                     miscal_bound=0.5, recal_cooldown_steps=5)
+    store = _FakeStore([2.0] * 20)
+    seen = []
+    ctrl = _stub_controller(spec, store)
+    ctrl.resolver = lambda c, ev: seen.append(ev.kind) or None
+    for step in range(14):
+        store.tick()
+        ctrl._calibration_policy(step)
+    assert ctrl.recalibrations >= 2
+    # every recalibrate routed through the resolver hook
+    assert seen == ["recalibrate"] * ctrl.recalibrations
+
+
+def test_no_bound_no_trigger():
+    spec = FleetSpec(min_replicas=1, max_replicas=1, sustain_steps=1)
+    assert spec.miscal_bound is None
+    ctrl = _stub_controller(spec, _FakeStore([10.0] * 5))
+    for step in range(5):
+        ctrl._calibration_policy(step)
+    assert ctrl.recalibrations == 0
+
+
+def test_controller_finds_store_via_router_fallback():
+    spec = FleetSpec(min_replicas=1, max_replicas=1,
+                     miscal_bound=0.5)
+    store = _FakeStore([0.0])
+    router = types.SimpleNamespace(replicas=[], telemetry=None,
+                                   calibration=store)
+    ctrl = FleetController(router, lambda slot: None, spec)
+    assert ctrl._calibration_store() is store
+
+
+def test_fleet_sim_fires_recalibrate_event():
+    """End to end in the scheduling domain: a store warmed by real
+    traffic with a sustained model error drives the controller's
+    trigger through ``simulate_fleet``'s router-fallback wiring."""
+    cl = kv_skewed_setting(0.15)
+    sched = schedule(cl, LLAMA2_70B, WORKLOADS["LPLD"],
+                     max_refine_iters=2, seed=0)
+    pre = next(r for r in sched.placement.prefill_replicas()
+               if r.plan is not None)
+    dec = next(r for r in sched.placement.decode_replicas()
+               if r.plan is not None)
+    store = CalibrationStore(
+        plan_predictor(cl, LLAMA2_70B, pre.plan, dec.plan),
+        min_observations=4)
+    spec = FleetSpec(min_replicas=2, max_replicas=2, queue_high=1e9,
+                     sustain_steps=3, miscal_bound=0.2,
+                     recal_cooldown_steps=10 ** 6)
+    res = simulate_fleet(
+        mixed_priority_workload(n=40, rate_rps=40.0, seed=5,
+                                out_lens=(3, 5, 8)),
+        num_replicas=2, autoscale=spec, calibration=store, dt=0.05)
+    recals = [e for e in res.scale_events if e[1] == "recalibrate"]
+    assert len(recals) == 1 and recals[0][2] == -1
+    assert store.warmed_up and store.max_error() > 0.2
+
+
+# -- metrics endpoint (§15 scrape surface) ----------------------------------
+
+def test_metrics_endpoint_serves_healthz_and_metrics():
+    rendered = []
+
+    def render():
+        rendered.append(1)
+        return "repro_requests_total 3\n"
+
+    ep = MetricsEndpoint(render, port=0).start()
+    base = f"http://127.0.0.1:{ep.port}"
+    try:
+        assert ep.port != 0 and ep.url == f"{base}/metrics"
+        with urllib.request.urlopen(f"{base}/healthz", timeout=5) as r:
+            assert r.status == 200 and r.read() == b"ok\n"
+        with urllib.request.urlopen(ep.url, timeout=5) as r:
+            assert r.status == 200
+            assert b"repro_requests_total 3" in r.read()
+            assert "text/plain" in r.headers["Content-Type"]
+        # render is called per scrape, not cached at start
+        assert len(rendered) == 1
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(f"{base}/nope", timeout=5)
+        assert exc.value.code == 404
+    finally:
+        ep.close()
+
+
+def test_metrics_endpoint_render_error_is_500_not_crash():
+    def render():
+        raise RuntimeError("boom")
+
+    ep = MetricsEndpoint(render, port=0).start()
+    try:
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(ep.url, timeout=5)
+        assert exc.value.code == 500
+    finally:
+        ep.close()
+
+
+# -- sim-vs-runtime parity (§15 surface) ------------------------------------
+
+def test_sim_runtime_calibration_parity():
+    """Two identically-configured stores, one fed by the simulator
+    fleet and one by real Coordinators on the same seeded trace, must
+    end with EXACTLY equal per-(surface, group) error state."""
+    import jax
+
+    from repro.configs import ARCHS
+    from repro.models import init_params
+    from repro.serving import Coordinator, CoordinatorReplica, StepClock
+
+    cl = kv_skewed_setting(0.15)
+    sched = schedule(cl, LLAMA2_70B, WORKLOADS["LPLD"],
+                     max_refine_iters=2, seed=0)
+    pre = next(r for r in sched.placement.prefill_replicas()
+               if r.plan is not None)
+    dec = next(r for r in sched.placement.decode_replicas()
+               if r.plan is not None)
+
+    def mk_store():
+        return CalibrationStore(
+            plan_predictor(cl, LLAMA2_70B, pre.plan, dec.plan),
+            min_observations=4)
+
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+
+    def trace():
+        return mixed_priority_workload(n=10, rate_rps=100.0, seed=7,
+                                       vocab=min(cfg.vocab, 256),
+                                       system_lens=(8, 6, 4),
+                                       user_lens=(4, 6, 8),
+                                       out_lens=(3, 5, 8))
+
+    s_sim = mk_store()
+    simulate_fleet(trace(), num_replicas=2, slots_per_replica=2,
+                   max_prefill_batch=2, capacity=96, dt=0.05,
+                   queue_capacity=8, policy="slo", calibration=s_sim)
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    clock = StepClock()
+
+    def factory(_slot):
+        return CoordinatorReplica(
+            Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=2, capacity=96,
+                        num_prefill_engines=1,
+                        prefix_cache_bytes=float("inf")),
+            max_prefill_batch=2, clock=clock)
+
+    s_rt = mk_store()
+    router = Router([factory(0), factory(1)], queue_capacity=8,
+                    policy="slo", clock=clock, calibration=s_rt)
+    router.run_trace(trace(), dt=0.05)
+
+    assert s_sim.observations == s_rt.observations > 0
+    assert s_sim.snapshot() == s_rt.snapshot()   # bitwise parity
+    assert s_sim.factors() == s_rt.factors()
+
+
+def test_workload_monitor_surfaces_miscalibration_signal():
+    from repro.core.scheduler import WorkloadMonitor
+
+    mon = WorkloadMonitor(WORKLOADS["LPLD"])
+    assert mon.miscalibration() == 0.0         # nothing attached
+    store = CalibrationStore(_const_predictor(prefill=0.25),
+                             min_observations=1)
+    mon.attach_calibration(store)
+    assert mon.miscalibration() == 0.0         # attached but cold
+    req = _done_request(prefill=0.5)
+    store.stamp(req, 0)
+    store.observe(req)
+    assert mon.miscalibration() == pytest.approx(1.0)   # |2.0 - 1|

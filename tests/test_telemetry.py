@@ -437,3 +437,81 @@ def test_router_gauges_feed_slo_floor_fallback():
                             cooldown_steps=4, hysteresis_steps=4))
     # the floor (not queue depth: queue_high is unreachable) triggered
     assert res.scale_up_events >= 1
+
+
+# ---------------------------------------------------------------------------
+# §15 satellites: bounded event bus, open-interval spans, decode_first
+# ---------------------------------------------------------------------------
+
+
+def test_trace_recorder_ring_bounds_and_counts_drops():
+    rec = TraceRecorder(max_events=4)
+    for i in range(7):
+        rec.emit("tick", float(i))
+    assert len(rec.events) == 4 and rec.dropped == 3
+    # oldest evicted first: the retained window is the newest 4
+    assert [e.ts for e in rec.events] == [3.0, 4.0, 5.0, 6.0]
+    text = prometheus_text(ServeMetrics([], makespan=1.0, decode_tokens=0),
+                           recorder=rec)
+    assert "repro_trace_events_dropped 3" in text
+    rec.clear()
+    assert rec.dropped == 0 and len(rec.events) == 0
+    # unbounded mode never drops
+    rec2 = TraceRecorder(max_events=None)
+    for i in range(10):
+        rec2.emit("tick", float(i))
+    assert rec2.dropped == 0 and len(rec2.events) == 10
+
+
+def test_mid_decode_kill_yields_incomplete_open_span():
+    """A request whose replica died mid-decode has no ``decode_end``;
+    with ``trace_end`` the decode interval is closed there and flagged
+    ``incomplete`` instead of silently truncating at transfer end."""
+    req = Request(rid=3, s_in=8, s_out=4, arrival=0.0)
+    req.advance(RequestState.PREFILLING, 0.1)
+    req.advance(RequestState.KV_TRANSFER, 0.3)
+    req.advance(RequestState.DECODING, 0.4)     # ... then the kill
+    closed = request_spans(req)                  # parity default
+    assert [s.name for s in closed] == ["queue", "prefill", "transfer"]
+    spans = request_spans(req, trace_end=0.9)
+    tail = spans[-1]
+    assert tail.name == "decode" and tail.end == 0.9
+    assert dict(tail.args)["incomplete"] is True
+    # a never-dispatched request opens its queue interval the same way
+    queued = Request(rid=4, s_in=8, s_out=4, arrival=0.2)
+    [qs] = request_spans(queued, trace_end=0.9)
+    assert qs.name == "queue" and (qs.start, qs.end) == (0.2, 0.9)
+    assert dict(qs.args)["incomplete"] is True
+    # and the rendered chrome trace stays schema-valid with open tails
+    trace = chrome_trace([req, queued], trace_end=0.9)
+    assert validate_chrome_trace(trace) == []
+    assert any(ev.get("args", {}).get("incomplete")
+               for ev in trace["traceEvents"])
+
+
+def test_defer_first_token_populates_decode_first_bucket():
+    """Async-handoff engines emit the first token a decode step after
+    KV admission: the deferred-first-emission fixture must surface in
+    the ``decode_first`` TTFT bucket, and the attribution must still
+    partition to exactly 1."""
+    def trace():
+        return mixed_priority_workload(n=10, rate_rps=100.0, seed=7,
+                                       out_lens=(3, 5, 8))
+
+    deferred = simulate_fleet(trace(), num_replicas=1, slots_per_replica=2,
+                              max_prefill_batch=2, capacity=96, dt=0.05,
+                              queue_capacity=8, defer_first_token=True)
+    served = [r for r in deferred.requests
+              if r.phase is RequestState.DONE and r.tokens_out > 1]
+    assert served and all(r.decode_first_s > 0.0 for r in served)
+    bd = deferred.ttft_breakdown
+    assert any(frac["decode_first"] > 0.0 for frac in bd.values())
+    for frac in bd.values():
+        assert sum(frac.values()) == pytest.approx(1.0, abs=1e-9)
+    # the standard engine shape keeps the bucket at exactly zero
+    sync = simulate_fleet(trace(), num_replicas=1, slots_per_replica=2,
+                          max_prefill_batch=2, capacity=96, dt=0.05,
+                          queue_capacity=8)
+    assert all(r.decode_first_s == 0.0 for r in sync.requests)
+    assert all(frac["decode_first"] == 0.0
+               for frac in sync.ttft_breakdown.values())
