@@ -3,8 +3,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test unit serve-smoke bench bench-drift bench-serving bench-prefix \
-	bench-kvstream bench-paged bench-router bench-elastic bench-calib \
-	bench-smoke bench-check lint
+	bench-kvstream bench-paged bench-qpaged bench-router bench-elastic \
+	bench-calib bench-smoke bench-check lint
 
 # Tier-1 verify: the whole test suite (stop at first failure), then the
 # serving smoke run through the real session API on the reduced arch.
@@ -38,6 +38,9 @@ serve-smoke:
 	$(PYTHON) -m repro.launch.serve --requests 8 --prompt-len 18 \
 		--max-new 6 --decode-engines 2 --slots 4 --rate-rps 8 \
 		--paged --page-size 16
+	$(PYTHON) -m repro.launch.serve --requests 6 --prompt-len 18 \
+		--max-new 5 --decode-engines 2 --slots 4 --rate-rps 8 \
+		--paged --page-size 16 --paged-dtype int8
 	$(PYTHON) -m repro.launch.serve --replicas 2 --requests 8 \
 		--max-new 5 --kill-replica --trace-out serve_trace.json \
 		--metrics-out serve_metrics.prom --metrics-port 19109
@@ -68,6 +71,11 @@ bench-kvstream:
 bench-paged:
 	$(PYTHON) -m benchmarks.run paged
 
+# Int8-resident paged KV: concurrency gain at equal HBM, flow shift,
+# exact sim-vs-runtime page/dtype parity (§16).
+bench-qpaged:
+	$(PYTHON) -m benchmarks.run qpaged
+
 # Router tier: SLO-aware vs round-robin under replica failure + the
 # sim-vs-runtime counter-parity contract (§12).
 bench-router:
@@ -84,12 +92,12 @@ bench-elastic:
 bench-calib:
 	$(PYTHON) -m benchmarks.run calib
 
-# CI-sized benchmark smoke: paged + kvstream + prefix + router + elastic
-# + calib at toy sizes; every module writes BENCH_<name>.json
+# CI-sized benchmark smoke: paged + qpaged + kvstream + prefix + router
+# + elastic + calib at toy sizes; every module writes BENCH_<name>.json
 # (gitignored) AND mirrors it into benchmarks/artifacts/ (tracked — the
 # perf trajectory).
 bench-smoke:
-	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run paged kvstream prefix router elastic calib
+	REPRO_BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run paged qpaged kvstream prefix router elastic calib
 
 # Perf-regression gate (§15): fresh working-dir artifacts from a
 # preceding bench run vs the committed benchmarks/artifacts/ baselines,

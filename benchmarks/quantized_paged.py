@@ -1,0 +1,271 @@
+"""Int8-resident paged KV decode (DESIGN.md §16).
+
+Beyond-paper benchmark: keeping pages quantized IN the pool halves the
+per-page HBM footprint (int8 payload + fp32 per-(page, kv-head) scale
+sidecar), so the same decode-group memory admits ~2x the concurrency
+the bf16-paged accounting does — on the memory-skewed cluster where KV
+residency binds decode placement. Four parts:
+
+  1. Admitted-concurrency gain (scheduling domain): per decode group,
+     the max batch under bf16-paged vs int8-paged page budgets at
+     equal HBM. The §16 acceptance check: >= 1.5x aggregate.
+
+  2. Scheduler feedback: the int8 page budget fed into ``solve_flow``
+     must CHANGE the max-flow decode routing on a decode-bound
+     partition (asserted), lifting max_flow.
+
+  3. Cross-domain parity: the same trace through the REAL int8-paged
+     runtime (reduced arch) and the int8-paged simulator —
+     ``kv_pages_allocated`` must agree EXACTLY and both sides must
+     stamp ``kv_cache_dtype="int8"``, per METRIC_FIELDS.
+
+  4. Runtime micro: a real int8 ``DecodeEngine`` holding the bf16
+     pool's exact byte budget admits >= 1.5x the concurrent requests
+     (measured admissions against the sidecar-inclusive page bytes).
+
+Run:  PYTHONPATH=src python -m benchmarks.quantized_paged
+      (or python -m benchmarks.run qpaged; REPRO_BENCH_SMOKE=1 shrinks
+      every part to CI-smoke sizes)
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import LLAMA2_70B, WORKLOADS
+from repro.core.cluster import memory_skewed_setting
+from repro.core.cost_model import max_decode_batch_paged
+from repro.core.flowgraph import solve_flow
+from repro.core.partition import GroupPartition
+from repro.serving import offline_workload, simulate
+from repro.serving.paging import pages_for_request
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+WL = WORKLOADS["HPHD"]
+PAGE = 16
+N_REQS = 24 if SMOKE else 64
+
+#: Same decode-bound partition as benchmarks.paged_decode: decode on
+#: the memory-starved H100 pair, prefill on the roomy nodes.
+FIXED_PART = ([[0, 1], [2, 3, 4, 5], [6, 7, 8, 9], [10, 11, 12, 13]],
+              [False, True, True, True])
+
+
+def _placements(cl):
+    part = GroupPartition([list(g) for g in FIXED_PART[0]],
+                          list(FIXED_PART[1]))
+    bf16 = solve_flow(cl, LLAMA2_70B, part, WL, paged_kv=True,
+                      page_size=PAGE)
+    int8 = solve_flow(cl, LLAMA2_70B, part, WL, paged_kv=True,
+                      page_size=PAGE, kv_cache_dtype="int8")
+    return part, bf16, int8
+
+
+def _concurrency_and_sim() -> List[Tuple[str, float, str]]:
+    rows = []
+    cl = memory_skewed_setting()
+    part, r_bf16, r_int8 = _placements(cl)
+
+    t0 = time.perf_counter()
+    total_b = total_q = 0
+    for gid, (group, is_pref) in enumerate(zip(part.groups,
+                                               part.is_prefill)):
+        if is_pref:
+            continue
+        plan = r_bf16.placement.replica_by_group(gid).plan
+        total_b += max_decode_batch_paged(cl, LLAMA2_70B, plan, WL,
+                                          page_size=PAGE)
+        total_q += max_decode_batch_paged(cl, LLAMA2_70B, plan, WL,
+                                          page_size=PAGE,
+                                          kv_cache_dtype="int8")
+    us = (time.perf_counter() - t0) * 1e6
+    gain = total_q / max(total_b, 1)
+    rows.append((f"qpaged.concurrency.{cl.name}", us,
+                 f"bf16_batch={total_b} int8_batch={total_q} "
+                 f"gain={gain:.2f}x "
+                 f"{'PASS' if gain >= 1.5 else 'FAIL'}"))
+    if gain < 1.5:
+        raise AssertionError(
+            "int8-resident pages must admit >= 1.5x the bf16-paged "
+            f"decode concurrency at equal HBM: {total_q} vs {total_b}")
+
+    for name, res, dtype in (("bf16", r_bf16, None),
+                             ("int8", r_int8, "int8")):
+        t0 = time.perf_counter()
+        reqs = offline_workload("HPHD", N_REQS, seed=7)
+        sim = simulate(cl, LLAMA2_70B, res.placement, reqs,
+                       paged_kv=True, page_size=PAGE,
+                       kv_cache_dtype=dtype)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"qpaged.sim.{name}", us,
+                     f"thpt={sim.decode_throughput:.1f}tok/s "
+                     f"avg_lat={sim.avg_latency:.2f}s "
+                     f"pages={sim.kv_pages_allocated} "
+                     f"dtype={sim.kv_cache_dtype}"))
+    return rows
+
+
+def _flow_shift() -> List[Tuple[str, float, str]]:
+    rows = []
+    cl = memory_skewed_setting()
+    t0 = time.perf_counter()
+    _, r_bf16, r_int8 = _placements(cl)
+    us = (time.perf_counter() - t0) * 1e6
+    rb = {k: round(v, 6) for k, v in r_bf16.placement.kv_routes.items()}
+    rq = {k: round(v, 6) for k, v in r_int8.placement.kv_routes.items()}
+    changed = rb != rq
+    lift = (r_int8.placement.max_flow
+            / max(r_bf16.placement.max_flow, 1e-9))
+    rows.append(("qpaged.flow_shift", us,
+                 f"flow {r_bf16.placement.max_flow:.0f}->"
+                 f"{r_int8.placement.max_flow:.0f} ({lift:.2f}x) "
+                 f"changed={changed} {'PASS' if changed else 'FAIL'}"))
+    if not changed:
+        raise AssertionError(
+            "the int8 page budget must shift the max-flow decode "
+            f"routing on {cl.name}: {rb} vs {rq}")
+    return rows
+
+
+# -- cross-domain parity ------------------------------------------------------
+
+RT_TRACE = dict(conversations=4, turns=2, rate_rps=4.0, system_len=12,
+                user_len=6, out_len=4)
+
+
+def _runtime_parity() -> List[Tuple[str, float, str]]:
+    import jax
+    from repro.configs import ARCHS
+    from repro.core import make_plan
+    from repro.core.cluster import homogeneous_setting
+    from repro.core.cost_model import ModelProfile
+    from repro.core.placement import Placement, ReplicaPlacement
+    from repro.models import init_params
+    from repro.models.common import DEFAULT_DTYPE
+    from repro.serving import (Coordinator, ServeRequest,
+                               multi_turn_workload)
+
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    prof = ModelProfile.from_arch(cfg, kv_dtype=DEFAULT_DTYPE)
+
+    t0 = time.perf_counter()
+    cl = homogeneous_setting()
+    reps, routes = [], {}
+    for g in range(4):
+        devs = [2 * g, 2 * g + 1]
+        reps.append(ReplicaPlacement(g, devs, g < 2,
+                                     make_plan([devs], prof.num_layers, cl),
+                                     1.0))
+    for p in range(2):
+        for d in (2, 3):
+            routes[(p, d)] = 1.0
+    placement = Placement(reps, routes, max_flow=4.0, period=600.0)
+    reqs_sim = multi_turn_workload(seed=9, vocab=cfg.vocab, **RT_TRACE)
+    sim = simulate(cl, prof, placement, reqs_sim, paged_kv=True,
+                   page_size=PAGE, kv_cache_dtype="int8")
+    sim_us = (time.perf_counter() - t0) * 1e6
+
+    t0 = time.perf_counter()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    coord = Coordinator(cfg, params, num_decode_engines=2,
+                        slots_per_engine=6, capacity=128,
+                        num_prefill_engines=2, paged=True, page_size=PAGE,
+                        paged_dtype="int8")
+    sess = coord.session(max_prefill_batch=1)
+    for r in sorted(multi_turn_workload(seed=9, vocab=cfg.vocab, **RT_TRACE),
+                    key=lambda r: r.arrival):
+        sess.submit(ServeRequest(r.rid, np.asarray(r.tokens, np.int32),
+                                 r.s_out), arrival_time=r.arrival)
+    m = sess.run().metrics()
+    rt_us = (time.perf_counter() - t0) * 1e6
+
+    exp = sum(pages_for_request(r.s_in, r.s_out, PAGE) for r in reqs_sim)
+    ok = (sim.kv_pages_allocated == m.kv_pages_allocated == exp
+          and sim.kv_cache_dtype == m.kv_cache_dtype == "int8")
+    rows = [
+        ("qpaged.sim_pages.homog", sim_us,
+         f"pages={sim.kv_pages_allocated} dtype={sim.kv_cache_dtype}"),
+        ("qpaged.runtime_pages.qwen3-1.7b-reduced", rt_us,
+         f"pages={m.kv_pages_allocated} dtype={m.kv_cache_dtype} "
+         f"preemptions={sum(r.preemptions for r in m.requests)}"),
+        ("qpaged.sim_vs_runtime", 0.0,
+         f"delta={abs(sim.kv_pages_allocated - m.kv_pages_allocated)} "
+         f"{'PASS' if ok else 'FAIL'}"),
+    ]
+    if not ok:
+        raise AssertionError(
+            "int8-paged simulator and runtime must stamp identical "
+            f"kv_pages_allocated and kv_cache_dtype: sim "
+            f"{sim.kv_pages_allocated}/{sim.kv_cache_dtype} vs runtime "
+            f"{m.kv_pages_allocated}/{m.kv_cache_dtype} "
+            f"(arithmetic {exp})")
+    return rows
+
+
+def _runtime_micro() -> List[Tuple[str, float, str]]:
+    """Real int8 engine holding the bf16 pool's exact BYTE budget:
+    count measured admissions of short-context requests."""
+    import jax
+    from repro.configs import ARCHS
+    from repro.models import init_params
+    from repro.serving import kv_transfer
+    from repro.serving.engine import DecodeEngine, PrefillEngine
+    from repro.serving.paging import PagingError
+
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cap, prompt_len, s_out = 128, 17, 4
+    bf16_pages = 16 + 1
+
+    t0 = time.perf_counter()
+    pe = PrefillEngine(cfg, params, cache_capacity=cap)
+    bf16 = DecodeEngine(cfg, params, slots=32, capacity=cap, paged=True,
+                        page_size=PAGE, num_pages=bf16_pages)
+    # equal HBM: the int8 pool holds as many (payload + sidecar) pages
+    # as the bf16 pool's bytes buy
+    probe = DecodeEngine(cfg, params, slots=1, capacity=cap, paged=True,
+                         page_size=PAGE, num_pages=2, paged_dtype="int8")
+    budget = (bf16_pages - 1) * bf16.pool.page_bytes
+    int8_pages = int(budget // probe.pool.page_bytes) + 1
+    int8 = DecodeEngine(cfg, params, slots=32, capacity=cap, paged=True,
+                        page_size=PAGE, num_pages=int8_pages,
+                        paged_dtype="int8")
+    rng = np.random.default_rng(0)
+    admitted = {"bf16": 0, "int8": 0}
+    for name, eng in (("bf16", bf16), ("int8", int8)):
+        for rid in range(64):
+            prompt = rng.integers(0, cfg.vocab, prompt_len).astype(np.int32)
+            first, slab = pe.prefill_batch([prompt])[0]
+            try:
+                eng.admit(rid, first, prompt_len, s_out,
+                          kv_transfer.trim_to_pages(slab, prompt_len,
+                                                    PAGE, cfg=cfg))
+            except PagingError:
+                break
+            admitted[name] += 1
+    us = (time.perf_counter() - t0) * 1e6
+    gain = admitted["int8"] / max(admitted["bf16"], 1)
+    ok = gain >= 1.5
+    rows = [("qpaged.engine_hbm_parity", us,
+             f"bf16_admitted={admitted['bf16']} "
+             f"int8_admitted={admitted['int8']} gain={gain:.1f}x "
+             f"int8_pool={int8.pool.num_allocatable}pages "
+             f"{'PASS' if ok else 'FAIL'}")]
+    if not ok:
+        raise AssertionError(
+            "an int8 engine at the bf16 pool's byte budget must admit "
+            f">= 1.5x concurrent short requests: {admitted}")
+    return rows
+
+
+def run() -> List[Tuple[str, float, str]]:
+    return (_concurrency_and_sim() + _flow_shift()
+            + _runtime_parity() + _runtime_micro())
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

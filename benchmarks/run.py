@@ -13,10 +13,10 @@ PRs (the artifacts are .gitignored; diff them out-of-band).
 Usage:  PYTHONPATH=src python -m benchmarks.run [module ...]
         modules default to all; names: fig6, fig8, fig9, fig10,
         table3, table4, table5, roofline, drift, serving, prefix,
-        kvstream, paged, router, elastic, calib
+        kvstream, paged, qpaged, router, elastic, calib
 
 ``REPRO_BENCH_SMOKE=1`` shrinks the modules that support it (kvstream,
-prefix, paged, router, elastic, calib) to CI-smoke sizes
+prefix, paged, qpaged, router, elastic, calib) to CI-smoke sizes
 (``make bench-smoke``), and
 additionally mirrors each artifact into ``benchmarks/artifacts/`` —
 the TRACKED perf-trajectory record (full-size artifacts in the
@@ -60,6 +60,7 @@ MODULES = {
     "prefix": "benchmarks.prefix_reuse",
     "kvstream": "benchmarks.kv_streaming",
     "paged": "benchmarks.paged_decode",
+    "qpaged": "benchmarks.quantized_paged",
     "router": "benchmarks.router_fleet",
     "elastic": "benchmarks.elastic_fleet",
     "calib": "benchmarks.calibration",

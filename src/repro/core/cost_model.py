@@ -518,16 +518,40 @@ def dense_slot_capacity(s_total: int, lo: int = 8) -> int:
     return b
 
 
+#: Resident cache dtypes that carry a per-(page, kv-head) fp32 scale
+#: sidecar in the pool (DESIGN.md §16). Accounting for these prices
+#: payload at the quantized element size PLUS the sidecar; other
+#: dtypes (and None) price pages at the profile's own element size.
+QUANT_RESIDENT_DTYPES = ("int8",)
+
+
 def kv_page_bytes(profile: ModelProfile,
-                  page_size: int = PAGE_SIZE) -> float:
-    """HBM bytes one KV page occupies across all attention layers."""
-    return (page_size * profile.kv_bytes_token_layer
-            * profile.num_layers * profile.attn_layer_fraction)
+                  page_size: int = PAGE_SIZE,
+                  kv_cache_dtype: Optional[str] = None) -> float:
+    """HBM bytes one KV page occupies across all attention layers.
+
+    ``kv_cache_dtype`` names the POOL-resident dtype when it differs
+    from the profile's wire/cache dtype (DESIGN.md §16): "int8" pages
+    hold 1-byte elements plus one fp32 scale per (page, kv-head) — the
+    scale sidecar is charged here so every byte consumer (page budgets,
+    utilization, prefix accounting) agrees on what a page costs. None
+    (default) reproduces the §11 formula exactly."""
+    per_layer = page_size * profile.kv_bytes_token_layer
+    if kv_cache_dtype is not None:
+        elems_tok = (profile.kv_bytes_token_layer
+                     / max(profile.kv_elem_bytes, 1e-9))
+        per_layer = page_size * elems_tok * dtype_bytes(kv_cache_dtype)
+        if kv_cache_dtype in QUANT_RESIDENT_DTYPES:
+            # one fp32 scale per (page, kv-head) for k and for v —
+            # elems_tok / kv_quant_group scales per page per layer
+            per_layer += elems_tok / max(profile.kv_quant_group, 1) * 4.0
+    return per_layer * profile.num_layers * profile.attn_layer_fraction
 
 
 def decode_page_budget(cluster: ClusterSpec, profile: ModelProfile,
                        plan: ParallelPlan, page_size: int = PAGE_SIZE,
-                       batch: int = 1, act_tokens: int = 1) -> int:
+                       batch: int = 1, act_tokens: int = 1,
+                       kv_cache_dtype: Optional[str] = None) -> int:
     """KV pages the plan's HBM headroom holds (min over stages).
 
     Per stage: device capacity (the same 0.9 derate as
@@ -536,9 +560,12 @@ def decode_page_budget(cluster: ClusterSpec, profile: ModelProfile,
     sequence — decode streams one token per step, unlike prefill's
     full-sequence activations), divided by the stage's share of one
     page's bytes. Returns 0 when any stage cannot even hold the
-    weights; a huge budget for pure-SSM profiles (no paged KV)."""
+    weights; a huge budget for pure-SSM profiles (no paged KV).
+    ``kv_cache_dtype`` prices pages via the §16 quantized-resident
+    accounting — int8 pages roughly double the budget."""
     frac = profile.attn_layer_fraction
-    page_b_all_layers = kv_page_bytes(profile, page_size)
+    page_b_all_layers = kv_page_bytes(profile, page_size,
+                                      kv_cache_dtype=kv_cache_dtype)
     budget = float("inf")
     for j, stage in enumerate(plan.stages):
         tp = len(stage)
@@ -563,12 +590,15 @@ def decode_page_budget(cluster: ClusterSpec, profile: ModelProfile,
 
 def _bisect_page_batch(cluster: ClusterSpec, profile: ModelProfile,
                        plan: ParallelPlan, pages_per_req: int,
-                       page_size: int, cap: int) -> int:
+                       page_size: int, cap: int,
+                       kv_cache_dtype: Optional[str] = None) -> int:
     lo, hi = 0, cap
     while lo < hi:
         mid = (lo + hi + 1) // 2
         if decode_page_budget(cluster, profile, plan, page_size,
-                              batch=mid) >= mid * pages_per_req:
+                              batch=mid,
+                              kv_cache_dtype=kv_cache_dtype
+                              ) >= mid * pages_per_req:
             lo = mid
         else:
             hi = mid - 1
@@ -579,7 +609,8 @@ def max_decode_batch_paged(cluster: ClusterSpec, profile: ModelProfile,
                            plan: ParallelPlan, wl: Workload,
                            page_size: int = PAGE_SIZE,
                            cap: int = 4096,
-                           slot_capacity: Optional[int] = None) -> int:
+                           slot_capacity: Optional[int] = None,
+                           kv_cache_dtype: Optional[str] = None) -> int:
     """Largest decode batch the PAGE budget admits (bisection): each
     request holds ``ceil(mean_resident / page_size)`` pages at the
     steady-state mean context ``s_in + s_out/2`` — real residency, not
@@ -594,16 +625,29 @@ def max_decode_batch_paged(cluster: ClusterSpec, profile: ModelProfile,
     if per_req <= 0:
         return max_decode_batch(cluster, profile, plan,
                                 wl.s_in + wl.s_out, cap)
+    # dense-slab pricing (slot_capacity) stays at the profile dtype —
+    # the dense engine has no quantized-resident mode to compare against
     return _bisect_page_batch(cluster, profile, plan, per_req,
-                              page_size, cap)
+                              page_size, cap,
+                              kv_cache_dtype=(None if slot_capacity
+                                              else kv_cache_dtype))
 
 
-def prefix_bytes_per_token(profile: ModelProfile) -> float:
+def prefix_bytes_per_token(profile: ModelProfile,
+                           kv_cache_dtype: Optional[str] = None,
+                           page_size: int = PAGE_SIZE) -> float:
     """KV bytes one cached prompt token occupies across all layers —
     what the prefix cache charges per stored radix-edge token
     (DESIGN.md §9). Constant-size recurrent state is excluded: an SSM
     prefix snapshot costs O(1), accounted via the per-entry slab bytes
-    on the runtime side."""
+    on the runtime side. ``kv_cache_dtype="int8"`` prices the token at
+    its §16 page share — quantized payload PLUS the per-token slice of
+    the page's fp32 scale sidecar — so a byte budget converts to cached
+    tokens without under-counting the sidecar."""
+    if kv_cache_dtype is not None:
+        return (kv_page_bytes(profile, page_size,
+                              kv_cache_dtype=kv_cache_dtype)
+                / max(page_size, 1))
     return (profile.kv_bytes_token_layer * profile.num_layers
             * profile.attn_layer_fraction)
 
@@ -741,7 +785,8 @@ def prefill_capacity(cluster: ClusterSpec, profile: ModelProfile,
 def decode_capacity(cluster: ClusterSpec, profile: ModelProfile,
                     plan: ParallelPlan, wl: Workload, period: float,
                     paged: bool = False, page_size: int = PAGE_SIZE,
-                    slot_capacity: Optional[int] = None) -> float:
+                    slot_capacity: Optional[int] = None,
+                    kv_cache_dtype: Optional[str] = None) -> float:
     """Requests the decode replica finishes per ``period`` at its max batch.
 
     Three memory accountings for the max batch (DESIGN.md §11):
@@ -754,10 +799,13 @@ def decode_capacity(cluster: ClusterSpec, profile: ModelProfile,
         accounting — padding included;
       * ``paged=True``: the page-pool budget at mean real residency
         (``max_decode_batch_paged``) — padding converted into
-        admitted concurrency."""
+        admitted concurrency; ``kv_cache_dtype="int8"`` further prices
+        pages at the §16 quantized-resident size (payload + scale
+        sidecar), roughly doubling the admitted batch."""
     s_total = wl.s_in + wl.s_out
     if paged:
-        b = max_decode_batch_paged(cluster, profile, plan, wl, page_size)
+        b = max_decode_batch_paged(cluster, profile, plan, wl, page_size,
+                                   kv_cache_dtype=kv_cache_dtype)
     elif slot_capacity:
         b = max_decode_batch_paged(cluster, profile, plan, wl, page_size,
                                    slot_capacity=slot_capacity)

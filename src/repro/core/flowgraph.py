@@ -52,6 +52,7 @@ def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
                paged_kv: bool = False,
                page_size: int = PAGE_SIZE,
                dense_slot_capacity: Optional[int] = None,
+               kv_cache_dtype: Optional[str] = None,
                corrections: Optional[CostCorrections] = None
                ) -> FlowGraphResult:
     """Pick per-replica optimal plans, build the flow network, run
@@ -71,6 +72,9 @@ def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
     at real residency and the dense engine's bucketed slab: on a
     memory-skewed cluster the two accountings admit different batch
     sizes per group and the max-flow assignment shifts with them.
+    ``kv_cache_dtype="int8"`` (with ``paged_kv``) prices pages at the
+    §16 quantized-resident size — roughly double the per-group page
+    budget, so decode capacities grow and the assignment shifts again.
 
     ``corrections`` (DESIGN.md §15) rescales the graph by learned
     observed/predicted calibration factors: prefill/decode replica edge
@@ -89,7 +93,8 @@ def solve_flow(cluster: ClusterSpec, profile: ModelProfile,
             plan, cap = best_decode_plan(
                 cluster, profile, group, wl, period, paged_kv=paged_kv,
                 page_size=page_size,
-                dense_slot_capacity=dense_slot_capacity)
+                dense_slot_capacity=dense_slot_capacity,
+                kv_cache_dtype=kv_cache_dtype)
         replicas.append(ReplicaPlacement(gid, list(group), is_pref, plan, cap))
 
     net = FlowNetwork()

@@ -84,18 +84,22 @@ def best_decode_plan(cluster: ClusterSpec, profile: ModelProfile,
                      group: Sequence[int], wl: Workload,
                      period: float, paged_kv: bool = False,
                      page_size: int = PAGE_SIZE,
-                     dense_slot_capacity: Optional[int] = None
+                     dense_slot_capacity: Optional[int] = None,
+                     kv_cache_dtype: Optional[str] = None
                      ) -> Tuple[Optional[ParallelPlan], float]:
     """Throughput-optimal plan; returns (plan, capacity req/period).
 
     ``paged_kv`` prices the max decode batch off the §11 page-pool
     budget at real residency; ``dense_slot_capacity`` prices dense
-    slabs at the engine's bucketed slab (padding included)."""
+    slabs at the engine's bucketed slab (padding included);
+    ``kv_cache_dtype`` prices pages at the §16 quantized-resident
+    size (payload + scale sidecar)."""
     best, best_cap = None, 0.0
     for plan in candidate_plans(cluster, profile, group):
         cap = decode_capacity(cluster, profile, plan, wl, period,
                               paged=paged_kv, page_size=page_size,
-                              slot_capacity=dense_slot_capacity)
+                              slot_capacity=dense_slot_capacity,
+                              kv_cache_dtype=kv_cache_dtype)
         if cap > best_cap:
             best, best_cap = plan, cap
     return best, best_cap

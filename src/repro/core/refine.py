@@ -133,6 +133,7 @@ def iterative_refinement(
     kv_compression_ratio: float = 1.0,
     paged_kv: bool = False,
     page_size: int = PAGE_SIZE,
+    kv_cache_dtype: Optional[str] = None,
     corrections: Optional[CostCorrections] = None,
 ) -> Tuple[GroupPartition, FlowGraphResult, List[RefineTrace]]:
     """Max-flow-guided edge-swap loop. Returns the refined partition, its
@@ -143,7 +144,8 @@ def iterative_refinement(
     bytes, so refinement chases the bottlenecks that remain AFTER
     compression. ``paged_kv`` likewise prices decode-replica capacities
     off the §11 page-pool budget at real residency, so refinement
-    chases what a PAGED fleet can actually admit.
+    chases what a PAGED fleet can actually admit —
+    ``kv_cache_dtype="int8"`` at the §16 quantized-resident page size.
 
     ``corrections`` (DESIGN.md §15) threads learned calibration factors
     into EVERY solve — the initial one and each candidate's re-score —
@@ -161,6 +163,7 @@ def iterative_refinement(
     cur_res = solve_flow(cluster, profile, part, wl, period,
                          kv_compression_ratio=kv_compression_ratio,
                          paged_kv=paged_kv, page_size=page_size,
+                         kv_cache_dtype=kv_cache_dtype,
                          corrections=corrections)
     best_part, best_res = cur_part, cur_res
     trace = [RefineTrace(0, best_res.placement.max_flow, "initial")]
@@ -176,6 +179,7 @@ def iterative_refinement(
                    solve_flow(cluster, profile, cand, wl, period,
                               kv_compression_ratio=kv_compression_ratio,
                               paged_kv=paged_kv, page_size=page_size,
+                              kv_cache_dtype=kv_cache_dtype,
                               corrections=corrections))
                   for name, cand in cands]
         scored.sort(key=lambda t: -t[2].placement.max_flow)

@@ -54,6 +54,7 @@ def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
              kv_compression_ratio: float = 1.0,
              paged_kv: bool = False,
              page_size: int = PAGE_SIZE,
+             kv_cache_dtype: Optional[str] = None,
              corrections: Optional[CostCorrections] = None,
              ) -> ScheduleResult:
     """``kv_compression_ratio`` > 1 prices the φ→δ KV links at the
@@ -61,9 +62,11 @@ def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
     search co-optimize placement with compression. ``paged_kv`` prices
     decode-group capacities off the §11 page-pool budget at real
     residency instead of dense slabs, letting the search size decode
-    groups for what a paged fleet actually admits. ``corrections``
-    (DESIGN.md §15) rescales every solve by learned observed/predicted
-    calibration factors."""
+    groups for what a paged fleet actually admits —
+    ``kv_cache_dtype="int8"`` at the §16 quantized-resident page size
+    (roughly double the budget). ``corrections`` (DESIGN.md §15)
+    rescales every solve by learned observed/predicted calibration
+    factors."""
     t0 = time.perf_counter()
     k0 = k if k is not None else num_groups(cluster, profile)
     best: Optional[ScheduleResult] = None
@@ -82,6 +85,7 @@ def schedule(cluster: ClusterSpec, profile: ModelProfile, wl: Workload,
                 on_step=on_step,
                 kv_compression_ratio=kv_compression_ratio,
                 paged_kv=paged_kv, page_size=page_size,
+                kv_cache_dtype=kv_cache_dtype,
                 corrections=corrections)
             cand = ScheduleResult(res.placement, rpart, res, trace,
                                   time.perf_counter() - t0)
@@ -283,6 +287,7 @@ def reschedule(cluster: ClusterSpec, profile: ModelProfile,
                kv_compression_ratio: float = 1.0,
                paged_kv: bool = False,
                page_size: int = PAGE_SIZE,
+               kv_cache_dtype: Optional[str] = None,
                corrections: Optional[CostCorrections] = None,
                ) -> ScheduleResult:
     """Warm-start rescheduling for a drifted workload.
@@ -324,7 +329,8 @@ def reschedule(cluster: ClusterSpec, profile: ModelProfile,
             cluster, profile, part, wl, period,
             max_iters=max_refine_iters, guided=guided, seed=seed,
             on_step=on_step, kv_compression_ratio=kv_compression_ratio,
-            paged_kv=paged_kv, page_size=page_size, corrections=corrections)
+            paged_kv=paged_kv, page_size=page_size,
+            kv_cache_dtype=kv_cache_dtype, corrections=corrections)
         if best is None or res.placement.max_flow > best[1].placement.max_flow:
             best = (rpart, res, trace)
     rpart, res, trace = best
@@ -343,6 +349,7 @@ def reschedule_capacity(cluster: ClusterSpec, profile: ModelProfile,
                         kv_compression_ratio: float = 1.0,
                         paged_kv: bool = False,
                         page_size: int = PAGE_SIZE,
+                        kv_cache_dtype: Optional[str] = None,
                         corrections: Optional[CostCorrections] = None,
                         ) -> ScheduleResult:
     """Warm-start rescheduling for CAPACITY drift (DESIGN.md §13) —
@@ -379,7 +386,8 @@ def reschedule_capacity(cluster: ClusterSpec, profile: ModelProfile,
             cluster, profile, part, wl, period,
             max_iters=max_refine_iters, guided=guided, seed=seed,
             on_step=on_step, kv_compression_ratio=kv_compression_ratio,
-            paged_kv=paged_kv, page_size=page_size, corrections=corrections)
+            paged_kv=paged_kv, page_size=page_size,
+            kv_cache_dtype=kv_cache_dtype, corrections=corrections)
         cand = ScheduleResult(res.placement, rpart, res, trace,
                               time.perf_counter() - t0)
         if best is None or cand.placement.max_flow > best.placement.max_flow:

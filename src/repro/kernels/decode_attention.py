@@ -217,3 +217,126 @@ def gqa_paged_decode_bhsd(q: jax.Array, k_pages: jax.Array,
       k_pages.reshape(n_pages, hkv, page_size, hd),
       v_pages.reshape(n_pages, hkv, page_size, hd))
     return out.reshape(b, hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# Int8-resident paged variant: pages stay quantized in the pool; dequant is
+# fused into the online-softmax loop (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_quant_kernel(bt_ref, ks_ref, vs_ref, len_ref,
+                               q_ref, k_ref, v_ref, o_ref,
+                               acc_ref, m_ref, l_ref, *,
+                               page_size: int, num_blocks: int,
+                               sm_scale: float):
+    """Same online-softmax recurrence as ``_paged_decode_kernel``, but the
+    k/v page tiles arrive int8 and are dequantized in-register: the
+    per-(page, kv-head) fp32 scales ride the scalar-prefetch path
+    alongside the block table, so the scale lookup reuses the same
+    SMEM-resident physical-page index the BlockSpec index map used."""
+    ib, ih, isb = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(isb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    page = bt_ref[ib, isb]
+    ks = ks_ref[page, ih]
+    vs = vs_ref[page, ih]
+    q = q_ref[0, 0].astype(jnp.float32)               # [group, hd]
+    k = k_ref[0, 0].astype(jnp.float32) * ks          # dequant in-register
+    v = v_ref[0, 0].astype(jnp.float32) * vs
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    valid_len = len_ref[ib]
+    kpos = isb * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < valid_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(isb == num_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def gqa_paged_decode_quant_bhsd(q: jax.Array, k_pages: jax.Array,
+                                v_pages: jax.Array, k_scales: jax.Array,
+                                v_scales: jax.Array,
+                                block_tables: jax.Array,
+                                valid_len: jax.Array,
+                                interpret: bool = False) -> jax.Array:
+    """Int8-resident paged GQA decode attention (DESIGN.md §16).
+
+    q [B,Hq,hd] float (one token); page pools [N,Hkv,page_size,hd]
+    int8; k_scales/v_scales [N,Hkv] fp32 per-(page, kv-head) symmetric
+    scales; block_tables [B,num_blocks] int32 (unallocated entries must
+    be clamped to a scratch page by the caller); valid_len [B] int32 →
+    out [B,Hq,hd].
+
+    Pages never materialize in bf16: each grid step DMAs one int8 page
+    and multiplies by its scale in VMEM registers right before the q·k
+    and p·v dots — the HBM traffic is the int8 payload plus a scalar
+    pair per (page, kv-head)."""
+    b, hq, hd = q.shape
+    n_pages, hkv, page_size, _ = k_pages.shape
+    _, num_blocks = block_tables.shape
+    assert hq % hkv == 0
+    assert k_pages.dtype == jnp.int8 and v_pages.dtype == jnp.int8, (
+        k_pages.dtype, v_pages.dtype)
+    group = hq // hkv
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(b, hkv, group, hd)
+    block_tables = block_tables.astype(jnp.int32)
+    valid_len = valid_len.astype(jnp.int32)
+    k_scales = k_scales.astype(jnp.float32)
+    v_scales = v_scales.astype(jnp.float32)
+
+    kernel = functools.partial(_paged_decode_quant_kernel,
+                               page_size=page_size,
+                               num_blocks=num_blocks, sm_scale=sm_scale)
+
+    def page_map(ib, ih, isb, bt_ref, ks_ref, vs_ref):
+        return (bt_ref[ib, isb], ih, 0, 0)
+
+    def group_map(ib, ih, isb, bt_ref, ks_ref, vs_ref):
+        return (ib, ih, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,    # block_tables + k/v scales ride in SMEM
+        grid=(b, hkv, num_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # valid_len
+            pl.BlockSpec((1, 1, group, hd), group_map),
+            pl.BlockSpec((1, 1, page_size, hd), page_map),
+            pl.BlockSpec((1, 1, page_size, hd), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd), group_map),
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, k_scales, v_scales, valid_len, qg,
+      k_pages.reshape(n_pages, hkv, page_size, hd),
+      v_pages.reshape(n_pages, hkv, page_size, hd))
+    return out.reshape(b, hq, hd)

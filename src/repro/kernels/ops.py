@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import (gqa_decode_bhsd,
-                                            gqa_paged_decode_bhsd)
+                                            gqa_paged_decode_bhsd,
+                                            gqa_paged_decode_quant_bhsd)
 from repro.kernels.flash_attention import flash_attention_bhsd
 
 
@@ -87,4 +88,36 @@ def gqa_paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     kt = jnp.swapaxes(k_pages, 1, 2)                   # [N,Hkv,ps,hd]
     vt = jnp.swapaxes(v_pages, 1, 2)
     out = gqa_paged_decode_bhsd(qt, kt, vt, bt, vl, interpret=_interpret())
+    return out[:, None]
+
+
+def paged_decode_quant_supported(q: jax.Array, k_pages: jax.Array) -> bool:
+    """Gate for the int8-resident kernel: same shape discipline as
+    ``paged_decode_supported`` (the page is the s-block) plus the pool
+    must actually be int8 — int8's native sublane tile is 32, but the
+    Mosaic lowering handles page_size=16 via masked tiles, so the gate
+    stays at the bf16 granularity."""
+    return (q.shape[1] == 1 and k_pages.dtype == jnp.int8
+            and k_pages.shape[1] % 16 == 0
+            and q.shape[2] % k_pages.shape[2] == 0)
+
+
+@jax.jit
+def gqa_paged_decode_quant_attention(q: jax.Array, k_pages: jax.Array,
+                                     v_pages: jax.Array,
+                                     k_scales: jax.Array,
+                                     v_scales: jax.Array,
+                                     block_tables: jax.Array,
+                                     valid_len: jax.Array) -> jax.Array:
+    """Model layout: q [B,1,Hq,hd], int8 pools [N,ps,Hkv,hd], fp32
+    scales [N,Hkv], block tables [B,nb] int32 (unallocated entries < 0),
+    valid_len [] or [B] → [B,1,Hq,hd] (DESIGN.md §16)."""
+    b = q.shape[0]
+    vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    qt = q[:, 0]                                       # [B,Hq,hd]
+    kt = jnp.swapaxes(k_pages, 1, 2)                   # [N,Hkv,ps,hd]
+    vt = jnp.swapaxes(v_pages, 1, 2)
+    out = gqa_paged_decode_quant_bhsd(qt, kt, vt, k_scales, v_scales,
+                                      bt, vl, interpret=_interpret())
     return out[:, None]

@@ -60,3 +60,17 @@ def gqa_paged_decode_ref(q: jax.Array, k_pages: jax.Array,
     kd = jnp.moveaxis(k_pages[bt], 2, 1).reshape(b, hkv, nb * ps, hd)
     vd = jnp.moveaxis(v_pages[bt], 2, 1).reshape(b, hkv, nb * ps, hd)
     return gqa_decode_ref(q, kd, vd, valid_len)
+
+
+def gqa_paged_decode_quant_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, k_scales: jax.Array,
+                               v_scales: jax.Array,
+                               block_tables: jax.Array,
+                               valid_len: jax.Array) -> jax.Array:
+    """Int8-resident paged-decode oracle (DESIGN.md §16): dequantize the
+    int8 pools with their per-(page, kv-head) fp32 scales, then run the
+    paged reference. q [B,Hq,hd]; pools [N,Hkv,page_size,hd] int8;
+    scales [N,Hkv] fp32; block_tables [B,nb] int32; valid_len [B]."""
+    kd = k_pages.astype(jnp.float32) * k_scales[:, :, None, None]
+    vd = v_pages.astype(jnp.float32) * v_scales[:, :, None, None]
+    return gqa_paged_decode_ref(q, kd, vd, block_tables, valid_len)

@@ -264,6 +264,11 @@ def main() -> None:
                          "recompute preemption on pool exhaustion")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (with --paged)")
+    ap.add_argument("--paged-dtype", choices=("int8",), default=None,
+                    help="pool-resident KV dtype (DESIGN.md §16): int8 "
+                         "keeps pages quantized in HBM (per-page/kv-head "
+                         "fp32 scale sidecar) and decodes with the fused "
+                         "quantized paged kernel; requires --paged")
     ap.add_argument("--pages-per-engine", type=int, default=0,
                     help="page-pool size per decode engine (0 = the "
                          "dense engine's HBM budget)")
@@ -363,7 +368,8 @@ def main() -> None:
                         prefix_cache_bytes=prefix_bytes,
                         kv_codec=args.kv_codec,
                         paged=args.paged, page_size=args.page_size,
-                        pages_per_engine=args.pages_per_engine or None)
+                        pages_per_engine=args.pages_per_engine or None,
+                        paged_dtype=args.paged_dtype)
 
     def on_token(rid: int, tok: int, fin: bool) -> None:
         if args.stream:
@@ -407,7 +413,8 @@ def main() -> None:
     if args.paged:
         pre = sum(r.preemptions for r in m.requests)
         pools = [e.pool for e in coord.decode_engines]
-        print(f"[serve] paged kv (page_size={args.page_size}): "
+        print(f"[serve] paged kv (page_size={args.page_size}, "
+              f"dtype={m.kv_cache_dtype or 'bf16'}): "
               f"pages_allocated={m.kv_pages_allocated} "
               f"utilization={m.page_utilization:.3f} "
               f"fragmentation={m.page_fragmentation:.3f} "

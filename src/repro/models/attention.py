@@ -212,6 +212,49 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                             use_kernel=use_kernel, kv_layout=kv_layout)
 
 
+def dequantize_pages(pages: jax.Array, scales: jax.Array,
+                     kv_layout: str = "bshd",
+                     dtype=jnp.float32) -> jax.Array:
+    """Dequantize an int8 model-layout page pool with per-(page, kv-head)
+    fp32 scales: pool [N,ps,KV,hd] ("bshd") / [N,KV,ps,hd] ("kmajor"),
+    scales [N,KV] → float pool of the same layout."""
+    if kv_layout == "kmajor":
+        return (pages.astype(jnp.float32)
+                * scales[:, :, None, None]).astype(dtype)
+    return (pages.astype(jnp.float32)
+            * scales[:, None, :, None]).astype(dtype)
+
+
+def paged_decode_quant_attention(q: jax.Array, k_pages: jax.Array,
+                                 v_pages: jax.Array, k_scales: jax.Array,
+                                 v_scales: jax.Array,
+                                 block_tables: jax.Array,
+                                 valid_len: jax.Array,
+                                 use_kernel: Optional[bool] = None,
+                                 kv_layout: str = "bshd") -> jax.Array:
+    """One new token against an INT8-resident paged KV cache
+    (DESIGN.md §16).
+
+    q [B,1,H,hd]; int8 pools [N,ps,KV,hd] ("bshd") / [N,KV,ps,hd]
+    ("kmajor"); fp32 scales [N,KV]; block_tables [B,nb] int32. On TPU
+    the fused Pallas kernel dequantizes in-register while walking the
+    block table; off-TPU (or kmajor) the pools are dequantized to fp32
+    and the float paged path is reused — same values, so the logits
+    match the fused kernel to fp32 rounding."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel and kv_layout == "bshd":
+        from repro.kernels import ops as kops
+        if kops.paged_decode_quant_supported(q, k_pages):
+            return kops.gqa_paged_decode_quant_attention(
+                q, k_pages, v_pages, k_scales, v_scales,
+                block_tables, valid_len)
+    kd = dequantize_pages(k_pages, k_scales, kv_layout)
+    vd = dequantize_pages(v_pages, v_scales, kv_layout)
+    return paged_decode_attention(q, kd, vd, block_tables, valid_len,
+                                  use_kernel=False, kv_layout=kv_layout)
+
+
 def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
     """Non-causal attention over a fixed memory (image tokens / enc output)."""
     scores = _gqa_scores(q, k)

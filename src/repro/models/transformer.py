@@ -282,6 +282,42 @@ def _attn_decode(spec: BlockSpec, cfg: ArchConfig, p: Params, x: jax.Array,
     return x, new_cache
 
 
+QUANT_EPS_SCALE = 1e-12  # matches kernels.kv_quant.EPS_SCALE
+
+
+def _quant_page_write(pool: jax.Array, scales: jax.Array, page: jax.Array,
+                      off: jax.Array, row: jax.Array, layout: str
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter one new token's k or v row into an int8 page pool
+    (DESIGN.md §16). The per-(page, kv-head) scale can only grow
+    (symmetric max-abs); when it does, the touched page's existing
+    payload is rescaled in the same write — old_scale/new_scale ≤ 1, so
+    rescaled codes stay in range, and when the scale is unchanged the
+    ratio is exactly 1.0 and int8 codes round-trip bit-exactly.
+
+    pool [N,ps,KV,hd] ("bshd") / [N,KV,ps,hd] ("kmajor") int8; scales
+    [N,KV] fp32; page/off [B] int32; row [B,KV,hd]."""
+    b = row.shape[0]
+    bidx = jnp.arange(b)
+    rowf = row.astype(jnp.float32)
+    old_s = scales[page]                                     # [B,KV]
+    row_max = jnp.max(jnp.abs(rowf), axis=-1)                # [B,KV]
+    new_s = jnp.maximum(jnp.maximum(old_s, row_max / 127.0),
+                        QUANT_EPS_SCALE)
+    ratio = old_s / new_s                                    # ≤ 1
+    pg = pool[page].astype(jnp.float32)   # [B,ps,KV,hd] / [B,KV,ps,hd]
+    qrow = jnp.clip(jnp.round(rowf / new_s[..., None]), -127, 127)
+    if layout == "kmajor":
+        pg = jnp.round(pg * ratio[:, :, None, None])
+        pg = pg.at[bidx, :, off].set(qrow)
+    else:
+        pg = jnp.round(pg * ratio[:, None, :, None])
+        pg = pg.at[bidx, off].set(qrow)
+    pool = pool.at[page].set(jnp.clip(pg, -127, 127).astype(jnp.int8))
+    scales = scales.at[page].set(new_s)
+    return pool, scales
+
+
 def _attn_decode_paged(spec: BlockSpec, cfg: ArchConfig, p: Params,
                        x: jax.Array, cache: Cache, ctx: Ctx
                        ) -> Tuple[jax.Array, Cache]:
@@ -291,7 +327,12 @@ def _attn_decode_paged(spec: BlockSpec, cfg: ArchConfig, p: Params,
     token's k/v scatter into (page, offset); unadmitted slots carry
     table entries < 0, clamped onto the reserved scratch page so their
     writes can never touch live pages. Attention is bit-identical to
-    the dense path on the same values (``attention.gather_pages``)."""
+    the dense path on the same values (``attention.gather_pages``).
+
+    When the cache carries ``k_scale``/``v_scale`` sidecar leaves the
+    pools are int8-resident (DESIGN.md §16): the new token is quantized
+    into its page (growing the page scale if needed) and attention
+    dequantizes in-register via the fused kernel."""
     b = x.shape[0]
     h = common.rms_norm(x, p["norm1"])
     ap = p["attn"]
@@ -304,6 +345,16 @@ def _attn_decode_paged(spec: BlockSpec, cfg: ArchConfig, p: Params,
     bidx = jnp.arange(b)
     page = jnp.maximum(ctx.block_tables[bidx, blk], 0)   # <0 → scratch 0
     layout = cfg.kv_layout
+    if "k_scale" in cache:                               # int8-resident §16
+        kc, ks = _quant_page_write(cache["k"], cache["k_scale"],
+                                   page, off, k[:, 0], layout)
+        vc, vs = _quant_page_write(cache["v"], cache["v_scale"],
+                                   page, off, v[:, 0], layout)
+        out = attention.paged_decode_quant_attention(
+            q, kc, vc, ks, vs, ctx.block_tables,
+            valid_len=pos[:, 0] + 1, kv_layout=layout)
+        x = x + out.reshape(b, 1, cfg.q_dim) @ ap["wo"]
+        return x, {"k": kc, "v": vc, "k_scale": ks, "v_scale": vs}
     if layout == "kmajor":                               # pool [N,KV,ps,hd]
         kc = cache["k"].at[page, :, off].set(k[:, 0])
         vc = cache["v"].at[page, :, off].set(v[:, 0])
@@ -712,14 +763,20 @@ def cache_specs(cfg: ArchConfig, batch: int, capacity: int) -> Tuple:
 
 
 def init_paged_cache(cfg: ArchConfig, batch: int, num_pages: int,
-                     page_size: int, dtype=common.DEFAULT_DTYPE) -> Tuple:
+                     page_size: int, dtype=common.DEFAULT_DTYPE,
+                     paged_dtype: Optional[str] = None) -> Tuple:
     """Paged variant of ``init_cache`` (DESIGN.md §11): full-attention
     k/v leaves become SHARED page pools — [P, num_pages, page_size, kv,
     hd] ("bshd") / [P, num_pages, kv, page_size, hd] ("kmajor") — with
     no batch dim (the block table supplies per-slot structure); every
     other mixer keeps its constant-size per-slot layout from
     ``init_cache``. Pools are zero-filled, so scratch-page reads are
-    finite and masked reductions stay exact."""
+    finite and masked reductions stay exact.
+
+    ``paged_dtype="int8"`` (DESIGN.md §16): pools are int8 with fp32
+    ``k_scale``/``v_scale`` sidecar leaves [P, num_pages, kv] — one
+    symmetric scale per (page, kv-head). With the default ``None`` the
+    pytree is identical to the §11 layout (no sidecar keys)."""
     dense = init_cache(cfg, batch, page_size, dtype)   # non-attn leaves
     P = cfg.num_periods
     caches = []
@@ -729,6 +786,13 @@ def init_paged_cache(cfg: ArchConfig, batch: int, num_pages: int,
                    if cfg.kv_layout == "kmajor"
                    else (P, num_pages, page_size, cfg.kv_heads,
                          cfg.head_dim))
-            c = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+            if paged_dtype == "int8":
+                sshp = (P, num_pages, cfg.kv_heads)
+                c = {"k": jnp.zeros(shp, jnp.int8),
+                     "v": jnp.zeros(shp, jnp.int8),
+                     "k_scale": jnp.zeros(sshp, jnp.float32),
+                     "v_scale": jnp.zeros(sshp, jnp.float32)}
+            else:
+                c = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
         caches.append(c)
     return tuple(caches)

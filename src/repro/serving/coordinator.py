@@ -367,14 +367,24 @@ class ServeSession:
                 tokens = None
             t0 = self.now()
             encoded = kv_compression.encode(cache, cfg, codec)
+            # §16 zero-requant: int8-resident engines install the wire
+            # codec's QuantizedLeaf chunks directly (page scale = max of
+            # the page's row scales), so the quantization error is paid
+            # once end-to-end — never dequant→requant here
+            quant_dst = eng.paged_dtype == "int8"
             try:
                 if codec.chunked:
                     plan = kv_compression.ChunkedTransferPlan.for_cache(
                         encoded, codec.chunks)
-                    landing = ((p0, kv_compression.decode(
-                        kv_transfer.transfer(chunk)))
-                        for (p0, _), chunk in zip(plan.bounds,
-                                                  plan.split(encoded)))
+                    if quant_dst:
+                        landing = ((p0, kv_transfer.transfer(chunk))
+                                   for (p0, _), chunk in zip(
+                                       plan.bounds, plan.split(encoded)))
+                    else:
+                        landing = ((p0, kv_compression.decode(
+                            kv_transfer.transfer(chunk)))
+                            for (p0, _), chunk in zip(plan.bounds,
+                                                      plan.split(encoded)))
                     if self.telemetry is not None:
                         landing = self._traced_landing(landing, e.req.rid,
                                                        eng_idx)
@@ -382,10 +392,11 @@ class ServeSession:
                                       e.req.max_new_tokens, landing,
                                       tokens=tokens, reservation=resv)
                 else:
+                    landed = kv_transfer.transfer(encoded)
+                    if not quant_dst:
+                        landed = kv_compression.decode(landed)
                     eng.admit(e.req.rid, e.first, len(e.req.prompt),
-                              e.req.max_new_tokens,
-                              kv_compression.decode(
-                                  kv_transfer.transfer(encoded)),
+                              e.req.max_new_tokens, landed,
                               tokens=tokens, reservation=resv)
             except PagingError:
                 # explicit §11 admission failure (a competing admit
@@ -595,7 +606,8 @@ class ServeSession:
         requests served so far."""
         return ServeMetrics(
             requests=[self._entries[rid].life for rid in self._order],
-            makespan=self._makespan, decode_tokens=self._decode_tokens)
+            makespan=self._makespan, decode_tokens=self._decode_tokens,
+            kv_cache_dtype=self.coord.paged_dtype)
 
 
 class Coordinator:
@@ -619,7 +631,13 @@ class Coordinator:
     handoffs, page reclamation on finish, and recompute preemption on
     pool exhaustion. With prefix caching also on, each engine shares
     pool pages copy-on-write between its radix prefix slabs and decode
-    residency."""
+    residency.
+
+    ``paged_dtype="int8"`` (requires ``paged=True``) keeps pool pages
+    int8-resident with per-(page, kv-head) fp32 scales (DESIGN.md §16):
+    roughly half the bytes per page, and handoffs from an int8 wire
+    codec install their quantized chunks directly into pages — one
+    quantization error end-to-end, no dequant→requant round-trip."""
 
     def __init__(self, cfg: ArchConfig, params: Any,
                  num_decode_engines: int = 1, slots_per_engine: int = 4,
@@ -631,9 +649,11 @@ class Coordinator:
                  cache_alpha: float = 2.0,
                  kv_codec=None,
                  paged: bool = False, page_size: int = 16,
-                 pages_per_engine: Optional[int] = None):
+                 pages_per_engine: Optional[int] = None,
+                 paged_dtype: Optional[str] = None):
         self.cfg = cfg
         self.paged = paged
+        self.paged_dtype = paged_dtype if paged else None
         self.page_size = int(page_size)
         if paged:
             capacity = -(-capacity // self.page_size) * self.page_size
@@ -659,7 +679,8 @@ class Coordinator:
                          paged=paged, page_size=page_size,
                          num_pages=pages_per_engine,
                          share_prefix_pages=(paged and prefix_cache_bytes
-                                             is not None))
+                                             is not None),
+                         paged_dtype=self.paged_dtype)
             for _ in range(num_decode_engines)]
         w = list(route_weights or [1.0] * num_decode_engines)
         assert len(w) == num_decode_engines

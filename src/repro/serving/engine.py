@@ -23,10 +23,13 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import transformer
 from repro.serving import kv_transfer
+from repro.serving.kv_compression import QuantizedLeaf
 from repro.serving.paging import (NoFreeSlotError, OutOfPagesError,
                                   PagePool, PagedSlab, pages_for,
                                   shareable_pages)
 from repro.serving.prefix_cache import PrefixCache
+
+QUANT_EPS_SCALE = 1e-12  # matches kernels.kv_quant.EPS_SCALE
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -34,6 +37,39 @@ def _bucket(n: int, lo: int = 8) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def _quantize_page(chunk: jax.Array, kmajor: bool
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize one page's float KV chunk to the resident int8 layout
+    (DESIGN.md §16): symmetric max-abs with ONE fp32 scale per
+    (period, kv-head). chunk [Pr,1,ps,kv,hd] ("bshd") / [Pr,1,kv,ps,hd]
+    ("kmajor") → (q int8 same shape, scale [Pr,1,kv])."""
+    xf = chunk.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(3, 4) if kmajor else (2, 4))
+    s = jnp.maximum(amax / 127.0, QUANT_EPS_SCALE)       # [Pr,1,kv]
+    sb = s[:, :, :, None, None] if kmajor else s[:, :, None, :, None]
+    q = jnp.clip(jnp.round(xf / sb), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _rescale_rows_to_page(qc: jax.Array, sc: jax.Array, kmajor: bool
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Renormalize one page of int8 WIRE rows (per-(token, head) scales,
+    the §10 codec) onto the pool's per-(page, kv-head) scale WITHOUT
+    dequantizing: page_scale = max of the row scales (what quantize-once
+    from float yields up to one fp32 division ulp, since max is
+    associative), and each row's codes are rescaled by
+    row_scale/page_scale ≤ 1 — integer
+    renormalization, not a second quantization from float. qc
+    [Pr,1,ps,kv,hd] / [Pr,1,kv,ps,hd] int8, sc same with hd→1 →
+    (q int8, scale [Pr,1,kv])."""
+    s = jnp.max(sc, axis=3 if kmajor else 2, keepdims=True)
+    ratio = sc / s                                       # ≤ 1
+    q = jnp.clip(jnp.round(qc.astype(jnp.float32) * ratio),
+                 -127, 127).astype(jnp.int8)
+    spage = s[:, :, :, 0, 0] if kmajor else s[:, :, 0, :, 0]  # [Pr,1,kv]
+    return q, spage
 
 
 class PrefillEngine:
@@ -189,11 +225,16 @@ class DecodeEngine:
     def __init__(self, cfg: ArchConfig, params: Any, slots: int,
                  capacity: int, paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 share_prefix_pages: bool = False):
+                 share_prefix_pages: bool = False,
+                 paged_dtype: Optional[str] = None):
+        if paged_dtype not in (None, "int8"):
+            raise ValueError(f"unsupported paged_dtype {paged_dtype!r}; "
+                             "expected None (model dtype) or 'int8'")
         self.cfg = cfg
         self.params = params
         self.num_slots = slots
         self.paged = paged
+        self.paged_dtype = paged_dtype if paged else None
         self.page_size = int(page_size)
         if paged:
             capacity = pages_for(capacity, self.page_size) * self.page_size
@@ -223,10 +264,12 @@ class DecodeEngine:
         # callers size it down (or slots up) to realize the paging win
         n_pages = (slots * self.num_blocks + 1 if num_pages is None
                    else int(num_pages))
-        self.cache = transformer.init_paged_cache(cfg, slots, n_pages,
-                                                  self.page_size)
+        self.cache = transformer.init_paged_cache(
+            cfg, slots, n_pages, self.page_size,
+            paged_dtype=self.paged_dtype)
         self.pool = PagePool(n_pages, self.page_size,
-                             page_bytes=self._pool_bytes_per_page())
+                             page_bytes=self._pool_bytes_per_page(),
+                             dtype=self.paged_dtype)
         self.block_tables = np.full((slots, self.num_blocks), -1, np.int32)
         #: §11 pool sharing: radix tree over admitted prompts; nodes own
         #: pinned pages of THIS pool (payload release returns them)
@@ -242,11 +285,15 @@ class DecodeEngine:
 
     def _pool_bytes_per_page(self) -> float:
         """Physical bytes one page occupies across the period-stacked
-        attention pools (for slab byte accounting)."""
+        attention pools (for slab byte accounting). Counts EVERY
+        page-axis leaf, so an int8 pool's fp32 scale sidecar
+        (``k_scale``/``v_scale``, DESIGN.md §16) is charged alongside
+        the payload — utilization and prefix budgets see what HBM
+        sees."""
         total = 0.0
         for spec, c in zip(self.cfg.period, self.cache):
             if spec.mixer == "attn":
-                for leaf in (c["k"], c["v"]):
+                for leaf in c.values():
                     total += leaf.nbytes / leaf.shape[1]
         return total
 
@@ -330,9 +377,18 @@ class DecodeEngine:
         DROPPED from the shipped slab (a reservation handoff —
         ``kv_transfer.drop_leading_blocks``), shifting where each
         logical block sits in ``src``. Non-kv leaves are per-slot and
-        handled by ``_install_dense_leaves``."""
+        handled by ``_install_dense_leaves``.
+
+        Int8-resident pools (DESIGN.md §16) accept BOTH wire forms: a
+        float leaf is quantized ONCE at page granularity, and a
+        ``QuantizedLeaf`` (int8 wire, §10) is renormalized onto the
+        page scale by integer code rescaling — never the old
+        dequant→requant round-trip, so exactly one quantization error
+        survives end-to-end."""
         ps = self.page_size
         seq_axis = kv_transfer.kv_seq_axis(self.cfg)  # on the 5-d leaf
+        kmajor = self.cfg.kv_layout == "kmajor"
+        quant = self.paged_dtype == "int8"
         new = []
         for bi, (spec, dst) in enumerate(zip(self.cfg.period, self.cache)):
             if spec.mixer != "attn":
@@ -342,17 +398,50 @@ class DecodeEngine:
             for name in ("k", "v"):
                 leaf = src[bi][name]                   # [Pr,1,S,kv,hd]
                 pool = d[name]                         # [P,N,(ps,kv|kv,ps),hd]
+                spool = d.get(name + "_scale")         # [P,N,kv] (int8 mode)
                 for j, pg in enumerate(pages):
                     s0 = (first_block + j - src_offset) * ps
+                    starts = (period_start, pg) + (0,) * (pool.ndim - 2)
+                    if quant:
+                        if isinstance(leaf, QuantizedLeaf):
+                            qc = jax.lax.slice_in_dim(leaf.q, s0, s0 + ps,
+                                                      axis=seq_axis)
+                            sc = jax.lax.slice_in_dim(leaf.scale, s0,
+                                                      s0 + ps, axis=seq_axis)
+                            qpage, spage = _rescale_rows_to_page(qc, sc,
+                                                                 kmajor)
+                        else:
+                            chunk = jax.lax.slice_in_dim(leaf, s0, s0 + ps,
+                                                         axis=seq_axis)
+                            qpage, spage = _quantize_page(chunk, kmajor)
+                        pool = jax.lax.dynamic_update_slice(pool, qpage,
+                                                            starts)
+                        spool = jax.lax.dynamic_update_slice(
+                            spool, spage, (period_start, pg, 0))
+                        continue
                     chunk = jax.lax.slice_in_dim(leaf, s0, s0 + ps,
                                                  axis=seq_axis)
                     # the slab's batch dim becomes the pool's page dim
-                    starts = (period_start, pg) + (0,) * (pool.ndim - 2)
                     pool = jax.lax.dynamic_update_slice(
                         pool, chunk.astype(pool.dtype), starts)
                 d[name] = pool
+                if spool is not None:
+                    d[name + "_scale"] = spool
             new.append(d)
         self.cache = tuple(new)
+
+    def _decode_dense_src(self, src: Any) -> Any:
+        """Zero-requant handoff support: an int8-paged engine receives
+        still-ENCODED caches (QuantizedLeaf kv leaves land in pages via
+        ``_install_pages`` without a float round-trip). The per-slot
+        dense leaves (SWA rings, recurrent state, cross-attn memory)
+        still need their float form, so decode ONLY the non-attn
+        entries before ``_install_dense_leaves``."""
+        if self.paged_dtype != "int8":
+            return src
+        from repro.serving import kv_compression
+        return tuple(c if spec.mixer == "attn" else kv_compression.decode(c)
+                     for spec, c in zip(self.cfg.period, src))
 
     def _install_dense_leaves(self, idx: int, cache_slice: Any,
                               period_start: int = 0) -> None:
@@ -497,7 +586,8 @@ class DecodeEngine:
             if fresh:
                 self._install_pages(cache_slice, fresh, first_block=shared,
                                     src_offset=self.slots[idx].src_offset)
-            self._install_dense_leaves(idx, cache_slice)
+            self._install_dense_leaves(idx, self._decode_dense_src(
+                cache_slice))
         else:
 
             def install(dst, src):
@@ -533,7 +623,8 @@ class DecodeEngine:
                                 first_block=slot.shared_pages,
                                 period_start=period_start,
                                 src_offset=slot.src_offset)
-            self._install_dense_leaves(slot_idx, chunk,
+            self._install_dense_leaves(slot_idx,
+                                       self._decode_dense_src(chunk),
                                        period_start=period_start)
             return
 

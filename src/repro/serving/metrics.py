@@ -57,6 +57,10 @@ from repro.serving.request import Request, RequestState
 #: stamps and span-derived lifecycle timestamps, so sim-vs-runtime
 #: reports agree EXACTLY on the same trace (dict-valued, NOT in
 #: ``summary()``; {} when nothing was stamped).
+#: §16 adds ``kv_cache_dtype``: the pool-resident KV dtype the run
+#: served with ("int8" for quantized-resident pools, None for bf16 /
+#: dense) — a dataclass field both domains stamp identically.
+#: String-valued, so NOT in ``summary()``.
 METRIC_FIELDS = ("decode_throughput", "avg_latency", "p50_latency",
                  "p99_latency",
                  "avg_ttft", "p50_ttft", "p99_ttft",
@@ -73,7 +77,8 @@ METRIC_FIELDS = ("decode_throughput", "avg_latency", "p50_latency",
                  "cache_hit_rate_by_class",
                  "scale_up_events", "scale_down_events",
                  "warmup_ttft_penalty_s", "replica_steps_by_state",
-                 "ttft_breakdown", "cost_model_error")
+                 "ttft_breakdown", "cost_model_error",
+                 "kv_cache_dtype")
 
 
 @dataclasses.dataclass
@@ -92,6 +97,11 @@ class ServeMetrics:
     #: denominator: every non-dead replica-step is a machine you pay for
     replica_steps_by_state: Dict[str, int] = dataclasses.field(
         default_factory=dict, kw_only=True)
+    #: §16 pool-resident KV dtype ("int8" when pages are quantized-
+    #: resident; None for bf16-paged and dense runs). Stamped by both
+    #: domains from their own configuration — parity-tested.
+    kv_cache_dtype: Optional[str] = dataclasses.field(default=None,
+                                                      kw_only=True)
 
     @property
     def decode_throughput(self) -> float:

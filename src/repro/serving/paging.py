@@ -95,14 +95,21 @@ class PagePool:
     live page (prefix-slab pinning / shared admission); ``release``
     drops one reference and returns the page to the free list when the
     last reader leaves. ``page_bytes`` is optional metadata for byte
-    accounting (the cost model's ``kv_page_bytes``)."""
+    accounting (the cost model's ``kv_page_bytes``); when ``dtype`` is
+    a quantized resident dtype ("int8", DESIGN.md §16) it must already
+    INCLUDE the fp32 scale-sidecar bytes — allocation itself is
+    dtype-blind (a page is a page), the dtype is carried so accounting
+    consumers (utilization, prefix budgets) agree on what one page
+    costs."""
 
     def __init__(self, num_pages: int, page_size: int,
-                 page_bytes: float = 0.0, reserve_scratch: bool = True):
+                 page_bytes: float = 0.0, reserve_scratch: bool = True,
+                 dtype: str = None):
         assert num_pages >= (2 if reserve_scratch else 1), num_pages
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
         self.page_bytes = float(page_bytes)
+        self.dtype = dtype
         self.scratch = 0 if reserve_scratch else None
         self._refs = [0] * self.num_pages
         first = 1 if reserve_scratch else 0

@@ -64,8 +64,9 @@ import numpy as np
 from repro.core.cluster import ClusterSpec
 from repro.core.cost_model import (PAGE_SIZE, ModelProfile,
                                    decode_page_budget, decode_step_latency,
-                                   kv_transfer_time, max_decode_batch,
-                                   prefill_latency, prefix_bytes_per_token,
+                                   kv_page_bytes, kv_transfer_time,
+                                   max_decode_batch, prefill_latency,
+                                   prefix_bytes_per_token,
                                    prefix_cache_budget)
 from repro.core.placement import Placement, ReplicaPlacement
 from repro.serving import kv_compression
@@ -142,8 +143,9 @@ class _DisaggSim:
                  cache_alpha: float = 2.0,
                  prefix_budget_fraction: float = 0.5,
                  kv_codec=None, paged_kv: bool = False,
-                 page_size: int = PAGE_SIZE, telemetry=None,
-                 calibration=None):
+                 page_size: int = PAGE_SIZE,
+                 kv_cache_dtype: Optional[str] = None,
+                 telemetry=None, calibration=None):
         self.cluster = cluster
         self.profile = profile
         #: §14 event bus (``telemetry.TraceRecorder`` or None): the
@@ -164,6 +166,9 @@ class _DisaggSim:
         # preempts the youngest resident request for recompute
         self.paged_kv = paged_kv
         self.page_size = int(page_size)
+        # §16 int8-resident pools: the page budget (and so admitted
+        # concurrency) is priced at quantized payload + scale sidecar
+        self.kv_cache_dtype = kv_cache_dtype if paged_kv else None
         self.recompute_tokens: Dict[int, int] = {}   # rid -> tokens redone
         # §10 KV-handoff pipeline: None keeps the legacy abstraction
         # (handoff detached from the prefill server, uncompressed); a
@@ -219,9 +224,14 @@ class _DisaggSim:
             mb = max_decode_batch(self.cluster, self.profile, r.plan,
                                   self.typical_context)
             if self.paged_kv:
-                budget = decode_page_budget(self.cluster, self.profile,
-                                            r.plan, self.page_size)
-                pool = PagePool(max(budget, 1) + 1, self.page_size)
+                budget = decode_page_budget(
+                    self.cluster, self.profile, r.plan, self.page_size,
+                    kv_cache_dtype=self.kv_cache_dtype)
+                pool = PagePool(max(budget, 1) + 1, self.page_size,
+                                page_bytes=kv_page_bytes(
+                                    self.profile, self.page_size,
+                                    kv_cache_dtype=self.kv_cache_dtype),
+                                dtype=self.kv_cache_dtype)
                 # pool-bound, not slot-bound: each request holds >= 1
                 # page, so the pool itself caps concurrency
                 self.decode[r.group_id] = _DecodeServer(
@@ -724,8 +734,9 @@ def simulate(cluster: ClusterSpec, profile: ModelProfile,
              cache_alpha: float = 2.0,
              prefix_budget_fraction: float = 0.5,
              kv_codec=None, paged_kv: bool = False,
-             page_size: int = PAGE_SIZE, telemetry=None,
-             calibration=None) -> SimResult:
+             page_size: int = PAGE_SIZE,
+             kv_cache_dtype: Optional[str] = None,
+             telemetry=None, calibration=None) -> SimResult:
     """Deterministic: dispatch is load-corrected flow-proportional, so
     the same placement and trace always produce the same result.
 
@@ -748,7 +759,10 @@ def simulate(cluster: ClusterSpec, profile: ModelProfile,
     while pages fit, per-round growth, reclamation at finish, and
     youngest-first recompute preemption on exhaustion — the same
     allocator arithmetic the runtime engine runs, so page counts agree
-    exactly on the same trace.
+    exactly on the same trace. ``kv_cache_dtype="int8"`` (DESIGN.md
+    §16) sizes each pool at the quantized-resident page bytes (payload
+    + scale sidecar) — roughly double the pages, matching a runtime
+    fleet running ``paged_dtype="int8"``.
 
     ``calibration`` (DESIGN.md §15) wires a ``CalibrationStore``:
     predicted stage costs are stamped at each prefill routing decision
@@ -758,12 +772,14 @@ def simulate(cluster: ClusterSpec, profile: ModelProfile,
                      cache_alpha=cache_alpha,
                      prefix_budget_fraction=prefix_budget_fraction,
                      kv_codec=kv_codec, paged_kv=paged_kv,
-                     page_size=page_size, telemetry=telemetry,
-                     calibration=calibration)
+                     page_size=page_size, kv_cache_dtype=kv_cache_dtype,
+                     telemetry=telemetry, calibration=calibration)
     if not sim.feasible:
-        return SimResult(requests, float("inf"), 0)
+        return SimResult(requests, float("inf"), 0,
+                         kv_cache_dtype=sim.kv_cache_dtype)
     sim.run(requests)
-    return SimResult(requests, sim.makespan, sim.decode_tokens)
+    return SimResult(requests, sim.makespan, sim.decode_tokens,
+                     kv_cache_dtype=sim.kv_cache_dtype)
 
 
 def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
@@ -779,6 +795,7 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
                     prefix_budget_fraction: float = 0.5,
                     kv_codec=None, paged_kv: bool = False,
                     page_size: int = PAGE_SIZE,
+                    kv_cache_dtype: Optional[str] = None,
                     telemetry=None, calibration=None) -> OnlineSimResult:
     """Simulate with online workload-drift rescheduling.
 
@@ -801,10 +818,11 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
                      cache_alpha=cache_alpha,
                      prefix_budget_fraction=prefix_budget_fraction,
                      kv_codec=kv_codec, paged_kv=paged_kv,
-                     page_size=page_size, telemetry=telemetry,
-                     calibration=calibration)
+                     page_size=page_size, kv_cache_dtype=kv_cache_dtype,
+                     telemetry=telemetry, calibration=calibration)
     if not sim.feasible:
-        return OnlineSimResult(requests, float("inf"), 0, [])
+        return OnlineSimResult(requests, float("inf"), 0, [],
+                               kv_cache_dtype=sim.kv_cache_dtype)
     state = {"last": -float("inf")}
     if monitor is not None and hasattr(monitor, "observe_completion"):
         sim.on_done = lambda t, req: monitor.observe_completion(req)
@@ -825,7 +843,8 @@ def simulate_online(cluster: ClusterSpec, profile: ModelProfile,
 
     sim.run(requests, on_arrival_hook=hook)
     return OnlineSimResult(requests, sim.makespan, sim.decode_tokens,
-                           sim.reschedules)
+                           sim.reschedules,
+                           kv_cache_dtype=sim.kv_cache_dtype)
 
 
 def slo_baselines(cluster: ClusterSpec, profile: ModelProfile,

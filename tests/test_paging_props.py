@@ -174,3 +174,35 @@ def test_slab_release_is_idempotent():
     slab.release()
     slab.release()                        # second call is a no-op
     assert pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Dtype-aware pool accounting (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 48), st.integers(1, 64), st.integers(1, 8),
+       st.integers(1, 64), st.sampled_from([None, "int8"]))
+def test_pool_dtype_is_accounting_metadata_only(num_pages, page_size,
+                                                n_alloc, kv_heads, dtype):
+    """A quantized-resident pool allocates exactly like a bf16 one —
+    the dtype rides along as metadata, and ``page_bytes`` (payload +
+    fp32 scale sidecar for int8) is what every byte consumer sees."""
+    payload = page_size * kv_heads * (1.0 if dtype == "int8" else 2.0)
+    sidecar = kv_heads * 4.0 if dtype == "int8" else 0.0
+    pool = PagePool(num_pages, page_size, page_bytes=payload + sidecar,
+                    dtype=dtype)
+    assert pool.dtype == dtype
+    assert pool.page_bytes == payload + sidecar
+    n = min(n_alloc, pool.free_pages)
+    if n == 0:
+        return
+    slab = PagedSlab(pool, pool.alloc(n))
+    # slab byte accounting charges the sidecar alongside the payload
+    assert slab.payload_bytes == pytest.approx(n * (payload + sidecar))
+    if dtype == "int8":
+        assert slab.payload_bytes > n * payload
+    assert pool.free_pages + pool.pages_in_use == pool.num_allocatable
+    pool.release(slab.pages)
+    assert pool.pages_in_use == 0

@@ -1,0 +1,434 @@
+"""Int8-resident paged KV (DESIGN.md §16): fused quantized kernel vs
+oracle, arch-pool decode-logit accuracy, zero-requant wire→page install,
+CoW scale-copy bit-identity, capacity accounting, and the cross-domain
+``kv_cache_dtype``/page-count parity contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.kernels import ref
+from repro.kernels.decode_attention import gqa_paged_decode_quant_bhsd
+from repro.models import init_params, transformer
+from repro.serving import (Coordinator, ServeRequest, kv_compression,
+                           kv_transfer)
+from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.metrics import METRIC_FIELDS
+from repro.serving.paging import pages_for_request
+
+KEY = jax.random.PRNGKey(16)
+PS = 16
+
+#: The documented int8 accuracy contract (test_kv_compression.py): the
+#: quantized path's decode logits stay within this max-abs delta of the
+#: exact path on the reduced archs.
+INT8_LOGIT_TOL = 0.15
+
+
+def _quant_pool(key, npages, hkv, ps, hd):
+    """Random float pages quantized to the §16 resident layout: int8
+    codes + one fp32 symmetric scale per (page, kv-head)."""
+    x = jax.random.normal(key, (npages, hkv, ps, hd), jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=(2, 3)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / s[:, :, None, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+QUANT_CASES = [
+    # (b, hq, hkv, hd, page_size, num_blocks, num_pages)
+    (1, 4, 4, 64, 16, 4, 8),
+    (2, 8, 2, 64, 32, 8, 24),       # GQA group 4
+    (3, 4, 1, 128, 16, 8, 32),      # MQA
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,hd,ps,nb,npages", QUANT_CASES)
+def test_quant_paged_kernel_matches_oracle(b, hq, hkv, hd, ps, nb,
+                                           npages):
+    k1, k2, k3, k4, k5 = jax.random.split(KEY, 5)
+    q = jax.random.normal(k1, (b, hq, hd), jnp.float32)
+    kp, ks = _quant_pool(k2, npages, hkv, ps, hd)
+    vp, vs = _quant_pool(k3, npages, hkv, ps, hd)
+    bt = jax.random.randint(k4, (b, nb), 0, npages)
+    vl = jax.random.randint(k5, (b,), 1, nb * ps + 1)
+    out = gqa_paged_decode_quant_bhsd(q, kp, vp, ks, vs, bt, vl,
+                                      interpret=True)
+    expect = ref.gqa_paged_decode_quant_ref(q, kp, vp, ks, vs, bt, vl)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_quant_paged_kernel_ignores_pages_past_valid_len():
+    """Rewriting pages AND scales past valid_len must not change the
+    output — the fused dequant reads only live pages."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (2, 4, 64), jnp.float32)
+    kp, ks = _quant_pool(k2, 16, 2, 16, 64)
+    vp, vs = _quant_pool(k3, 16, 2, 16, 64)
+    bt = jnp.arange(2 * 6, dtype=jnp.int32).reshape(2, 6) % 16
+    vl = jnp.array([20, 50])
+    out1 = gqa_paged_decode_quant_bhsd(q, kp, vp, ks, vs, bt, vl,
+                                       interpret=True)
+    dead0, dead1 = jnp.asarray(bt[0, 2:]), jnp.asarray(bt[1, 4:])
+    kp2 = kp.at[dead0].set(127).at[dead1].set(-128)
+    vp2 = vp.at[dead0].set(-77)
+    ks2 = ks.at[dead0].set(9.0)
+    vs2 = vs.at[dead1].set(5.0)
+    out2 = gqa_paged_decode_quant_bhsd(q, kp2, vp2, ks2, vs2, bt, vl,
+                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_quant_paged_kernel_aot_lowers_for_tpu():
+    qd = jax.ShapeDtypeStruct((4, 16, 128), jnp.bfloat16)
+    pool = jax.ShapeDtypeStruct((64, 2, 16, 128), jnp.int8)
+    sc = jax.ShapeDtypeStruct((64, 2), jnp.float32)
+    bt = jax.ShapeDtypeStruct((4, 16), jnp.int32)
+    vl = jax.ShapeDtypeStruct((4,), jnp.int32)
+    tr = jax.jit(gqa_paged_decode_quant_bhsd).trace(qd, pool, pool, sc,
+                                                    sc, bt, vl)
+    txt = tr.lower(lowering_platforms=("tpu",)).as_text()
+    assert "tpu_custom_call" in txt
+
+
+# ---------------------------------------------------------------------------
+# Arch-pool decode-logit accuracy (the §10 int8 tolerance contract)
+# ---------------------------------------------------------------------------
+
+
+def _mixed_swa(cfg):
+    period = (cfg.period[0],
+              dataclasses.replace(cfg.period[1], mixer="swa"))
+    return dataclasses.replace(cfg, period=period, sliding_window=32,
+                               name=cfg.name + "+swa")
+
+
+ARCH_POOL = {
+    "gqa": lambda: ARCHS["qwen3-1.7b"].reduced(),
+    "moe": lambda: ARCHS["qwen3-moe-30b-a3b"].reduced(),
+    "swa": lambda: _mixed_swa(ARCHS["llama4-maverick-400b-a17b"].reduced()),
+    "jamba": lambda: ARCHS["jamba-v0.1-52b"].reduced(),
+    "vision": lambda: ARCHS["llama-3.2-vision-90b"].reduced(),
+    "kmajor": lambda: dataclasses.replace(
+        ARCHS["qwen2.5-32b"].reduced(), kv_layout="kmajor",
+        name="qwen2.5-32b-reduced-kmajor"),
+}
+
+
+@pytest.mark.parametrize("family", sorted(ARCH_POOL))
+def test_int8_paged_decode_logits_within_tolerance(family):
+    """Int8-resident paged decode logits stay within the documented
+    ``INT8_LOGIT_TOL`` of the dense decode on every arch family — with
+    the token trajectory pinned to the dense argmax so both caches see
+    identical contexts, the only divergence is the quantization."""
+    cfg = ARCH_POOL[family]()
+    params = init_params(KEY, cfg)
+    cap, steps = 64, 3
+    extra = {}
+    if cfg.num_image_tokens:
+        extra["image_embeds"] = np.zeros(
+            (1, cfg.num_image_tokens, cfg.d_model), np.float32)
+    pe = PrefillEngine(cfg, params, cache_capacity=cap)
+    dense = DecodeEngine(cfg, params, slots=2, capacity=cap)
+    quant = DecodeEngine(cfg, params, slots=2, capacity=cap, paged=True,
+                         page_size=PS, paged_dtype="int8")
+    rng = np.random.default_rng(11)
+    for rid, n in enumerate((13, 30)):    # 30 → crosses a page boundary
+        prompt = rng.integers(0, cfg.vocab, n).astype(np.int32)
+        first, slab = pe.prefill_batch([prompt], [extra])[0]
+        dense.admit(rid, first, n, steps + 1,
+                    kv_transfer.pad_capacity(slab, cap, cfg=cfg))
+        quant.admit(rid, first, n, steps + 1,
+                    kv_transfer.trim_to_pages(slab, n, PS, cfg=cfg))
+    for _ in range(steps):
+        for i, s in enumerate(quant.slots):   # table covers the write
+            if s.active:
+                quant._grow(i)
+        pos = np.array([max(s.length - 1, 0) for s in dense.slots],
+                       np.int32)
+        toks = jnp.asarray(dense.tokens)[:, None]
+        ld, _ = transformer.decode_step(
+            params, cfg, dense.cache, toks, jnp.asarray(pos)[:, None])
+        lq, _ = transformer.decode_step_paged(
+            params, cfg, quant.cache, toks, jnp.asarray(pos)[:, None],
+            jnp.asarray(quant.block_tables), PS)
+        delta = np.max(np.abs(np.asarray(ld, np.float32)
+                              - np.asarray(lq, np.float32)))
+        assert delta <= INT8_LOGIT_TOL, (cfg.name, delta)
+        dense.step()
+        quant.step()
+        quant.tokens[:] = dense.tokens    # pin trajectories together
+
+
+def test_bf16_paged_unchanged_when_mode_off():
+    """paged_dtype=None keeps the §11 pytree and behavior untouched:
+    no scale sidecar, model-dtype pools, and engine decode bitwise
+    equal to dense — the off-mode regression gate."""
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    cache = transformer.init_paged_cache(cfg, 2, 8, PS)
+    for spec, c in zip(cfg.period, cache):
+        if spec.mixer == "attn":
+            assert set(c) == {"k", "v"}
+            assert c["k"].dtype != jnp.int8
+    qcache = transformer.init_paged_cache(cfg, 2, 8, PS,
+                                          paged_dtype="int8")
+    for spec, c in zip(cfg.period, qcache):
+        if spec.mixer == "attn":
+            assert set(c) == {"k", "v", "k_scale", "v_scale"}
+            assert c["k"].dtype == jnp.int8
+            assert c["k_scale"].dtype == jnp.float32
+    with pytest.raises(ValueError):
+        DecodeEngine(cfg, init_params(KEY, cfg), slots=1, capacity=32,
+                     paged=True, paged_dtype="fp4")
+
+
+# ---------------------------------------------------------------------------
+# Zero-requant wire → page install (§10 × §16)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_rt():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    return cfg, init_params(KEY, cfg)
+
+
+def test_zero_requant_install_matches_quantize_once(small_rt):
+    """Admitting the int8 WIRE form (still-encoded QuantizedLeaf slab)
+    must land the same page scales as quantizing the float slab once
+    (page scale = max of the row scales; equal up to one fp32 division
+    ulp — the wire codec's jitted amax/127 is a reciprocal-multiply),
+    codes within one renormalization ulp, and an identical decode
+    trajectory — the dequant→requant round-trip this path replaces
+    loses a full quantization step, not an ulp."""
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=64)
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, cfg.vocab, 27).astype(np.int32)
+    first, slab = pe.prefill_batch([prompt])[0]
+    slab = kv_transfer.trim_to_pages(slab, 27, PS, cfg=cfg)
+    encoded = kv_compression.encode(slab, cfg, "int8")
+
+    raw = DecodeEngine(cfg, params, slots=2, capacity=64, paged=True,
+                       page_size=PS, paged_dtype="int8")
+    wire = DecodeEngine(cfg, params, slots=2, capacity=64, paged=True,
+                        page_size=PS, paged_dtype="int8")
+    raw.admit(0, first, 27, 5, slab)
+    wire.admit(0, first, 27, 5, encoded)
+    for spec, a, b in zip(cfg.period, raw.cache, wire.cache):
+        if spec.mixer != "attn":
+            continue
+        for nm in ("k_scale", "v_scale"):
+            np.testing.assert_allclose(np.asarray(a[nm]),
+                                       np.asarray(b[nm]), rtol=2e-7,
+                                       err_msg=nm)
+        for nm in ("k", "v"):
+            d = np.abs(np.asarray(a[nm], np.int32)
+                       - np.asarray(b[nm], np.int32))
+            assert d.max() <= 1, (nm, d.max())
+    for _ in range(5):
+        assert raw.step() == wire.step()
+
+
+def test_chunked_wire_install_matches_whole_slab(small_rt):
+    """admit_chunked over ENCODED chunks (the §10 int8-chunked stream
+    landing page-scattered, any order) is bitwise the whole-encoded
+    admit — the coordinator's zero-requant streaming path."""
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=64)
+    rng = np.random.default_rng(22)
+    prompt = rng.integers(0, cfg.vocab, 19).astype(np.int32)
+    first, slab = pe.prefill_batch([prompt])[0]
+    slab = kv_transfer.trim_to_pages(slab, 19, PS, cfg=cfg)
+    encoded = kv_compression.encode(slab, cfg, "int8")
+    whole = DecodeEngine(cfg, params, slots=2, capacity=64, paged=True,
+                         page_size=PS, paged_dtype="int8")
+    chunked = DecodeEngine(cfg, params, slots=2, capacity=64, paged=True,
+                           page_size=PS, paged_dtype="int8")
+    whole.admit(0, first, 19, 4, encoded)
+    plan = kv_compression.ChunkedTransferPlan.for_cache(encoded, 2)
+    chunks = list(zip((p0 for p0, _ in plan.bounds), plan.split(encoded)))
+    chunked.admit_chunked(0, first, 19, 4, reversed(chunks))
+    for a, b in zip(jax.tree.leaves(whole.cache),
+                    jax.tree.leaves(chunked.cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for _ in range(4):
+        assert whole.step() == chunked.step()
+
+
+def test_cow_scale_copy_bit_identical(small_rt):
+    """§16 CoW over int8 pages: a shared-prefix engine must decode
+    bitwise like a cold one — the boundary-page copy carries the fp32
+    scale sidecar along with the int8 payload."""
+    cfg, params = small_rt
+    pe = PrefillEngine(cfg, params, cache_capacity=96)
+    rng = np.random.default_rng(23)
+    prefix = rng.integers(0, cfg.vocab, 37).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(0, cfg.vocab, k)
+                               .astype(np.int32)]) for k in (5, 9)]
+    outs = {}
+    for mode in ("cold", "shared"):
+        eng = DecodeEngine(cfg, params, slots=2, capacity=96, paged=True,
+                           page_size=PS, paged_dtype="int8",
+                           share_prefix_pages=(mode == "shared"))
+        for rid, p in enumerate(prompts):
+            first, slab = pe.prefill_batch([p])[0]
+            eng.admit(rid, first, len(p), 5,
+                      kv_transfer.trim_to_pages(slab, len(p), PS, cfg=cfg),
+                      tokens=p)
+        outs[mode] = [eng.step() for _ in range(5)]
+        if mode == "shared":
+            assert eng.pool.stats.shares > 0
+            assert eng.pool.stats.cow_copies >= 1
+    assert outs["cold"] == outs["shared"]
+
+
+# ---------------------------------------------------------------------------
+# Coordinator end to end + cross-domain parity
+# ---------------------------------------------------------------------------
+
+
+def _mk_reqs(cfg, seed=31):
+    r = np.random.default_rng(seed)
+    return [ServeRequest(i, r.integers(0, cfg.vocab, n).astype(np.int32),
+                         m) for i, (n, m) in enumerate(
+                             [(12, 5), (25, 7), (9, 4)])]
+
+
+def test_coordinator_int8_paged_end_to_end(small_rt):
+    """Full serve with int8-resident pools (raw and int8-chunked wire):
+    every request completes, the metrics stamp ``kv_cache_dtype``, and
+    the page counts keep the §11 arithmetic exactly."""
+    cfg, params = small_rt
+    base = Coordinator(cfg, params, num_decode_engines=2,
+                       slots_per_engine=2, capacity=64, paged=True,
+                       page_size=PS).serve(_mk_reqs(cfg))
+    for codec in (None, "int8-chunked"):
+        coord = Coordinator(cfg, params, num_decode_engines=2,
+                            slots_per_engine=2, capacity=64, paged=True,
+                            page_size=PS, paged_dtype="int8",
+                            kv_codec=codec)
+        outs = coord.serve(_mk_reqs(cfg))
+        for a, b in zip(base, outs):
+            assert len(b.tokens) == len(a.tokens)
+        m = coord._active_session.metrics()
+        assert m.kv_cache_dtype == "int8"
+        assert m.kv_pages_allocated == sum(
+            pages_for_request(r.s_in, r.s_out, PS) for r in m.requests)
+        assert 0.0 < m.page_utilization <= 1.0
+    bm = Coordinator(cfg, params, num_decode_engines=2,
+                     slots_per_engine=2, capacity=64, paged=True,
+                     page_size=PS)
+    bm.serve(_mk_reqs(cfg))
+    assert bm._active_session.metrics().kv_cache_dtype is None
+
+
+def _sim_placement():
+    from repro.core import make_plan
+    from repro.core.cluster import memory_skewed_setting
+    from repro.core.cost_model import LLAMA2_70B
+    from repro.core.placement import Placement, ReplicaPlacement
+    cl = memory_skewed_setting()
+    reps = [ReplicaPlacement(0, [2, 3, 4, 5], True,
+                             make_plan([[2, 3, 4, 5]],
+                                       LLAMA2_70B.num_layers, cl), 10.0),
+            ReplicaPlacement(1, [0, 1], False,
+                             make_plan([[0, 1]],
+                                       LLAMA2_70B.num_layers, cl), 10.0)]
+    return cl, LLAMA2_70B, Placement(reps, {(0, 1): 10.0}, 10.0, 600.0)
+
+
+def test_sim_runtime_page_count_and_dtype_parity(small_rt):
+    """The parity contract: for the same (s_in, s_out) trace both
+    domains report the SAME page totals (both reduce to
+    ``pages_for_request``) and the same ``kv_cache_dtype`` stamp."""
+    from repro.serving import simulate
+    from repro.serving.request import Request
+    cfg, params = small_rt
+    coord = Coordinator(cfg, params, num_decode_engines=1,
+                        slots_per_engine=3, capacity=64, paged=True,
+                        page_size=PS, paged_dtype="int8")
+    coord.serve(_mk_reqs(cfg))
+    m = coord._active_session.metrics()
+    cl, prof, plc = _sim_placement()
+    reqs = [Request(r.rid, r.s_in, r.s_out, 0.0) for r in m.requests]
+    res = simulate(cl, prof, plc, reqs, paged_kv=True, page_size=PS,
+                   kv_cache_dtype="int8")
+    assert res.kv_cache_dtype == m.kv_cache_dtype == "int8"
+    assert res.kv_pages_allocated == m.kv_pages_allocated
+    assert "kv_cache_dtype" in METRIC_FIELDS
+
+
+# ---------------------------------------------------------------------------
+# Capacity accounting (cost model + pool bytes)
+# ---------------------------------------------------------------------------
+
+
+def test_kv_page_bytes_int8_accounting():
+    from repro.core.cost_model import LLAMA2_70B, kv_page_bytes
+    p = LLAMA2_70B
+    b = kv_page_bytes(p, PS)
+    assert b == kv_page_bytes(p, PS, kv_cache_dtype=None)   # off == §11
+    assert b == (PS * p.kv_bytes_token_layer * p.num_layers
+                 * p.attn_layer_fraction)
+    q = kv_page_bytes(p, PS, kv_cache_dtype="int8")
+    elems = p.kv_bytes_token_layer / p.kv_elem_bytes
+    expect = ((PS * elems * 1.0 + elems / p.kv_quant_group * 4.0)
+              * p.num_layers * p.attn_layer_fraction)
+    assert q == pytest.approx(expect)
+    assert q < b                       # int8 + sidecar beats bf16
+    assert q > b / p.kv_elem_bytes     # but the sidecar is charged
+
+
+def test_int8_pages_raise_decode_budget_and_concurrency():
+    from repro.core.cost_model import (LLAMA2_70B, WORKLOADS,
+                                      decode_page_budget,
+                                      max_decode_batch_paged)
+    cl, prof, plc = _sim_placement()
+    dec = next(r for r in plc.replicas if not r.is_prefill)
+    budget_b = decode_page_budget(cl, prof, dec.plan, PS)
+    budget_q = decode_page_budget(cl, prof, dec.plan, PS,
+                                  kv_cache_dtype="int8")
+    assert budget_q > budget_b * 1.5   # ~2x pages at equal HBM
+    wl = WORKLOADS["HPHD"]
+    cc_b = max_decode_batch_paged(cl, prof, dec.plan, wl, PS)
+    cc_q = max_decode_batch_paged(cl, prof, dec.plan, wl, PS,
+                                  kv_cache_dtype="int8")
+    assert cc_q >= cc_b
+    # dense-slab pricing must IGNORE the resident dtype (§16)
+    assert max_decode_batch_paged(cl, prof, dec.plan, wl, PS,
+                                  slot_capacity=1024,
+                                  kv_cache_dtype="int8") \
+        == max_decode_batch_paged(cl, prof, dec.plan, wl, PS,
+                                  slot_capacity=1024)
+
+
+def test_prefix_budget_counts_scale_sidecar(small_rt):
+    """Engine pool byte metadata (what prefix budgets are charged
+    against) must include the fp32 sidecar, and the cost model's
+    per-token prefix pricing must agree with its page pricing."""
+    from repro.core.cost_model import (LLAMA2_70B, kv_page_bytes,
+                                      prefix_bytes_per_token)
+    cfg, params = small_rt
+    bf16 = DecodeEngine(cfg, params, slots=1, capacity=32, paged=True,
+                        page_size=PS)
+    q = DecodeEngine(cfg, params, slots=1, capacity=32, paged=True,
+                     page_size=PS, paged_dtype="int8")
+    assert q.pool.dtype == "int8" and bf16.pool.dtype is None
+    assert q.pool.page_bytes < bf16.pool.page_bytes
+    # payload alone would be half the bf16 page; the sidecar is extra
+    kv_elem = jnp.zeros((), bf16.cache[0]["k"].dtype).dtype.itemsize
+    assert q.pool.page_bytes > bf16.pool.page_bytes / kv_elem
+    assert prefix_bytes_per_token(LLAMA2_70B, kv_cache_dtype="int8",
+                                  page_size=PS) == pytest.approx(
+        kv_page_bytes(LLAMA2_70B, PS, kv_cache_dtype="int8") / PS)
